@@ -1,0 +1,87 @@
+//! The paper's flagship configuration: 85%-sparse ResNet-50 compiled for
+//! a Stratix 10 2800 with a 5000-DSP target (§IV, §VI-A).
+//!
+//!   cargo run --release --example compile_resnet50
+//!
+//! Prints the compile-time story the paper tells: per-layer cycles
+//! before/after balancing (Fig 3), the resource totals (Table II row 1),
+//! the frequency estimate, and the simulated throughput/latency that
+//! feed Fig 8.
+
+use hpipe::arch::S10_2800;
+use hpipe::compile::{balance::imbalance, compile, plan_stages, CompileOptions};
+use hpipe::nets::{resnet50, NetConfig};
+use hpipe::sim::simulate;
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::timer::Table;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full-scale");
+    let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
+    let dsp_target = if full { 5000 } else { 1200 };
+
+    let t0 = std::time::Instant::now();
+    let mut graph = resnet50(cfg);
+    prune_graph(&mut graph, 0.85);
+    let (graph, log) = optimize(&graph);
+    println!(
+        "front-end: {} BNs folded, {} pads merged, graph now {} nodes",
+        log.batch_norms_split,
+        log.pads_merged,
+        graph.len()
+    );
+
+    // unbalanced reference point (Fig 3 "Unbalanced" bars)
+    let opts = CompileOptions::new(S10_2800.clone(), dsp_target);
+    let (unbalanced, _) = plan_stages(&graph, &opts)?;
+
+    let plan = compile(&graph, "resnet50", &opts)?;
+    println!("compile time: {:?} (paper: \"a few seconds\")", t0.elapsed());
+
+    let (alm_u, m20k_u, dsp_u) = plan.totals.utilization(&plan.device);
+    println!(
+        "\nresources: ALMs {} ({:.0}%)  M20Ks {} ({:.0}%)  DSPs {} ({:.0}%)  fmax {:.0} MHz",
+        plan.totals.alms,
+        alm_u * 100.0,
+        plan.totals.m20ks,
+        m20k_u * 100.0,
+        plan.totals.dsps,
+        dsp_u * 100.0,
+        plan.fmax_mhz
+    );
+
+    let unb_interval = unbalanced.iter().map(|s| s.cycles).max().unwrap_or(1);
+    println!(
+        "balancing: interval {} -> {} cycles ({:.0}x), imbalance {:.1} -> {:.2}",
+        unb_interval,
+        plan.interval_cycles(),
+        unb_interval as f64 / plan.interval_cycles() as f64,
+        imbalance(&unbalanced),
+        imbalance(&plan.stages)
+    );
+
+    let mut tab = Table::new(&["layer", "splits", "cycles (unbal)", "cycles (bal)", "dsps"]);
+    for (u, b) in unbalanced.iter().zip(&plan.stages) {
+        if !b.is_compute() {
+            continue;
+        }
+        tab.row(&[
+            b.name.clone(),
+            b.splits.to_string(),
+            u.cycles.to_string(),
+            b.cycles.to_string(),
+            b.resources.dsps.to_string(),
+        ]);
+    }
+    tab.print();
+
+    let sim = simulate(&plan, 12).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "\nsimulated: latency {:.3} ms, throughput {:.0} img/s at {:.0} MHz (paper: 4550 img/s @ 580 MHz full-scale)",
+        sim.latency_ms(plan.fmax_mhz),
+        sim.throughput_img_s(plan.fmax_mhz),
+        plan.fmax_mhz
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the whole HPIPE flow on a small CNN in ~40 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Builds TinyCNN, prunes it to 50% sparsity, folds batch norms / merges
+//! pads, compiles a balanced accelerator plan for a Stratix 10 2800,
+//! generates the Verilog + memory-init artifact directory, and runs the
+//! cycle-level simulator.
+
+use hpipe::arch::S10_2800;
+use hpipe::compile::{codegen, compile, CompileOptions};
+use hpipe::nets::{tiny_cnn, NetConfig};
+use hpipe::sim::simulate;
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+
+fn main() -> anyhow::Result<()> {
+    // 1. build + prune the network
+    let mut graph = tiny_cnn(NetConfig::test_scale());
+    let report = prune_graph(&mut graph, 0.5);
+    println!(
+        "pruned TinyCNN to {:.0}% sparsity",
+        report.overall_sparsity() * 100.0
+    );
+
+    // 2. compiler front-end: fold BNs, merge pads
+    let (graph, log) = optimize(&graph);
+    println!("transforms: {log:?}");
+
+    // 3. balance against a DSP budget and plan the hardware
+    let opts = CompileOptions::new(S10_2800.clone(), 400);
+    let plan = compile(&graph, "tinycnn", &opts)?;
+    println!(
+        "plan: {} stages, {} DSPs, {} M20Ks, fmax {:.0} MHz, {:.0} img/s",
+        plan.stages.len(),
+        plan.totals.dsps,
+        plan.totals.m20ks,
+        plan.fmax_mhz,
+        plan.throughput_img_s()
+    );
+
+    // 4. generate the accelerator (Verilog netlist + weight mem-init)
+    let out = std::env::temp_dir().join("hpipe_quickstart");
+    let gen = codegen::generate(&plan, &graph, &out)?;
+    println!(
+        "generated {} modules + {} mem-init files -> {}",
+        gen.modules,
+        gen.mem_init_files,
+        out.display()
+    );
+
+    // 5. cycle-level simulation
+    let sim = simulate(&plan, 8).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "simulated 8 images: latency {:.3} ms, steady-state {:.0} img/s",
+        sim.latency_ms(plan.fmax_mhz),
+        sim.throughput_img_s(plan.fmax_mhz)
+    );
+    Ok(())
+}

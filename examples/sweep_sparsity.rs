@@ -1,0 +1,57 @@
+//! Ablation: how throughput scales with weight sparsity (the premise of
+//! the whole paper — "latency and throughput improvements of up to 10x"
+//! from §I — measured on our compiled ResNet-50 plans).
+//!
+//!   cargo run --release --example sweep_sparsity [-- --full-scale]
+
+use hpipe::arch::S10_2800;
+use hpipe::compile::{compile, CompileOptions};
+use hpipe::nets::{resnet50, NetConfig};
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::timer::Table;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full-scale");
+    let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
+    let dsp_target = if full { 5000 } else { 1200 };
+
+    let mut tab = Table::new(&[
+        "sparsity",
+        "interval (cycles)",
+        "throughput (img/s)",
+        "dsps",
+        "m20ks",
+        "speedup vs dense",
+    ]);
+    let mut dense_interval = 0u64;
+    for pct in [0, 25, 50, 70, 85, 90, 95] {
+        let mut g = resnet50(cfg);
+        if pct > 0 {
+            prune_graph(&mut g, pct as f64 / 100.0);
+        }
+        let (g, _) = optimize(&g);
+        let plan = compile(&g, "resnet50", &CompileOptions::new(S10_2800.clone(), dsp_target))?;
+        if pct == 0 {
+            dense_interval = plan.interval_cycles();
+        }
+        tab.row(&[
+            format!("{pct}%"),
+            plan.interval_cycles().to_string(),
+            format!("{:.0}", plan.throughput_img_s()),
+            plan.totals.dsps.to_string(),
+            plan.totals.m20ks.to_string(),
+            format!(
+                "{:.2}x",
+                dense_interval as f64 / plan.interval_cycles() as f64
+            ),
+        ]);
+    }
+    tab.print();
+    println!(
+        "\n(the paper's premise: ~10x headroom from 90% pruning when the\n\
+         hardware can skip zeros — HPIPE's gather architecture realizes a\n\
+         large fraction of it; lock-step padding absorbs the rest)"
+    );
+    Ok(())
+}

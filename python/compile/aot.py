@@ -1,0 +1,154 @@
+"""AOT build: train TinyCNN, export graphdef + HLO-text artifacts.
+
+This is the ONLY Python entry point in the build (`make artifacts`); the
+Rust binary is self-contained afterwards. Outputs under `artifacts/`:
+
+  tinycnn/graph.json + weights.bin   trained TinyCNN graphdef (loaded by
+                                     the Rust compiler/simulator/interp)
+  tinycnn/train_log.json             loss/accuracy curve of the training
+                                     run (end-to-end validation evidence)
+  tinycnn/model.hlo.txt              Pallas-kernel inference fn, batch 1
+  tinycnn/model_b8.hlo.txt           batch-8 variant for the batcher
+  kernels/sparse_conv_demo.hlo.txt   standalone gather-conv kernel
+                                     (runtime micro-bench)
+  manifest.json                      shapes + metadata for the runtime
+
+HLO *text* is the interchange format — jax>=0.5 serialized protos use
+64-bit ids that xla_extension 0.5.1 rejects (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import graphio, model
+from .kernels import sparse_conv
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # elides big weight constants as "{...}", which xla_extension 0.5.1's
+    # text parser silently reads back as ZEROS — the whole model would
+    # run with zero weights on the Rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_tiny(g: graphio.GraphDef, batch: int) -> str:
+    """Lower the Pallas-kernel TinyCNN forward at the given batch size.
+
+    The graph itself is batch-1 (HPIPE is a batch-1 pipeline); batching
+    for the host-side batcher is a vmap over the same function — the
+    Pallas kernels trace once per line regardless.
+    """
+    fwd = model.build_forward(g, use_pallas=True, interpret=True)
+    fn = fwd if batch == 1 else jax.vmap(lambda xi: fwd(xi[None, ...])[0][0])
+    spec = (
+        jax.ShapeDtypeStruct((1, model.TINY_INPUT, model.TINY_INPUT, 3), jnp.float32)
+        if batch == 1
+        else jax.ShapeDtypeStruct(
+            (batch, model.TINY_INPUT, model.TINY_INPUT, 3), jnp.float32
+        )
+    )
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def lower_sparse_conv_demo() -> tuple[str, dict]:
+    """A standalone gather-based sparse conv (16x16x16 -> 16ch, 85%
+    sparse) for the runtime micro-benchmark."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(3, 3, 16, 16)).astype(np.float32)
+    flat = np.abs(w).reshape(-1)
+    thresh = np.sort(flat)[int(flat.size * 0.85)]
+    w[np.abs(w) < thresh] = 0.0
+
+    def fn(x):
+        return (sparse_conv.sparse_conv2d(x, w, (1, 1), "SAME", splits=4),)
+
+    spec = jax.ShapeDtypeStruct((1, 16, 16, 16), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    meta = {
+        "input_shape": [1, 16, 16, 16],
+        "output_shape": [1, 16, 16, 16],
+        "sparsity": float((w == 0).mean()),
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-variants", type=int, nargs="*", default=[1, 8])
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    tiny_dir = os.path.join(out, "tinycnn")
+    kern_dir = os.path.join(out, "kernels")
+    os.makedirs(tiny_dir, exist_ok=True)
+    os.makedirs(kern_dir, exist_ok=True)
+
+    print(f"[aot] training TinyCNN for {args.steps} steps ...")
+    params, history = model.train_tiny(steps=args.steps)
+    model.save_history(history, os.path.join(tiny_dir, "train_log.json"))
+    print(
+        f"[aot] trained: loss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}, "
+        f"val accuracy {history[-1]['accuracy']:.3f}"
+    )
+
+    g = model.tiny_graphdef(params)
+    graphio.save(g, tiny_dir)
+    print(f"[aot] wrote graphdef to {tiny_dir}")
+
+    # cross-check: pallas forward == jnp forward on the trained weights
+    fwd_pallas = model.build_forward(g, use_pallas=True)
+    fwd_ref = model.build_forward(g, use_pallas=False)
+    x = jnp.asarray(
+        np.random.default_rng(3).normal(
+            size=(1, model.TINY_INPUT, model.TINY_INPUT, 3)
+        ).astype(np.float32)
+    )
+    a, b = fwd_pallas(x)[0], fwd_ref(x)[0]
+    err = float(jnp.max(jnp.abs(a - b)))
+    assert err < 1e-4, f"pallas/ref mismatch: {err}"
+    print(f"[aot] pallas-vs-ref max |err| = {err:.2e}")
+
+    manifest = {
+        "models": {},
+        "kernels": {},
+        "input_shape": [1, model.TINY_INPUT, model.TINY_INPUT, 3],
+        "classes": model.TINY_CLASSES,
+    }
+    for batch in args.batch_variants:
+        name = "model.hlo.txt" if batch == 1 else f"model_b{batch}.hlo.txt"
+        text = lower_tiny(g, batch)
+        with open(os.path.join(tiny_dir, name), "w") as f:
+            f.write(text)
+        manifest["models"][str(batch)] = f"tinycnn/{name}"
+        print(f"[aot] lowered batch={batch}: {len(text)} chars of HLO")
+
+    demo, meta = lower_sparse_conv_demo()
+    with open(os.path.join(kern_dir, "sparse_conv_demo.hlo.txt"), "w") as f:
+        f.write(demo)
+    manifest["kernels"]["sparse_conv_demo"] = {
+        "path": "kernels/sparse_conv_demo.hlo.txt",
+        **meta,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"[aot] done -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Read/write the `hpipe-graphdef-v1` interchange format.
+
+Mirrors rust/src/graph/graphdef.rs byte-for-byte: `graph.json` structural
+description plus `weights.bin` (flat little-endian f32) referenced by
+(offset, len); constants of ≤ 16 elements inline in the JSON.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+INLINE_LIMIT = 16
+FORMAT = "hpipe-graphdef-v1"
+
+
+class Node:
+    def __init__(self, name, op, attrs=None, inputs=None, tensor=None):
+        self.name = name
+        self.op = op
+        self.attrs = attrs or {}
+        self.inputs = inputs or []
+        self.tensor = tensor  # numpy array for Const nodes
+
+    def __repr__(self):
+        return f"Node({self.name!r}, {self.op})"
+
+
+class GraphDef:
+    def __init__(self, nodes=None, outputs=None):
+        self.nodes: list[Node] = nodes or []
+        self.outputs: list[str] = outputs or []
+
+    def node(self, name):
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def add(self, node: Node):
+        self.nodes.append(node)
+        return node.name
+
+    def topo_order(self):
+        by_name = {n.name: n for n in self.nodes}
+        seen, order = set(), []
+
+        def visit(name):
+            if name in seen:
+                return
+            seen.add(name)
+            for i in by_name[name].inputs:
+                visit(i)
+            order.append(by_name[name])
+
+        for n in self.nodes:
+            visit(n.name)
+        return order
+
+
+def save(g: GraphDef, dirpath: str) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    blob = bytearray()
+    nodes_json = []
+    for n in g.nodes:
+        jn = {
+            "name": n.name,
+            "op": n.op,
+            "attrs": n.attrs,
+            "inputs": n.inputs,
+        }
+        if n.tensor is not None:
+            t = np.asarray(n.tensor, dtype=np.float32)
+            jt = {"shape": list(t.shape)}
+            if t.size <= INLINE_LIMIT:
+                jt["data"] = [float(v) for v in t.reshape(-1)]
+            else:
+                jt["offset"] = len(blob) // 4
+                jt["len"] = int(t.size)
+                blob.extend(t.reshape(-1).tobytes())
+            jn["tensor"] = jt
+        nodes_json.append(jn)
+    root = {"format": FORMAT, "nodes": nodes_json, "outputs": g.outputs}
+    with open(os.path.join(dirpath, "graph.json"), "w") as f:
+        json.dump(root, f, indent=2, sort_keys=True)
+        f.write("\n")
+    if blob:
+        with open(os.path.join(dirpath, "weights.bin"), "wb") as f:
+            f.write(bytes(blob))
+
+
+def load(dirpath: str) -> GraphDef:
+    with open(os.path.join(dirpath, "graph.json")) as f:
+        root = json.load(f)
+    if root.get("format") != FORMAT:
+        raise ValueError(f"unrecognized graphdef format: {root.get('format')}")
+    blob_path = os.path.join(dirpath, "weights.bin")
+    blob = np.fromfile(blob_path, dtype="<f4") if os.path.exists(blob_path) else None
+    g = GraphDef(outputs=list(root["outputs"]))
+    for jn in root["nodes"]:
+        tensor = None
+        jt = jn.get("tensor")
+        if jt is not None:
+            shape = tuple(int(s) for s in jt["shape"])
+            if "data" in jt:
+                tensor = np.asarray(jt["data"], dtype=np.float32).reshape(shape)
+            else:
+                off, ln = int(jt["offset"]), int(jt["len"])
+                tensor = blob[off : off + ln].reshape(shape).copy()
+        g.add(Node(jn["name"], jn["op"], dict(jn.get("attrs", {})), list(jn["inputs"]), tensor))
+    return g

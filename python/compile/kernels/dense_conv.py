@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernels for the dense paths: direct line-at-a-time
+convolution, depthwise convolution, and the classifier matmul.
+
+The dense MobileNet evaluations (Table IV) do not use 0-skipping, so
+these kernels stream *all* weights — but keep HPIPE's dataflow: one
+output line per grid step, weights resident, MXU-friendly contractions
+(the inner op is a [W·kh·kw·Ci] × [kh·kw·Ci, Co] matmul, which on a real
+TPU maps onto the 128×128 systolic array the way HPIPE's DSP chains map
+onto DSP columns).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _dense_line_kernel(x_ref, w_ref, o_ref, *, out_w, sw, sh, kh, kw):
+    """o[y, x, oc] = sum_{ky,kx,ci} x[y*sh+ky, x*sw+kx, ci] * w[ky,kx,ci,oc]."""
+    y = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]
+    ci = x.shape[-1]
+    # im2col the line: [out_w, kh*kw*ci]
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            rows = jax.lax.dynamic_slice_in_dim(x, y * sh + ky, 1, axis=0)[0]
+            idx = jnp.arange(out_w) * sw + kx
+            cols.append(rows[idx, :])
+    patch = jnp.concatenate(cols, axis=-1)  # [out_w, kh*kw*ci]
+    wm = w.reshape(kh * kw * ci, -1)  # [kh*kw*ci, co] (HWIO flatten)
+    o_ref[...] = (patch @ wm)[None, :, :]
+
+
+def dense_conv2d(x, w, stride=(1, 1), padding="SAME", interpret=True):
+    """Direct dense conv, one output line per grid step."""
+    w = jnp.asarray(w)
+    kh, kw, ci, co = w.shape
+    sh, sw = stride
+    t, b, l, r = ref.resolve_padding(padding, x.shape[1], x.shape[2], kh, kw, sh, sw)
+    out_h = (x.shape[1] + t + b - kh) // sh + 1
+    out_w = (x.shape[2] + l + r - kw) // sw + 1
+    xp = jnp.pad(x[0], ((t, b), (l, r), (0, 0)))
+    kernel = functools.partial(
+        _dense_line_kernel, out_w=out_w, sw=sw, sh=sh, kh=kh, kw=kw
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(out_h,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda y: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda y: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, out_w, co), lambda y: (y, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_h, out_w, co), jnp.float32),
+        interpret=interpret,
+    )(xp, w)
+    return out[None, ...]
+
+
+def _depthwise_line_kernel(x_ref, w_ref, o_ref, *, out_w, sw, sh, kh, kw):
+    """Depthwise: per-channel taps, no cross-channel reduction (the
+    HPIPE depthwise module has no DSP chain — §V's shift-like unit)."""
+    y = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]  # [kh, kw, C, M]
+    c = x.shape[-1]
+    m = w.shape[-1]
+    acc = jnp.zeros((out_w, c * m), jnp.float32)
+    for ky in range(kh):
+        row = jax.lax.dynamic_slice_in_dim(x, y * sh + ky, 1, axis=0)[0]
+        for kx in range(kw):
+            idx = jnp.arange(out_w) * sw + kx
+            a = row[idx, :]  # [out_w, C]
+            taps = w[ky, kx]  # [C, M]
+            acc = acc + (a[:, :, None] * taps[None, :, :]).reshape(out_w, c * m)
+    o_ref[...] = acc[None, :, :]
+
+
+def depthwise_conv2d(x, w, stride=(1, 1), padding="SAME", interpret=True):
+    w = jnp.asarray(w)
+    kh, kw, c, m = w.shape
+    sh, sw = stride
+    t, b, l, r = ref.resolve_padding(padding, x.shape[1], x.shape[2], kh, kw, sh, sw)
+    out_h = (x.shape[1] + t + b - kh) // sh + 1
+    out_w = (x.shape[2] + l + r - kw) // sw + 1
+    xp = jnp.pad(x[0], ((t, b), (l, r), (0, 0)))
+    kernel = functools.partial(
+        _depthwise_line_kernel, out_w=out_w, sw=sw, sh=sh, kh=kh, kw=kw
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(out_h,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda y: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda y: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, out_w, c * m), lambda y: (y, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_h, out_w, c * m), jnp.float32),
+        interpret=interpret,
+    )(xp, w)
+    return out[None, ...]
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def matmul(x, w, interpret=True):
+    """Classifier matvec ([N,Ci] @ [Ci,Co]) as a single-step kernel —
+    HPIPE implements it as a 1x1x1 convolution (§V-B)."""
+    w = jnp.asarray(w)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], w.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(x, w)

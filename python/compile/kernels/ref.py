@@ -1,0 +1,100 @@
+"""Pure-jnp reference implementations (the L1 correctness oracles).
+
+These mirror the Rust reference interpreter (`rust/src/interp`) exactly:
+NHWC activations, HWIO conv weights, TensorFlow SAME/VALID/explicit
+padding semantics. Every Pallas kernel in this package is pinned against
+these via pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def resolve_padding(padding, in_h, in_w, kh, kw, sh, sw):
+    """TF-style padding -> (top, bottom, left, right)."""
+    if padding == "VALID":
+        return (0, 0, 0, 0)
+    if padding == "SAME":
+
+        def along(i, k, s):
+            out = -(-i // s)
+            return max((out - 1) * s + k - i, 0)
+
+        ph, pw = along(in_h, kh, sh), along(in_w, kw, sw)
+        return (ph // 2, ph - ph // 2, pw // 2, pw - pw // 2)
+    t, b, l, r = padding
+    return (int(t), int(b), int(l), int(r))
+
+
+def conv2d(x, w, stride=(1, 1), padding="SAME"):
+    """x: [1,H,W,Ci] f32, w: [kh,kw,Ci,Co]."""
+    t, b, l, r = resolve_padding(
+        padding, x.shape[1], x.shape[2], w.shape[0], w.shape[1], *stride
+    )
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=((t, b), (l, r)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def depthwise_conv2d(x, w, stride=(1, 1), padding="SAME"):
+    """x: [1,H,W,C], w: [kh,kw,C,M] -> [1,H',W',C*M]."""
+    c = x.shape[3]
+    m = w.shape[3]
+    t, b, l, r = resolve_padding(
+        padding, x.shape[1], x.shape[2], w.shape[0], w.shape[1], *stride
+    )
+    return lax.conv_general_dilated(
+        x,
+        jnp.reshape(w, (w.shape[0], w.shape[1], 1, c * m)),
+        window_strides=stride,
+        padding=((t, b), (l, r)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def matmul(x, w):
+    return x @ w
+
+
+def bias_add(x, b):
+    return x + b
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def max_pool(x, ksize=(2, 2), stride=(2, 2), padding="VALID"):
+    t, b, l, r = resolve_padding(
+        padding, x.shape[1], x.shape[2], ksize[0], ksize[1], *stride
+    )
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        (1, ksize[0], ksize[1], 1),
+        (1, stride[0], stride[1], 1),
+        ((0, 0), (t, b), (l, r), (0, 0)),
+    )
+
+
+def global_mean(x):
+    """NHWC -> [N, C]."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def softmax(x):
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,167 @@
+"""Layer-1 Pallas kernel: HPIPE's gather-based sparse direct convolution.
+
+The paper's hot-spot (§III-A, §V-B) rethought for the TPU-style memory
+hierarchy (DESIGN.md §Hardware-Adaptation):
+
+* HPIPE stores, per output channel, a runlength-compressed stream of
+  nonzero weights and decodes it into *activation gather addresses* at
+  runtime, with the stream shared by every output column (one X-mux per
+  multiplier). The sparsity pattern is frozen at compile time — the
+  weight buffer is a ROM.
+* Here the same compile-time-frozen pattern becomes static index arrays
+  baked into the program: for each output channel, the padded lock-step
+  stream of (k_y, k_x, c_i) positions and values. The kernel gathers
+  activations by those indices and multiply-accumulates — zero weights
+  are never touched, exactly like the hardware's 0-skipping.
+* The pipeline's "one output line at a time" dataflow (§V-A) becomes the
+  Pallas grid: one grid step per output line; the BlockSpec index_map
+  stages the k_h input lines the line needs from HBM into VMEM, the
+  analog of HPIPE's input activation ring buffers.
+
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md); real-TPU numbers are
+estimated from VMEM/MXU structure in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Lock-step stream padding mirrors rust/src/sparsity/rle.rs: runlength
+# field width caps a single hop; splits pad to the longest stream.
+RUNLENGTH_BITS = 4
+
+
+def encode_gather_indices(w: np.ndarray, splits: int = 1):
+    """Compress HWIO weights into per-output-channel gather streams.
+
+    Returns (vals, ky, kx, ci) int/float32 arrays of shape [Co, L] where
+    L is the longest padded lock-step stream over all output channels —
+    pad entries have value 0 and index (0,0,0). The per-(oc, split)
+    stream layout matches rust/src/sparsity/rle.rs::encode_conv, so the
+    Rust compiler's cycle counts correspond 1:1 to this kernel's L.
+    """
+    kh, kw, ci, co = w.shape
+    max_run = (1 << RUNLENGTH_BITS) - 1
+    streams = []  # per oc: list of (ky, kx, ci, val)
+    longest = 0
+    for oc in range(co):
+        per_split = [[] for _ in range(splits)]
+        last_local = [None] * splits
+        for row in range(kh * ci):
+            ky, c = divmod(row, ci)
+            split = row % splits
+            local = row // splits
+            for kx in range(kw):
+                v = w[ky, kx, c, oc]
+                if v == 0.0:
+                    continue
+                gap = local if last_local[split] is None else local - last_local[split]
+                pads = 0 if gap == 0 else (gap - 1) // max_run
+                per_split[split].extend([(0, 0, 0, 0.0)] * pads)
+                per_split[split].append((ky, kx, c, float(v)))
+                last_local[split] = local
+        # lock-step: all splits padded to the longest split stream, then
+        # interleaved (split-major is equivalent for the gather)
+        slen = max((len(s) for s in per_split), default=0)
+        merged = []
+        for s in per_split:
+            merged.extend(s + [(0, 0, 0, 0.0)] * (slen - len(s)))
+        streams.append(merged)
+        longest = max(longest, len(merged))
+    vals = np.zeros((co, longest), np.float32)
+    kys = np.zeros((co, longest), np.int32)
+    kxs = np.zeros((co, longest), np.int32)
+    cis = np.zeros((co, longest), np.int32)
+    for oc, entries in enumerate(streams):
+        for j, (ky, kx, c, v) in enumerate(entries):
+            kys[oc, j], kxs[oc, j], cis[oc, j], vals[oc, j] = ky, kx, c, v
+    return vals, kys, kxs, cis
+
+
+def _line_kernel(x_ref, val_ref, ky_ref, kx_ref, ci_ref, o_ref, *, out_w, sw, sh):
+    """One grid step = one output line (§V-A's output channel group).
+
+    x_ref:   [H_pad, W_pad, Ci]  padded input (the grid step reads only
+             the k_h lines at y*sh — Pallas block windows cannot overlap,
+             so the staging window of a real-TPU version is documented in
+             EXPERIMENTS.md §Perf instead of expressed in the BlockSpec)
+    val_ref: [Co, L]             lock-step weight stream values
+    ky/kx/ci_ref: [Co, L]        gather indices (static content)
+    o_ref:   [1, out_w, Co]
+    """
+    y = pl.program_id(0)
+    x = x_ref[...]
+    val = val_ref[...]
+    ky = ky_ref[...]
+    kx = kx_ref[...]
+    ci = ci_ref[...]
+    xs = jnp.arange(out_w) * sw  # output column -> input column base
+    # gather: [out_w, Co, L]; the (ky, kx, ci) triple plays the role of
+    # the decoded runlength + X-mux select of Fig 6, and y*sh + ky is the
+    # input activation ring-buffer address
+    g = x[y * sh + ky[None, :, :], xs[:, None, None] + kx[None, :, :], ci[None, :, :]]
+    acc = jnp.sum(g * val[None, :, :], axis=-1)  # DSP-chain accumulation
+    o_ref[...] = acc[None, :, :]
+
+
+def sparse_conv2d(x, w, stride=(1, 1), padding="SAME", splits=1, interpret=True):
+    """Gather-based sparse conv via pallas_call; drop-in for ref.conv2d.
+
+    `w` must be a concrete (numpy) array — the sparsity pattern is baked
+    into the compiled program, as in the hardware.
+    """
+    w = np.asarray(w)
+    kh, kw, ci, co = w.shape
+    sh, sw = stride
+    in_h, in_w = x.shape[1], x.shape[2]
+    t, b, l, r = ref.resolve_padding(padding, in_h, in_w, kh, kw, sh, sw)
+    out_h = (in_h + t + b - kh) // sh + 1
+    out_w = (in_w + l + r - kw) // sw + 1
+
+    vals, kys, kxs, cis = encode_gather_indices(w, splits)
+    # hardware pads with zero lines (Pad Muxes of Fig 6); same here
+    xp = jnp.pad(x[0], ((t, b), (l, r), (0, 0)))
+
+    # guard against an all-zero weight tensor (L would be 0)
+    if vals.shape[1] == 0:
+        vals = np.zeros((co, 1), np.float32)
+        kys = np.zeros((co, 1), np.int32)
+        kxs = np.zeros((co, 1), np.int32)
+        cis = np.zeros((co, 1), np.int32)
+
+    grid = (out_h,)
+    kernel = functools.partial(_line_kernel, out_w=out_w, sw=sw, sh=sh)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # padded input resident; each step reads its k_h-line window
+            pl.BlockSpec(xp.shape, lambda y: (0, 0, 0)),
+            # the weight streams are resident (weight buffer ROM)
+            pl.BlockSpec(vals.shape, lambda y: (0, 0)),
+            pl.BlockSpec(kys.shape, lambda y: (0, 0)),
+            pl.BlockSpec(kxs.shape, lambda y: (0, 0)),
+            pl.BlockSpec(cis.shape, lambda y: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, out_w, co), lambda y: (y, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_h, out_w, co), jnp.float32),
+        interpret=interpret,
+    )(xp, vals, kys, kxs, cis)
+    return out[None, ...]
+
+
+def vmem_footprint_bytes(in_w, ci, kh, co, stream_len):
+    """Estimated VMEM bytes one grid step holds (EXPERIMENTS.md §Perf):
+    input line window + weight streams + output line."""
+    x_block = kh * in_w * ci * 4
+    streams = co * stream_len * (4 + 3 * 4)
+    out_line = in_w * co * 4
+    return x_block + streams + out_line

@@ -1,0 +1,263 @@
+"""Layer 2: the JAX model — graphdef -> forward function.
+
+Builds a JAX forward pass from the same `hpipe-graphdef-v1` files the
+Rust compiler consumes, dispatching convolutions to the Layer-1 Pallas
+kernels (gather-based sparse conv for pruned layers, dense line conv /
+depthwise / matmul otherwise). Used by `aot.py` to lower the network to
+HLO text once at build time; never imported by the serving path.
+
+Also contains the TinyCNN definition + trainer for the end-to-end
+validation model (the Python twin of rust/src/nets/tiny.rs).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import graphio
+from .kernels import dense_conv, ref, sparse_conv
+
+# A conv layer whose weights are at least this sparse is compiled through
+# the gather-based 0-skipping kernel (the paper's threshold is implicit:
+# ResNet is pruned, MobileNets run dense).
+SPARSE_THRESHOLD = 0.30
+
+
+def build_forward(g: graphio.GraphDef, use_pallas=True, interpret=True):
+    """Return fwd(x) -> tuple of outputs, with all weights baked in.
+
+    With use_pallas=False the pure-jnp reference ops are used instead —
+    that variant is the oracle the Pallas build is pytest-compared to.
+    """
+    order = g.topo_order()
+
+    def fwd(x):
+        env = {}
+        for n in order:
+            op = n.op
+            a = n.attrs
+            if op == "Placeholder":
+                env[n.name] = x
+            elif op == "Const":
+                env[n.name] = jnp.asarray(n.tensor)
+            elif op in ("Conv2D", "DepthwiseConv2dNative"):
+                inp = env[n.inputs[0]]
+                w = np.asarray(g.node(n.inputs[1]).tensor)
+                stride = tuple(a.get("stride", [1, 1]))
+                padding = a.get("padding", "SAME")
+                if isinstance(padding, list):
+                    padding = tuple(padding)
+                if op == "Conv2D":
+                    sparsity = float((w == 0.0).mean())
+                    if use_pallas and sparsity >= SPARSE_THRESHOLD:
+                        env[n.name] = sparse_conv.sparse_conv2d(
+                            inp, w, stride, padding, interpret=interpret
+                        )
+                    elif use_pallas:
+                        env[n.name] = dense_conv.dense_conv2d(
+                            inp, w, stride, padding, interpret=interpret
+                        )
+                    else:
+                        env[n.name] = ref.conv2d(inp, jnp.asarray(w), stride, padding)
+                else:
+                    if use_pallas:
+                        env[n.name] = dense_conv.depthwise_conv2d(
+                            inp, w, stride, padding, interpret=interpret
+                        )
+                    else:
+                        env[n.name] = ref.depthwise_conv2d(
+                            inp, jnp.asarray(w), stride, padding
+                        )
+            elif op == "MatMul":
+                w = jnp.asarray(g.node(n.inputs[1]).tensor)
+                if use_pallas:
+                    env[n.name] = dense_conv.matmul(env[n.inputs[0]], w, interpret=interpret)
+                else:
+                    env[n.name] = ref.matmul(env[n.inputs[0]], w)
+            elif op == "BiasAdd":
+                env[n.name] = env[n.inputs[0]] + jnp.asarray(g.node(n.inputs[1]).tensor)
+            elif op == "MaxPool":
+                env[n.name] = ref.max_pool(
+                    env[n.inputs[0]],
+                    tuple(a["ksize"]),
+                    tuple(a["stride"]),
+                    a.get("padding", "VALID")
+                    if not isinstance(a.get("padding"), list)
+                    else tuple(a["padding"]),
+                )
+            elif op == "Relu":
+                env[n.name] = ref.relu(env[n.inputs[0]])
+            elif op == "Relu6":
+                env[n.name] = ref.relu6(env[n.inputs[0]])
+            elif op == "Add":
+                env[n.name] = env[n.inputs[0]] + env[n.inputs[1]]
+            elif op == "Mean":
+                env[n.name] = ref.global_mean(env[n.inputs[0]])
+            elif op == "Softmax":
+                env[n.name] = ref.softmax(env[n.inputs[0]])
+            elif op == "Pad":
+                t, b, l, r = a["pads"]
+                env[n.name] = jnp.pad(
+                    env[n.inputs[0]], ((0, 0), (t, b), (l, r), (0, 0))
+                )
+            else:
+                raise ValueError(f"unsupported op in graphdef: {op}")
+        return tuple(env[o] for o in g.outputs)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------
+# TinyCNN (the end-to-end model) — must match rust/src/nets/tiny.rs
+# ---------------------------------------------------------------------
+
+TINY_INPUT = 16
+TINY_CHANNELS = [16, 32, 64]
+TINY_CLASSES = 10
+
+
+def tiny_params(seed=0):
+    """He-init parameter dict for TinyCNN."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    cin = 3
+    for i, cout in enumerate(TINY_CHANNELS):
+        std = (2.0 / (9 * cin)) ** 0.5
+        params[f"conv{i}/weights"] = rng.normal(0, std, (3, 3, cin, cout)).astype(
+            np.float32
+        )
+        params[f"conv{i}/biasadd/bias"] = np.zeros(cout, np.float32)
+        cin = cout
+    std = (2.0 / cin) ** 0.5
+    params["logits/weights"] = rng.normal(0, std, (cin, TINY_CLASSES)).astype(np.float32)
+    params["logits/biasadd/bias"] = np.zeros(TINY_CLASSES, np.float32)
+    return params
+
+
+def tiny_forward_jnp(params, x):
+    """Differentiable TinyCNN forward in plain jnp (training path)."""
+    h = x
+    for i in range(len(TINY_CHANNELS)):
+        h = ref.conv2d(h, jnp.asarray(params[f"conv{i}/weights"]), (1, 1), "SAME")
+        h = h + jnp.asarray(params[f"conv{i}/biasadd/bias"])
+        h = ref.relu(h)
+        h = ref.max_pool(h, (2, 2), (2, 2), "VALID")
+    h = ref.global_mean(h)
+    h = ref.matmul(h, jnp.asarray(params["logits/weights"]))
+    h = h + jnp.asarray(params["logits/biasadd/bias"])
+    return h  # logits
+
+
+def tiny_graphdef(params) -> graphio.GraphDef:
+    """Emit TinyCNN as a graphdef (same node names/topology as tiny.rs)."""
+    g = graphio.GraphDef()
+    g.add(
+        graphio.Node(
+            "input", "Placeholder", {"shape": [1, TINY_INPUT, TINY_INPUT, 3]}
+        )
+    )
+    prev = "input"
+    for i, cout in enumerate(TINY_CHANNELS):
+        wname = f"conv{i}/weights"
+        g.add(graphio.Node(wname, "Const", tensor=params[wname]))
+        g.add(
+            graphio.Node(
+                f"conv{i}",
+                "Conv2D",
+                {"stride": [1, 1], "padding": "SAME"},
+                [prev, wname],
+            )
+        )
+        bname = f"conv{i}/biasadd/bias"
+        g.add(graphio.Node(bname, "Const", tensor=params[bname]))
+        g.add(graphio.Node(f"conv{i}/biasadd", "BiasAdd", {}, [f"conv{i}", bname]))
+        g.add(graphio.Node(f"conv{i}/relu", "Relu", {}, [f"conv{i}/biasadd"]))
+        g.add(
+            graphio.Node(
+                f"pool{i}",
+                "MaxPool",
+                {"ksize": [2, 2], "stride": [2, 2], "padding": "VALID"},
+                [f"conv{i}/relu"],
+            )
+        )
+        prev = f"pool{i}"
+    g.add(graphio.Node("global_pool", "Mean", {}, [prev]))
+    g.add(graphio.Node("logits/weights", "Const", tensor=params["logits/weights"]))
+    g.add(graphio.Node("logits", "MatMul", {}, ["global_pool", "logits/weights"]))
+    g.add(
+        graphio.Node(
+            "logits/biasadd/bias", "Const", tensor=params["logits/biasadd/bias"]
+        )
+    )
+    g.add(
+        graphio.Node(
+            "logits/biasadd", "BiasAdd", {}, ["logits", "logits/biasadd/bias"]
+        )
+    )
+    g.add(graphio.Node("predictions", "Softmax", {}, ["logits/biasadd"]))
+    g.outputs = ["predictions"]
+    return g
+
+
+def synthetic_dataset(n, seed=1):
+    """10-class synthetic image data: class-dependent Gaussian blobs on a
+    noisy background — learnable in a few hundred steps, non-trivial."""
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(0, 0.35, (n, TINY_INPUT, TINY_INPUT, 3)).astype(np.float32)
+    ys = rng.integers(0, TINY_CLASSES, n)
+    yy, xx = np.mgrid[0:TINY_INPUT, 0:TINY_INPUT]
+    for i in range(n):
+        c = int(ys[i])
+        # blob position and channel signature derived from the class
+        cy, cx = 3 + (c % 3) * 5, 3 + (c // 3) * 4
+        blob = np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / 8.0))
+        for ch in range(3):
+            xs[i, :, :, ch] += blob * (1.0 if (c + ch) % 3 else -1.0) * 2.0
+    return xs, ys.astype(np.int32)
+
+
+def train_tiny(steps=300, batch=64, lr=0.05, seed=0, log_every=20):
+    """Train TinyCNN on the synthetic set with SGD + momentum.
+
+    Returns (params, history) where history is a list of
+    {step, loss, accuracy} dicts (the logged loss curve required by the
+    end-to-end validation deliverable).
+    """
+    params = tiny_params(seed)
+    xs, ys = synthetic_dataset(4096, seed=seed + 1)
+    xt, yt = synthetic_dataset(512, seed=seed + 2)
+
+    def loss_fn(p, xb, yb):
+        logits = tiny_forward_jnp(p, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(xb.shape[0]), yb])
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def accuracy(p, xb, yb):
+        return jnp.mean(jnp.argmax(tiny_forward_jnp(p, xb), -1) == yb)
+
+    momentum = {k: np.zeros_like(v) for k, v in params.items()}
+    rng = np.random.default_rng(seed + 3)
+    history = []
+    for step in range(steps):
+        idx = rng.integers(0, xs.shape[0], batch)
+        loss, grads = grad_fn(params, xs[idx], ys[idx])
+        for k in params:
+            momentum[k] = 0.9 * momentum[k] + np.asarray(grads[k])
+            params[k] = params[k] - lr * momentum[k]
+        if step % log_every == 0 or step == steps - 1:
+            acc = float(accuracy(params, xt, yt))
+            history.append({"step": step, "loss": float(loss), "accuracy": acc})
+    return params, history
+
+
+def save_history(history, path):
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")

@@ -1,0 +1,143 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, strides, paddings, sparsities and split counts;
+every kernel must match `ref.py` to float tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_conv, ref, sparse_conv
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def random_weights(rng, kh, kw, ci, co, sparsity):
+    w = rng.normal(size=(kh, kw, ci, co)).astype(np.float32)
+    if sparsity > 0:
+        flat = np.abs(w).reshape(-1)
+        k = int(flat.size * sparsity)
+        if k > 0:
+            thresh = np.sort(flat)[k - 1]
+            w[np.abs(w) <= thresh] = 0.0
+    return w
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 12),
+    w_=st.integers(4, 12),
+    ci=st.integers(1, 6),
+    co=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    sparsity=st.sampled_from([0.0, 0.5, 0.85, 0.95]),
+    splits=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_sparse_conv_matches_ref(h, w_, ci, co, k, stride, padding, sparsity, splits, seed):
+    if padding == "VALID" and (h < k or w_ < k):
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, h, w_, ci)).astype(np.float32))
+    w = random_weights(rng, k, k, ci, co, sparsity)
+    got = sparse_conv.sparse_conv2d(x, w, (stride, stride), padding, splits=splits)
+    want = ref.conv2d(x, jnp.asarray(w), (stride, stride), padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(4, 10),
+    ci=st.integers(1, 5),
+    co=st.integers(1, 5),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31),
+)
+def test_dense_conv_matches_ref(h, ci, co, k, stride, padding, seed):
+    if padding == "VALID" and h < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, h, h, ci)).astype(np.float32))
+    w = rng.normal(size=(k, k, ci, co)).astype(np.float32)
+    got = dense_conv.dense_conv2d(x, w, (stride, stride), padding)
+    want = ref.conv2d(x, jnp.asarray(w), (stride, stride), padding)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(4, 10),
+    c=st.integers(1, 6),
+    m=st.integers(1, 2),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31),
+)
+def test_depthwise_matches_ref(h, c, m, stride, padding, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, h, h, c)).astype(np.float32))
+    w = rng.normal(size=(3, 3, c, m)).astype(np.float32)
+    if padding == "VALID" and h < 3:
+        return
+    got = dense_conv.depthwise_conv2d(x, w, (stride, stride), padding)
+    want = ref.depthwise_conv2d(x, jnp.asarray(w), (stride, stride), padding)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    ci=st.integers(1, 32),
+    co=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref(n, ci, co, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, ci)).astype(np.float32))
+    w = rng.normal(size=(ci, co)).astype(np.float32)
+    got = dense_conv.matmul(x, w)
+    want = ref.matmul(x, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_all_zero_weights():
+    x = jnp.ones((1, 6, 6, 2))
+    w = np.zeros((3, 3, 2, 3), np.float32)
+    got = sparse_conv.sparse_conv2d(x, w)
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+
+
+def test_encode_gather_indices_counts():
+    rng = np.random.default_rng(1)
+    w = random_weights(rng, 3, 3, 8, 4, 0.85)
+    vals, kys, kxs, cis = sparse_conv.encode_gather_indices(w, splits=2)
+    nnz_encoded = int((vals != 0).sum())
+    assert nnz_encoded == int((w != 0).sum())
+    # indices in range
+    assert kys.max() < 3 and kxs.max() < 3 and cis.max() < 8
+
+
+def test_lockstep_padding_grows_stream():
+    """The §IV nonlinearity: splits pad streams, so L is superlinear."""
+    rng = np.random.default_rng(2)
+    w = random_weights(rng, 3, 3, 16, 8, 0.9)
+    l1 = sparse_conv.encode_gather_indices(w, splits=1)[0].shape[1]
+    l8 = sparse_conv.encode_gather_indices(w, splits=8)[0].shape[1]
+    assert l8 >= -(-l1 // 8)  # at least ceil(l1/8)
+
+
+def test_sparse_conv_skips_work():
+    """Zero-skipping: stream length tracks nnz, not the dense volume."""
+    rng = np.random.default_rng(3)
+    dense_w = random_weights(rng, 3, 3, 16, 4, 0.0)
+    sparse_w = random_weights(rng, 3, 3, 16, 4, 0.9)
+    l_dense = sparse_conv.encode_gather_indices(dense_w)[0].shape[1]
+    l_sparse = sparse_conv.encode_gather_indices(sparse_w)[0].shape[1]
+    assert l_sparse < l_dense / 4

@@ -1,0 +1,122 @@
+"""L2 model tests: graphdef IO, forward equivalence, TinyCNN training."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import graphio, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_graphdef_roundtrip(tmp_path):
+    params = model.tiny_params(seed=5)
+    g = model.tiny_graphdef(params)
+    graphio.save(g, str(tmp_path))
+    g2 = graphio.load(str(tmp_path))
+    assert [n.name for n in g.nodes] == [n.name for n in g2.nodes]
+    assert g.outputs == g2.outputs
+    for a, b in zip(g.nodes, g2.nodes):
+        assert a.op == b.op and a.inputs == b.inputs
+        if a.tensor is not None:
+            np.testing.assert_array_equal(a.tensor, b.tensor)
+
+
+def test_small_constants_inline(tmp_path):
+    g = graphio.GraphDef()
+    g.add(graphio.Node("c", "Const", tensor=np.arange(4, dtype=np.float32)))
+    g.outputs = ["c"]
+    graphio.save(g, str(tmp_path))
+    assert not os.path.exists(tmp_path / "weights.bin")
+    g2 = graphio.load(str(tmp_path))
+    np.testing.assert_array_equal(g2.node("c").tensor, np.arange(4, dtype=np.float32))
+
+
+def test_forward_pallas_equals_ref():
+    params = model.tiny_params(seed=7)
+    g = model.tiny_graphdef(params)
+    fwd_p = model.build_forward(g, use_pallas=True)
+    fwd_r = model.build_forward(g, use_pallas=False)
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(1, 16, 16, 3)).astype(np.float32)
+    )
+    a, b = fwd_p(x)[0], fwd_r(x)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_forward_matches_jnp_trainer_path():
+    """The graphdef forward must equal the differentiable trainer forward
+    (same params, softmax applied to trainer logits)."""
+    params = model.tiny_params(seed=9)
+    g = model.tiny_graphdef(params)
+    fwd = model.build_forward(g, use_pallas=False)
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(size=(1, 16, 16, 3)).astype(np.float32)
+    )
+    probs = np.asarray(fwd(x)[0])
+    logits = np.asarray(model.tiny_forward_jnp(params, x))
+    want = np.asarray(model.ref.softmax(jnp.asarray(logits)))
+    np.testing.assert_allclose(probs, want, rtol=1e-5, atol=1e-6)
+
+
+def test_training_reduces_loss():
+    _, history = model.train_tiny(steps=60, batch=32, log_every=10)
+    assert history[-1]["loss"] < history[0]["loss"] * 0.7
+    assert history[-1]["accuracy"] > 0.3
+
+
+def test_synthetic_dataset_is_classifiable_structure():
+    xs, ys = model.synthetic_dataset(64, seed=3)
+    assert xs.shape == (64, 16, 16, 3)
+    assert set(np.unique(ys)).issubset(set(range(10)))
+    # same class -> similar blob location: correlation within class higher
+    c0 = xs[ys == ys[0]]
+    if len(c0) > 2:
+        a, b = c0[0].reshape(-1), c0[1].reshape(-1)
+        other = xs[ys != ys[0]][0].reshape(-1)
+        same = np.corrcoef(a, b)[0, 1]
+        diff = np.corrcoef(a, other)[0, 1]
+        assert same > diff
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "tinycnn", "graph.json")),
+    reason="artifacts not built",
+)
+def test_artifact_graphdef_loads_and_runs():
+    g = graphio.load(os.path.join(ARTIFACTS, "tinycnn"))
+    fwd = model.build_forward(g, use_pallas=False)
+    x = jnp.zeros((1, 16, 16, 3))
+    out = fwd(x)[0]
+    assert out.shape == (1, 10)
+    s = float(jnp.sum(out))
+    assert abs(s - 1.0) < 1e-4
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "tinycnn", "model.hlo.txt")),
+    reason="artifacts not built",
+)
+def test_hlo_artifact_has_full_constants():
+    """Regression for the silent-zero-weights bug: the HLO text must not
+    contain elided '{...}' constants (xla_extension 0.5.1 parses those as
+    zeros)."""
+    with open(os.path.join(ARTIFACTS, "tinycnn", "model.hlo.txt")) as f:
+        text = f.read()
+    assert "{...}" not in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "tinycnn", "train_log.json")),
+    reason="artifacts not built",
+)
+def test_train_log_records_descending_loss():
+    import json
+
+    with open(os.path.join(ARTIFACTS, "tinycnn", "train_log.json")) as f:
+        history = json.load(f)
+    assert len(history) >= 5
+    assert history[-1]["loss"] < history[0]["loss"]

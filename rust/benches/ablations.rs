@@ -1,0 +1,184 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//!  1. naive vs partition-aware throughput model (§IV: the fix improved
+//!     estimates to within 1% and bought 23% throughput);
+//!  2. Add skip-path buffer sizing (§V-C deadlock avoidance);
+//!  3. gather vs scatter convolution cost (§III-A's argument);
+//!  4. compiler hot-path timings (balancer, RLE encode, simulator rate).
+
+use hpipe::arch::S10_2800;
+use hpipe::compile::{compile, CompileOptions};
+use hpipe::graph::Op;
+use hpipe::nets::{resnet50, NetConfig};
+use hpipe::sim::{simulate, SimError};
+use hpipe::sparsity::prune_graph;
+use hpipe::sparsity::rle::encode_conv;
+use hpipe::transform::optimize;
+use hpipe::util::timer::bench;
+use hpipe::util::Rng;
+
+fn main() {
+    let full = std::env::var("HPIPE_FULL_SCALE").is_ok();
+    let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
+    let dsp = if full { 5000 } else { 1200 };
+
+    // ---------- 1. naive vs partition-aware analytic model ----------
+    println!("=== ablation 1: throughput model (naive linear vs partition-aware) ===");
+    let mut g = resnet50(cfg);
+    prune_graph(&mut g, 0.85);
+    let (g, _) = optimize(&g);
+    let mut naive_opts = CompileOptions::new(S10_2800.clone(), dsp);
+    naive_opts.partition_aware = false;
+    let naive_plan = compile(&g, "resnet50", &naive_opts).unwrap();
+    let aware_plan = compile(&g, "resnet50", &CompileOptions::new(S10_2800.clone(), dsp)).unwrap();
+
+    // The naive plan *believes* its own estimate; judge both plans by the
+    // partition-aware cycle model (the "actual" throughput) — re-cost the
+    // naive plan's split choices with the true model:
+    let aware_sim = simulate(&aware_plan, 8).unwrap();
+    let mut naive_recost = naive_plan.clone();
+    for (st, orig) in naive_recost.stages.iter_mut().zip(&naive_plan.stages) {
+        if let Op::Conv2D { .. } | Op::MatMul = st.op {
+            let node = g.get(&orig.name).unwrap();
+            let w = g.get(&node.inputs[1]).unwrap().value.as_ref().unwrap();
+            let summary = match st.op {
+                Op::MatMul => hpipe::compile::throughput::WeightSummary::from_matmul(w),
+                _ => hpipe::compile::throughput::WeightSummary::from_conv(w),
+            };
+            st.cycles = hpipe::compile::throughput::stage_cycles(
+                &st.op, &st.geo, st.splits, Some(&summary), true,
+            );
+        }
+    }
+    let naive_true_interval = naive_recost.interval_cycles();
+    println!(
+        "naive-model plan: believed interval {} cyc, true {} cyc — estimate off by {:.0}%",
+        naive_plan.interval_cycles(),
+        naive_true_interval,
+        100.0 * (naive_true_interval as f64 - naive_plan.interval_cycles() as f64)
+            / naive_plan.interval_cycles() as f64
+    );
+    println!(
+        "partition-aware plan: believed {} cyc, sim {} cyc ({:+.1}%; paper: within 1%)",
+        aware_plan.interval_cycles(),
+        aware_sim.steady_interval(),
+        100.0 * (aware_sim.steady_interval() as f64 - aware_plan.interval_cycles() as f64)
+            / aware_plan.interval_cycles() as f64
+    );
+    println!(
+        "throughput gained by the partition-aware balancer: {:.0}% (paper: 23%)",
+        100.0 * (naive_true_interval as f64 / aware_plan.interval_cycles() as f64 - 1.0)
+    );
+    // The skewed naive plan can even deadlock the line-level pipeline
+    // (its stage rates violate the buffer-sizing assumptions):
+    match simulate(&naive_recost, 4) {
+        Ok(r) => println!(
+            "naive plan simulates: steady interval {} cyc",
+            r.steady_interval()
+        ),
+        Err(e) => println!(
+            "naive plan pipeline: {} — skewed stage rates break the
+             balanced-rate buffer sizing (reinforces §V-C)",
+            match e {
+                SimError::Deadlock(d) => format!("DEADLOCK at cycle {}", d.at_cycle),
+                other => other.to_string(),
+            }
+        ),
+    }
+
+    // ---------- 2. Add buffer sizing ----------
+    println!("\n=== ablation 2: Add skip-path buffer sizing (§V-C) ===");
+    let mut sabotaged = aware_plan.clone();
+    for s in sabotaged.stages.iter_mut() {
+        if matches!(s.op, Op::Add) {
+            s.buffer_lines = 1;
+        }
+    }
+    match simulate(&sabotaged, 2) {
+        Err(SimError::Deadlock(d)) => println!(
+            "minimum Add buffers: DEADLOCK at cycle {} ({} stuck stages) — compiler sizing is necessary",
+            d.at_cycle,
+            d.stuck.len()
+        ),
+        Ok(r) => println!(
+            "minimum Add buffers survived at line granularity (interval {} vs sized {});\n\
+             sized buffers still required for sub-line timing margins",
+            r.steady_interval(),
+            aware_sim.steady_interval()
+        ),
+        Err(e) => println!("unexpected: {e}"),
+    }
+
+    // ---------- 3. gather vs scatter (§III-A) ----------
+    println!("\n=== ablation 3: gather vs scatter convolution cost model ===");
+    // scatter accumulates into a 3-port buffer in soft logic: per MAC it
+    // needs a read + add + write (2 M20K ports + ALM adder) where gather
+    // uses the DSP's hardened chain. Count the soft-logic cost over the
+    // balanced ResNet plan's multipliers.
+    let mults: usize = aware_plan.stages.iter().map(|s| s.mults).sum();
+    let gather_alms_per_mult = 26 + 7 * 2; // X-mux slice (our cost model)
+    let scatter_alms_per_mult = gather_alms_per_mult + 3 * 16; // 16b add + addr + wr mux
+    let scatter_extra_m20k_ports = mults; // one extra port per accumulator lane
+    println!(
+        "multipliers in plan: {mults}; gather soft logic {} ALMs vs scatter {} ALMs (+{:.0}%)",
+        mults * gather_alms_per_mult,
+        mults * scatter_alms_per_mult,
+        100.0 * (scatter_alms_per_mult as f64 / gather_alms_per_mult as f64 - 1.0)
+    );
+    println!(
+        "scatter also needs ~{} extra M20K ports (quad-port mode halves width to 10b — unusable for 16b accumulation, §III-A)",
+        scatter_extra_m20k_ports
+    );
+
+    // ---------- §VII: variable precision + Agilex packing ----------
+    println!("\n=== ablation 5 (§VII future work): precision vs performance-per-area ===");
+    {
+        use hpipe::arch::AGILEX_027;
+        let s10_16 = compile(&g, "resnet50", &CompileOptions::new(S10_2800.clone(), dsp).with_precision(16)).unwrap();
+        let ag_16 = compile(&g, "resnet50", &CompileOptions::new(AGILEX_027.clone(), dsp).with_precision(16)).unwrap();
+        let ag_8 = compile(&g, "resnet50", &CompileOptions::new(AGILEX_027.clone(), dsp).with_precision(8)).unwrap();
+        let per_area = |p: &hpipe::compile::AcceleratorPlan| {
+            p.throughput_img_s() / p.totals.dsps.max(1) as f64
+        };
+        println!(
+            "S10 16-bit:    {:>7.0} img/s, {} DSPs, {:.3} img/s/DSP",
+            s10_16.throughput_img_s(), s10_16.totals.dsps, per_area(&s10_16)
+        );
+        println!(
+            "Agilex 16-bit: {:>7.0} img/s, {} DSPs, {:.3} img/s/DSP",
+            ag_16.throughput_img_s(), ag_16.totals.dsps, per_area(&ag_16)
+        );
+        println!(
+            "Agilex 8-bit:  {:>7.0} img/s, {} DSPs, {:.3} img/s/DSP",
+            ag_8.throughput_img_s(), ag_8.totals.dsps, per_area(&ag_8)
+        );
+        println!(
+            "8-bit vs 16-bit perf/DSP on Agilex: {:.2}x (paper §VII: \"2x or more\")",
+            per_area(&ag_8) / per_area(&ag_16)
+        );
+    }
+
+    // ---------- 4. hot-path timings ----------
+    println!("\n=== ablation 4: compiler/simulator hot-path timings ===");
+    let mut rng = Rng::new(0xAB);
+    let mut w = hpipe::graph::Tensor::randn(&[3, 3, 64, 64], &mut rng, 1.0);
+    hpipe::sparsity::prune::prune_tensor(&mut w, 0.85);
+    bench("rle_encode/3x3x64x64_s8", 2, 30, || {
+        let _ = encode_conv(&w, 8);
+    });
+    let summary = hpipe::compile::throughput::WeightSummary::from_conv(&w);
+    bench("padded_cycles/3x3x64x64_s8", 2, 200, || {
+        let _ = summary.padded_cycles(8);
+    });
+    bench("compile/resnet50", 1, 3, || {
+        let _ = compile(&g, "resnet50", &CompileOptions::new(S10_2800.clone(), dsp)).unwrap();
+    });
+    let events: u64 = aware_sim.stage_lines.iter().sum();
+    let s = bench("simulate/resnet50_8img", 1, 5, || {
+        let _ = simulate(&aware_plan, 8).unwrap();
+    });
+    println!(
+        "simulator rate: {:.1}M line-events/s",
+        events as f64 / (s.median_ns() / 1e9) / 1e6
+    );
+}

@@ -1,0 +1,54 @@
+//! End-to-end serving benchmark (the L3 hot path + PJRT execution) and
+//! the sparse-conv kernel micro-benchmark. Skips gracefully when
+//! `make artifacts` has not run.
+
+use hpipe::coordinator::serve_demo;
+use hpipe::runtime::Runtime;
+use hpipe::util::timer::bench;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("e2e_serving: artifacts/ missing — run `make artifacts` first (skipping)");
+        return;
+    }
+    println!("=== end-to-end serving benchmark (TinyCNN via PJRT) ===");
+
+    // PJRT execute micro-bench: batch-1 and batch-8 models + raw kernel
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load_manifest().unwrap();
+    let mut rng = hpipe::util::Rng::new(0xB);
+    {
+        let m1 = rt.model("tinycnn_b1").unwrap();
+        let n1: usize = m1.input_shape.iter().product();
+        let x1: Vec<f32> = (0..n1).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let s1 = bench("pjrt_execute/tinycnn_b1", 3, 20, || {
+            let _ = m1.run(&x1).unwrap();
+        });
+        let m8 = rt.model("tinycnn_b8").unwrap();
+        let n8: usize = m8.input_shape.iter().product();
+        let x8: Vec<f32> = (0..n8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let s8 = bench("pjrt_execute/tinycnn_b8", 3, 20, || {
+            let _ = m8.run(&x8).unwrap();
+        });
+        println!(
+            "batching amortization: b8 costs {:.2}x of b1 for 8x the work",
+            s8.median_ns() / s1.median_ns()
+        );
+        let k = rt.model("sparse_conv_demo").unwrap();
+        let nk: usize = k.input_shape.iter().product();
+        let xk: Vec<f32> = (0..nk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        bench("pjrt_execute/sparse_conv_demo", 3, 20, || {
+            let _ = k.run(&xk).unwrap();
+        });
+    }
+    drop(rt);
+
+    // whole serving path: queue -> batcher -> execute -> respond
+    for (requests, batch) in [(64usize, 1usize), (64, 8)] {
+        let mut report = serve_demo(&dir, requests, batch).unwrap();
+        println!("\nserve_demo requests={requests} max_batch={batch}:");
+        report.print();
+    }
+}

@@ -1,0 +1,86 @@
+//! Fig 3 reproduction: per-layer cycle counts before/after balancing on
+//! 85%-sparse ResNet-50 (DSP target 5000, S10 2800), plus the per-layer
+//! resource fractions, the §IV model-accuracy claims and the balancer
+//! runtime ("a few seconds").
+//!
+//!   cargo bench --bench fig3_balance            (test-scale: fast)
+//!   HPIPE_FULL_SCALE=1 cargo bench --bench fig3_balance
+
+use hpipe::arch::S10_2800;
+use hpipe::compile::{balance::imbalance, compile, plan_stages, CompileOptions};
+use hpipe::nets::{resnet50, NetConfig};
+use hpipe::sim::simulate;
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::timer::Table;
+
+fn main() {
+    let full = std::env::var("HPIPE_FULL_SCALE").is_ok();
+    let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
+    let dsp_target = if full { 5000 } else { 1200 };
+    println!(
+        "=== Fig 3: layer latency before/after balancing ({}) ===",
+        if full { "full scale" } else { "test scale" }
+    );
+
+    let mut g = resnet50(cfg);
+    prune_graph(&mut g, 0.85);
+    let (g, _) = optimize(&g);
+    let opts = CompileOptions::new(S10_2800.clone(), dsp_target);
+    let (unbalanced, _) = plan_stages(&g, &opts).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let plan = compile(&g, "resnet50", &opts).unwrap();
+    let balance_time = t0.elapsed();
+
+    let mut tab = Table::new(&[
+        "layer",
+        "unbalanced cyc",
+        "balanced cyc",
+        "splits",
+        "%ALM",
+        "%M20K",
+        "%DSP",
+    ]);
+    for (u, b) in unbalanced.iter().zip(&plan.stages) {
+        if !b.is_compute() {
+            continue;
+        }
+        tab.row(&[
+            b.name.clone(),
+            u.cycles.to_string(),
+            b.cycles.to_string(),
+            b.splits.to_string(),
+            format!("{:.2}", 100.0 * b.resources.alms as f64 / plan.device.alms as f64),
+            format!("{:.2}", 100.0 * b.resources.m20ks as f64 / plan.device.m20ks as f64),
+            format!("{:.2}", 100.0 * b.resources.dsps as f64 / plan.device.dsps as f64),
+        ]);
+    }
+    tab.print();
+
+    let unb = unbalanced.iter().map(|s| s.cycles).max().unwrap();
+    let bal = plan.interval_cycles();
+    println!("\nbalancing gain: {unb} -> {bal} cycles = {:.1}x (paper: 30x)", unb as f64 / bal as f64);
+    println!(
+        "imbalance (max/median compute stage): {:.2} -> {:.2} (paper: \"within 10%\")",
+        imbalance(&unbalanced),
+        imbalance(&plan.stages)
+    );
+    println!("balancer + planning runtime: {balance_time:?} (paper: \"a few seconds\")");
+
+    // §IV: analytic estimate vs "actual" (our cycle simulator)
+    let images = 6;
+    let sim = simulate(&plan, images).unwrap();
+    let busy = sim.stage_busy[plan.bottleneck] as f64 / images as f64;
+    let predicted = plan.stages[plan.bottleneck].cycles as f64;
+    println!(
+        "analytic vs simulated bottleneck cycles: {predicted:.0} vs {busy:.0} ({:+.2}% error; paper: within 1%)",
+        100.0 * (predicted - busy) / busy
+    );
+    println!(
+        "simulated steady interval {} cycles vs analytic {} ({:+.1}%)",
+        sim.steady_interval(),
+        bal,
+        100.0 * (sim.steady_interval() as f64 - bal as f64) / bal as f64
+    );
+}

@@ -1,0 +1,75 @@
+//! Table II reproduction: resource utilization + frequency for the three
+//! compiled accelerators (ResNet-50 sparse, MobileNet-V1/V2 dense) on the
+//! Stratix 10 2800, measured vs the paper's published numbers.
+
+use hpipe::arch::S10_2800;
+use hpipe::baselines::PaperHpipe;
+use hpipe::compile::{compile, CompileOptions};
+use hpipe::nets::{build_named, NetConfig};
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::timer::Table;
+
+struct PaperRow {
+    alms: usize,
+    mem_alms: usize,
+    regs: usize,
+    m20ks: usize,
+    dsps: usize,
+    mhz: f64,
+}
+
+fn main() {
+    let full = std::env::var("HPIPE_FULL_SCALE").is_ok() || std::env::var("CI_FULL").is_ok();
+    let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
+    println!(
+        "=== Table II: per-CNN resource utilization ({}) ===",
+        if full { "full scale — direct Table II comparison" } else { "test scale; run with HPIPE_FULL_SCALE=1 for the Table II numbers" }
+    );
+
+    let paper = [
+        ("resnet50", 0.85, PaperRow { alms: 591_882, mem_alms: 122_850, regs: 1_417_297, m20ks: 11_278, dsps: 5_022, mhz: 580.0 }),
+        ("mobilenet_v1", 0.0, PaperRow { alms: 371_500, mem_alms: 110_950, regs: 874_713, m20ks: 4_283, dsps: 5_133, mhz: 430.0 }),
+        ("mobilenet_v2", 0.0, PaperRow { alms: 290_486, mem_alms: 41_550, regs: 766_604, m20ks: 4_512, dsps: 2_964, mhz: 390.0 }),
+    ];
+    let _ = PaperHpipe::RESNET50_ALMS;
+
+    let mut tab = Table::new(&[
+        "CNN", "who", "ALMs", "mem-ALMs", "registers", "M20Ks", "DSPs", "MHz",
+    ]);
+    for (net, sparsity, p) in paper {
+        let mut g = build_named(net, cfg).unwrap();
+        if sparsity > 0.0 {
+            prune_graph(&mut g, sparsity);
+        }
+        let (g, _) = optimize(&g);
+        let plan = compile(&g, net, &CompileOptions::new(S10_2800.clone(), 5000)).unwrap();
+        tab.row(&[
+            net.to_string(),
+            "ours".into(),
+            plan.totals.alms.to_string(),
+            plan.totals.mem_alms.to_string(),
+            plan.totals.registers.to_string(),
+            plan.totals.m20ks.to_string(),
+            plan.totals.dsps.to_string(),
+            format!("{:.0}", plan.fmax_mhz),
+        ]);
+        tab.row(&[
+            net.to_string(),
+            "paper".into(),
+            p.alms.to_string(),
+            p.mem_alms.to_string(),
+            p.regs.to_string(),
+            p.m20ks.to_string(),
+            p.dsps.to_string(),
+            format!("{:.0}", p.mhz),
+        ]);
+    }
+    tab.print();
+    println!(
+        "\nnotes: ResNet-50 must be memory-bound (M20K% > ALM%/DSP%-gap, paper 96%);\n\
+         MobileNet-V2's paper DSP count (2,964 = 51%) reflects input-channel-only\n\
+         unrolling — our column-parallel pointwise units reach the DSP target\n\
+         instead; see EXPERIMENTS.md for the divergence discussion."
+    );
+}

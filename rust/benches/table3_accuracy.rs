@@ -1,0 +1,86 @@
+//! Table III reproduction: precision/format vs accuracy.
+//!
+//! The paper's accuracy column comes from the 50k-image ImageNet
+//! validation set on physical hardware; we have neither, so the measured
+//! analog is the fixed-point executor's fidelity versus the f32 oracle
+//! on classification tasks — sweeping the precision ladder (8/11/16-bit)
+//! that the table's accelerators use — plus the transform-equivalence
+//! check (the paper's "no impact to either top 1 or top 5 accuracy"
+//! claim for BN folding).
+
+use hpipe::graph::Tensor;
+use hpipe::interp::fixed::{run_fixed, PrecisionConfig};
+use hpipe::nets::{build_named, NetConfig};
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::{equiv, optimize};
+use hpipe::util::timer::Table;
+use hpipe::util::Rng;
+use std::collections::BTreeMap;
+
+fn main() {
+    println!("=== Table III: precision / sparsity / accuracy ===");
+    let published = hpipe::baselines::table3_published();
+    let mut pub_tab = Table::new(&["accelerator", "sparsity", "winograd", "precision", "format", "top-1 (published)"]);
+    for r in &published {
+        pub_tab.row(&[
+            r.name.to_string(),
+            format!("{:.0}%", r.sparsity * 100.0),
+            if r.winograd { "Yes" } else { "No" }.to_string(),
+            format!("{}-bit", r.precision_bits),
+            r.format.to_string(),
+            r.top1.map(|a| format!("{:.1}%", a * 100.0)).unwrap_or("-".into()),
+        ]);
+    }
+    pub_tab.print();
+
+    // measured: fixed-point fidelity ladder on TinyCNN + sparse ResNet
+    println!("\nmeasured fixed-point fidelity (argmax agreement with f32 oracle, 40 random inputs):");
+    let mut tab = Table::new(&["network", "bits", "argmax agreement", "max |err|"]);
+    for net in ["tinycnn", "resnet50"] {
+        let mut g = build_named(net, NetConfig::test_scale()).unwrap();
+        if net == "resnet50" {
+            prune_graph(&mut g, 0.85);
+        }
+        let (g, _) = optimize(&g);
+        let input_shape = match &g.get("input").unwrap().op {
+            hpipe::graph::Op::Placeholder { shape } => shape.clone(),
+            _ => unreachable!(),
+        };
+        for bits in [8u32, 11, 16] {
+            let trials = if net == "resnet50" { 8 } else { 40 };
+            let mut rng = Rng::new(0x333 + bits as u64);
+            let mut agree = 0;
+            let mut max_err = 0f32;
+            for _ in 0..trials {
+                let mut feeds = BTreeMap::new();
+                feeds.insert(
+                    "input".to_string(),
+                    Tensor::randn(&input_shape, &mut rng, 1.0),
+                );
+                let r = run_fixed(&g, &feeds, &PrecisionConfig::uniform(bits, bits / 2)).unwrap();
+                if r.argmax_match {
+                    agree += 1;
+                }
+                max_err = max_err.max(r.max_abs_error);
+            }
+            tab.row(&[
+                net.to_string(),
+                bits.to_string(),
+                format!("{agree}/{trials}"),
+                format!("{max_err:.5}"),
+            ]);
+        }
+    }
+    tab.print();
+
+    // the BN-folding "no accuracy impact" claim, measured as numerical
+    // equivalence of the transformed graph
+    let g = build_named("resnet50", NetConfig::test_scale()).unwrap();
+    let (opt, _) = optimize(&g);
+    match equiv::assert_equivalent(&g, &opt, 3, 1e-3) {
+        Ok(()) => println!(
+            "\nBN folding equivalence: PASS (paper: \"no impact to either top 1 or top 5 accuracy\")"
+        ),
+        Err(e) => println!("\nBN folding equivalence: FAIL — {e}"),
+    }
+}

@@ -1,0 +1,48 @@
+//! Table V reproduction: resource utilization vs Lu et al. (the prior
+//! sparse-CNN FPGA accelerator) on ResNet-50.
+
+use hpipe::arch::S10_2800;
+use hpipe::baselines::LuEtAl;
+use hpipe::compile::{compile, CompileOptions};
+use hpipe::nets::{resnet50, NetConfig};
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::timer::Table;
+
+fn main() {
+    let full = std::env::var("HPIPE_FULL_SCALE").is_ok();
+    let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
+    println!("=== Table V: sparse-CNN FPGA accelerator comparison (ResNet-50) ===");
+
+    let mut g = resnet50(cfg);
+    prune_graph(&mut g, 0.85);
+    let (g, _) = optimize(&g);
+    let plan = compile(&g, "resnet50", &CompileOptions::new(S10_2800.clone(), 5000)).unwrap();
+    let (alm_u, m20k_u, dsp_u) = plan.totals.utilization(&plan.device);
+
+    let mut tab = Table::new(&["", "Lu et al. (published)", "HPIPE ours (modeled)", "HPIPE paper"]);
+    tab.row(&["device".into(), LuEtAl::DEVICE.into(), plan.device.name.into(), "Intel Stratix 10 2800".into()]);
+    tab.row(&["frequency (MHz)".into(), format!("{:.0}", LuEtAl::FREQ_MHZ), format!("{:.0}", plan.fmax_mhz), "580".into()]);
+    tab.row(&["logic utilization".into(), format!("{:.0}%", LuEtAl::LOGIC_UTIL * 100.0), format!("{:.0}%", alm_u * 100.0), "63%".into()]);
+    tab.row(&["DSP utilization".into(), format!("{:.0}%", LuEtAl::DSP_UTIL * 100.0), format!("{:.0}%", dsp_u * 100.0), "87%".into()]);
+    tab.row(&["BRAM utilization".into(), format!("{:.0}%", LuEtAl::BRAM_UTIL * 100.0), format!("{:.0}%", m20k_u * 100.0), "96%".into()]);
+    tab.print();
+
+    println!("\nshape checks (paper's qualitative claims):");
+    let freq_ratio = plan.fmax_mhz / LuEtAl::FREQ_MHZ;
+    println!(
+        "  frequency ratio vs Lu: {:.1}x (paper: \"nearly 3x\")  {}",
+        freq_ratio,
+        if freq_ratio > 2.0 { "OK" } else { "MISS" }
+    );
+    let dsp_ratio = dsp_u / LuEtAl::DSP_UTIL;
+    println!(
+        "  DSP-utilization ratio vs Lu: {:.1}x (paper: \"nearly double\")  {}",
+        dsp_ratio,
+        if dsp_ratio > 1.5 { "OK" } else { "MISS" }
+    );
+    println!(
+        "  logic below Lu's 92% while DSPs above their 45%: {}",
+        if alm_u < LuEtAl::LOGIC_UTIL && dsp_u > LuEtAl::DSP_UTIL { "OK" } else { "MISS" }
+    );
+}

@@ -1,0 +1,469 @@
+//! FPGA device database, per-module resource cost model, and the
+//! frequency heuristic — the "hardware" side of the compiler.
+//!
+//! We have no Stratix 10 or Quartus, so these models stand in for the
+//! device (DESIGN.md §Hardware-Adaptation). Capacities are the real
+//! datasheet numbers; per-module costs are parametric forms calibrated so
+//! the compiled ResNet-50 / MobileNet plans land near Table II of the
+//! paper. The microarchitectural structure they encode is the paper's:
+//!
+//! * a convolution stage instantiates one DSP chain per **output column**
+//!   (Fig 6's data lines 1..W share one decoded weight/x-index/runlength
+//!   stream — the §III "share address computations for a large number of
+//!   output activations" insight), each chain `n_channel_splits` (`s`)
+//!   multipliers deep = `ceil(W·s/2)` DSP blocks;
+//! * `s` weight buffers + input activation buffers + X-muxes;
+//! * soft logic per multiplier (X-mux, pad mux) plus a per-stage
+//!   controller (runlength decoder, backpressure).
+
+use crate::graph::Op;
+
+/// An FPGA (or comparison) device's capacities.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// Adaptive logic modules (Intel) / LUT-FF pairs (Xilinx-equivalent).
+    pub alms: usize,
+    /// 20kb block RAMs (M20K for S10; BRAM36-equivalents halved for Xilinx).
+    pub m20ks: usize,
+    /// DSP blocks. One Intel S10 DSP = two 18x18 multipliers.
+    pub dsps: usize,
+    /// Multipliers per DSP block (2 for Intel, 1 for Xilinx 27x18).
+    pub mults_per_dsp: usize,
+    /// Peak achievable clock for a well-pipelined design (MHz).
+    pub base_fmax: f64,
+}
+
+/// Stratix 10 GX 2800 — the paper's device.
+pub const S10_2800: Device = Device {
+    name: "Stratix 10 GX 2800",
+    alms: 933_120,
+    m20ks: 11_721,
+    dsps: 5_760,
+    mults_per_dsp: 2,
+    base_fmax: 730.0,
+};
+
+/// Stratix 10 GX 1650 — Table IV note: MobileNet-V2 "could fit on an S10
+/// 1650 and utilize 94% of the DSPs".
+pub const S10_1650: Device = Device {
+    name: "Stratix 10 GX 1650",
+    alms: 550_540,
+    m20ks: 5_851,
+    dsps: 3_145,
+    mults_per_dsp: 2,
+    base_fmax: 730.0,
+};
+
+/// Arria 10 GX 1150 — Brainwave's and DLA's published platform.
+pub const A10_1150: Device = Device {
+    name: "Arria 10 GX 1150",
+    alms: 427_200,
+    m20ks: 2_713,
+    dsps: 1_518,
+    mults_per_dsp: 2,
+    base_fmax: 450.0,
+};
+
+/// Xilinx Zynq ZU9 (ZCU102) — Lu et al. and Wu et al.'s platform.
+pub const ZU9: Device = Device {
+    name: "Xilinx Zynq ZU9",
+    alms: 274_080,
+    m20ks: 1_824,
+    dsps: 2_520,
+    mults_per_dsp: 1,
+    base_fmax: 650.0,
+};
+
+/// Agilex AGF 027 — the §VII future-work target: "future Agilex FPGAs
+/// including 2x performance for 8-bit vector dot products [28]". Modeled
+/// as 4 int8 multipliers per DSP when the compiled precision is ≤ 9 bits.
+pub const AGILEX_027: Device = Device {
+    name: "Agilex AGF 027",
+    alms: 912_800,
+    m20ks: 13_272,
+    dsps: 8_528,
+    mults_per_dsp: 2,
+    base_fmax: 800.0,
+};
+
+pub fn device_by_name(name: &str) -> Option<&'static Device> {
+    match name {
+        "s10_2800" => Some(&S10_2800),
+        "s10_1650" => Some(&S10_1650),
+        "a10_1150" => Some(&A10_1150),
+        "zu9" => Some(&ZU9),
+        "agilex_027" => Some(&AGILEX_027),
+        _ => None,
+    }
+}
+
+impl Device {
+    /// 18x18-equivalent multipliers one DSP provides at a weight
+    /// precision: Agilex packs two 8-bit dot-product lanes per 18x18
+    /// lane (§VII / [28]); Stratix 10 always gives `mults_per_dsp`.
+    pub fn mults_per_dsp_at(&self, bits: u32) -> usize {
+        if bits <= 9 && self.name.starts_with("Agilex") {
+            self.mults_per_dsp * 2
+        } else {
+            self.mults_per_dsp
+        }
+    }
+}
+
+/// Resource usage of one pipeline stage (or a whole accelerator when
+/// summed).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub alms: usize,
+    /// Subset of `alms` used as memory LABs (Table II "ALMs for Memory").
+    pub mem_alms: usize,
+    pub registers: usize,
+    pub hyper_registers: usize,
+    pub m20ks: usize,
+    pub dsps: usize,
+}
+
+impl Resources {
+    pub fn add(&mut self, o: &Resources) {
+        self.alms += o.alms;
+        self.mem_alms += o.mem_alms;
+        self.registers += o.registers;
+        self.hyper_registers += o.hyper_registers;
+        self.m20ks += o.m20ks;
+        self.dsps += o.dsps;
+    }
+
+    pub fn fits(&self, d: &Device) -> bool {
+        self.alms <= d.alms && self.m20ks <= d.m20ks && self.dsps <= d.dsps
+    }
+
+    pub fn utilization(&self, d: &Device) -> (f64, f64, f64) {
+        (
+            self.alms as f64 / d.alms as f64,
+            self.m20ks as f64 / d.m20ks as f64,
+            self.dsps as f64 / d.dsps as f64,
+        )
+    }
+}
+
+/// Tunable constants of the cost model. Defaults calibrated against
+/// Table II (see `benches/table2_resources.rs` which prints the fit).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Fixed controller ALMs per stage.
+    pub ctrl_alms: usize,
+    /// ALMs per multiplier (X-mux slice, pad mux, operand registers).
+    pub alms_per_mult: usize,
+    /// Extra ALMs per mux input beyond 1 (k_w wide X-muxes cost more).
+    pub alms_per_mult_muxin: usize,
+    /// ALMs per weight-buffer split (runlength decoder + addressing).
+    pub alms_per_split: usize,
+    /// Registers per ALM (pipelining density; Table II ResNet: ~2.4).
+    pub regs_per_alm: f64,
+    /// Hyper-registers per ALM (S10 HyperFlex; Table II ResNet: ~0.63).
+    pub hregs_per_alm: f64,
+    /// Bits per weight-buffer entry (16b value + runlength + x-index).
+    pub weight_entry_bits: usize,
+    /// Usable bits per M20K.
+    pub m20k_bits: usize,
+    /// Fraction of small buffers that go to MLABs (memory ALMs) instead
+    /// of M20Ks.
+    pub mlab_bits_per_alm: usize,
+    /// Activation buffer depth in lines (k_h + double-buffer margin).
+    pub act_buffer_margin_lines: usize,
+    /// Activation precision (bits).
+    pub act_bits: usize,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            ctrl_alms: 900,
+            alms_per_mult: 26,
+            alms_per_mult_muxin: 7,
+            alms_per_split: 110,
+            regs_per_alm: 2.4,
+            hregs_per_alm: 0.63,
+            weight_entry_bits: 24,
+            m20k_bits: 20_480,
+            mlab_bits_per_alm: 20,
+            act_buffer_margin_lines: 2,
+            act_bits: 16,
+        }
+    }
+}
+
+/// Static per-stage workload description the cost/throughput models need
+/// (extracted from the graph by the compiler).
+#[derive(Clone, Debug)]
+pub struct StageGeometry {
+    /// Input line width × channels (elements per input line).
+    pub in_w: usize,
+    pub in_c: usize,
+    /// Output line width / height / channels.
+    pub out_w: usize,
+    pub out_h: usize,
+    pub out_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+}
+
+/// Estimate the resource cost of one compute stage.
+///
+/// `mults` = W·s for conv/depthwise (one chain per output column),
+/// `s` for MatMul. `weight_entries` = padded RLE entries (the weight
+/// buffer footprint). Non-compute stages use [`stage_cost_simple`].
+pub fn conv_stage_cost(
+    cm: &CostModel,
+    geo: &StageGeometry,
+    splits: usize,
+    mults: usize,
+    weight_entries: usize,
+    mults_per_dsp: usize,
+) -> Resources {
+    let alms_mux = mults * (cm.alms_per_mult + cm.alms_per_mult_muxin * geo.kw.saturating_sub(1));
+    let alms = cm.ctrl_alms + alms_mux + cm.alms_per_split * splits;
+
+    // Weight buffer: entries spread across `splits` independent streams;
+    // M20Ks are dual-ported, so two streams can share one block. The
+    // floor is capacity (total bits), the ceiling driver is banking
+    // (ceil(splits/2) independent read ports).
+    let weight_bits = weight_entries * cm.weight_entry_bits;
+    let weight_m20ks = weight_bits
+        .div_ceil(cm.m20k_bits)
+        .max(splits.max(1).div_ceil(2));
+
+    // Input activation buffers: k_h + margin lines of the input,
+    // partitioned across splits (each split's buffer holds its rows),
+    // again two splits per dual-ported M20K.
+    let act_lines = geo.kh + cm.act_buffer_margin_lines;
+    let act_bits = act_lines * geo.in_w * geo.in_c * cm.act_bits;
+    let per_split_bits = act_bits / splits.max(1);
+    // Small buffers (< 1/2 M20K) go to MLABs.
+    let (act_m20ks, mem_alms) = if per_split_bits * 2 < cm.m20k_bits {
+        (0, splits * per_split_bits.div_ceil(cm.mlab_bits_per_alm))
+    } else {
+        (
+            act_bits
+                .div_ceil(cm.m20k_bits)
+                .max(splits.max(1).div_ceil(2)),
+            0,
+        )
+    };
+
+    let total_alms = alms + mem_alms;
+    Resources {
+        alms: total_alms,
+        mem_alms,
+        registers: (total_alms as f64 * cm.regs_per_alm) as usize,
+        hyper_registers: (total_alms as f64 * cm.hregs_per_alm) as usize,
+        m20ks: weight_m20ks + act_m20ks,
+        dsps: mults.div_ceil(mults_per_dsp.max(1)),
+    }
+}
+
+/// Cost of a non-compute stage (MaxPool, Add, BiasAdd, Relu, Mean,
+/// Placeholder). Buffering stages pay for their line buffers; streaming
+/// stages are a few hundred ALMs of control.
+pub fn stage_cost_simple(
+    cm: &CostModel,
+    op: &Op,
+    geo: &StageGeometry,
+    buffer_lines: usize,
+) -> Resources {
+    let buffers = op.buffers_input();
+    let alms_ctrl = match op {
+        Op::MaxPool { .. } => cm.ctrl_alms / 2 + geo.in_c * 2, // comparator tree
+        Op::Add => cm.ctrl_alms / 3 + geo.in_c,                // adder + 2 buffers
+        Op::Mean => cm.ctrl_alms / 3 + geo.in_c * 2,
+        Op::BiasAdd | Op::Relu | Op::Relu6 | Op::Softmax => 120 + geo.in_c / 2,
+        Op::Placeholder { .. } => cm.ctrl_alms / 2,
+        _ => cm.ctrl_alms / 4,
+    };
+    let (m20ks, mem_alms) = if buffers {
+        let n_bufs = if matches!(op, Op::Add) { 2 } else { 1 };
+        let bits = buffer_lines.max(1) * geo.in_w * geo.in_c * cm.act_bits * n_bufs;
+        if bits * 2 < cm.m20k_bits {
+            (0, bits.div_ceil(cm.mlab_bits_per_alm))
+        } else {
+            (bits.div_ceil(cm.m20k_bits), 0)
+        }
+    } else {
+        (0, 0)
+    };
+    let alms = alms_ctrl + mem_alms;
+    Resources {
+        alms,
+        mem_alms,
+        registers: (alms as f64 * cm.regs_per_alm) as usize,
+        hyper_registers: (alms as f64 * cm.hregs_per_alm) as usize,
+        m20ks,
+        dsps: 0,
+    }
+}
+
+/// Frequency heuristic (§VI-D): the compiler pipelines control/data
+/// fanout, so achieved Fmax degrades smoothly with the widest fanout
+/// (the biggest stage's multiplier count — the shared weight stream
+/// fans out to every column chain) and with overall device fill (routing
+/// congestion). Constants fit to Table II's 580/430/390 MHz.
+#[derive(Clone, Debug)]
+pub struct FreqModel {
+    pub base_mhz: f64,
+    /// MHz lost per log2 of the widest stage's multiplier fanout.
+    pub per_log2_fanout: f64,
+    /// MHz lost per unit ALM utilization (routing congestion).
+    pub per_alm_util: f64,
+    /// Flat penalty whenever depthwise stages are present, plus a
+    /// proportional term (the paper notes the pipelining heuristics "were
+    /// mostly tuned on Resnet", leaving MobileNet frequencies lower).
+    pub depthwise_penalty: f64,
+    pub depthwise_frac_penalty: f64,
+}
+
+impl Default for FreqModel {
+    fn default() -> Self {
+        FreqModel {
+            base_mhz: 730.0,
+            per_log2_fanout: 9.0,
+            per_alm_util: 105.0,
+            depthwise_penalty: 140.0,
+            depthwise_frac_penalty: 30.0,
+        }
+    }
+}
+
+impl FreqModel {
+    /// Estimate Fmax for a compiled accelerator.
+    ///
+    /// `max_stage_mults`: widest compute stage; `alm_util`: fraction of
+    /// device ALMs used; `dw_mult_frac`: fraction of multipliers in
+    /// depthwise stages.
+    pub fn fmax(
+        &self,
+        device: &Device,
+        max_stage_mults: usize,
+        alm_util: f64,
+        dw_mult_frac: f64,
+    ) -> f64 {
+        let fanout = (max_stage_mults.max(1) as f64).log2();
+        let dw = if dw_mult_frac > 0.0 {
+            self.depthwise_penalty + self.depthwise_frac_penalty * dw_mult_frac
+        } else {
+            0.0
+        };
+        let f = self.base_mhz.min(device.base_fmax)
+            - self.per_log2_fanout * fanout
+            - self.per_alm_util * alm_util
+            - dw;
+        f.max(60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Padding;
+
+    fn geo() -> StageGeometry {
+        StageGeometry {
+            in_w: 56,
+            in_c: 64,
+            out_w: 56,
+            out_h: 56,
+            out_c: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+        }
+    }
+
+    #[test]
+    fn device_lookup() {
+        assert_eq!(device_by_name("s10_2800").unwrap().dsps, 5760);
+        assert_eq!(device_by_name("zu9").unwrap().mults_per_dsp, 1);
+        assert!(device_by_name("vu9p").is_none());
+    }
+
+    #[test]
+    fn conv_cost_scales_with_mults() {
+        let cm = CostModel::default();
+        let g = geo();
+        let small = conv_stage_cost(&cm, &g, 2, 56 * 2, 10_000, 2);
+        let big = conv_stage_cost(&cm, &g, 8, 56 * 8, 10_000, 2);
+        assert!(big.alms > small.alms);
+        assert!(big.dsps > small.dsps);
+        assert_eq!(big.dsps, (56 * 8usize).div_ceil(2));
+    }
+
+    #[test]
+    fn weight_buffer_m20ks_track_entries() {
+        let cm = CostModel::default();
+        let g = geo();
+        let few = conv_stage_cost(&cm, &g, 4, 8, 1_000, 2);
+        let many = conv_stage_cost(&cm, &g, 4, 8, 400_000, 2);
+        assert!(many.m20ks > few.m20ks);
+        // 400k entries * 24b = 9.6Mb -> ≥ 469 M20Ks
+        assert!(many.m20ks >= 400_000 * 24 / 20_480);
+    }
+
+    #[test]
+    fn small_buffers_use_mlabs() {
+        let cm = CostModel::default();
+        let tiny = StageGeometry {
+            in_w: 7,
+            in_c: 4,
+            out_w: 7,
+            out_h: 7,
+            out_c: 4,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+        };
+        let r = conv_stage_cost(&cm, &tiny, 1, 4, 16, 2);
+        assert!(r.mem_alms > 0, "tiny activation buffer should be MLAB");
+    }
+
+    #[test]
+    fn simple_stage_costs() {
+        let cm = CostModel::default();
+        let g = geo();
+        let pool = stage_cost_simple(
+            &cm,
+            &Op::MaxPool { ksize: (3, 3), stride: (2, 2), padding: Padding::Same },
+            &g,
+            5,
+        );
+        assert!(pool.m20ks > 0 || pool.mem_alms > 0);
+        assert_eq!(pool.dsps, 0);
+        let relu = stage_cost_simple(&cm, &Op::Relu, &g, 0);
+        assert_eq!(relu.m20ks, 0);
+        assert!(relu.alms < pool.alms + 1000);
+    }
+
+    #[test]
+    fn resources_add_and_fit() {
+        let mut total = Resources::default();
+        total.add(&Resources { alms: 500_000, mem_alms: 0, registers: 0, hyper_registers: 0, m20ks: 11_000, dsps: 5_000 });
+        assert!(total.fits(&S10_2800));
+        total.add(&Resources { dsps: 1_000, ..Default::default() });
+        assert!(!total.fits(&S10_2800));
+        let (_, _, d) = total.utilization(&S10_2800);
+        assert!(d > 1.0);
+    }
+
+    #[test]
+    fn freq_model_ordering() {
+        let fm = FreqModel::default();
+        // ResNet-like: big fanout, high ALM fill, no depthwise
+        let resnet = fm.fmax(&S10_2800, 1024, 0.63, 0.0);
+        // MobileNet-like: moderate fanout, lower fill, lots of depthwise
+        let mbv1 = fm.fmax(&S10_2800, 1024, 0.40, 0.45);
+        let mbv2 = fm.fmax(&S10_2800, 2048, 0.31, 0.55);
+        assert!(resnet > mbv1, "{resnet} vs {mbv1}");
+        assert!(mbv1 > mbv2, "{mbv1} vs {mbv2}");
+        assert!((450.0..700.0).contains(&resnet), "resnet fmax {resnet}");
+    }
+}

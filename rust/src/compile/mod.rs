@@ -1,0 +1,518 @@
+//! The HPIPE network compiler (§IV, Fig 4).
+//!
+//! Input: an optimized graph (BNs folded, pads merged), a device + DSP
+//! target, and optional precision annotations. Output: an
+//! [`AcceleratorPlan`] — one parameterized hardware stage per graph node,
+//! with `n_channel_splits` chosen by the balancer — which the generator
+//! ([`codegen`]) turns into Verilog stubs + memory-initialization files,
+//! and the simulator (`sim`) executes cycle-accurately.
+
+pub mod balance;
+pub mod codegen;
+pub mod throughput;
+
+use crate::arch::{
+    conv_stage_cost, stage_cost_simple, CostModel, Device, FreqModel, Resources,
+    StageGeometry,
+};
+use crate::graph::{Graph, GraphError, Op};
+use crate::util::Json;
+use std::collections::BTreeMap;
+use throughput::{stage_cycles, WeightSummary};
+
+/// One pipeline stage of the planned accelerator.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    pub name: String,
+    pub op: Op,
+    /// Producer stage names (activation inputs only, not weight consts).
+    pub inputs: Vec<String>,
+    pub geo: StageGeometry,
+    /// n_channel_splits (1 for non-compute stages).
+    pub splits: usize,
+    /// Maximum useful splits (input-channel/row unroll cap).
+    pub unroll_cap: usize,
+    /// Multipliers instantiated (W·s for conv/dw, s for matmul).
+    pub mults: usize,
+    /// Estimated cycles per image (partition-aware model).
+    pub cycles: u64,
+    /// Weight buffer entries after padding (0 for non-compute).
+    pub weight_entries: usize,
+    pub resources: Resources,
+    /// Input buffer capacity in lines (Add skip paths get deep buffers).
+    pub buffer_lines: usize,
+}
+
+impl StagePlan {
+    pub fn is_compute(&self) -> bool {
+        self.op.is_compute()
+    }
+}
+
+/// A fully planned accelerator.
+#[derive(Clone, Debug)]
+pub struct AcceleratorPlan {
+    pub net_name: String,
+    pub device: Device,
+    pub stages: Vec<StagePlan>,
+    pub totals: Resources,
+    pub fmax_mhz: f64,
+    /// Index of the stage with the highest cycles (the pipeline
+    /// bottleneck that sets throughput).
+    pub bottleneck: usize,
+    pub dsp_target: usize,
+}
+
+impl AcceleratorPlan {
+    /// Steady-state initiation interval in cycles (slowest stage).
+    pub fn interval_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.cycles).max().unwrap_or(1)
+    }
+
+    /// Throughput at batch 1 in images/second.
+    pub fn throughput_img_s(&self) -> f64 {
+        self.fmax_mhz * 1e6 / self.interval_cycles() as f64
+    }
+
+    /// Rough latency estimate: pipeline fill (each stage must buffer k_h
+    /// input lines before producing) plus one interval. The simulator
+    /// refines this.
+    pub fn latency_estimate_ms(&self) -> f64 {
+        let fill: u64 = self
+            .stages
+            .iter()
+            .map(|s| {
+                // time for the producer to deliver kh lines ≈ kh *
+                // (stage cycles / out_h)
+                let per_line = s.cycles / (s.geo.out_h.max(1) as u64);
+                per_line * s.geo.kh as u64
+            })
+            .sum();
+        (fill + self.interval_cycles()) as f64 / (self.fmax_mhz * 1e6) * 1e3
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&StagePlan> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
+    /// Fraction of compute stages that are depthwise convolutions
+    /// (frequency model input — the paper notes its pipelining heuristics
+    /// were tuned on ResNet, leaving depthwise-heavy nets slower).
+    pub fn depthwise_stage_frac(&self) -> f64 {
+        let total = self.stages.iter().filter(|s| s.is_compute()).count();
+        if total == 0 {
+            return 0.0;
+        }
+        let dw = self
+            .stages
+            .iter()
+            .filter(|s| matches!(s.op, Op::DepthwiseConv2d { .. }))
+            .count();
+        dw as f64 / total as f64
+    }
+
+    /// Serialize the plan (for reports and the codegen manifest).
+    pub fn to_json(&self) -> Json {
+        let mut stages = Json::Arr(vec![]);
+        for s in &self.stages {
+            let mut j = Json::obj();
+            j.set("name", Json::from(s.name.as_str()))
+                .set("op", Json::from(s.op.type_name()))
+                .set("splits", Json::from(s.splits))
+                .set("mults", Json::from(s.mults))
+                .set("cycles", Json::from(s.cycles as f64))
+                .set("weight_entries", Json::from(s.weight_entries))
+                .set("dsps", Json::from(s.resources.dsps))
+                .set("m20ks", Json::from(s.resources.m20ks))
+                .set("alms", Json::from(s.resources.alms))
+                .set("buffer_lines", Json::from(s.buffer_lines));
+            stages.push(j);
+        }
+        let mut root = Json::obj();
+        root.set("net", Json::from(self.net_name.as_str()))
+            .set("device", Json::from(self.device.name))
+            .set("fmax_mhz", Json::from(self.fmax_mhz))
+            .set("dsp_target", Json::from(self.dsp_target))
+            .set("interval_cycles", Json::from(self.interval_cycles() as f64))
+            .set("throughput_img_s", Json::from(self.throughput_img_s()))
+            .set("total_dsps", Json::from(self.totals.dsps))
+            .set("total_m20ks", Json::from(self.totals.m20ks))
+            .set("total_alms", Json::from(self.totals.alms))
+            .set("stages", stages);
+        root
+    }
+}
+
+/// Compiler options.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    pub device: Device,
+    /// DSP budget the balancer fills toward (paper: 5000 on S10 2800).
+    pub dsp_target: usize,
+    pub cost_model: CostModel,
+    pub freq_model: FreqModel,
+    /// Use the partition-aware throughput model (§IV fix). The naive
+    /// model is kept for the ablation bench.
+    pub partition_aware: bool,
+    /// Weight/activation precision in bits (Fig 4's precision
+    /// annotations; §VI ran everything at 16). ≤9 bits enables the
+    /// Agilex 2x dot-product packing of §VII.
+    pub weight_bits: u32,
+}
+
+impl CompileOptions {
+    pub fn new(device: Device, dsp_target: usize) -> CompileOptions {
+        CompileOptions {
+            device,
+            dsp_target,
+            cost_model: CostModel::default(),
+            freq_model: FreqModel::default(),
+            partition_aware: true,
+            weight_bits: 16,
+        }
+    }
+
+    /// Apply a precision annotation (Fig 4): adjusts weight-buffer entry
+    /// width and activation width in the cost model.
+    pub fn with_precision(mut self, bits: u32) -> CompileOptions {
+        self.weight_bits = bits;
+        self.cost_model.weight_entry_bits = bits as usize + 8; // + runlength/x fields
+        self.cost_model.act_bits = bits as usize;
+        self
+    }
+}
+
+/// Build the initial (unbalanced, splits = 1) stage plans from a graph.
+/// The graph must already be optimized (no BN/Mul/AddC/Pad left — those
+/// have no hardware module).
+pub fn plan_stages(
+    graph: &Graph,
+    opts: &CompileOptions,
+) -> Result<(Vec<StagePlan>, Vec<Option<WeightSummary>>), GraphError> {
+    let shapes = graph.infer_shapes()?;
+    let order = graph.topo_order()?;
+    let mut stages = Vec::new();
+    let mut summaries = Vec::new();
+    for idx in order {
+        let n = &graph.nodes[idx];
+        if matches!(n.op, Op::Const) {
+            continue;
+        }
+        if matches!(n.op, Op::FusedBatchNorm { .. } | Op::Mul | Op::AddC | Op::Pad { .. }) {
+            return Err(GraphError::Invalid(
+                n.name.clone(),
+                format!(
+                    "op {} has no hardware module; run transform::optimize first",
+                    n.op.type_name()
+                ),
+            ));
+        }
+        let out = &shapes[&n.name];
+        // Activation input (first non-const input) drives the geometry.
+        let act_inputs: Vec<String> = n
+            .inputs
+            .iter()
+            .filter(|i| !matches!(graph.get(i).unwrap().op, Op::Const))
+            .cloned()
+            .collect();
+        let in_shape = act_inputs
+            .first()
+            .map(|i| shapes[i].clone())
+            .unwrap_or_else(|| out.clone());
+        let (kh, kw, stride) = match &n.op {
+            Op::Conv2D { stride, .. } | Op::DepthwiseConv2d { stride, .. } => {
+                let w = &shapes[&n.inputs[1]];
+                (w[0], w[1], stride.0)
+            }
+            Op::MaxPool { ksize, stride, .. } => (ksize.0, ksize.1, stride.0),
+            _ => (1, 1, 1),
+        };
+        let geo = StageGeometry {
+            in_w: if in_shape.len() == 4 { in_shape[2] } else { 1 },
+            in_c: *in_shape.last().unwrap(),
+            out_w: if out.len() == 4 { out[2] } else { 1 },
+            out_h: if out.len() == 4 { out[1] } else { 1 },
+            out_c: *out.last().unwrap(),
+            kh,
+            kw,
+            stride,
+        };
+        // Weight summary + unroll cap for compute stages.
+        let (summary, unroll_cap) = match &n.op {
+            Op::Conv2D { .. } => {
+                let w = graph.get(&n.inputs[1]).unwrap().value.as_ref().unwrap();
+                (
+                    Some(WeightSummary::from_conv(w)),
+                    (w.shape[0] * w.shape[2]).max(1),
+                )
+            }
+            Op::DepthwiseConv2d { .. } => (None, (geo.kh * geo.in_c).max(1)),
+            Op::MatMul => {
+                let w = graph.get(&n.inputs[1]).unwrap().value.as_ref().unwrap();
+                (Some(WeightSummary::from_matmul(w)), w.shape[0].max(1))
+            }
+            _ => (None, 1),
+        };
+        let splits = 1usize;
+        let mults = stage_mults(&n.op, &geo, splits);
+        let cycles = stage_cycles(&n.op, &geo, splits, summary.as_ref(), opts.partition_aware);
+        let weight_entries = summary
+            .as_ref()
+            .map(|s| s.padded_entries(splits))
+            .unwrap_or(0);
+        let buffer_lines = if n.op.buffers_input() {
+            geo.kh + opts.cost_model.act_buffer_margin_lines
+        } else {
+            0 // streaming ops (BiasAdd/Relu/...) pass lines through
+        };
+        let resources = stage_resources(
+            opts,
+            &n.op,
+            &geo,
+            splits,
+            mults,
+            weight_entries,
+            buffer_lines,
+        );
+        stages.push(StagePlan {
+            name: n.name.clone(),
+            op: n.op.clone(),
+            inputs: act_inputs,
+            geo,
+            splits,
+            unroll_cap,
+            mults,
+            cycles,
+            weight_entries,
+            resources,
+            buffer_lines,
+        });
+        summaries.push(summary);
+    }
+    Ok((stages, summaries))
+}
+
+/// Multipliers instantiated for a stage at `s` splits: one DSP chain per
+/// output column for convolutions (shared weight stream — Fig 6), a
+/// single chain for MatMul.
+pub fn stage_mults(op: &Op, geo: &StageGeometry, splits: usize) -> usize {
+    match op {
+        Op::Conv2D { .. } => geo.out_w * splits,
+        // Depthwise units have no cross-channel reduction to chain, so
+        // they unroll rows only (the paper's MobileNet-V2 bottleneck:
+        // "the current version of HPIPE only unrolls the input channel
+        // dimension").
+        Op::DepthwiseConv2d { .. } => splits,
+        Op::MatMul => splits,
+        _ => 0,
+    }
+}
+
+/// Resource cost dispatch.
+pub fn stage_resources(
+    opts: &CompileOptions,
+    op: &Op,
+    geo: &StageGeometry,
+    splits: usize,
+    mults: usize,
+    weight_entries: usize,
+    buffer_lines: usize,
+) -> Resources {
+    if op.is_compute() {
+        conv_stage_cost(
+            &opts.cost_model,
+            geo,
+            splits,
+            mults,
+            weight_entries,
+            opts.device.mults_per_dsp_at(opts.weight_bits),
+        )
+    } else {
+        stage_cost_simple(&opts.cost_model, op, geo, buffer_lines)
+    }
+}
+
+/// Full compilation: plan, balance to the DSP target, size Add-path
+/// buffers, estimate frequency.
+pub fn compile(
+    graph: &Graph,
+    net_name: &str,
+    opts: &CompileOptions,
+) -> Result<AcceleratorPlan, GraphError> {
+    let (mut stages, summaries) = plan_stages(graph, opts)?;
+    balance::balance(&mut stages, &summaries, opts);
+    size_add_buffers(&mut stages);
+
+    // refresh costs after buffer sizing
+    for st in stages.iter_mut() {
+        st.resources = stage_resources(
+            opts,
+            &st.op,
+            &st.geo,
+            st.splits,
+            st.mults,
+            st.weight_entries,
+            st.buffer_lines,
+        );
+    }
+
+    let mut totals = Resources::default();
+    for s in &stages {
+        totals.add(&s.resources);
+    }
+    let alm_util = totals.alms as f64 / opts.device.alms as f64;
+    let max_mults = stages.iter().map(|s| s.mults).max().unwrap_or(1);
+    let bottleneck = stages
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, s)| s.cycles)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let mut plan = AcceleratorPlan {
+        net_name: net_name.to_string(),
+        device: opts.device.clone(),
+        stages,
+        totals,
+        fmax_mhz: 0.0,
+        bottleneck,
+        dsp_target: opts.dsp_target,
+    };
+    plan.fmax_mhz = opts.freq_model.fmax(
+        &opts.device,
+        max_mults,
+        alm_util,
+        plan.depthwise_stage_frac(),
+    );
+    Ok(plan)
+}
+
+/// §V-C: "The Add operation has one Input Activation Buffer for each
+/// producer module, and the depth of each of these buffers is computed to
+/// ensure the amount of buffering on skip paths matches the amount of
+/// buffering on the non-skip path" — otherwise the pipeline deadlocks.
+///
+/// We compute, for each Add, the buffering depth (in lines) along each
+/// input path back to the common ancestor, and give the Add's shallower
+/// (skip) side the difference plus its own margin.
+pub fn size_add_buffers(stages: &mut [StagePlan]) {
+    let index: BTreeMap<String, usize> = stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.name.clone(), i))
+        .collect();
+    // path_depth[i] = max lines buffered from the input to stage i
+    let mut depth: BTreeMap<String, usize> = BTreeMap::new();
+    for i in 0..stages.len() {
+        let s = &stages[i];
+        let d = s
+            .inputs
+            .iter()
+            .map(|p| depth.get(p).copied().unwrap_or(0))
+            .max()
+            .unwrap_or(0)
+            + s.buffer_lines;
+        depth.insert(s.name.clone(), d);
+    }
+    for i in 0..stages.len() {
+        if !matches!(stages[i].op, Op::Add) || stages[i].inputs.len() != 2 {
+            continue;
+        }
+        let d0 = depth.get(&stages[i].inputs[0]).copied().unwrap_or(0);
+        let d1 = depth.get(&stages[i].inputs[1]).copied().unwrap_or(0);
+        let diff = d0.abs_diff(d1);
+        // The Add buffers both inputs; capacity must cover the imbalance.
+        let need = diff + 2;
+        if stages[i].buffer_lines < need {
+            stages[i].buffer_lines = need;
+        }
+        let _ = index;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::S10_2800;
+    use crate::nets::{resnet50, tiny_cnn, NetConfig};
+    use crate::sparsity::prune_graph;
+    use crate::transform::optimize;
+
+    fn compiled_tiny() -> AcceleratorPlan {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let (g, _) = optimize(&g);
+        let opts = CompileOptions::new(S10_2800.clone(), 500);
+        compile(&g, "tinycnn", &opts).unwrap()
+    }
+
+    #[test]
+    fn tiny_plan_structure() {
+        let plan = compiled_tiny();
+        assert!(plan.stage("conv0").is_some());
+        assert!(plan.stage("pool2").is_some());
+        assert!(plan.stage("predictions").is_some());
+        // every compute stage has multipliers and weight entries
+        for s in plan.stages.iter().filter(|s| s.is_compute()) {
+            assert!(s.mults > 0, "{}", s.name);
+            assert!(s.weight_entries > 0, "{}", s.name);
+            assert!(s.resources.dsps > 0, "{}", s.name);
+        }
+        assert!(plan.totals.dsps <= 500);
+        assert!(plan.fmax_mhz > 100.0);
+        assert!(plan.throughput_img_s() > 0.0);
+    }
+
+    #[test]
+    fn unoptimized_graph_rejected() {
+        let g = resnet50(NetConfig::test_scale()); // still has BN + Pad
+        let opts = CompileOptions::new(S10_2800.clone(), 500);
+        assert!(compile(&g, "resnet50", &opts).is_err());
+    }
+
+    #[test]
+    fn balancing_raises_dsps_and_lowers_interval() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let (g, _) = optimize(&g);
+        let lo = compile(&g, "t", &CompileOptions::new(S10_2800.clone(), 8)).unwrap();
+        let hi = compile(&g, "t", &CompileOptions::new(S10_2800.clone(), 2000)).unwrap();
+        assert!(hi.totals.dsps >= lo.totals.dsps);
+        assert!(hi.interval_cycles() <= lo.interval_cycles());
+    }
+
+    #[test]
+    fn add_buffers_sized_for_resnet_skip_paths() {
+        let mut g = resnet50(NetConfig::test_scale());
+        prune_graph(&mut g, 0.85);
+        let (g, _) = optimize(&g);
+        let opts = CompileOptions::new(S10_2800.clone(), 800);
+        let plan = compile(&g, "resnet50", &opts).unwrap();
+        // every residual Add must have a deeper buffer than the default
+        let adds: Vec<&StagePlan> = plan
+            .stages
+            .iter()
+            .filter(|s| matches!(s.op, Op::Add))
+            .collect();
+        assert_eq!(adds.len(), 16);
+        assert!(
+            adds.iter().all(|a| a.buffer_lines > 3),
+            "Add buffers: {:?}",
+            adds.iter().map(|a| a.buffer_lines).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn plan_json_roundtrips_through_parser() {
+        let plan = compiled_tiny();
+        let j = plan.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("net").as_str(), Some("tinycnn"));
+        assert!(parsed.get("stages").as_arr().unwrap().len() > 5);
+    }
+
+    #[test]
+    fn bottleneck_is_max_cycles() {
+        let plan = compiled_tiny();
+        let max = plan.stages.iter().map(|s| s.cycles).max().unwrap();
+        assert_eq!(plan.stages[plan.bottleneck].cycles, max);
+        assert_eq!(plan.interval_cycles(), max);
+    }
+}

@@ -1,0 +1,329 @@
+//! Per-stage cycle models (§IV).
+//!
+//! Two models, exactly as the paper describes:
+//!
+//! * the **naive linear model** — "Initially our model assumed a linear
+//!   relationship between n_channel_splits and the throughput of a
+//!   module" — cycles ∝ nonzeros / s;
+//! * the **partition-aware model** — "we rectified this by computing the
+//!   actual weight partitioning and padding that a later stage of the
+//!   compiler performs, which improved our estimates to within 1%" —
+//!   cycles from the real padded lock-step stream lengths.
+//!
+//! [`WeightSummary`] caches the per-output-channel row occupancy of a
+//! pruned weight tensor so the balancer can re-evaluate a layer at a new
+//! `s` in O(nonzero rows) without re-encoding values.
+
+use crate::graph::{Op, Tensor};
+use crate::sparsity::rle::RUNLENGTH_BITS;
+
+/// Fixed per-output-line control overhead (address setup, new_oc
+/// rotation, buffer handshake).
+pub const LINE_OVERHEAD: u64 = 4;
+
+/// Default PCIe feed rate for the Placeholder stage: bits accepted per
+/// accelerator clock (PCIe gen3 x8 ≈ 50 Gb/s usable at ~500 MHz ≈ 100
+/// bits/cycle; rounded to an activation-friendly 128).
+pub const PCIE_BITS_PER_CYCLE: u64 = 128;
+
+/// Row-occupancy summary of one pruned conv weight tensor.
+///
+/// A *row* is one (k_y, c_i) pair — the dimension the runlength walks and
+/// the dimension `n_channel_splits` partitions (round-robin).
+#[derive(Clone, Debug)]
+pub struct WeightSummary {
+    pub co: usize,
+    pub rows: usize,
+    /// per_oc[oc] = sorted (row index, nonzeros at that row across k_x).
+    pub per_oc: Vec<Vec<(u32, u16)>>,
+    pub total_nonzeros: usize,
+}
+
+impl WeightSummary {
+    /// Build from HWIO conv weights.
+    pub fn from_conv(w: &Tensor) -> WeightSummary {
+        let (kh, kw, ci, co) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+        let rows = kh * ci;
+        let mut per_oc: Vec<Vec<(u32, u16)>> = vec![Vec::new(); co];
+        for ky in 0..kh {
+            for c in 0..ci {
+                let row = (ky * ci + c) as u32;
+                for kx in 0..kw {
+                    for oc in 0..co {
+                        if w.data[((ky * kw + kx) * ci + c) * co + oc] != 0.0 {
+                            match per_oc[oc].last_mut() {
+                                Some((r, n)) if *r == row => *n += 1,
+                                _ => per_oc[oc].push((row, 1)),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let total_nonzeros = per_oc
+            .iter()
+            .map(|v| v.iter().map(|&(_, n)| n as usize).sum::<usize>())
+            .sum();
+        WeightSummary {
+            co,
+            rows,
+            per_oc,
+            total_nonzeros,
+        }
+    }
+
+    /// Build from MatMul weights (Ci, Co).
+    pub fn from_matmul(w: &Tensor) -> WeightSummary {
+        let as_conv = Tensor::from_vec(&[1, 1, w.shape[0], w.shape[1]], w.data.clone());
+        WeightSummary::from_conv(&as_conv)
+    }
+
+    /// Lock-step padded stream length (cycles per line pass) for one
+    /// output channel at `s` splits — matches `rle::encode_conv` exactly.
+    pub fn oc_padded_len(&self, oc: usize, s: usize) -> u64 {
+        let mut lens = vec![0u64; s];
+        let mut last_local = vec![u64::MAX; s];
+        self.accumulate_oc(oc, s, &mut lens, &mut last_local);
+        lens.into_iter().max().unwrap_or(0)
+    }
+
+    /// Shared inner loop of the padded-length computations. `u64::MAX`
+    /// in `last_local` marks "no entry yet". Scratch buffers are caller-
+    /// provided so the balancer's hot loop does not allocate per output
+    /// channel (perf-pass change; see EXPERIMENTS.md §Perf).
+    #[inline]
+    fn accumulate_oc(&self, oc: usize, s: usize, lens: &mut [u64], last_local: &mut [u64]) {
+        let max_run = (1u64 << RUNLENGTH_BITS) - 1;
+        for &(row, nnz) in &self.per_oc[oc] {
+            let split = (row as usize) % s;
+            let local = (row as usize / s) as u64;
+            let gap = if last_local[split] == u64::MAX {
+                local
+            } else {
+                local - last_local[split]
+            };
+            // pad entries for over-long runlengths + the real entries
+            // (encoder inserts a pad only while gap > max_run)
+            let pads = if gap == 0 { 0 } else { (gap - 1) / max_run };
+            lens[split] += pads + nnz as u64;
+            last_local[split] = local;
+        }
+    }
+
+    /// Σ over output channels of the padded stream length — the cycles
+    /// one full line pass takes (partition-aware). Also returns the total
+    /// stored entries via `padded_both` for callers that need both.
+    pub fn padded_cycles(&self, s: usize) -> u64 {
+        self.padded_both(s).0
+    }
+
+    /// Weight-buffer entries including padding (memory footprint) at `s`.
+    pub fn padded_entries(&self, s: usize) -> usize {
+        self.padded_both(s).1
+    }
+
+    /// (lock-step cycles, stored entries) in one pass with reused scratch.
+    pub fn padded_both(&self, s: usize) -> (u64, usize) {
+        let mut lens = vec![0u64; s];
+        let mut last_local = vec![u64::MAX; s];
+        let mut cycles = 0u64;
+        let mut entries = 0u64;
+        for oc in 0..self.co {
+            lens.fill(0);
+            last_local.fill(u64::MAX);
+            self.accumulate_oc(oc, s, &mut lens, &mut last_local);
+            cycles += lens.iter().copied().max().unwrap_or(0);
+            entries += lens.iter().sum::<u64>();
+        }
+        (cycles, entries as usize)
+    }
+
+    /// Naive linear estimate of the padded cycles.
+    pub fn naive_cycles(&self, s: usize) -> u64 {
+        (self.total_nonzeros as u64).div_ceil(s as u64)
+    }
+}
+
+/// Cycle estimate for one stage at the given unroll. For compute stages
+/// `summary` must be provided. `partition_aware` selects the model.
+pub fn stage_cycles(
+    op: &Op,
+    geo: &crate::arch::StageGeometry,
+    splits: usize,
+    summary: Option<&WeightSummary>,
+    partition_aware: bool,
+) -> u64 {
+    let out_h = geo.out_h as u64;
+    let out_w = geo.out_w as u64;
+    match op {
+        Op::Conv2D { .. } => {
+            let s = summary.expect("conv needs a weight summary");
+            let per_line = if partition_aware {
+                s.padded_cycles(splits)
+            } else {
+                s.naive_cycles(splits)
+            };
+            out_h * (per_line + LINE_OVERHEAD) + splits as u64 / 2
+        }
+        Op::DepthwiseConv2d { .. } => {
+            // dense rows (k_y, c) split across s multipliers; each output
+            // column is visited serially (no cross-channel DSP chain)
+            let rows = (geo.kh * geo.in_c) as u64;
+            let row_groups = rows.div_ceil(splits as u64);
+            out_h * (out_w * row_groups * geo.kw as u64 + LINE_OVERHEAD)
+        }
+        Op::MatMul => {
+            let s = summary.expect("matmul needs a weight summary");
+            let per_pass = if partition_aware {
+                s.padded_cycles(splits)
+            } else {
+                s.naive_cycles(splits)
+            };
+            per_pass + LINE_OVERHEAD + splits as u64 / 2
+        }
+        Op::MaxPool { ksize, .. } => {
+            // channel-parallel comparator; k_w elements gathered per output
+            out_h * (out_w * ksize.1 as u64 + LINE_OVERHEAD)
+        }
+        Op::Add | Op::BiasAdd | Op::Relu | Op::Relu6 | Op::Mul | Op::AddC => {
+            // streaming: one line element-group per cycle
+            out_h * (out_w + LINE_OVERHEAD)
+        }
+        Op::Mean => (geo.in_w as u64) * out_h.max(1) + LINE_OVERHEAD,
+        Op::Softmax => geo.out_c as u64 + LINE_OVERHEAD,
+        Op::Placeholder { .. } => {
+            let bits = (geo.in_w * geo.in_c * 16) as u64 * out_h;
+            bits.div_ceil(PCIE_BITS_PER_CYCLE)
+        }
+        Op::Pad { .. } => out_h * (out_w + LINE_OVERHEAD),
+        Op::Const | Op::FusedBatchNorm { .. } => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::prune::prune_tensor;
+    use crate::sparsity::rle::encode_conv;
+    use crate::util::prop::Cases;
+    use crate::util::Rng;
+
+    /// The summary's fast path must agree exactly with the reference
+    /// encoder's padded stream lengths.
+    #[test]
+    fn prop_summary_matches_encoder() {
+        Cases::new(40).run(|rng, size| {
+            let kh = 1 + size % 4;
+            let kw = 1 + (size * 3) % 4;
+            let ci = 1 + size % 10;
+            let co = 1 + (size * 7) % 7;
+            let mut w = Tensor::randn(&[kh, kw, ci, co], rng, 1.0);
+            prune_tensor(&mut w, rng.f64() * 0.95);
+            let s = 1 + rng.below(kh * ci);
+            let rle = encode_conv(&w, s);
+            let summary = WeightSummary::from_conv(&w);
+            if summary.padded_cycles(s) != rle.total_cycles() as u64 {
+                return Err(format!(
+                    "padded_cycles {} != encoder {} (kh={kh} kw={kw} ci={ci} co={co} s={s})",
+                    summary.padded_cycles(s),
+                    rle.total_cycles()
+                ));
+            }
+            if summary.padded_entries(s) != rle.total_entries() {
+                return Err(format!(
+                    "padded_entries {} != encoder {}",
+                    summary.padded_entries(s),
+                    rle.total_entries()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn naive_underestimates_at_high_splits() {
+        let mut rng = Rng::new(8);
+        let mut w = Tensor::randn(&[3, 3, 32, 16], &mut rng, 1.0);
+        prune_tensor(&mut w, 0.85);
+        let s = WeightSummary::from_conv(&w);
+        // The naive model ignores lock-step padding, so it can only be
+        // optimistic (the paper's motivation for the fix).
+        for splits in [1, 2, 4, 8, 16, 32, 96] {
+            assert!(
+                s.naive_cycles(splits) <= s.padded_cycles(splits),
+                "splits={splits}"
+            );
+        }
+        let err1 = s.padded_cycles(1) as f64 / s.naive_cycles(1) as f64;
+        let err32 = s.padded_cycles(32) as f64 / s.naive_cycles(32) as f64;
+        assert!(err32 > err1, "padding penalty should grow with splits");
+    }
+
+    #[test]
+    fn cycles_decrease_with_splits() {
+        let mut rng = Rng::new(9);
+        let mut w = Tensor::randn(&[3, 3, 64, 32], &mut rng, 1.0);
+        prune_tensor(&mut w, 0.85);
+        let summary = WeightSummary::from_conv(&w);
+        let geo = crate::arch::StageGeometry {
+            in_w: 14,
+            in_c: 64,
+            out_w: 14,
+            out_h: 14,
+            out_c: 32,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+        };
+        let op = Op::Conv2D {
+            stride: (1, 1),
+            padding: crate::graph::Padding::Same,
+        };
+        let c1 = stage_cycles(&op, &geo, 1, Some(&summary), true);
+        let c8 = stage_cycles(&op, &geo, 8, Some(&summary), true);
+        let c64 = stage_cycles(&op, &geo, 64, Some(&summary), true);
+        assert!(c1 > c8 && c8 > c64, "{c1} {c8} {c64}");
+    }
+
+    #[test]
+    fn placeholder_models_pcie() {
+        let geo = crate::arch::StageGeometry {
+            in_w: 224,
+            in_c: 3,
+            out_w: 224,
+            out_h: 224,
+            out_c: 3,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+        };
+        let c = stage_cycles(&Op::Placeholder { shape: vec![1, 224, 224, 3] }, &geo, 1, None, true);
+        // 224*224*3*16 bits / 128 bits-per-cycle = 18,816 cycles
+        assert_eq!(c, 224 * 224 * 3 * 16 / 128);
+    }
+
+    #[test]
+    fn depthwise_cycles() {
+        let geo = crate::arch::StageGeometry {
+            in_w: 14,
+            in_c: 512,
+            out_w: 14,
+            out_h: 14,
+            out_c: 512,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+        };
+        let op = Op::DepthwiseConv2d {
+            stride: (1, 1),
+            padding: crate::graph::Padding::Same,
+        };
+        // rows = kh*C = 1536; serial over the 14 output columns, kw taps
+        let c1 = stage_cycles(&op, &geo, 1, None, true);
+        let c1536 = stage_cycles(&op, &geo, 1536, None, true);
+        assert_eq!(c1, 14 * (14 * 1536 * 3 + LINE_OVERHEAD));
+        assert_eq!(c1536, 14 * (14 * 3 + LINE_OVERHEAD));
+        let c100 = stage_cycles(&op, &geo, 100, None, true);
+        assert!(c100 > c1536 && c100 < c1);
+    }
+}

@@ -1,0 +1,94 @@
+//! Dynamic batcher.
+//!
+//! HPIPE's headline metric is batch-1 latency (the FPGA pipeline needs no
+//! batching to be efficient — that's the whole point of Fig 8). The host
+//! coordinator still batches *transfers* when multiple requests are
+//! queued, like the PCIe DMA engine would: take what's waiting, up to
+//! `max_batch`, waiting at most `max_wait` for stragglers.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Drain up to `max_batch` items from the channel, blocking for the
+/// first one and then waiting at most `max_wait` for more. Returns an
+/// empty vec when the channel has disconnected and is empty.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Vec<T> {
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    // block for the first element
+    match rx.recv() {
+        Ok(item) => batch.push(item),
+        Err(_) => return batch,
+    }
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collects_waiting_items_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = next_batch(
+            &rx,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = next_batch(
+            &rx,
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b2.len(), 6);
+    }
+
+    #[test]
+    fn returns_empty_on_disconnect() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = next_batch(&rx, BatchPolicy::default());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn single_item_when_nothing_else_arrives() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let b = next_batch(
+            &rx,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
+        );
+        assert_eq!(b, vec![42]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Serving metrics: latency percentiles + throughput accounting.
+
+use std::time::Duration;
+
+/// Latency recorder with percentile queries (exact, sorted on demand —
+/// request counts here are thousands, not millions).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+    sorted: bool,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_us.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> Duration {
+        assert!((0.0..=100.0).contains(&p));
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        self.ensure_sorted();
+        let idx = ((p / 100.0) * (self.samples_us.len() - 1) as f64).round() as usize;
+        Duration::from_micros(self.samples_us[idx])
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let sum: u64 = self.samples_us.iter().sum();
+        Duration::from_micros(sum / self.samples_us.len() as u64)
+    }
+}
+
+/// Whole-run serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub wall: Duration,
+    pub latency: LatencyStats,
+    /// Mean occupancy of executed batches (batched efficiency).
+    pub mean_batch: f64,
+    /// Classification agreement with the reference interpreter, if the
+    /// cross-check was run: (matches, total).
+    pub interp_agreement: Option<(usize, usize)>,
+}
+
+impl ServeReport {
+    pub fn throughput(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn print(&mut self) {
+        println!(
+            "served {} requests in {:?} ({:.0} req/s), {} batches (mean occupancy {:.2})",
+            self.requests,
+            self.wall,
+            self.throughput(),
+            self.batches,
+            self.mean_batch
+        );
+        println!(
+            "latency p50 {:?}  p95 {:?}  p99 {:?}  mean {:?}",
+            self.latency.percentile(50.0),
+            self.latency.percentile(95.0),
+            self.latency.percentile(99.0),
+            self.latency.mean()
+        );
+        if let Some((ok, total)) = self.interp_agreement {
+            println!("interp cross-check: {ok}/{total} argmax agreement");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::default();
+        for us in [5u64, 1, 9, 3, 7, 2, 8, 4, 6, 10] {
+            s.record(Duration::from_micros(us));
+        }
+        assert_eq!(s.percentile(0.0), Duration::from_micros(1));
+        assert_eq!(s.percentile(100.0), Duration::from_micros(10));
+        assert!(s.percentile(50.0) <= s.percentile(95.0));
+        assert_eq!(s.mean(), Duration::from_micros(5));
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let mut s = LatencyStats::default();
+        assert_eq!(s.percentile(99.0), Duration::ZERO);
+        assert_eq!(s.mean(), Duration::ZERO);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,224 @@
+//! Layer-3 serving coordinator.
+//!
+//! The host side of HPIPE: client threads submit images over a queue
+//! (the PCIe analog), the coordinator drains the queue through the
+//! dynamic batcher, executes the AOT-compiled model on the PJRT runtime
+//! — Python never runs here — and returns classifications with latency
+//! accounting. `serve_demo` is the end-to-end driver used by
+//! `hpipe serve`, `examples/serve_batch.rs` and the e2e bench; it also
+//! cross-validates the PJRT results against the Rust reference
+//! interpreter on the same trained graphdef.
+
+pub mod batcher;
+pub mod metrics;
+
+use crate::graph::graphdef;
+use crate::interp;
+use crate::runtime::Runtime;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use batcher::{next_batch, BatchPolicy};
+use metrics::{LatencyStats, ServeReport};
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::time::Instant;
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub data: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: Sender<ClassResult>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct ClassResult {
+    pub id: u64,
+    pub probs: Vec<f32>,
+    pub latency: std::time::Duration,
+}
+
+impl ClassResult {
+    pub fn argmax(&self) -> usize {
+        self.probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// The serving loop: owns the runtime (PJRT handles are not Send, so the
+/// coordinator runs on the thread that created it; clients talk to it
+/// through channels).
+pub struct Coordinator {
+    pub runtime: Runtime,
+    pub policy: BatchPolicy,
+    pub classes: usize,
+}
+
+impl Coordinator {
+    pub fn new(runtime: Runtime, policy: BatchPolicy) -> Coordinator {
+        Coordinator {
+            runtime,
+            policy,
+            classes: 10,
+        }
+    }
+
+    /// Serve until the request channel disconnects. Returns the report.
+    pub fn run(&self, rx: std::sync::mpsc::Receiver<Request>) -> Result<ServeReport> {
+        let per_image: usize = {
+            let m = self
+                .runtime
+                .best_batch_model(1)
+                .context("no batch-1 model loaded")?;
+            m.input_shape.iter().product::<usize>() / m.input_shape[0]
+        };
+        let mut latency = LatencyStats::default();
+        let mut requests = 0usize;
+        let mut batches = 0usize;
+        let mut occupancy = 0usize;
+        let t0 = Instant::now();
+        loop {
+            let batch = next_batch(&rx, self.policy);
+            if batch.is_empty() {
+                break;
+            }
+            let model = self
+                .runtime
+                .best_batch_model(batch.len())
+                .context("no model loaded")?;
+            // concatenate request payloads; the executable may be smaller
+            // than the drained batch — chunk and pad the tail chunk
+            let mut flat = Vec::with_capacity(batch.len() * per_image);
+            for r in &batch {
+                flat.extend_from_slice(&r.data);
+            }
+            let mut outputs: Vec<f32> = Vec::new();
+            let mut probs_per = 0usize;
+            for chunk in flat.chunks(model.batch * per_image) {
+                let mut c = chunk.to_vec();
+                c.resize(model.batch * per_image, 0.0);
+                let out = model.run(&c)?;
+                probs_per = out.len() / model.batch.max(1);
+                outputs.extend(out);
+            }
+            let now = Instant::now();
+            for (i, req) in batch.iter().enumerate() {
+                let lat = now - req.submitted;
+                latency.record(lat);
+                let probs = outputs[i * probs_per..(i + 1) * probs_per].to_vec();
+                let _ = req.reply.send(ClassResult {
+                    id: req.id,
+                    probs,
+                    latency: lat,
+                });
+            }
+            requests += batch.len();
+            occupancy += batch.len();
+            batches += 1;
+        }
+        Ok(ServeReport {
+            requests,
+            batches,
+            wall: t0.elapsed(),
+            latency,
+            mean_batch: occupancy as f64 / batches.max(1) as f64,
+            interp_agreement: None,
+        })
+    }
+}
+
+/// End-to-end serving demo (the mandated E2E driver):
+/// 1. load the trained TinyCNN artifacts (HLO + graphdef),
+/// 2. spawn a client thread that submits `n_requests` synthetic images,
+/// 3. serve them through the batcher + PJRT executable,
+/// 4. cross-check every classification against the Rust reference
+///    interpreter running the same trained graphdef.
+pub fn serve_demo(artifacts_dir: &Path, n_requests: usize, max_batch: usize) -> Result<ServeReport> {
+    let mut runtime = Runtime::cpu(artifacts_dir)?;
+    let loaded = runtime.load_manifest()?;
+    println!(
+        "runtime: platform={} loaded {:?}",
+        runtime.platform(),
+        loaded
+    );
+
+    let graph = graphdef::load(&runtime.artifacts_dir.join("tinycnn"))
+        .context("loading tinycnn graphdef")?;
+    let input_shape = match &graph.get("input").context("input node")?.op {
+        crate::graph::Op::Placeholder { shape } => shape.clone(),
+        _ => anyhow::bail!("input is not a placeholder"),
+    };
+    let per_image: usize = input_shape.iter().product();
+
+    let policy = BatchPolicy {
+        max_batch,
+        ..Default::default()
+    };
+    let coordinator = Coordinator::new(runtime, policy);
+
+    // client thread
+    let (tx, rx) = channel::<Request>();
+    let (result_tx, result_rx) = channel::<ClassResult>();
+    let mut rng = Rng::new(0xE2E);
+    let inputs: Vec<Vec<f32>> = (0..n_requests)
+        .map(|_| (0..per_image).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let inputs_for_client = inputs.clone();
+    let client = std::thread::spawn(move || {
+        for (i, data) in inputs_for_client.into_iter().enumerate() {
+            let _ = tx.send(Request {
+                id: i as u64,
+                data,
+                submitted: Instant::now(),
+                reply: result_tx.clone(),
+            });
+            // mild pacing: a burst every few requests exercises batching
+            if i % 4 == 3 {
+                std::thread::sleep(std::time::Duration::from_micros(300));
+            }
+        }
+        // tx drops here -> coordinator drains and exits
+    });
+
+    let mut report = coordinator.run(rx)?;
+    client.join().ok();
+
+    // collect results and cross-check against the reference interpreter
+    let mut results: Vec<ClassResult> = result_rx.try_iter().collect();
+    results.sort_by_key(|r| r.id);
+    let mut agree = 0usize;
+    let check = results.len().min(32); // interp is slow; spot-check 32
+    for r in results.iter().take(check) {
+        let mut feeds = std::collections::BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            crate::graph::Tensor::from_vec(&input_shape, inputs[r.id as usize].clone()),
+        );
+        let outs = interp::run_outputs(&graph, &feeds).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if interp::argmax(&outs[0])[0] == r.argmax() {
+            agree += 1;
+        }
+    }
+    report.interp_agreement = Some((agree, check));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_result_argmax() {
+        let r = ClassResult {
+            id: 0,
+            probs: vec![0.1, 0.7, 0.2],
+            latency: std::time::Duration::ZERO,
+        };
+        assert_eq!(r.argmax(), 1);
+    }
+}

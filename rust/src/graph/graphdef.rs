@@ -1,0 +1,192 @@
+//! Graphdef serialization: `graph.json` + `weights.bin`.
+//!
+//! This is the interchange format between the Rust compiler and the JAX
+//! model builder (`python/compile/model.py`): a JSON structural
+//! description plus a flat little-endian f32 blob holding every Const
+//! tensor, referenced by (offset, len) so a 25M-parameter ResNet does not
+//! get pretty-printed into JSON. Small constants (≤ [`INLINE_LIMIT`]
+//! elements) are inlined for readability.
+
+use super::{Graph, Node, Op, Tensor};
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Constants with at most this many elements are stored inline in JSON.
+pub const INLINE_LIMIT: usize = 16;
+
+/// Serialize a graph to `dir/graph.json` (+ `dir/weights.bin` if any
+/// Const tensor exceeds the inline limit).
+pub fn save(graph: &Graph, dir: &Path) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let mut blob: Vec<u8> = Vec::new();
+    let mut nodes = Json::Arr(vec![]);
+    for n in &graph.nodes {
+        let mut jn = Json::obj();
+        jn.set("name", Json::from(n.name.as_str()))
+            .set("op", Json::from(n.op.type_name()))
+            .set("attrs", n.op.attrs_to_json())
+            .set(
+                "inputs",
+                Json::Arr(n.inputs.iter().map(|s| Json::from(s.as_str())).collect()),
+            );
+        if let Some(t) = &n.value {
+            let mut jt = Json::obj();
+            jt.set("shape", Json::from(t.shape.clone()));
+            if t.len() <= INLINE_LIMIT {
+                jt.set(
+                    "data",
+                    Json::Arr(t.data.iter().map(|&x| Json::Num(x as f64)).collect()),
+                );
+            } else {
+                jt.set("offset", Json::from(blob.len() / 4))
+                    .set("len", Json::from(t.len()));
+                for &x in &t.data {
+                    blob.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            jn.set("tensor", jt);
+        }
+        nodes.push(jn);
+    }
+    let mut root = Json::obj();
+    root.set("format", Json::from("hpipe-graphdef-v1"))
+        .set("nodes", nodes)
+        .set(
+            "outputs",
+            Json::Arr(graph.outputs.iter().map(|s| Json::from(s.as_str())).collect()),
+        );
+    fs::write(dir.join("graph.json"), root.pretty())?;
+    if !blob.is_empty() {
+        fs::write(dir.join("weights.bin"), &blob)?;
+    }
+    Ok(())
+}
+
+/// Load a graph from a directory written by [`save`] (or by the Python
+/// side's `graphio.py`, which emits the same format).
+pub fn load(dir: &Path) -> Result<Graph> {
+    let text = fs::read_to_string(dir.join("graph.json"))
+        .with_context(|| format!("reading {}", dir.join("graph.json").display()))?;
+    let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if root.get("format").as_str() != Some("hpipe-graphdef-v1") {
+        bail!("unrecognized graphdef format");
+    }
+    let blob_path = dir.join("weights.bin");
+    let blob: Vec<u8> = if blob_path.exists() {
+        fs::read(&blob_path)?
+    } else {
+        Vec::new()
+    };
+
+    let mut graph = Graph::new();
+    for jn in root.get("nodes").as_arr().context("nodes array")? {
+        let name = jn.get("name").as_str().context("node name")?.to_string();
+        let op_type = jn.get("op").as_str().context("op type")?;
+        let op = Op::from_json(op_type, jn.get("attrs"))
+            .with_context(|| format!("node '{name}': unknown op '{op_type}'"))?;
+        let inputs: Vec<String> = jn
+            .get("inputs")
+            .as_arr()
+            .context("inputs")?
+            .iter()
+            .map(|v| v.as_str().map(|s| s.to_string()))
+            .collect::<Option<_>>()
+            .context("input names")?;
+        let value = match jn.get("tensor") {
+            Json::Null => None,
+            jt => {
+                let shape = jt.get("shape").usize_vec().context("tensor shape")?;
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = if let Some(inline) = jt.get("data").f32_vec() {
+                    inline
+                } else {
+                    let offset = jt.get("offset").as_usize().context("tensor offset")? * 4;
+                    let len = jt.get("len").as_usize().context("tensor len")? * 4;
+                    if offset + len > blob.len() {
+                        bail!("tensor '{name}' out of range of weights.bin");
+                    }
+                    blob[offset..offset + len]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect()
+                };
+                if data.len() != n {
+                    bail!(
+                        "tensor '{name}': shape {shape:?} needs {n} elements, got {}",
+                        data.len()
+                    );
+                }
+                Some(Tensor::from_vec(&shape, data))
+            }
+        };
+        graph.add(Node { name, op, inputs, value });
+    }
+    graph.outputs = root
+        .get("outputs")
+        .as_arr()
+        .context("outputs")?
+        .iter()
+        .map(|v| v.as_str().map(|s| s.to_string()))
+        .collect::<Option<_>>()
+        .context("output names")?;
+    graph.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(graph)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Padding;
+    use crate::util::Rng;
+
+    fn build() -> Graph {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(3);
+        g.op("input", Op::Placeholder { shape: vec![1, 6, 6, 2] }, &[]);
+        g.constant("w", Tensor::randn(&[3, 3, 2, 4], &mut rng, 0.2));
+        g.constant("b", Tensor::from_vec(&[4], vec![0.1, -0.2, 0.3, 0.0]));
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w"],
+        );
+        g.op("bias", Op::BiasAdd, &["conv", "b"]);
+        g.op("relu", Op::Relu, &["bias"]);
+        g.outputs = vec!["relu".into()];
+        g
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let g = build();
+        let dir = std::env::temp_dir().join(format!("hpipe_gdef_{}", std::process::id()));
+        save(&g, &dir).unwrap();
+        let g2 = load(&dir).unwrap();
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.value, b.value);
+        }
+        assert_eq!(g.outputs, g2.outputs);
+        // large tensor went to the blob, small bias stayed inline
+        let json = fs::read_to_string(dir.join("graph.json")).unwrap();
+        assert!(json.contains("\"offset\""));
+        assert!(json.contains("\"data\""));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_offset_rejected() {
+        let g = build();
+        let dir = std::env::temp_dir().join(format!("hpipe_gdef_bad_{}", std::process::id()));
+        save(&g, &dir).unwrap();
+        // truncate the blob
+        fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap();
+        assert!(load(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

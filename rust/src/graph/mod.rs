@@ -1,0 +1,511 @@
+//! Graph intermediate representation.
+//!
+//! A [`Graph`] is a TensorFlow-graphdef-like DAG: named nodes, each with
+//! an [`Op`], string input references, and (for `Const` nodes) a weight
+//! tensor. The HPIPE compiler (transform passes, pruner, balancer,
+//! generator), the reference interpreter, the pipeline simulator and the
+//! JAX model builder all consume this one IR.
+
+pub mod graphdef;
+pub mod ops;
+pub mod tensor;
+
+pub use ops::{Op, Padding};
+pub use tensor::{FixedFormat, FixedTensor, Tensor};
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// One node in the graph.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    /// Names of producer nodes, in operand order.
+    pub inputs: Vec<String>,
+    /// Weight/constant payload (Const nodes only).
+    pub value: Option<Tensor>,
+}
+
+/// The network graph: a DAG of [`Node`]s plus designated outputs.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+/// Errors raised by graph construction / validation.
+#[derive(Debug, thiserror::Error)]
+pub enum GraphError {
+    #[error("duplicate node name '{0}'")]
+    Duplicate(String),
+    #[error("node '{0}' references unknown input '{1}'")]
+    UnknownInput(String, String),
+    #[error("graph contains a cycle involving '{0}'")]
+    Cycle(String),
+    #[error("shape error at node '{0}': {1}")]
+    Shape(String, String),
+    #[error("node '{0}': {1}")]
+    Invalid(String, String),
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Add a node; returns its name for chaining convenience.
+    pub fn add(&mut self, node: Node) -> String {
+        assert!(
+            !self.index.contains_key(&node.name),
+            "duplicate node name '{}'",
+            node.name
+        );
+        self.index.insert(node.name.clone(), self.nodes.len());
+        let name = node.name.clone();
+        self.nodes.push(node);
+        name
+    }
+
+    /// Shorthand for adding an op node.
+    pub fn op(&mut self, name: &str, op: Op, inputs: &[&str]) -> String {
+        self.add(Node {
+            name: name.to_string(),
+            op,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            value: None,
+        })
+    }
+
+    /// Shorthand for adding a Const node carrying a tensor.
+    pub fn constant(&mut self, name: &str, value: Tensor) -> String {
+        self.add(Node {
+            name: name.to_string(),
+            op: Op::Const,
+            inputs: vec![],
+            value: Some(value),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Node> {
+        self.index.get(name).map(|&i| &self.nodes[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Node> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.nodes[i])
+    }
+
+    pub fn node_index(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Rebuild the name index (after structural surgery by passes).
+    pub fn reindex(&mut self) {
+        self.index.clear();
+        for (i, n) in self.nodes.iter().enumerate() {
+            self.index.insert(n.name.clone(), i);
+        }
+    }
+
+    /// consumers[name] = names of nodes that read `name`.
+    pub fn consumers(&self) -> HashMap<String, Vec<String>> {
+        let mut m: HashMap<String, Vec<String>> = HashMap::new();
+        for n in &self.nodes {
+            for i in &n.inputs {
+                m.entry(i.clone()).or_default().push(n.name.clone());
+            }
+        }
+        m
+    }
+
+    /// Topological order of node indices (inputs before consumers).
+    pub fn topo_order(&self) -> Result<Vec<usize>, GraphError> {
+        let mut indegree = vec![0usize; self.nodes.len()];
+        let mut edges: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for input in &n.inputs {
+                let j = *self
+                    .index
+                    .get(input)
+                    .ok_or_else(|| GraphError::UnknownInput(n.name.clone(), input.clone()))?;
+                edges[j].push(i);
+                indegree[i] += 1;
+            }
+        }
+        // Kahn's algorithm with a deterministic (index-ordered) frontier.
+        let mut frontier: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| indegree[i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(i) = frontier.pop() {
+            order.push(i);
+            for &c in &edges[i] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    frontier.push(c);
+                }
+            }
+        }
+        if order.len() != self.nodes.len() {
+            let stuck = (0..self.nodes.len())
+                .find(|&i| indegree[i] > 0)
+                .map(|i| self.nodes[i].name.clone())
+                .unwrap_or_default();
+            return Err(GraphError::Cycle(stuck));
+        }
+        Ok(order)
+    }
+
+    /// Remove nodes not reachable (backwards) from any output.
+    pub fn prune_dead(&mut self) {
+        let mut live: HashSet<String> = HashSet::new();
+        let mut stack: Vec<String> = self.outputs.clone();
+        while let Some(name) = stack.pop() {
+            if live.insert(name.clone()) {
+                if let Some(n) = self.get(&name) {
+                    stack.extend(n.inputs.iter().cloned());
+                }
+            }
+        }
+        self.nodes.retain(|n| live.contains(&n.name));
+        self.reindex();
+    }
+
+    /// Infer output shapes for every node. NHWC activations; weight
+    /// layouts as documented on [`Op`]. Also validates operand ranks.
+    pub fn infer_shapes(&self) -> Result<BTreeMap<String, Vec<usize>>, GraphError> {
+        let order = self.topo_order()?;
+        let mut shapes: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for i in order {
+            let n = &self.nodes[i];
+            let input_shape = |k: usize| -> Result<Vec<usize>, GraphError> {
+                let name = n.inputs.get(k).ok_or_else(|| {
+                    GraphError::Invalid(n.name.clone(), format!("missing input {k}"))
+                })?;
+                shapes
+                    .get(name)
+                    .cloned()
+                    .ok_or_else(|| GraphError::UnknownInput(n.name.clone(), name.clone()))
+            };
+            let err = |msg: String| GraphError::Shape(n.name.clone(), msg);
+            let shape = match &n.op {
+                Op::Placeholder { shape } => shape.clone(),
+                Op::Const => n
+                    .value
+                    .as_ref()
+                    .ok_or_else(|| err("Const node without value".into()))?
+                    .shape
+                    .clone(),
+                Op::Conv2D { stride, padding } => {
+                    let x = input_shape(0)?;
+                    let w = input_shape(1)?;
+                    if x.len() != 4 || w.len() != 4 {
+                        return Err(err(format!("Conv2D ranks: x{x:?} w{w:?}")));
+                    }
+                    if x[3] != w[2] {
+                        return Err(err(format!(
+                            "Conv2D channel mismatch: input C={} weights Ci={}",
+                            x[3], w[2]
+                        )));
+                    }
+                    let (t, b, l, r) = padding.resolve(x[1], x[2], w[0], w[1], stride.0, stride.1);
+                    let ho = (x[1] + t + b - w[0]) / stride.0 + 1;
+                    let wo = (x[2] + l + r - w[1]) / stride.1 + 1;
+                    vec![x[0], ho, wo, w[3]]
+                }
+                Op::DepthwiseConv2d { stride, padding } => {
+                    let x = input_shape(0)?;
+                    let w = input_shape(1)?;
+                    if x.len() != 4 || w.len() != 4 {
+                        return Err(err(format!("DepthwiseConv2d ranks: x{x:?} w{w:?}")));
+                    }
+                    if x[3] != w[2] {
+                        return Err(err(format!(
+                            "Depthwise channel mismatch: input C={} weights Ci={}",
+                            x[3], w[2]
+                        )));
+                    }
+                    let (t, b, l, r) = padding.resolve(x[1], x[2], w[0], w[1], stride.0, stride.1);
+                    let ho = (x[1] + t + b - w[0]) / stride.0 + 1;
+                    let wo = (x[2] + l + r - w[1]) / stride.1 + 1;
+                    vec![x[0], ho, wo, x[3] * w[3]]
+                }
+                Op::MatMul => {
+                    let x = input_shape(0)?;
+                    let w = input_shape(1)?;
+                    if x.len() != 2 || w.len() != 2 || x[1] != w[0] {
+                        return Err(err(format!("MatMul shapes: x{x:?} w{w:?}")));
+                    }
+                    vec![x[0], w[1]]
+                }
+                Op::BiasAdd => {
+                    let x = input_shape(0)?;
+                    let b = input_shape(1)?;
+                    if b.len() != 1 || b[0] != *x.last().unwrap() {
+                        return Err(err(format!("BiasAdd bias {b:?} vs x {x:?}")));
+                    }
+                    x
+                }
+                Op::MaxPool { ksize, stride, padding } => {
+                    let x = input_shape(0)?;
+                    if x.len() != 4 {
+                        return Err(err(format!("MaxPool rank: {x:?}")));
+                    }
+                    let (t, b, l, r) =
+                        padding.resolve(x[1], x[2], ksize.0, ksize.1, stride.0, stride.1);
+                    let ho = (x[1] + t + b - ksize.0) / stride.0 + 1;
+                    let wo = (x[2] + l + r - ksize.1) / stride.1 + 1;
+                    vec![x[0], ho, wo, x[3]]
+                }
+                Op::Relu | Op::Relu6 | Op::Softmax => input_shape(0)?,
+                Op::Mul | Op::AddC => {
+                    let x = input_shape(0)?;
+                    let c = input_shape(1)?;
+                    if c.len() != 1 || c[0] != *x.last().unwrap() {
+                        return Err(err(format!("per-channel const {c:?} vs x {x:?}")));
+                    }
+                    x
+                }
+                Op::Add => {
+                    let a = input_shape(0)?;
+                    let b = input_shape(1)?;
+                    if a != b {
+                        return Err(err(format!("Add operand mismatch: {a:?} vs {b:?}")));
+                    }
+                    a
+                }
+                Op::Mean => {
+                    let x = input_shape(0)?;
+                    if x.len() != 4 {
+                        return Err(err(format!("Mean rank: {x:?}")));
+                    }
+                    vec![x[0], x[3]]
+                }
+                Op::FusedBatchNorm { .. } => {
+                    let x = input_shape(0)?;
+                    for k in 1..5 {
+                        let c = input_shape(k)?;
+                        if c.len() != 1 || c[0] != *x.last().unwrap() {
+                            return Err(err(format!("BN param {k} shape {c:?} vs x {x:?}")));
+                        }
+                    }
+                    x
+                }
+                Op::Pad { pads } => {
+                    let x = input_shape(0)?;
+                    if x.len() != 4 {
+                        return Err(err(format!("Pad rank: {x:?}")));
+                    }
+                    vec![x[0], x[1] + pads.0 + pads.1, x[2] + pads.2 + pads.3, x[3]]
+                }
+            };
+            shapes.insert(n.name.clone(), shape);
+        }
+        Ok(shapes)
+    }
+
+    /// Full structural validation: names resolve, acyclic, shapes infer,
+    /// outputs exist.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let mut seen = HashSet::new();
+        for n in &self.nodes {
+            if !seen.insert(&n.name) {
+                return Err(GraphError::Duplicate(n.name.clone()));
+            }
+        }
+        for out in &self.outputs {
+            if !self.index.contains_key(out) {
+                return Err(GraphError::UnknownInput("<outputs>".into(), out.clone()));
+            }
+        }
+        self.infer_shapes()?;
+        Ok(())
+    }
+
+    /// Total parameter count over Const nodes feeding compute ops.
+    pub fn param_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.value.as_ref().map(|v| v.len()))
+            .sum()
+    }
+
+    /// Multiply-accumulate count for one inference (dense; zero-skipping
+    /// is accounted separately by the sparsity-aware throughput model).
+    pub fn macs(&self) -> Result<u64, GraphError> {
+        let shapes = self.infer_shapes()?;
+        let mut total: u64 = 0;
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv2D { .. } => {
+                    let out = &shapes[&n.name];
+                    let w = &shapes[&n.inputs[1]];
+                    // out H*W positions × kh*kw*ci per output channel × co
+                    total += (out[1] * out[2] * w[0] * w[1] * w[2] * w[3]) as u64;
+                }
+                Op::DepthwiseConv2d { .. } => {
+                    let out = &shapes[&n.name];
+                    let w = &shapes[&n.inputs[1]];
+                    total += (out[1] * out[2] * out[3] * w[0] * w[1]) as u64;
+                }
+                Op::MatMul => {
+                    let w = &shapes[&n.inputs[1]];
+                    total += (w[0] * w[1]) as u64;
+                }
+                _ => {}
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// input -> conv3x3(8) -> bias -> relu -> maxpool -> graph used by
+    /// several tests below.
+    fn small_graph() -> Graph {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(0);
+        g.op("input", Op::Placeholder { shape: vec![1, 8, 8, 3] }, &[]);
+        g.constant("w0", Tensor::randn(&[3, 3, 3, 8], &mut rng, 0.1));
+        g.op(
+            "conv0",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w0"],
+        );
+        g.constant("b0", Tensor::zeros(&[8]));
+        g.op("bias0", Op::BiasAdd, &["conv0", "b0"]);
+        g.op("relu0", Op::Relu, &["bias0"]);
+        g.op(
+            "pool0",
+            Op::MaxPool { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid },
+            &["relu0"],
+        );
+        g.outputs = vec!["pool0".into()];
+        g
+    }
+
+    #[test]
+    fn shape_inference_small() {
+        let g = small_graph();
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["conv0"], vec![1, 8, 8, 8]);
+        assert_eq!(s["pool0"], vec![1, 4, 4, 8]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = small_graph();
+        let order = g.topo_order().unwrap();
+        let pos: HashMap<&str, usize> = order
+            .iter()
+            .enumerate()
+            .map(|(p, &i)| (g.nodes[i].name.as_str(), p))
+            .collect();
+        assert!(pos["input"] < pos["conv0"]);
+        assert!(pos["w0"] < pos["conv0"]);
+        assert!(pos["conv0"] < pos["bias0"]);
+        assert!(pos["relu0"] < pos["pool0"]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new();
+        g.op("a", Op::Relu, &["b"]);
+        g.op("b", Op::Relu, &["a"]);
+        assert!(matches!(g.topo_order(), Err(GraphError::Cycle(_))));
+    }
+
+    #[test]
+    fn unknown_input_detected() {
+        let mut g = Graph::new();
+        g.op("a", Op::Relu, &["ghost"]);
+        assert!(matches!(
+            g.topo_order(),
+            Err(GraphError::UnknownInput(_, _))
+        ));
+    }
+
+    #[test]
+    fn channel_mismatch_detected() {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(0);
+        g.op("input", Op::Placeholder { shape: vec![1, 8, 8, 3] }, &[]);
+        g.constant("w", Tensor::randn(&[3, 3, 4, 8], &mut rng, 0.1)); // Ci=4 != 3
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w"],
+        );
+        assert!(matches!(g.infer_shapes(), Err(GraphError::Shape(_, _))));
+    }
+
+    #[test]
+    fn depthwise_shapes() {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(0);
+        g.op("input", Op::Placeholder { shape: vec![1, 14, 14, 32] }, &[]);
+        g.constant("w", Tensor::randn(&[3, 3, 32, 1], &mut rng, 0.1));
+        g.op(
+            "dw",
+            Op::DepthwiseConv2d { stride: (2, 2), padding: Padding::Same },
+            &["input", "w"],
+        );
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["dw"], vec![1, 7, 7, 32]);
+    }
+
+    #[test]
+    fn mean_and_matmul_shapes() {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(0);
+        g.op("input", Op::Placeholder { shape: vec![1, 7, 7, 64] }, &[]);
+        g.op("gap", Op::Mean, &["input"]);
+        g.constant("fc_w", Tensor::randn(&[64, 10], &mut rng, 0.1));
+        g.op("fc", Op::MatMul, &["gap", "fc_w"]);
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["gap"], vec![1, 64]);
+        assert_eq!(s["fc"], vec![1, 10]);
+    }
+
+    #[test]
+    fn prune_dead_removes_unreachable() {
+        let mut g = small_graph();
+        g.constant("orphan", Tensor::zeros(&[4]));
+        assert!(g.get("orphan").is_some());
+        g.prune_dead();
+        assert!(g.get("orphan").is_none());
+        assert!(g.get("conv0").is_some());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn macs_count_conv() {
+        let g = small_graph();
+        // conv0: 8*8 positions × 3*3*3 × 8 = 13824
+        assert_eq!(g.macs().unwrap(), 8 * 8 * 3 * 3 * 3 * 8);
+    }
+
+    #[test]
+    fn duplicate_name_panics() {
+        let mut g = Graph::new();
+        g.op("x", Op::Relu, &[]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            g.op("x", Op::Relu, &[]);
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! The operation set of the HPIPE network compiler.
+//!
+//! §V of the paper: "We have implemented and verified modules that can
+//! execute the TensorFlow Placeholder, Conv2D, DepthwiseConv2D, MatMul,
+//! BiasAdd, MaxPool, Relu, Relu6, Add, and Mean operations." We mirror
+//! that op set, plus the ops that exist only *during* compilation:
+//! `Const` (weight tensors), `FusedBatchNorm` and `Pad` (both folded away
+//! by the transform passes), and the `Mul`/`AddC` pair a batch norm is
+//! split into on its way to being folded.
+
+use crate::util::Json;
+
+/// Spatial padding specification for Conv2D / DepthwiseConv2d / MaxPool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    /// TensorFlow SAME: output dim = ceil(in / stride).
+    Same,
+    /// TensorFlow VALID: no padding.
+    Valid,
+    /// Explicit (top, bottom, left, right) — produced by pad-merging.
+    Explicit(usize, usize, usize, usize),
+}
+
+impl Padding {
+    /// Resolve to concrete (top, bottom, left, right) amounts for a given
+    /// input size, kernel size and stride (TF SAME semantics).
+    pub fn resolve(
+        &self,
+        in_h: usize,
+        in_w: usize,
+        kh: usize,
+        kw: usize,
+        sh: usize,
+        sw: usize,
+    ) -> (usize, usize, usize, usize) {
+        match *self {
+            Padding::Valid => (0, 0, 0, 0),
+            Padding::Explicit(t, b, l, r) => (t, b, l, r),
+            Padding::Same => {
+                let pad_along = |input: usize, k: usize, s: usize| -> usize {
+                    let out = input.div_ceil(s);
+                    ((out - 1) * s + k).saturating_sub(input)
+                };
+                let ph = pad_along(in_h, kh, sh);
+                let pw = pad_along(in_w, kw, sw);
+                (ph / 2, ph - ph / 2, pw / 2, pw - pw / 2)
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            Padding::Same => Json::from("SAME"),
+            Padding::Valid => Json::from("VALID"),
+            Padding::Explicit(t, b, l, r) => Json::from(vec![t, b, l, r]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<Padding> {
+        match j {
+            Json::Str(s) if s == "SAME" => Some(Padding::Same),
+            Json::Str(s) if s == "VALID" => Some(Padding::Valid),
+            Json::Arr(_) => {
+                let v = j.usize_vec()?;
+                if v.len() == 4 {
+                    Some(Padding::Explicit(v[0], v[1], v[2], v[3]))
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One graph operation. Weight/constant inputs are separate `Const` nodes
+/// referenced by name, exactly like a TensorFlow graphdef.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Network input; attribute is the NHWC shape (batch always 1 in the
+    /// pipeline — HPIPE is a batch-1 architecture).
+    Placeholder { shape: Vec<usize> },
+    /// Weight / constant tensor (value stored on the node).
+    Const,
+    /// 2D convolution. inputs = [activations, weights(HWIO)].
+    Conv2D { stride: (usize, usize), padding: Padding },
+    /// Depthwise 2D convolution. inputs = [activations, weights(HWIM)].
+    DepthwiseConv2d { stride: (usize, usize), padding: Padding },
+    /// inputs = [activations(N,Ci), weights(Ci,Co)].
+    MatMul,
+    /// inputs = [activations, bias(C)].
+    BiasAdd,
+    MaxPool { ksize: (usize, usize), stride: (usize, usize), padding: Padding },
+    Relu,
+    Relu6,
+    /// Elementwise residual add of two producer activations.
+    Add,
+    /// Mean over spatial dims (global average pool): NHWC -> N,C.
+    Mean,
+    /// inputs = [x, scale(C), offset(C), mean(C), variance(C)].
+    FusedBatchNorm { epsilon: f32 },
+    /// Standalone spatial zero-padding (top, bottom, left, right).
+    Pad { pads: (usize, usize, usize, usize) },
+    /// Per-channel multiply by a Const (BN decomposition artifact).
+    Mul,
+    /// Per-channel add of a Const (BN decomposition artifact). Distinct
+    /// from `Add` (which merges two activation paths) and `BiasAdd`
+    /// (which this is folded into).
+    AddC,
+    /// Final classifier softmax (host-side in HPIPE; kept for parity with
+    /// the TF graph and the JAX model).
+    Softmax,
+}
+
+impl Op {
+    /// The TF-style op-type string used in graphdef JSON.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Op::Placeholder { .. } => "Placeholder",
+            Op::Const => "Const",
+            Op::Conv2D { .. } => "Conv2D",
+            Op::DepthwiseConv2d { .. } => "DepthwiseConv2dNative",
+            Op::MatMul => "MatMul",
+            Op::BiasAdd => "BiasAdd",
+            Op::MaxPool { .. } => "MaxPool",
+            Op::Relu => "Relu",
+            Op::Relu6 => "Relu6",
+            Op::Add => "Add",
+            Op::Mean => "Mean",
+            Op::FusedBatchNorm { .. } => "FusedBatchNorm",
+            Op::Pad { .. } => "Pad",
+            Op::Mul => "Mul",
+            Op::AddC => "AddC",
+            Op::Softmax => "Softmax",
+        }
+    }
+
+    /// Does this op consume weights through a Const input that occupies
+    /// DSPs when mapped to hardware? (The compiler's balancer only
+    /// considers these.)
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            Op::Conv2D { .. } | Op::DepthwiseConv2d { .. } | Op::MatMul
+        )
+    }
+
+    /// Ops that buffer input lines in hardware (have an Input Activation
+    /// Buffer per §V) vs. ops that stream through combinationally.
+    pub fn buffers_input(&self) -> bool {
+        matches!(
+            self,
+            Op::Conv2D { .. }
+                | Op::DepthwiseConv2d { .. }
+                | Op::MaxPool { .. }
+                | Op::MatMul
+                | Op::Add
+                | Op::Placeholder { .. }
+                | Op::Mean
+        )
+    }
+
+    pub fn attrs_to_json(&self) -> Json {
+        let mut a = Json::obj();
+        match self {
+            Op::Placeholder { shape } => {
+                a.set("shape", Json::from(shape.clone()));
+            }
+            Op::Conv2D { stride, padding } | Op::DepthwiseConv2d { stride, padding } => {
+                a.set("stride", Json::from(vec![stride.0, stride.1]));
+                a.set("padding", padding.to_json());
+            }
+            Op::MaxPool { ksize, stride, padding } => {
+                a.set("ksize", Json::from(vec![ksize.0, ksize.1]));
+                a.set("stride", Json::from(vec![stride.0, stride.1]));
+                a.set("padding", padding.to_json());
+            }
+            Op::FusedBatchNorm { epsilon } => {
+                a.set("epsilon", Json::from(*epsilon as f64));
+            }
+            Op::Pad { pads } => {
+                a.set(
+                    "pads",
+                    Json::from(vec![pads.0, pads.1, pads.2, pads.3]),
+                );
+            }
+            _ => {}
+        }
+        a
+    }
+
+    pub fn from_json(type_name: &str, attrs: &Json) -> Option<Op> {
+        let stride = || -> Option<(usize, usize)> {
+            let v = attrs.get("stride").usize_vec()?;
+            Some((v[0], v[1]))
+        };
+        let padding = || Padding::from_json(attrs.get("padding"));
+        Some(match type_name {
+            "Placeholder" => Op::Placeholder {
+                shape: attrs.get("shape").usize_vec()?,
+            },
+            "Const" => Op::Const,
+            "Conv2D" => Op::Conv2D {
+                stride: stride()?,
+                padding: padding()?,
+            },
+            "DepthwiseConv2dNative" => Op::DepthwiseConv2d {
+                stride: stride()?,
+                padding: padding()?,
+            },
+            "MatMul" => Op::MatMul,
+            "BiasAdd" => Op::BiasAdd,
+            "MaxPool" => {
+                let k = attrs.get("ksize").usize_vec()?;
+                Op::MaxPool {
+                    ksize: (k[0], k[1]),
+                    stride: stride()?,
+                    padding: padding()?,
+                }
+            }
+            "Relu" => Op::Relu,
+            "Relu6" => Op::Relu6,
+            "Add" => Op::Add,
+            "Mean" => Op::Mean,
+            "FusedBatchNorm" => Op::FusedBatchNorm {
+                epsilon: attrs.get("epsilon").as_f64()? as f32,
+            },
+            "Pad" => {
+                let p = attrs.get("pads").usize_vec()?;
+                Op::Pad {
+                    pads: (p[0], p[1], p[2], p[3]),
+                }
+            }
+            "Mul" => Op::Mul,
+            "AddC" => Op::AddC,
+            "Softmax" => Op::Softmax,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_resolution() {
+        // 224x224 input, 7x7 kernel, stride 2 (ResNet-50 conv1):
+        // out = 112, pad_total = (112-1)*2 + 7 - 224 = 5 -> (2,3)
+        let p = Padding::Same.resolve(224, 224, 7, 7, 2, 2);
+        assert_eq!(p, (2, 3, 2, 3));
+        // 3x3 stride 1: symmetric 1.
+        assert_eq!(Padding::Same.resolve(56, 56, 3, 3, 1, 1), (1, 1, 1, 1));
+        // 1x1 never pads.
+        assert_eq!(Padding::Same.resolve(56, 56, 1, 1, 1, 1), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn valid_padding_is_zero() {
+        assert_eq!(Padding::Valid.resolve(10, 10, 3, 3, 1, 1), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn padding_json_roundtrip() {
+        for p in [
+            Padding::Same,
+            Padding::Valid,
+            Padding::Explicit(1, 2, 3, 4),
+        ] {
+            assert_eq!(Padding::from_json(&p.to_json()), Some(p));
+        }
+    }
+
+    #[test]
+    fn op_json_roundtrip() {
+        let ops = vec![
+            Op::Placeholder { shape: vec![1, 224, 224, 3] },
+            Op::Const,
+            Op::Conv2D { stride: (2, 2), padding: Padding::Same },
+            Op::DepthwiseConv2d { stride: (1, 1), padding: Padding::Explicit(1, 1, 1, 1) },
+            Op::MatMul,
+            Op::BiasAdd,
+            Op::MaxPool { ksize: (3, 3), stride: (2, 2), padding: Padding::Same },
+            Op::Relu,
+            Op::Relu6,
+            Op::Add,
+            Op::Mean,
+            Op::FusedBatchNorm { epsilon: 1e-3 },
+            Op::Pad { pads: (0, 1, 0, 1) },
+            Op::Mul,
+            Op::AddC,
+            Op::Softmax,
+        ];
+        for op in ops {
+            let back = Op::from_json(op.type_name(), &op.attrs_to_json()).unwrap();
+            assert_eq!(back, op);
+        }
+    }
+
+    #[test]
+    fn compute_classification() {
+        assert!(Op::Conv2D { stride: (1, 1), padding: Padding::Same }.is_compute());
+        assert!(Op::MatMul.is_compute());
+        assert!(!Op::Relu.is_compute());
+        assert!(!Op::BiasAdd.is_compute());
+    }
+}

@@ -1,0 +1,280 @@
+//! Dense NHWC tensors (f32) and the 16-bit fixed-point format HPIPE uses.
+//!
+//! All activations are NHWC ([batch, height, width, channels]) and all
+//! convolution weights are HWIO ([kh, kw, cin, cout]) — matching both the
+//! TensorFlow layouts the paper's compiler imports and the layouts our
+//! JAX model (python/compile/model.py) exports, so weight blobs can be
+//! shared byte-for-byte between the two sides.
+
+use crate::util::Rng;
+
+/// A dense f32 tensor with row-major (last-dim fastest) layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Random-normal tensor (He init scaled by fan-in for conv weights).
+    pub fn randn(shape: &[usize], rng: &mut Rng, std: f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for x in t.data.iter_mut() {
+            *x = rng.normal_f32(0.0, std);
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Strides for row-major layout.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        debug_assert!(n < self.shape[0] && h < sh && w < sw && c < sc);
+        self.data[((n * sh + h) * sw + w) * sc + c]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        &mut self.data[((n * sh + h) * sw + w) * sc + c]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Reshape without moving data (element count must match).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        }
+    }
+
+    /// Fraction of exactly-zero elements (sparsity after pruning).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Max |x| over the tensor — used to pick fixed-point scales.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// HPIPE's 16-bit fixed-point representation (§VI: "we ran all of our
+/// experiments with a 16-bit fixed point precision"). A `FixedFormat`
+/// carries the number of fractional bits; values are stored as i16 and
+/// accumulated in i64, modelling the S10 DSP block's wide accumulator so
+/// quantization error comes only from input/weight rounding and the final
+/// requantize — exactly as in the hardware.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedFormat {
+    /// Total bits including sign (16 for the paper's experiments).
+    pub bits: u32,
+    /// Fractional bits; integer bits = bits - 1 - frac.
+    pub frac: u32,
+}
+
+impl FixedFormat {
+    pub fn q(bits: u32, frac: u32) -> FixedFormat {
+        assert!(bits >= 2 && frac < bits);
+        FixedFormat { bits, frac }
+    }
+
+    /// Pick the format with the most fractional bits that still
+    /// represents `max_abs` without saturation.
+    pub fn for_range(bits: u32, max_abs: f32) -> FixedFormat {
+        let mut int_bits = 0u32;
+        while ((1i64 << int_bits) as f32) <= max_abs && int_bits < bits - 1 {
+            int_bits += 1;
+        }
+        FixedFormat {
+            bits,
+            frac: bits - 1 - int_bits,
+        }
+    }
+
+    pub fn scale(&self) -> f32 {
+        (1i64 << self.frac) as f32
+    }
+
+    pub fn max_val(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    pub fn min_val(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Quantize with round-to-nearest and saturation.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i64 {
+        let v = (x * self.scale()).round() as i64;
+        v.clamp(self.min_val(), self.max_val())
+    }
+
+    #[inline]
+    pub fn dequantize(&self, v: i64) -> f32 {
+        v as f32 / self.scale()
+    }
+
+    /// Round-trip a float through this format.
+    #[inline]
+    pub fn roundtrip(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// A tensor quantized to a fixed-point format (values stored widened to
+/// i64 so intermediate accumulations never overflow in the model).
+#[derive(Clone, Debug)]
+pub struct FixedTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i64>,
+    pub format: FixedFormat,
+}
+
+impl FixedTensor {
+    pub fn quantize(t: &Tensor, format: FixedFormat) -> FixedTensor {
+        FixedTensor {
+            shape: t.shape.clone(),
+            data: t.data.iter().map(|&x| format.quantize(x)).collect(),
+            format,
+        }
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| self.format.dequantize(v)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t = Tensor::zeros(&[1, 3, 4, 2]);
+        *t.at4_mut(0, 2, 3, 1) = 5.0;
+        assert_eq!(t.at4(0, 2, 3, 1), 5.0);
+        assert_eq!(t.at4(0, 2, 3, 0), 0.0);
+        assert_eq!(t.len(), 24);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(t.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn fixed_format_for_range() {
+        // max_abs 5.9 needs 3 integer bits -> 16-1-3 = 12 frac bits
+        let f = FixedFormat::for_range(16, 5.9);
+        assert_eq!(f.frac, 12);
+        // pure-fractional data keeps 15 frac bits
+        let f = FixedFormat::for_range(16, 0.7);
+        assert_eq!(f.frac, 15);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let f = FixedFormat::q(16, 12);
+        let step = 1.0 / f.scale();
+        for &x in &[0.0f32, 0.1, -3.7, 5.25, -7.999] {
+            assert!((f.roundtrip(x) - x).abs() <= step / 2.0 + 1e-9, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let f = FixedFormat::q(16, 12);
+        assert_eq!(f.quantize(1e9), f.max_val());
+        assert_eq!(f.quantize(-1e9), f.min_val());
+    }
+
+    #[test]
+    fn fixed_tensor_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[32], &mut rng, 1.0);
+        let f = FixedFormat::for_range(16, t.max_abs());
+        let q = FixedTensor::quantize(&t, f);
+        let back = q.dequantize();
+        for (a, b) in t.data.iter().zip(&back.data) {
+            assert!((a - b).abs() <= 1.0 / f.scale());
+        }
+    }
+}

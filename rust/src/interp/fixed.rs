@@ -1,0 +1,511 @@
+//! Fixed-point graph executor.
+//!
+//! Models HPIPE's 16-bit fixed-point datapath (§VI, Table III): weights
+//! and activations are quantized to per-operation [`FixedFormat`]s, the
+//! multiply-accumulate chain runs in exact integer arithmetic (the S10
+//! DSP block's wide accumulator — products and partial sums never round),
+//! and each module's output is requantized to the next stage's activation
+//! format. The "precision annotations file" of Fig 4 maps to
+//! [`PrecisionConfig`]: a default format plus per-node overrides.
+
+use super::{argmax, run as run_f32};
+use crate::graph::{FixedFormat, Graph, GraphError, Op, Padding, Tensor};
+use std::collections::BTreeMap;
+
+/// Per-network precision assignment (the Fig 4 annotations file).
+#[derive(Clone, Debug)]
+pub struct PrecisionConfig {
+    /// Default activation/weight format (paper: 16-bit fixed point).
+    pub default: FixedFormat,
+    /// Per-node overrides, keyed by node name.
+    pub overrides: BTreeMap<String, FixedFormat>,
+    /// If true, choose the fractional split per tensor from its observed
+    /// range (calibration); `default.bits` still bounds total width.
+    pub calibrate: bool,
+}
+
+impl PrecisionConfig {
+    pub fn uniform(bits: u32, frac: u32) -> PrecisionConfig {
+        PrecisionConfig {
+            default: FixedFormat::q(bits, frac),
+            overrides: BTreeMap::new(),
+            calibrate: true,
+        }
+    }
+
+    /// The paper's configuration: 16-bit, range-calibrated per tensor.
+    pub fn paper_16bit() -> PrecisionConfig {
+        PrecisionConfig::uniform(16, 8)
+    }
+
+    fn format_for(&self, name: &str, max_abs: f32) -> FixedFormat {
+        if let Some(f) = self.overrides.get(name) {
+            return *f;
+        }
+        if self.calibrate {
+            FixedFormat::for_range(self.default.bits, max_abs)
+        } else {
+            self.default
+        }
+    }
+}
+
+/// A tensor in the integer domain: values plus the format they carry.
+#[derive(Clone, Debug)]
+struct QTensor {
+    shape: Vec<usize>,
+    data: Vec<i64>,
+    frac: u32,
+}
+
+impl QTensor {
+    fn quantize(t: &Tensor, f: FixedFormat) -> QTensor {
+        QTensor {
+            shape: t.shape.clone(),
+            data: t.data.iter().map(|&x| f.quantize(x)).collect(),
+            frac: f.frac,
+        }
+    }
+
+    fn dequantize(&self) -> Tensor {
+        let s = (1i64 << self.frac) as f32;
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| v as f32 / s).collect(),
+        }
+    }
+
+    /// Requantize to a target format with round-to-nearest + saturation.
+    fn requantize(&self, f: FixedFormat) -> QTensor {
+        let data = self
+            .data
+            .iter()
+            .map(|&v| requant_val(v, self.frac, f))
+            .collect();
+        QTensor {
+            shape: self.shape.clone(),
+            data,
+            frac: f.frac,
+        }
+    }
+}
+
+#[inline]
+fn requant_val(v: i64, from_frac: u32, to: FixedFormat) -> i64 {
+    let shifted = if to.frac >= from_frac {
+        v << (to.frac - from_frac)
+    } else {
+        let shift = from_frac - to.frac;
+        // round-to-nearest (ties away from zero), like the RTL's rounder
+        let half = 1i64 << (shift - 1);
+        if v >= 0 {
+            (v + half) >> shift
+        } else {
+            -((-v + half) >> shift)
+        }
+    };
+    shifted.clamp(to.min_val(), to.max_val())
+}
+
+/// Result of a fixed-point run: dequantized node values plus per-node
+/// error relative to the f32 oracle.
+pub struct FixedRun {
+    pub outputs: Vec<Tensor>,
+    /// max |fixed - f32| over each output tensor.
+    pub max_abs_error: f32,
+    /// did argmax of the first output agree with f32? (classification)
+    pub argmax_match: bool,
+}
+
+/// Execute the graph in the fixed-point domain and compare against the
+/// f32 interpreter.
+pub fn run_fixed(
+    graph: &Graph,
+    feeds: &BTreeMap<String, Tensor>,
+    cfg: &PrecisionConfig,
+) -> Result<FixedRun, GraphError> {
+    let order = graph.topo_order()?;
+    // f32 oracle pass: provides calibration ranges and the error baseline.
+    let f32_env = run_f32(graph, feeds)?;
+
+    let mut env: BTreeMap<String, QTensor> = BTreeMap::new();
+    for i in order {
+        let n = &graph.nodes[i];
+        let fmt = cfg.format_for(&n.name, f32_env[&n.name].max_abs().max(1e-6));
+        let input = |k: usize| -> &QTensor { &env[&n.inputs[k]] };
+        let q = match &n.op {
+            Op::Placeholder { .. } => QTensor::quantize(&f32_env[&n.name], fmt),
+            Op::Const => QTensor::quantize(n.value.as_ref().unwrap(), fmt),
+            Op::Conv2D { stride, padding } => {
+                qconv2d(input(0), input(1), *stride, *padding, false).requantize(fmt)
+            }
+            Op::DepthwiseConv2d { stride, padding } => {
+                qconv2d(input(0), input(1), *stride, *padding, true).requantize(fmt)
+            }
+            Op::MatMul => qmatmul(input(0), input(1)).requantize(fmt),
+            Op::BiasAdd | Op::AddC => {
+                qaligned_channel_add(input(0), input(1)).requantize(fmt)
+            }
+            Op::Mul => qchannel_mul(input(0), input(1)).requantize(fmt),
+            Op::Add => qadd(input(0), input(1)).requantize(fmt),
+            Op::Relu => qmap(input(0), |v| v.max(0)).requantize(fmt),
+            Op::Relu6 => {
+                let six = 6i64 << input(0).frac;
+                qmap(input(0), move |v| v.clamp(0, six)).requantize(fmt)
+            }
+            Op::MaxPool { ksize, stride, padding } => {
+                qmaxpool(input(0), *ksize, *stride, *padding).requantize(fmt)
+            }
+            Op::Mean => qmean(input(0)).requantize(fmt),
+            Op::Pad { pads } => qpad(input(0), *pads),
+            Op::FusedBatchNorm { .. } => {
+                // BN survives only in un-transformed graphs: run in float
+                // (hardware never sees it — the compiler folds it away).
+                QTensor::quantize(&f32_env[&n.name], fmt)
+            }
+            Op::Softmax => QTensor::quantize(&super::softmax(&input(0).dequantize()), fmt),
+        };
+        env.insert(n.name.clone(), q);
+    }
+
+    let outputs: Vec<Tensor> = graph
+        .outputs
+        .iter()
+        .map(|o| env[o].dequantize())
+        .collect();
+    let mut max_err = 0f32;
+    for (out, name) in outputs.iter().zip(&graph.outputs) {
+        for (a, b) in out.data.iter().zip(&f32_env[name].data) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    let argmax_match = graph
+        .outputs
+        .first()
+        .map(|name| {
+            let fx = &outputs[0];
+            let fl = &f32_env[name];
+            fx.rank() == 2 && argmax(fx) == argmax(fl)
+        })
+        .unwrap_or(true);
+    Ok(FixedRun {
+        outputs,
+        max_abs_error: max_err,
+        argmax_match,
+    })
+}
+
+// --------- integer op kernels (exact i64 accumulation) ---------
+
+fn qconv2d(
+    x: &QTensor,
+    w: &QTensor,
+    stride: (usize, usize),
+    padding: Padding,
+    depthwise: bool,
+) -> QTensor {
+    let (h, wi, ci) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, wci, cm) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (t, b, l, r) = padding.resolve(h, wi, kh, kw, stride.0, stride.1);
+    let ho = (h + t + b - kh) / stride.0 + 1;
+    let wo = (wi + l + r - kw) / stride.1 + 1;
+    let co = if depthwise { ci * cm } else { cm };
+    let mut out = vec![0i64; ho * wo * co];
+    let idx_x = |y: usize, xx: usize, c: usize| (y * wi + xx) * ci + c;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for oc in 0..co {
+                let mut acc = 0i64;
+                for ky in 0..kh {
+                    let iy = (oy * stride.0 + ky) as isize - t as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride.1 + kx) as isize - l as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        if depthwise {
+                            let (ic, im) = (oc / cm, oc % cm);
+                            acc += x.data[idx_x(iy as usize, ix as usize, ic)]
+                                * w.data[((ky * kw + kx) * wci + ic) * cm + im];
+                        } else {
+                            for ic in 0..ci {
+                                acc += x.data[idx_x(iy as usize, ix as usize, ic)]
+                                    * w.data[((ky * kw + kx) * wci + ic) * cm + oc];
+                            }
+                        }
+                    }
+                }
+                out[(oy * wo + ox) * co + oc] = acc;
+            }
+        }
+    }
+    QTensor {
+        shape: vec![1, ho, wo, co],
+        data: out,
+        frac: x.frac + w.frac,
+    }
+}
+
+fn qmatmul(x: &QTensor, w: &QTensor) -> QTensor {
+    let (n, ci) = (x.shape[0], x.shape[1]);
+    let co = w.shape[1];
+    let mut out = vec![0i64; n * co];
+    for i in 0..n {
+        for j in 0..co {
+            let mut acc = 0i64;
+            for k in 0..ci {
+                acc += x.data[i * ci + k] * w.data[k * co + j];
+            }
+            out[i * co + j] = acc;
+        }
+    }
+    QTensor {
+        shape: vec![n, co],
+        data: out,
+        frac: x.frac + w.frac,
+    }
+}
+
+/// Channel-wise add with fraction alignment (BiasAdd / AddC).
+fn qaligned_channel_add(x: &QTensor, c: &QTensor) -> QTensor {
+    let ch = *x.shape.last().unwrap();
+    let frac = x.frac.max(c.frac);
+    let xs = frac - x.frac;
+    let cs = frac - c.frac;
+    let data = x
+        .data
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v << xs) + (c.data[i % ch] << cs))
+        .collect();
+    QTensor {
+        shape: x.shape.clone(),
+        data,
+        frac,
+    }
+}
+
+fn qchannel_mul(x: &QTensor, c: &QTensor) -> QTensor {
+    let ch = *x.shape.last().unwrap();
+    let data = x
+        .data
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v * c.data[i % ch])
+        .collect();
+    QTensor {
+        shape: x.shape.clone(),
+        data,
+        frac: x.frac + c.frac,
+    }
+}
+
+fn qadd(a: &QTensor, b: &QTensor) -> QTensor {
+    let frac = a.frac.max(b.frac);
+    let sa = frac - a.frac;
+    let sb = frac - b.frac;
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| (x << sa) + (y << sb))
+        .collect();
+    QTensor {
+        shape: a.shape.clone(),
+        data,
+        frac,
+    }
+}
+
+fn qmap(x: &QTensor, f: impl Fn(i64) -> i64) -> QTensor {
+    QTensor {
+        shape: x.shape.clone(),
+        data: x.data.iter().map(|&v| f(v)).collect(),
+        frac: x.frac,
+    }
+}
+
+fn qmaxpool(
+    x: &QTensor,
+    ksize: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) -> QTensor {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (t, b, l, r) = padding.resolve(h, w, ksize.0, ksize.1, stride.0, stride.1);
+    let ho = (h + t + b - ksize.0) / stride.0 + 1;
+    let wo = (w + l + r - ksize.1) / stride.1 + 1;
+    let mut out = vec![0i64; ho * wo * c];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ch in 0..c {
+                let mut m = i64::MIN;
+                for ky in 0..ksize.0 {
+                    let iy = (oy * stride.0 + ky) as isize - t as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..ksize.1 {
+                        let ix = (ox * stride.1 + kx) as isize - l as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        m = m.max(x.data[((iy as usize * w) + ix as usize) * c + ch]);
+                    }
+                }
+                out[(oy * wo + ox) * c + ch] = m;
+            }
+        }
+    }
+    QTensor {
+        shape: vec![1, ho, wo, c],
+        data: out,
+        frac: x.frac,
+    }
+}
+
+fn qmean(x: &QTensor) -> QTensor {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let n = (h * w) as i64;
+    let mut out = vec![0i64; c];
+    for y in 0..h {
+        for xx in 0..w {
+            for ch in 0..c {
+                out[ch] += x.data[((y * w) + xx) * c + ch];
+            }
+        }
+    }
+    // divide with rounding; result keeps the input fraction (hardware
+    // implements this with a multiply by reciprocal into the DSP).
+    for v in out.iter_mut() {
+        let x = *v;
+        *v = if x >= 0 { (x + n / 2) / n } else { -((-x + n / 2) / n) };
+    }
+    QTensor {
+        shape: vec![1, c],
+        data: out,
+        frac: x.frac,
+    }
+}
+
+fn qpad(x: &QTensor, pads: (usize, usize, usize, usize)) -> QTensor {
+    let (t, b, l, r) = pads;
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (nh, nw) = (h + t + b, w + l + r);
+    let mut out = vec![0i64; nh * nw * c];
+    for y in 0..h {
+        for xx in 0..w {
+            for ch in 0..c {
+                out[((y + t) * nw + (xx + l)) * c + ch] = x.data[((y * w) + xx) * c + ch];
+            }
+        }
+    }
+    QTensor {
+        shape: vec![1, nh, nw, c],
+        data: out,
+        frac: x.frac,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tiny_graph(rng: &mut Rng) -> (Graph, BTreeMap<String, Tensor>) {
+        let mut g = Graph::new();
+        g.op("input", Op::Placeholder { shape: vec![1, 6, 6, 3] }, &[]);
+        g.constant("w0", Tensor::randn(&[3, 3, 3, 8], rng, 0.3));
+        g.op(
+            "conv0",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w0"],
+        );
+        g.constant("b0", Tensor::randn(&[8], rng, 0.1));
+        g.op("bias0", Op::BiasAdd, &["conv0", "b0"]);
+        g.op("relu0", Op::Relu, &["bias0"]);
+        g.op("gap", Op::Mean, &["relu0"]);
+        g.constant("fw", Tensor::randn(&[8, 4], rng, 0.3));
+        g.op("fc", Op::MatMul, &["gap", "fw"]);
+        g.outputs = vec!["fc".into()];
+        let mut feeds = BTreeMap::new();
+        feeds.insert("input".to_string(), Tensor::randn(&[1, 6, 6, 3], rng, 1.0));
+        (g, feeds)
+    }
+
+    #[test]
+    fn sixteen_bit_error_is_small() {
+        let mut rng = Rng::new(21);
+        let (g, feeds) = tiny_graph(&mut rng);
+        let r = run_fixed(&g, &feeds, &PrecisionConfig::paper_16bit()).unwrap();
+        assert!(r.max_abs_error < 0.02, "err={}", r.max_abs_error);
+        assert!(r.argmax_match);
+    }
+
+    #[test]
+    fn precision_ladder_monotone() {
+        // More bits -> error should (weakly) shrink across a wide ladder.
+        let mut rng = Rng::new(22);
+        let (g, feeds) = tiny_graph(&mut rng);
+        let errs: Vec<f32> = [6u32, 8, 12, 16]
+            .iter()
+            .map(|&bits| {
+                run_fixed(&g, &feeds, &PrecisionConfig::uniform(bits, 4))
+                    .unwrap()
+                    .max_abs_error
+            })
+            .collect();
+        assert!(errs[0] > errs[3], "ladder: {errs:?}");
+        assert!(errs[1] >= errs[3] * 0.5, "ladder: {errs:?}");
+    }
+
+    #[test]
+    fn per_node_override_applies() {
+        let mut rng = Rng::new(23);
+        let (g, feeds) = tiny_graph(&mut rng);
+        let mut cfg = PrecisionConfig::paper_16bit();
+        // crush the first conv to 4 bits: error must blow up vs 16-bit
+        cfg.overrides
+            .insert("conv0".into(), FixedFormat::q(4, 2));
+        cfg.overrides.insert("w0".into(), FixedFormat::q(4, 2));
+        let degraded = run_fixed(&g, &feeds, &cfg).unwrap();
+        let clean = run_fixed(&g, &feeds, &PrecisionConfig::paper_16bit()).unwrap();
+        assert!(degraded.max_abs_error > clean.max_abs_error * 4.0);
+    }
+
+    #[test]
+    fn requantize_round_and_saturate() {
+        // 1.75 at frac=8 -> frac=1: rounds to 2.0
+        let f = FixedFormat::q(16, 1);
+        assert_eq!(requant_val(448, 8, f), 4); // 1.75*256=448 -> 4/2=2.0
+        // saturation at 8-bit
+        let f8 = FixedFormat::q(8, 0);
+        assert_eq!(requant_val(1000 << 4, 4, f8), 127);
+        assert_eq!(requant_val(-(1000i64 << 4), 4, f8), -128);
+    }
+
+    #[test]
+    fn exact_when_values_on_grid() {
+        // Integers on the grid: fixed-point run must be bit-exact.
+        let mut g = Graph::new();
+        g.op("input", Op::Placeholder { shape: vec![1, 2, 2, 1] }, &[]);
+        g.constant("w", Tensor::from_vec(&[1, 1, 1, 1], vec![2.0]));
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Valid },
+            &["input", "w"],
+        );
+        g.outputs = vec!["conv".into()];
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, -2.0, 3.0, 0.5]),
+        );
+        let r = run_fixed(&g, &feeds, &PrecisionConfig::paper_16bit()).unwrap();
+        assert_eq!(r.max_abs_error, 0.0);
+        assert_eq!(r.outputs[0].data, vec![2.0, -4.0, 6.0, 1.0]);
+    }
+}

@@ -1,0 +1,512 @@
+//! Reference interpreter for the graph IR.
+//!
+//! Executes a [`Graph`] on f32 tensors with straightforward (unoptimized)
+//! loops. This is the *oracle* the rest of the system is checked against:
+//! transform passes must preserve its output, the fixed-point executor
+//! ([`fixed`]) is compared against it to quantify quantization error
+//! (Table III), and the PJRT-executed JAX artifacts must agree with it on
+//! the TinyCNN end-to-end model.
+
+pub mod fixed;
+
+use crate::graph::{Graph, GraphError, Op, Padding, Tensor};
+use std::collections::BTreeMap;
+
+/// Run the graph on the given feeds (placeholder name -> tensor).
+/// Returns the value of every node (keyed by name).
+pub fn run(
+    graph: &Graph,
+    feeds: &BTreeMap<String, Tensor>,
+) -> Result<BTreeMap<String, Tensor>, GraphError> {
+    let order = graph.topo_order()?;
+    let mut env: BTreeMap<String, Tensor> = BTreeMap::new();
+    for i in order {
+        let n = &graph.nodes[i];
+        let input = |k: usize| -> &Tensor { &env[&n.inputs[k]] };
+        let out = match &n.op {
+            Op::Placeholder { shape } => {
+                let t = feeds.get(&n.name).ok_or_else(|| {
+                    GraphError::Invalid(n.name.clone(), "missing feed".into())
+                })?;
+                if t.shape != *shape {
+                    return Err(GraphError::Shape(
+                        n.name.clone(),
+                        format!("feed shape {:?} != {:?}", t.shape, shape),
+                    ));
+                }
+                t.clone()
+            }
+            Op::Const => n.value.clone().ok_or_else(|| {
+                GraphError::Invalid(n.name.clone(), "Const without value".into())
+            })?,
+            Op::Conv2D { stride, padding } => conv2d(input(0), input(1), *stride, *padding),
+            Op::DepthwiseConv2d { stride, padding } => {
+                depthwise_conv2d(input(0), input(1), *stride, *padding)
+            }
+            Op::MatMul => matmul(input(0), input(1)),
+            Op::BiasAdd => bias_add(input(0), input(1)),
+            Op::MaxPool { ksize, stride, padding } => {
+                max_pool(input(0), *ksize, *stride, *padding)
+            }
+            Op::Relu => map_unary(input(0), |x| x.max(0.0)),
+            Op::Relu6 => map_unary(input(0), |x| x.clamp(0.0, 6.0)),
+            Op::Add => zip_binary(input(0), input(1), |a, b| a + b),
+            Op::Mean => global_mean(input(0)),
+            Op::FusedBatchNorm { epsilon } => batch_norm(
+                input(0),
+                input(1),
+                input(2),
+                input(3),
+                input(4),
+                *epsilon,
+            ),
+            Op::Pad { pads } => pad(input(0), *pads),
+            Op::Mul => per_channel(input(0), input(1), |x, c| x * c),
+            Op::AddC => per_channel(input(0), input(1), |x, c| x + c),
+            Op::Softmax => softmax(input(0)),
+        };
+        env.insert(n.name.clone(), out);
+    }
+    Ok(env)
+}
+
+/// Run and return only the designated graph outputs.
+pub fn run_outputs(
+    graph: &Graph,
+    feeds: &BTreeMap<String, Tensor>,
+) -> Result<Vec<Tensor>, GraphError> {
+    let env = run(graph, feeds)?;
+    Ok(graph
+        .outputs
+        .iter()
+        .map(|o| env[o].clone())
+        .collect())
+}
+
+// ---------------- op kernels (shared with the fixed-point executor where
+// the integer version differs only in arithmetic) ----------------
+
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: (usize, usize), padding: Padding) -> Tensor {
+    let (h, wi, ci) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, _wci, co) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (t, b, l, r) = padding.resolve(h, wi, kh, kw, stride.0, stride.1);
+    let ho = (h + t + b - kh) / stride.0 + 1;
+    let wo = (wi + l + r - kw) / stride.1 + 1;
+    let mut out = Tensor::zeros(&[1, ho, wo, co]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for oc in 0..co {
+                let mut acc = 0f32;
+                for ky in 0..kh {
+                    let iy = (oy * stride.0 + ky) as isize - t as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride.1 + kx) as isize - l as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        for ic in 0..ci {
+                            acc += x.at4(0, iy as usize, ix as usize, ic)
+                                * w.data[((ky * kw + kx) * ci + ic) * co + oc];
+                        }
+                    }
+                }
+                *out.at4_mut(0, oy, ox, oc) = acc;
+            }
+        }
+    }
+    out
+}
+
+pub fn depthwise_conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    stride: (usize, usize),
+    padding: Padding,
+) -> Tensor {
+    let (h, wi, ci) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, _, m) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (t, b, l, r) = padding.resolve(h, wi, kh, kw, stride.0, stride.1);
+    let ho = (h + t + b - kh) / stride.0 + 1;
+    let wo = (wi + l + r - kw) / stride.1 + 1;
+    let mut out = Tensor::zeros(&[1, ho, wo, ci * m]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ic in 0..ci {
+                for im in 0..m {
+                    let mut acc = 0f32;
+                    for ky in 0..kh {
+                        let iy = (oy * stride.0 + ky) as isize - t as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride.1 + kx) as isize - l as isize;
+                            if ix < 0 || ix >= wi as isize {
+                                continue;
+                            }
+                            acc += x.at4(0, iy as usize, ix as usize, ic)
+                                * w.data[((ky * kw + kx) * ci + ic) * m + im];
+                        }
+                    }
+                    *out.at4_mut(0, oy, ox, ic * m + im) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let (n, ci) = (x.shape[0], x.shape[1]);
+    let co = w.shape[1];
+    let mut out = Tensor::zeros(&[n, co]);
+    for i in 0..n {
+        for j in 0..co {
+            let mut acc = 0f32;
+            for k in 0..ci {
+                acc += x.at2(i, k) * w.at2(k, j);
+            }
+            out.data[i * co + j] = acc;
+        }
+    }
+    out
+}
+
+pub fn bias_add(x: &Tensor, b: &Tensor) -> Tensor {
+    per_channel(x, b, |v, c| v + c)
+}
+
+pub fn per_channel(x: &Tensor, c: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let ch = *x.shape.last().unwrap();
+    assert_eq!(c.shape, vec![ch]);
+    let mut out = x.clone();
+    for (i, v) in out.data.iter_mut().enumerate() {
+        *v = f(*v, c.data[i % ch]);
+    }
+    out
+}
+
+pub fn map_unary(x: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    let mut out = x.clone();
+    for v in out.data.iter_mut() {
+        *v = f(*v);
+    }
+    out
+}
+
+pub fn zip_binary(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    let mut out = a.clone();
+    for (v, &x) in out.data.iter_mut().zip(&b.data) {
+        *v = f(*v, x);
+    }
+    out
+}
+
+pub fn max_pool(
+    x: &Tensor,
+    ksize: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) -> Tensor {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (t, b, l, r) = padding.resolve(h, w, ksize.0, ksize.1, stride.0, stride.1);
+    let ho = (h + t + b - ksize.0) / stride.0 + 1;
+    let wo = (w + l + r - ksize.1) / stride.1 + 1;
+    let mut out = Tensor::zeros(&[1, ho, wo, c]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ch in 0..c {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..ksize.0 {
+                    let iy = (oy * stride.0 + ky) as isize - t as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..ksize.1 {
+                        let ix = (ox * stride.1 + kx) as isize - l as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        m = m.max(x.at4(0, iy as usize, ix as usize, ch));
+                    }
+                }
+                // TF MaxPool SAME pads with -inf (padding never wins);
+                // a window fully in padding cannot occur for valid params.
+                *out.at4_mut(0, oy, ox, ch) = m;
+            }
+        }
+    }
+    out
+}
+
+pub fn global_mean(x: &Tensor) -> Tensor {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[1, c]);
+    for ch in 0..c {
+        let mut acc = 0f64;
+        for y in 0..h {
+            for xx in 0..w {
+                acc += x.at4(0, y, xx, ch) as f64;
+            }
+        }
+        out.data[ch] = (acc / (h * w) as f64) as f32;
+    }
+    out
+}
+
+pub fn batch_norm(
+    x: &Tensor,
+    scale: &Tensor,
+    offset: &Tensor,
+    mean: &Tensor,
+    variance: &Tensor,
+    epsilon: f32,
+) -> Tensor {
+    let ch = *x.shape.last().unwrap();
+    let mut out = x.clone();
+    for (i, v) in out.data.iter_mut().enumerate() {
+        let c = i % ch;
+        *v = (*v - mean.data[c]) / (variance.data[c] + epsilon).sqrt() * scale.data[c]
+            + offset.data[c];
+    }
+    out
+}
+
+pub fn pad(x: &Tensor, pads: (usize, usize, usize, usize)) -> Tensor {
+    let (t, b, l, r) = pads;
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[1, h + t + b, w + l + r, c]);
+    for y in 0..h {
+        for xx in 0..w {
+            for ch in 0..c {
+                *out.at4_mut(0, y + t, xx + l, ch) = x.at4(0, y, xx, ch);
+            }
+        }
+    }
+    out
+}
+
+pub fn softmax(x: &Tensor) -> Tensor {
+    let n = x.shape[0];
+    let c = x.shape[1];
+    let mut out = x.clone();
+    for i in 0..n {
+        let row = &mut out.data[i * c..(i + 1) * c];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// argmax over the last dim of a [N, C] tensor — classification decision.
+pub fn argmax(x: &Tensor) -> Vec<usize> {
+    let c = *x.shape.last().unwrap();
+    x.data
+        .chunks_exact(c)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, Cases};
+    use crate::util::Rng;
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 kernel with identity channel map reproduces the input.
+        let mut x = Tensor::zeros(&[1, 3, 3, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let mut w = Tensor::zeros(&[1, 1, 2, 2]);
+        w.data[0] = 1.0; // ci0 -> co0
+        w.data[3] = 1.0; // ci1 -> co1
+        let y = conv2d(&x, &w, (1, 1), Padding::Valid);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv2d_known_answer() {
+        // 2x2 input, 2x2 all-ones kernel, VALID -> sum of all elements.
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[2, 2, 1, 1], vec![1.0; 4]);
+        let y = conv2d(&x, &w, (1, 1), Padding::Valid);
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert_eq!(y.data[0], 10.0);
+    }
+
+    #[test]
+    fn conv2d_same_padding_edges() {
+        // 3x3 ones kernel over 2x2 ones input with SAME: corner windows
+        // see 4 ones.
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0; 4]);
+        let w = Tensor::from_vec(&[3, 3, 1, 1], vec![1.0; 9]);
+        let y = conv2d(&x, &w, (1, 1), Padding::Same);
+        assert_eq!(y.shape, vec![1, 2, 2, 1]);
+        assert_eq!(y.data, vec![4.0; 4]);
+    }
+
+    #[test]
+    fn conv2d_stride() {
+        let x = Tensor::from_vec(
+            &[1, 4, 4, 1],
+            (0..16).map(|i| i as f32).collect(),
+        );
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, (2, 2), Padding::Valid);
+        assert_eq!(y.shape, vec![1, 2, 2, 1]);
+        assert_eq!(y.data, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn depthwise_preserves_channels_independently() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[1, 5, 5, 3], &mut rng, 1.0);
+        let w = Tensor::randn(&[3, 3, 3, 1], &mut rng, 1.0);
+        let y = depthwise_conv2d(&x, &w, (1, 1), Padding::Same);
+        assert_eq!(y.shape, vec![1, 5, 5, 3]);
+        // channel 0 of output == conv of channel 0 alone
+        let x0 = Tensor::from_vec(
+            &[1, 5, 5, 1],
+            (0..25).map(|i| x.data[i * 3]).collect(),
+        );
+        let w0 = Tensor::from_vec(
+            &[3, 3, 1, 1],
+            (0..9).map(|i| w.data[i * 3]).collect(),
+        );
+        let y0 = conv2d(&x0, &w0, (1, 1), Padding::Same);
+        let y_ch0: Vec<f32> = (0..25).map(|i| y.data[i * 3]).collect();
+        assert_close(&y_ch0, &y0.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn matmul_known() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let y = matmul(&x, &w);
+        assert_eq!(y.data, vec![9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x = Tensor::from_vec(
+            &[1, 2, 2, 1],
+            vec![1.0, 5.0, 3.0, 2.0],
+        );
+        let y = max_pool(&x, (2, 2), (2, 2), Padding::Valid);
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn batch_norm_matches_formula() {
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![3.0, -1.0]);
+        let scale = Tensor::from_vec(&[2], vec![2.0, 0.5]);
+        let offset = Tensor::from_vec(&[2], vec![1.0, 0.0]);
+        let mean = Tensor::from_vec(&[2], vec![1.0, -2.0]);
+        let var = Tensor::from_vec(&[2], vec![4.0, 1.0]);
+        let y = batch_norm(&x, &scale, &offset, &mean, &var, 0.0);
+        assert_close(&y.data, &[3.0, 0.5], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 100.0]);
+        let y = softmax(&x);
+        for row in y.data.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert_eq!(argmax(&y), vec![2, 2]);
+    }
+
+    #[test]
+    fn pad_places_values() {
+        let x = Tensor::from_vec(&[1, 1, 1, 1], vec![7.0]);
+        let y = pad(&x, (1, 0, 0, 2));
+        assert_eq!(y.shape, vec![1, 2, 3, 1]);
+        assert_eq!(y.at4(0, 1, 0, 0), 7.0);
+        assert_eq!(y.data.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    /// Property: conv2d is linear in the input.
+    #[test]
+    fn prop_conv_linearity() {
+        Cases::new(24).run(|rng, size| {
+            let c = size.clamp(1, 4);
+            let x1 = Tensor::randn(&[1, 5, 5, c], rng, 1.0);
+            let x2 = Tensor::randn(&[1, 5, 5, c], rng, 1.0);
+            let w = Tensor::randn(&[3, 3, c, 2], rng, 1.0);
+            let sum = zip_binary(&x1, &x2, |a, b| a + b);
+            let y_sum = conv2d(&sum, &w, (1, 1), Padding::Same);
+            let y1 = conv2d(&x1, &w, (1, 1), Padding::Same);
+            let y2 = conv2d(&x2, &w, (1, 1), Padding::Same);
+            let y12 = zip_binary(&y1, &y2, |a, b| a + b);
+            assert_close(&y_sum.data, &y12.data, 1e-4, 1e-4)
+        });
+    }
+
+    /// Property: global mean after relu is bounded by max activation.
+    #[test]
+    fn prop_mean_bounds() {
+        Cases::new(16).run(|rng, size| {
+            let c = size.clamp(1, 8);
+            let x = Tensor::randn(&[1, 4, 4, c], rng, 2.0);
+            let r = map_unary(&x, |v| v.max(0.0));
+            let m = global_mean(&r);
+            let maxv = r.max_abs();
+            if m.data.iter().all(|&v| v >= 0.0 && v <= maxv + 1e-6) {
+                Ok(())
+            } else {
+                Err(format!("mean out of bounds: {:?} max {maxv}", m.data))
+            }
+        });
+    }
+
+    #[test]
+    fn whole_graph_run() {
+        let mut g = crate::graph::Graph::new();
+        let mut rng = Rng::new(0);
+        g.op("input", Op::Placeholder { shape: vec![1, 4, 4, 2] }, &[]);
+        g.constant("w", Tensor::randn(&[3, 3, 2, 4], &mut rng, 0.5));
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w"],
+        );
+        g.op("relu", Op::Relu, &["conv"]);
+        g.op("gap", Op::Mean, &["relu"]);
+        g.outputs = vec!["gap".into()];
+        let mut feeds = BTreeMap::new();
+        feeds.insert("input".to_string(), Tensor::randn(&[1, 4, 4, 2], &mut rng, 1.0));
+        let outs = run_outputs(&g, &feeds).unwrap();
+        assert_eq!(outs[0].shape, vec![1, 4]);
+        assert!(outs[0].data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn missing_feed_is_error() {
+        let mut g = crate::graph::Graph::new();
+        g.op("input", Op::Placeholder { shape: vec![1, 2, 2, 1] }, &[]);
+        g.outputs = vec!["input".into()];
+        assert!(run_outputs(&g, &BTreeMap::new()).is_err());
+    }
+}

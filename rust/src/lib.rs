@@ -1,0 +1,23 @@
+//! HPIPE: Heterogeneous Layer-Pipelined and Sparse-Aware CNN Inference.
+//!
+//! A software reproduction of Hall & Betz (FCCM 2020): the HPIPE network
+//! compiler, the layer-pipelined sparse-aware accelerator architecture
+//! (as a cycle-level simulator standing in for the Stratix 10 device),
+//! all the baselines the paper compares against, and a serving runtime
+//! that executes the AOT-compiled JAX/Pallas model through PJRT.
+//!
+//! See DESIGN.md for the module map and EXPERIMENTS.md for measured
+//! reproductions of every table and figure.
+
+pub mod arch;
+pub mod baselines;
+pub mod compile;
+pub mod coordinator;
+pub mod graph;
+pub mod interp;
+pub mod nets;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod transform;
+pub mod util;

@@ -1,0 +1,194 @@
+//! `hpipe` — the HPIPE network compiler / simulator / server CLI.
+//!
+//! Subcommands:
+//!   compile   --net <name> [--sparsity F] [--dsp-target N] [--device D]
+//!             [--out DIR] [--full-scale] [--per-layer]    compile a plan
+//!   simulate  --net <name> [...same...] [--images N]   cycle simulation
+//!   serve     --model DIR [--requests N] [--batch N]   PJRT serving demo
+//!   accuracy  --net <name> [--bits N]          fixed-point vs f32 study
+//!
+//! `hpipe compile --net resnet50 --sparsity 0.85 --dsp-target 5000
+//!  --full-scale` reproduces the paper's main configuration.
+
+use anyhow::{bail, Context, Result};
+use hpipe::arch::device_by_name;
+use hpipe::compile::{codegen, compile, CompileOptions};
+use hpipe::graph::Tensor;
+use hpipe::interp::fixed::{run_fixed, PrecisionConfig};
+use hpipe::nets::{build_named, NetConfig};
+use hpipe::sim::simulate;
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::cli::Args;
+use hpipe::util::timer::Table;
+use hpipe::util::Rng;
+use std::path::PathBuf;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("compile") => cmd_compile(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("accuracy") => cmd_accuracy(&args),
+        _ => {
+            eprintln!(
+                "usage: hpipe <compile|simulate|serve|accuracy> [--flags]\n\
+                 see `rust/src/main.rs` docs for the flag list"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_plan(args: &Args) -> Result<(hpipe::graph::Graph, hpipe::compile::AcceleratorPlan)> {
+    let net = args.str("net", "resnet50");
+    let cfg = if args.bool("full-scale") {
+        NetConfig::imagenet()
+    } else {
+        NetConfig::test_scale()
+    };
+    let mut g = build_named(&net, cfg)
+        .with_context(|| format!("unknown network '{net}'"))?;
+    let sparsity = args.f64("sparsity", if net == "resnet50" { 0.85 } else { 0.0 });
+    if sparsity > 0.0 {
+        let report = prune_graph(&mut g, sparsity);
+        println!(
+            "pruned to {:.1}% sparsity across {} layers",
+            report.overall_sparsity() * 100.0,
+            report.layers.len()
+        );
+    }
+    let (g, log) = optimize(&g);
+    println!(
+        "transforms: {} BNs folded, {} pads merged",
+        log.batch_norms_split, log.pads_merged
+    );
+    let device = device_by_name(&args.str("device", "s10_2800"))
+        .context("unknown device")?
+        .clone();
+    let dsp_target = args.usize("dsp-target", 5000);
+    let bits = args.usize("bits", 16) as u32;
+    let opts = CompileOptions::new(device, dsp_target).with_precision(bits);
+    let plan = compile(&g, &net, &opts)?;
+    Ok((g, plan))
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let (g, plan) = build_plan(args)?;
+    let elapsed = t0.elapsed();
+    let (alm_u, m20k_u, dsp_u) = plan.totals.utilization(&plan.device);
+    println!("\n=== {} on {} ===", plan.net_name, plan.device.name);
+    println!(
+        "stages: {}   compile time: {elapsed:?} (paper: \"a few seconds\")",
+        plan.stages.len()
+    );
+    println!(
+        "ALMs {} ({:.0}%)  mem-ALMs {}  regs {}  M20Ks {} ({:.0}%)  DSPs {} ({:.0}%)",
+        plan.totals.alms,
+        alm_u * 100.0,
+        plan.totals.mem_alms,
+        plan.totals.registers,
+        plan.totals.m20ks,
+        m20k_u * 100.0,
+        plan.totals.dsps,
+        dsp_u * 100.0
+    );
+    println!(
+        "fmax {:.0} MHz  interval {} cycles  throughput {:.0} img/s  latency ≈ {:.2} ms",
+        plan.fmax_mhz,
+        plan.interval_cycles(),
+        plan.throughput_img_s(),
+        plan.latency_estimate_ms()
+    );
+    println!("bottleneck stage: {}", plan.stages[plan.bottleneck].name);
+    if let Some(out) = args.opt("out") {
+        let dir = PathBuf::from(out);
+        let report = codegen::generate(&plan, &g, &dir)?;
+        println!(
+            "generated {} modules, {} mem-init files ({} weight entries) in {}",
+            report.modules,
+            report.mem_init_files,
+            report.weight_entries,
+            dir.display()
+        );
+    }
+    if args.bool("per-layer") {
+        let mut tab = Table::new(&["stage", "op", "splits", "mults", "cycles", "dsps", "m20ks"]);
+        for s in &plan.stages {
+            tab.row(&[
+                s.name.clone(),
+                s.op.type_name().to_string(),
+                s.splits.to_string(),
+                s.mults.to_string(),
+                s.cycles.to_string(),
+                s.resources.dsps.to_string(),
+                s.resources.m20ks.to_string(),
+            ]);
+        }
+        tab.print();
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (_, plan) = build_plan(args)?;
+    let images = args.usize("images", 16);
+    let t0 = std::time::Instant::now();
+    let r = simulate(&plan, images).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "simulated {images} images ({} total cycles) in {:?}",
+        r.total_cycles,
+        t0.elapsed()
+    );
+    println!(
+        "latency (image 0): {} cycles = {:.3} ms @ {:.0} MHz",
+        r.first_image_latency(),
+        r.latency_ms(plan.fmax_mhz),
+        plan.fmax_mhz
+    );
+    println!(
+        "steady-state interval: {} cycles -> {:.0} img/s (analytic bottleneck: {} cycles)",
+        r.steady_interval(),
+        r.throughput_img_s(plan.fmax_mhz),
+        plan.interval_cycles()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str("model", "artifacts"));
+    let requests = args.usize("requests", 64);
+    let batch = args.usize("batch", 8);
+    let mut report = hpipe::coordinator::serve_demo(&dir, requests, batch)?;
+    report.print();
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let net = args.str("net", "tinycnn");
+    let bits = args.usize("bits", 16) as u32;
+    let trials = args.usize("trials", 20);
+    let g = build_named(&net, NetConfig::test_scale()).context("unknown network")?;
+    let mut rng = Rng::new(0xACC);
+    let mut agree = 0usize;
+    let mut max_err = 0f32;
+    for _ in 0..trials {
+        let mut feeds = std::collections::BTreeMap::new();
+        let in_shape = match &g.get("input").unwrap().op {
+            hpipe::graph::Op::Placeholder { shape } => shape.clone(),
+            _ => bail!("no input"),
+        };
+        feeds.insert("input".to_string(), Tensor::randn(&in_shape, &mut rng, 1.0));
+        let r = run_fixed(&g, &feeds, &PrecisionConfig::uniform(bits, bits / 2))?;
+        if r.argmax_match {
+            agree += 1;
+        }
+        max_err = max_err.max(r.max_abs_error);
+    }
+    println!(
+        "{net} @ {bits}-bit fixed point: argmax agreement {agree}/{trials}, max |err| {max_err:.5}"
+    );
+    Ok(())
+}

@@ -1,0 +1,218 @@
+//! MobileNet-V1 and MobileNet-V2 graph builders.
+//!
+//! These are the paper's *dense* evaluation targets (Table IV): no
+//! pruning, but heavy use of `DepthwiseConv2d` + pointwise `Conv2D` —
+//! the layer mix that exercises HPIPE's depthwise module and (for V2)
+//! exhausts the input-channel unroll dimension, reproducing the paper's
+//! "we ran out of input channels to unroll" 51%-DSP result.
+
+use super::{NetBuilder, NetConfig};
+use crate::graph::{Graph, Op, Padding};
+
+/// MobileNet-V1 separable-block schedule: (stride, output channels).
+const V1_BLOCKS: [(usize, usize); 13] = [
+    (1, 64),
+    (2, 128),
+    (1, 128),
+    (2, 256),
+    (1, 256),
+    (2, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (2, 1024),
+    (1, 1024),
+];
+
+/// Build MobileNet-V1 (~4.2M params at full scale).
+pub fn mobilenet_v1(cfg: NetConfig) -> Graph {
+    let mut b = NetBuilder::new(cfg.seed ^ 0xA1);
+    let x = b.input("input", cfg.input_size, cfg.input_size, 3);
+    let mut c = cfg.ch(32);
+    let conv0 = b.conv("Conv2d_0", &x, 3, 3, c, 2, Padding::Same);
+    let bn0 = b.bn("Conv2d_0/BatchNorm", &conv0, c);
+    let mut prev = b.relu6("Conv2d_0/Relu6", &bn0);
+
+    for (i, &(stride, cout)) in V1_BLOCKS.iter().enumerate() {
+        let n = i + 1;
+        let co = cfg.ch(cout);
+        let dw = b.depthwise(
+            &format!("Conv2d_{n}_depthwise"),
+            &prev,
+            3,
+            c,
+            stride,
+            Padding::Same,
+        );
+        let dwbn = b.bn(&format!("Conv2d_{n}_depthwise/BatchNorm"), &dw, c);
+        let dwr = b.relu6(&format!("Conv2d_{n}_depthwise/Relu6"), &dwbn);
+        let pw = b.conv(
+            &format!("Conv2d_{n}_pointwise"),
+            &dwr,
+            1,
+            c,
+            co,
+            1,
+            Padding::Same,
+        );
+        let pwbn = b.bn(&format!("Conv2d_{n}_pointwise/BatchNorm"), &pw, co);
+        prev = b.relu6(&format!("Conv2d_{n}_pointwise/Relu6"), &pwbn);
+        c = co;
+    }
+
+    b.head(&prev, c, cfg.classes);
+    b.g
+}
+
+/// MobileNet-V2 inverted-residual schedule:
+/// (expansion t, output channels c, repeats n, first stride s).
+const V2_BLOCKS: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+/// Build MobileNet-V2 (~3.5M params at full scale).
+pub fn mobilenet_v2(cfg: NetConfig) -> Graph {
+    let mut b = NetBuilder::new(cfg.seed ^ 0xA2);
+    let x = b.input("input", cfg.input_size, cfg.input_size, 3);
+    let stem_c = cfg.ch(32);
+    let conv0 = b.conv("Conv", &x, 3, 3, stem_c, 2, Padding::Same);
+    let bn0 = b.bn("Conv/BatchNorm", &conv0, stem_c);
+    let mut prev = b.relu6("Conv/Relu6", &bn0);
+    let mut c = stem_c;
+
+    let mut block_id = 0usize;
+    for &(t, cout, n, s) in V2_BLOCKS.iter() {
+        let co = cfg.ch(cout);
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            let prefix = if block_id == 0 {
+                "expanded_conv".to_string()
+            } else {
+                format!("expanded_conv_{block_id}")
+            };
+            let expanded = c * t;
+
+            // Expansion 1x1 (skipped when t == 1, as in the real model).
+            let mut h = prev.clone();
+            let mut hc = c;
+            if t != 1 {
+                let e = b.conv(&format!("{prefix}/expand"), &h, 1, c, expanded, 1, Padding::Same);
+                let ebn = b.bn(&format!("{prefix}/expand/BatchNorm"), &e, expanded);
+                h = b.relu6(&format!("{prefix}/expand/Relu6"), &ebn);
+                hc = expanded;
+            }
+
+            let dw = b.depthwise(
+                &format!("{prefix}/depthwise"),
+                &h,
+                3,
+                hc,
+                stride,
+                Padding::Same,
+            );
+            let dwbn = b.bn(&format!("{prefix}/depthwise/BatchNorm"), &dw, hc);
+            let dwr = b.relu6(&format!("{prefix}/depthwise/Relu6"), &dwbn);
+
+            // Linear projection (no activation).
+            let p = b.conv(&format!("{prefix}/project"), &dwr, 1, hc, co, 1, Padding::Same);
+            let pbn = b.bn(&format!("{prefix}/project/BatchNorm"), &p, co);
+
+            prev = if stride == 1 && c == co {
+                b.g.op(&format!("{prefix}/add"), Op::Add, &[&prev, &pbn])
+            } else {
+                pbn
+            };
+            c = co;
+            block_id += 1;
+        }
+    }
+
+    // Final 1x1 to 1280 channels.
+    let last_c = cfg.ch(1280);
+    let convl = b.conv("Conv_1", &prev, 1, c, last_c, 1, Padding::Same);
+    let bnl = b.bn("Conv_1/BatchNorm", &convl, last_c);
+    let rl = b.relu6("Conv_1/Relu6", &bnl);
+    b.head(&rl, last_c, cfg.classes);
+    b.g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_structure() {
+        let g = mobilenet_v1(NetConfig::imagenet());
+        g.validate().unwrap();
+        let dw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::DepthwiseConv2d { .. }))
+            .count();
+        assert_eq!(dw, 13);
+        let params = g.param_count();
+        assert!((3_800_000..4_800_000).contains(&params), "params={params}");
+        // ~570 MMACs
+        let macs = g.macs().unwrap();
+        assert!(
+            (500_000_000..650_000_000u64).contains(&macs),
+            "macs={macs}"
+        );
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["Conv2d_13_pointwise/Relu6"], vec![1, 7, 7, 1024]);
+    }
+
+    #[test]
+    fn v2_structure() {
+        let g = mobilenet_v2(NetConfig::imagenet());
+        g.validate().unwrap();
+        let dw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::DepthwiseConv2d { .. }))
+            .count();
+        assert_eq!(dw, 17); // 1+2+3+4+3+3+1 inverted residual blocks
+        let adds = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Add))
+            .count();
+        assert_eq!(adds, 10); // repeats with stride 1 and matching dims
+        let params = g.param_count();
+        assert!((3_000_000..4_000_000).contains(&params), "params={params}");
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["Conv_1/Relu6"], vec![1, 7, 7, 1280]);
+    }
+
+    #[test]
+    fn v2_test_scale_interprets() {
+        use std::collections::BTreeMap;
+        let cfg = NetConfig::test_scale();
+        let g = mobilenet_v2(cfg);
+        let mut feeds = BTreeMap::new();
+        let mut rng = crate::util::Rng::new(2);
+        feeds.insert(
+            "input".to_string(),
+            crate::graph::Tensor::randn(&[1, 32, 32, 3], &mut rng, 1.0),
+        );
+        let outs = crate::interp::run_outputs(&g, &feeds).unwrap();
+        assert_eq!(outs[0].shape, vec![1, 10]);
+    }
+
+    #[test]
+    fn v1_channel_progression() {
+        let g = mobilenet_v1(NetConfig::imagenet());
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["Conv2d_0"], vec![1, 112, 112, 32]);
+        assert_eq!(s["Conv2d_1_pointwise"], vec![1, 112, 112, 64]);
+        assert_eq!(s["Conv2d_6_depthwise"], vec![1, 14, 14, 256]);
+    }
+}

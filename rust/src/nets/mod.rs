@@ -1,0 +1,242 @@
+//! Builders for the networks the paper evaluates.
+//!
+//! §V: "the official TensorFlow ResNet-50 V1 (r1.11), MobileNet-V1, and
+//! MobileNet-V2 models". We reconstruct those graphs node-for-node
+//! (including the `FusedBatchNorm` and `Pad` nodes the compiler must fold
+//! away), with synthetically-initialized weights (He-normal — see
+//! DESIGN.md §Hardware-Adaptation for why this preserves the paper's
+//! compile/balance/simulate behaviour). Every builder takes a [`NetConfig`]
+//! so tests can build reduced-resolution / reduced-width variants that the
+//! reference interpreter can execute quickly.
+
+pub mod mobilenet;
+pub mod resnet;
+pub mod tiny;
+
+use crate::graph::{Graph, Op, Padding, Tensor};
+use crate::util::Rng;
+
+pub use mobilenet::{mobilenet_v1, mobilenet_v2};
+pub use resnet::resnet50;
+pub use tiny::tiny_cnn;
+
+/// Scaling knobs shared by all builders.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Input spatial resolution (paper: 224).
+    pub input_size: usize,
+    /// Channel width multiplier (paper: 1.0).
+    pub width: f64,
+    /// Number of classes (paper: 1000 ImageNet classes).
+    pub classes: usize,
+    /// RNG seed for weight init.
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            input_size: 224,
+            width: 1.0,
+            classes: 1000,
+            seed: 0x411,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Full-size ImageNet configuration (the paper's).
+    pub fn imagenet() -> NetConfig {
+        NetConfig::default()
+    }
+
+    /// Small configuration usable by the f32 interpreter in tests.
+    pub fn test_scale() -> NetConfig {
+        NetConfig {
+            input_size: 32,
+            width: 0.25,
+            classes: 10,
+            seed: 7,
+        }
+    }
+
+    /// Apply the width multiplier, keeping channel counts divisible by 8
+    /// (MobileNet convention) and at least 8.
+    pub fn ch(&self, base: usize) -> usize {
+        let scaled = (base as f64 * self.width).round() as usize;
+        (scaled.div_ceil(8) * 8).max(8)
+    }
+}
+
+/// Helper that accumulates a graph plus deterministic weight init.
+pub struct NetBuilder {
+    pub g: Graph,
+    pub rng: Rng,
+}
+
+impl NetBuilder {
+    pub fn new(seed: u64) -> NetBuilder {
+        NetBuilder {
+            g: Graph::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn input(&mut self, name: &str, h: usize, w: usize, c: usize) -> String {
+        self.g.op(name, Op::Placeholder { shape: vec![1, h, w, c] }, &[])
+    }
+
+    /// Conv2D with He-initialized weights.
+    pub fn conv(
+        &mut self,
+        name: &str,
+        input: &str,
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        padding: Padding,
+    ) -> String {
+        let fan_in = k * k * cin;
+        let std = (2.0 / fan_in as f64).sqrt() as f32;
+        let w = Tensor::randn(&[k, k, cin, cout], &mut self.rng, std);
+        let wname = format!("{name}/weights");
+        self.g.constant(&wname, w);
+        self.g.op(
+            name,
+            Op::Conv2D { stride: (stride, stride), padding },
+            &[input, &wname],
+        )
+    }
+
+    pub fn depthwise(
+        &mut self,
+        name: &str,
+        input: &str,
+        k: usize,
+        cin: usize,
+        stride: usize,
+        padding: Padding,
+    ) -> String {
+        let std = (2.0 / (k * k) as f64).sqrt() as f32;
+        let w = Tensor::randn(&[k, k, cin, 1], &mut self.rng, std);
+        let wname = format!("{name}/depthwise_weights");
+        self.g.constant(&wname, w);
+        self.g.op(
+            name,
+            Op::DepthwiseConv2d { stride: (stride, stride), padding },
+            &[input, &wname],
+        )
+    }
+
+    /// FusedBatchNorm with realistic inference-time statistics. Scale is
+    /// kept strictly positive so the compiler's move-Mul-past-ReLU
+    /// transformation is valid (§IV).
+    pub fn bn(&mut self, name: &str, input: &str, c: usize) -> String {
+        let mk = |rng: &mut Rng, f: &mut dyn FnMut(&mut Rng) -> f32| {
+            Tensor {
+                shape: vec![c],
+                data: (0..c).map(|_| f(rng)).collect(),
+            }
+        };
+        let scale = mk(&mut self.rng, &mut |r| 0.05 + r.normal_f32(1.0, 0.1).abs());
+        let offset = mk(&mut self.rng, &mut |r| r.normal_f32(0.0, 0.1));
+        let mean = mk(&mut self.rng, &mut |r| r.normal_f32(0.0, 0.1));
+        let var = mk(&mut self.rng, &mut |r| 0.5 + r.normal_f32(1.0, 0.1).abs());
+        let sn = self.g.constant(&format!("{name}/gamma"), scale);
+        let on = self.g.constant(&format!("{name}/beta"), offset);
+        let mn = self.g.constant(&format!("{name}/moving_mean"), mean);
+        let vn = self.g.constant(&format!("{name}/moving_variance"), var);
+        self.g.op(
+            name,
+            Op::FusedBatchNorm { epsilon: 1.001e-5 },
+            &[input, &sn, &on, &mn, &vn],
+        )
+    }
+
+    pub fn bias(&mut self, name: &str, input: &str, c: usize) -> String {
+        let b = Tensor::randn(&[c], &mut self.rng, 0.05);
+        let bname = format!("{name}/bias");
+        self.g.constant(&bname, b);
+        self.g.op(name, Op::BiasAdd, &[input, &bname])
+    }
+
+    pub fn relu(&mut self, name: &str, input: &str) -> String {
+        self.g.op(name, Op::Relu, &[input])
+    }
+
+    pub fn relu6(&mut self, name: &str, input: &str) -> String {
+        self.g.op(name, Op::Relu6, &[input])
+    }
+
+    /// Classifier head: global-average-pool -> FC -> bias -> softmax.
+    pub fn head(&mut self, input: &str, cin: usize, classes: usize) -> String {
+        let gap = self.g.op("global_pool", Op::Mean, &[input]);
+        let std = (2.0 / cin as f64).sqrt() as f32;
+        let w = Tensor::randn(&[cin, classes], &mut self.rng, std);
+        self.g.constant("logits/weights", w);
+        let fc = self.g.op("logits", Op::MatMul, &[&gap, "logits/weights"]);
+        let fcb = self.bias("logits/biasadd", &fc, classes);
+        let out = self.g.op("predictions", Op::Softmax, &[&fcb]);
+        self.g.outputs = vec![out.clone()];
+        out
+    }
+}
+
+/// Names of all the networks the CLI / benches can build, with builders.
+pub fn build_named(name: &str, cfg: NetConfig) -> Option<Graph> {
+    match name {
+        "resnet50" => Some(resnet50(cfg)),
+        "mobilenet_v1" => Some(mobilenet_v1(cfg)),
+        "mobilenet_v2" => Some(mobilenet_v2(cfg)),
+        "tinycnn" => Some(tiny_cnn(cfg)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_rounding() {
+        let cfg = NetConfig { width: 0.25, ..NetConfig::default() };
+        assert_eq!(cfg.ch(64), 16);
+        assert_eq!(cfg.ch(24), 8);
+        assert_eq!(cfg.ch(4), 8); // floor of 8
+        let full = NetConfig::default();
+        assert_eq!(full.ch(64), 64);
+    }
+
+    #[test]
+    fn builder_conv_bn_relu_chain_validates() {
+        let mut b = NetBuilder::new(1);
+        let x = b.input("input", 16, 16, 3);
+        let c = b.conv("conv1", &x, 3, 3, 8, 1, Padding::Same);
+        let n = b.bn("conv1/bn", &c, 8);
+        let r = b.relu("conv1/relu", &n);
+        b.g.outputs = vec![r];
+        b.g.validate().unwrap();
+        let shapes = b.g.infer_shapes().unwrap();
+        assert_eq!(shapes["conv1/relu"], vec![1, 16, 16, 8]);
+    }
+
+    #[test]
+    fn bn_scales_strictly_positive() {
+        let mut b = NetBuilder::new(2);
+        let x = b.input("input", 4, 4, 16);
+        b.bn("bn", &x, 16);
+        let gamma = b.g.get("bn/gamma").unwrap().value.as_ref().unwrap();
+        assert!(gamma.data.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn build_named_dispatch() {
+        let cfg = NetConfig::test_scale();
+        for name in ["resnet50", "mobilenet_v1", "mobilenet_v2", "tinycnn"] {
+            let g = build_named(name, cfg).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(build_named("vgg", cfg).is_none());
+    }
+}

@@ -1,0 +1,195 @@
+//! ResNet-50 V1 graph builder (official TensorFlow r1.11 structure).
+//!
+//! The graph deliberately includes the nodes the HPIPE compiler has to
+//! clean up: a standalone `Pad` before the 7×7 stem conv (the official
+//! model's "fixed padding"), `FusedBatchNorm` after every convolution,
+//! and `MaxPool` between the stem BN and the first bottleneck — the exact
+//! op sandwich Fig 5 of the paper shows. Layer names follow the
+//! caffe-style scheme used in the paper's Fig 3 (res2a_branch2a, …).
+
+use super::{NetBuilder, NetConfig};
+use crate::graph::{Graph, Padding};
+
+/// Stage specification: (blocks, base output channels of the 1x1s).
+const STAGES: [(usize, usize); 4] = [(3, 64), (4, 128), (6, 256), (3, 512)];
+const EXPANSION: usize = 4;
+
+/// Build ResNet-50 V1. ~25.5M parameters at full scale.
+pub fn resnet50(cfg: NetConfig) -> Graph {
+    let mut b = NetBuilder::new(cfg.seed);
+    let stem_c = cfg.ch(64);
+
+    let x = b.input("input", cfg.input_size, cfg.input_size, 3);
+    // Official model: fixed pad 3 then 7x7/2 VALID (not SAME) — gives the
+    // compiler a Pad node to merge (§IV "merge padding operations").
+    let pad = b.g.op(
+        "conv1_pad",
+        crate::graph::Op::Pad { pads: (3, 3, 3, 3) },
+        &[&x],
+    );
+    let c1 = b.conv("conv1", &pad, 7, 3, stem_c, 2, Padding::Valid);
+    let bn1 = b.bn("bn_conv1", &c1, stem_c);
+    let r1 = b.relu("conv1_relu", &bn1);
+    let pool1 = b.g.op(
+        "pool1",
+        crate::graph::Op::MaxPool {
+            ksize: (3, 3),
+            stride: (2, 2),
+            padding: Padding::Same,
+        },
+        &[&r1],
+    );
+
+    let mut prev = pool1;
+    let mut prev_c = stem_c;
+    for (stage_idx, &(blocks, base)) in STAGES.iter().enumerate() {
+        let stage = stage_idx + 2; // res2..res5
+        let mid_c = cfg.ch(base);
+        let out_c = cfg.ch(base * EXPANSION);
+        for block in 0..blocks {
+            let tag = (b'a' + block as u8) as char;
+            let prefix = format!("res{stage}{tag}");
+            let stride = if stage > 2 && block == 0 { 2 } else { 1 };
+
+            // Projection shortcut on the first block of each stage.
+            let shortcut = if block == 0 {
+                let sc = b.conv(
+                    &format!("{prefix}_branch1"),
+                    &prev,
+                    1,
+                    prev_c,
+                    out_c,
+                    stride,
+                    Padding::Same,
+                );
+                b.bn(&format!("bn{stage}{tag}_branch1"), &sc, out_c)
+            } else {
+                prev.clone()
+            };
+
+            let c_a = b.conv(
+                &format!("{prefix}_branch2a"),
+                &prev,
+                1,
+                prev_c,
+                mid_c,
+                stride,
+                Padding::Same,
+            );
+            let bn_a = b.bn(&format!("bn{stage}{tag}_branch2a"), &c_a, mid_c);
+            let r_a = b.relu(&format!("{prefix}_branch2a_relu"), &bn_a);
+
+            let c_b = b.conv(
+                &format!("{prefix}_branch2b"),
+                &r_a,
+                3,
+                mid_c,
+                mid_c,
+                1,
+                Padding::Same,
+            );
+            let bn_b = b.bn(&format!("bn{stage}{tag}_branch2b"), &c_b, mid_c);
+            let r_b = b.relu(&format!("{prefix}_branch2b_relu"), &bn_b);
+
+            let c_c = b.conv(
+                &format!("{prefix}_branch2c"),
+                &r_b,
+                1,
+                mid_c,
+                out_c,
+                1,
+                Padding::Same,
+            );
+            let bn_c = b.bn(&format!("bn{stage}{tag}_branch2c"), &c_c, out_c);
+
+            let add = b.g.op(
+                &format!("{prefix}"),
+                crate::graph::Op::Add,
+                &[&shortcut, &bn_c],
+            );
+            prev = b.relu(&format!("{prefix}_relu"), &add);
+            prev_c = out_c;
+        }
+    }
+
+    b.head(&prev, prev_c, cfg.classes);
+    b.g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+
+    #[test]
+    fn full_scale_structure() {
+        let g = resnet50(NetConfig::imagenet());
+        g.validate().unwrap();
+        let convs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv2D { .. }))
+            .count();
+        // 1 stem + 16 blocks × 3 + 4 projection shortcuts = 53 convs
+        assert_eq!(convs, 53);
+        let bns = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::FusedBatchNorm { .. }))
+            .count();
+        assert_eq!(bns, 53);
+        // ~25.5M parameters (conv weights + BN params + FC)
+        let params = g.param_count();
+        assert!(
+            (24_000_000..28_000_000).contains(&params),
+            "params={params}"
+        );
+        // ~3.8 GMACs at 224x224 (paper/literature figure ~3.86e9 +
+        // shortcut projections)
+        let macs = g.macs().unwrap();
+        assert!(
+            (3_500_000_000..4_300_000_000u64).contains(&macs),
+            "macs={macs}"
+        );
+    }
+
+    #[test]
+    fn spatial_shapes_match_reference() {
+        let g = resnet50(NetConfig::imagenet());
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["conv1"], vec![1, 112, 112, 64]);
+        assert_eq!(s["pool1"], vec![1, 56, 56, 64]);
+        assert_eq!(s["res2c_relu"], vec![1, 56, 56, 256]);
+        assert_eq!(s["res3d_relu"], vec![1, 28, 28, 512]);
+        assert_eq!(s["res4f_relu"], vec![1, 14, 14, 1024]);
+        assert_eq!(s["res5c_relu"], vec![1, 7, 7, 2048]);
+        assert_eq!(s["predictions"], vec![1, 1000]);
+    }
+
+    #[test]
+    fn test_scale_runs_in_interpreter() {
+        use std::collections::BTreeMap;
+        let cfg = NetConfig::test_scale();
+        let g = resnet50(cfg);
+        g.validate().unwrap();
+        let mut feeds = BTreeMap::new();
+        let mut rng = crate::util::Rng::new(1);
+        feeds.insert(
+            "input".to_string(),
+            crate::graph::Tensor::randn(&[1, 32, 32, 3], &mut rng, 1.0),
+        );
+        let outs = crate::interp::run_outputs(&g, &feeds).unwrap();
+        assert_eq!(outs[0].shape, vec![1, 10]);
+        let s: f32 = outs[0].data.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "softmax sums to {s}");
+    }
+
+    #[test]
+    fn has_pad_node_for_compiler_to_merge() {
+        let g = resnet50(NetConfig::test_scale());
+        assert!(matches!(
+            g.get("conv1_pad").unwrap().op,
+            Op::Pad { pads: (3, 3, 3, 3) }
+        ));
+    }
+}

@@ -1,0 +1,97 @@
+//! TinyCNN — the end-to-end validation model.
+//!
+//! A small CNN classifier used to prove the whole stack composes: the
+//! same topology is built in Python (`python/compile/model.py`), trained
+//! for a few hundred steps on synthetic data, AOT-lowered to HLO, and
+//! served by the Rust coordinator through PJRT. The Rust builder below is
+//! structurally identical (a test in `rust/tests/` cross-checks against
+//! the Python-exported graphdef when artifacts are present), so the
+//! compiler/simulator pipeline can also run on it.
+
+use super::{NetBuilder, NetConfig};
+use crate::graph::{Graph, Op, Padding};
+
+/// Input resolution of TinyCNN (kept small so interpret-mode Pallas
+/// lowering and the naive interpreter are both fast).
+pub const TINY_INPUT: usize = 16;
+/// Channel plan: stem and two stages.
+pub const TINY_CHANNELS: [usize; 3] = [16, 32, 64];
+pub const TINY_CLASSES: usize = 10;
+
+/// Build TinyCNN. `cfg.classes`/`cfg.seed` are honored; resolution and
+/// widths are fixed so Rust and Python always agree structurally.
+pub fn tiny_cnn(cfg: NetConfig) -> Graph {
+    let mut b = NetBuilder::new(cfg.seed ^ 0x717);
+    let x = b.input("input", TINY_INPUT, TINY_INPUT, 3);
+
+    let mut prev = x;
+    let mut cin = 3;
+    for (i, &cout) in TINY_CHANNELS.iter().enumerate() {
+        let c = b.conv(
+            &format!("conv{i}"),
+            &prev,
+            3,
+            cin,
+            cout,
+            1,
+            Padding::Same,
+        );
+        let bi = b.bias(&format!("conv{i}/biasadd"), &c, cout);
+        let r = b.relu(&format!("conv{i}/relu"), &bi);
+        prev = b.g.op(
+            &format!("pool{i}"),
+            Op::MaxPool {
+                ksize: (2, 2),
+                stride: (2, 2),
+                padding: Padding::Valid,
+            },
+            &[&r],
+        );
+        cin = cout;
+    }
+
+    b.head(&prev, cin, TINY_CLASSES);
+    b.g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn structure_and_shapes() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        g.validate().unwrap();
+        let s = g.infer_shapes().unwrap();
+        assert_eq!(s["pool0"], vec![1, 8, 8, 16]);
+        assert_eq!(s["pool1"], vec![1, 4, 4, 32]);
+        assert_eq!(s["pool2"], vec![1, 2, 2, 64]);
+        assert_eq!(s["predictions"], vec![1, TINY_CLASSES]);
+        // small enough to train/serve: well under 100k params
+        assert!(g.param_count() < 100_000, "params={}", g.param_count());
+    }
+
+    #[test]
+    fn runs_end_to_end_in_interpreter() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let mut rng = crate::util::Rng::new(4);
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            crate::graph::Tensor::randn(&[1, TINY_INPUT, TINY_INPUT, 3], &mut rng, 1.0),
+        );
+        let outs = crate::interp::run_outputs(&g, &feeds).unwrap();
+        let s: f32 = outs[0].data.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = tiny_cnn(NetConfig::test_scale());
+        let b = tiny_cnn(NetConfig::test_scale());
+        let wa = a.get("conv0/weights").unwrap().value.as_ref().unwrap();
+        let wb = b.get("conv0/weights").unwrap().value.as_ref().unwrap();
+        assert_eq!(wa.data, wb.data);
+    }
+}

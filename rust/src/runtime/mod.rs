@@ -1,0 +1,155 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The request-path half of the three-layer architecture: Python/JAX
+//! lowered the Pallas-kernel model to HLO text once (`make artifacts`);
+//! this module compiles it on the PJRT CPU client at startup and executes
+//! it for every inference — no Python anywhere near the hot path.
+//! Pattern follows /opt/xla-example/load_hlo.
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus its I/O metadata.
+pub struct LoadedModel {
+    pub name: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Run one batch. `input` is row-major f32 of `input_shape` (with
+    /// the leading dim = batch). Returns the first output tensor's data.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let expect: usize = self.input_shape.iter().product();
+        if input.len() != expect {
+            bail!(
+                "input length {} != shape {:?} ({} elements)",
+                input.len(),
+                self.input_shape,
+                expect
+            );
+        }
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The artifact registry: owns the PJRT client and every loaded model.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    models: BTreeMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            models: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file into a named executable.
+    pub fn load_hlo(
+        &mut self,
+        name: &str,
+        path: &Path,
+        batch: usize,
+        input_shape: Vec<usize>,
+    ) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.models.insert(
+            name.to_string(),
+            LoadedModel {
+                name: name.to_string(),
+                batch,
+                input_shape,
+                exe,
+            },
+        );
+        Ok(())
+    }
+
+    /// Load everything listed in `artifacts/manifest.json` (written by
+    /// python/compile/aot.py).
+    pub fn load_manifest(&mut self) -> Result<Vec<String>> {
+        let manifest_path = self.artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let base_shape = root
+            .get("input_shape")
+            .usize_vec()
+            .context("manifest input_shape")?;
+        let mut loaded = Vec::new();
+        if let Some(models) = root.get("models").as_obj() {
+            for (batch_str, rel) in models {
+                let batch: usize = batch_str.parse().context("batch key")?;
+                let mut shape = base_shape.clone();
+                shape[0] = batch;
+                let name = format!("tinycnn_b{batch}");
+                let path = self.artifacts_dir.join(rel.as_str().context("model path")?);
+                self.load_hlo(&name, &path, batch, shape)?;
+                loaded.push(name);
+            }
+        }
+        if let Some(kernels) = root.get("kernels").as_obj() {
+            for (kname, spec) in kernels {
+                let path = self
+                    .artifacts_dir
+                    .join(spec.get("path").as_str().context("kernel path")?);
+                let shape = spec
+                    .get("input_shape")
+                    .usize_vec()
+                    .context("kernel input_shape")?;
+                self.load_hlo(kname, &path, 1, shape)?;
+                loaded.push(kname.clone());
+            }
+        }
+        Ok(loaded)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&LoadedModel> {
+        self.models.get(name)
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Pick the loaded tinycnn variant with the largest batch ≤ n.
+    pub fn best_batch_model(&self, n: usize) -> Option<&LoadedModel> {
+        self.models
+            .values()
+            .filter(|m| m.name.starts_with("tinycnn_b") && m.batch <= n)
+            .max_by_key(|m| m.batch)
+    }
+}
+
+// Integration tests live in rust/tests/e2e.rs (they need artifacts/).

@@ -1,0 +1,19 @@
+//! Weight pruning and HPIPE's compressed weight representation.
+//!
+//! §II-B / §V-B of the paper: weights are magnitude-pruned (85% for the
+//! ResNet-50 experiments, "the same sparsity in each layer"), then stored
+//! as a compressed stream per output channel: *runlengths* that encode
+//! the (y, z) position of each nonzero as an offset from the previous
+//! nonzero, plus an *x-index* that drives the k_w-to-1 X-mux in front of
+//! each multiplier. The `n_channel_splits` parameter partitions the
+//! stream rows across parallel weight buffers; because splits process in
+//! lock-step, every split's stream is padded to the longest one — the
+//! nonlinearity that made the paper's naive throughput model wrong by
+//! enough to matter (§IV: fixing it brought estimates within 1% and
+//! bought 23% throughput).
+
+pub mod prune;
+pub mod rle;
+
+pub use prune::{prune_graph, prune_tensor, PruneReport};
+pub use rle::{encode_conv, encode_matmul, ConvRle, SplitStream, WeightEntry, RUNLENGTH_BITS};

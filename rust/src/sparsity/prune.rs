@@ -1,0 +1,161 @@
+//! Magnitude pruning.
+//!
+//! The paper prunes 85% of weights from every convolution ("a different
+//! pruning technique that does not restrict us to the same sparsity in
+//! each layer" is left as future work — so we implement exactly the
+//! uniform-per-layer scheme). Depthwise convolutions and biases are not
+//! pruned (depthwise layers have too few weights per channel to survive
+//! pruning; the paper's MobileNets run dense).
+
+use crate::graph::{Graph, Op, Tensor};
+
+/// Per-layer pruning outcome.
+#[derive(Debug, Clone)]
+pub struct PruneReport {
+    /// (conv node name, weights pruned, weights total) per layer.
+    pub layers: Vec<(String, usize, usize)>,
+}
+
+impl PruneReport {
+    pub fn overall_sparsity(&self) -> f64 {
+        let (z, t) = self
+            .layers
+            .iter()
+            .fold((0usize, 0usize), |(z, t), (_, lz, lt)| (z + lz, t + lt));
+        if t == 0 {
+            0.0
+        } else {
+            z as f64 / t as f64
+        }
+    }
+}
+
+/// Zero out the smallest-magnitude `fraction` of a tensor's elements.
+/// Exact: prunes floor(fraction * len) elements, ties broken by index.
+pub fn prune_tensor(t: &mut Tensor, fraction: f64) -> usize {
+    assert!((0.0..=1.0).contains(&fraction));
+    let k = (t.data.len() as f64 * fraction).floor() as usize;
+    if k == 0 {
+        return 0;
+    }
+    let mut idx: Vec<usize> = (0..t.data.len()).collect();
+    idx.sort_by(|&a, &b| {
+        t.data[a]
+            .abs()
+            .partial_cmp(&t.data[b].abs())
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    for &i in &idx[..k] {
+        t.data[i] = 0.0;
+    }
+    k
+}
+
+/// Prune every Conv2D / MatMul weight tensor in the graph to the target
+/// per-layer sparsity. Depthwise weights and non-weight constants are
+/// untouched.
+pub fn prune_graph(g: &mut Graph, fraction: f64) -> PruneReport {
+    // Identify weight const inputs of prunable compute nodes.
+    let targets: Vec<(String, String)> = g
+        .nodes
+        .iter()
+        .filter_map(|n| match n.op {
+            Op::Conv2D { .. } | Op::MatMul => {
+                Some((n.name.clone(), n.inputs[1].clone()))
+            }
+            _ => None,
+        })
+        .collect();
+    let mut layers = Vec::new();
+    for (layer, wname) in targets {
+        let t = g
+            .get_mut(&wname)
+            .and_then(|n| n.value.as_mut())
+            .expect("weight const");
+        let total = t.data.len();
+        let pruned = prune_tensor(t, fraction);
+        layers.push((layer, pruned, total));
+    }
+    PruneReport { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{resnet50, NetConfig};
+    use crate::util::prop::Cases;
+    use crate::util::Rng;
+
+    #[test]
+    fn prune_tensor_exact_count() {
+        let mut rng = Rng::new(1);
+        let mut t = Tensor::randn(&[1000], &mut rng, 1.0);
+        let k = prune_tensor(&mut t, 0.85);
+        assert_eq!(k, 850);
+        assert_eq!(t.data.iter().filter(|&&x| x == 0.0).count(), 850);
+    }
+
+    #[test]
+    fn prune_keeps_largest() {
+        let mut t = Tensor::from_vec(&[5], vec![0.1, -5.0, 0.2, 3.0, -0.05]);
+        prune_tensor(&mut t, 0.6);
+        assert_eq!(t.data, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn prune_zero_fraction_is_noop() {
+        let mut t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(prune_tensor(&mut t, 0.0), 0);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn graph_prune_hits_target() {
+        let mut g = resnet50(NetConfig::test_scale());
+        let report = prune_graph(&mut g, 0.85);
+        assert_eq!(report.layers.len(), 53 + 1); // 53 convs + FC
+        let s = report.overall_sparsity();
+        assert!((s - 0.85).abs() < 0.01, "sparsity={s}");
+        // every pruned layer individually near target
+        for (name, z, t) in &report.layers {
+            let ls = *z as f64 / *t as f64;
+            assert!((ls - 0.85).abs() < 0.02, "{name}: {ls}");
+        }
+    }
+
+    #[test]
+    fn depthwise_not_pruned() {
+        let mut g = crate::nets::mobilenet_v1(NetConfig::test_scale());
+        prune_graph(&mut g, 0.85);
+        let w = g
+            .get("Conv2d_1_depthwise/depthwise_weights")
+            .unwrap()
+            .value
+            .as_ref()
+            .unwrap();
+        assert_eq!(w.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn prop_prune_preserves_surviving_values() {
+        Cases::new(32).run(|rng, size| {
+            let n = size * 20 + 5;
+            let orig = Tensor::randn(&[n], rng, 1.0);
+            let mut t = orig.clone();
+            let frac = rng.f64() * 0.9;
+            prune_tensor(&mut t, frac);
+            for (a, b) in t.data.iter().zip(&orig.data) {
+                if *a != 0.0 && a != b {
+                    return Err(format!("survivor changed: {a} vs {b}"));
+                }
+            }
+            let zeros = t.data.iter().filter(|&&x| x == 0.0).count();
+            let expect = (n as f64 * frac).floor() as usize;
+            if zeros < expect {
+                return Err(format!("zeros {zeros} < expected {expect}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,320 @@
+//! HPIPE's runlength-encoded weight streams (§V-B) and the
+//! `n_channel_splits` partitioner.
+//!
+//! For each output channel, the nonzero weights are ordered by *row* —
+//! a row is one (k_y, c_i) pair, the dimension the Input Buffer
+//! Controller walks — and each nonzero is stored as:
+//!
+//! * `runlength`: how many rows to advance from the previous entry
+//!   (0 = same row, another nonzero at a different x);
+//! * `x`: the k_w-to-1 X-mux selector (the weight's kernel-x position);
+//! * `value`: the weight itself (quantized at codegen time).
+//!
+//! The runlength field is [`RUNLENGTH_BITS`] wide; a gap longer than the
+//! field can express requires inserting *pad entries* (zero weights that
+//! only advance the row counter). With `n_channel_splits = s`, rows are
+//! dealt round-robin across `s` streams that execute in lock-step, so
+//! every stream is padded to the longest stream's length. Both padding
+//! effects are why layer throughput is not linear in `s` — the
+//! partition-aware throughput model (compile::throughput) calls
+//! [`encode_conv`] to get the *real* padded lengths, which is the §IV fix
+//! that brought the cycle estimates within 1%.
+
+use crate::graph::Tensor;
+
+/// Width of the runlength field in the weight buffer word. 4 bits is the
+/// paper-plausible choice (runlength + x-index + 16-bit weight pack into
+/// one M20K word); the ablation bench sweeps this.
+pub const RUNLENGTH_BITS: u32 = 4;
+
+/// One weight-buffer word.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightEntry {
+    /// Rows advanced since the previous entry (within this split).
+    pub runlength: u32,
+    /// Kernel-x position (X-mux select).
+    pub x: u8,
+    /// Weight value; 0.0 for pad entries.
+    pub value: f32,
+}
+
+/// The entries of one (output channel, split) stream.
+#[derive(Clone, Debug, Default)]
+pub struct SplitStream {
+    pub entries: Vec<WeightEntry>,
+    /// Entries that are real nonzeros (not runlength/lockstep padding).
+    pub nonzeros: usize,
+}
+
+/// A fully encoded convolution weight tensor.
+#[derive(Clone, Debug)]
+pub struct ConvRle {
+    pub kh: usize,
+    pub kw: usize,
+    pub ci: usize,
+    pub co: usize,
+    pub splits: usize,
+    /// streams[oc][split]
+    pub streams: Vec<Vec<SplitStream>>,
+}
+
+impl ConvRle {
+    /// Lock-step stream length for an output channel: the max split
+    /// stream length (shorter splits idle — "padding" in the paper).
+    pub fn oc_cycles(&self, oc: usize) -> usize {
+        self.streams[oc]
+            .iter()
+            .map(|s| s.entries.len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total lock-step cycles to stream every output channel once.
+    pub fn total_cycles(&self) -> usize {
+        (0..self.co).map(|oc| self.oc_cycles(oc)).sum()
+    }
+
+    /// Total real nonzeros across all streams.
+    pub fn total_nonzeros(&self) -> usize {
+        self.streams
+            .iter()
+            .flat_map(|per_oc| per_oc.iter())
+            .map(|s| s.nonzeros)
+            .sum()
+    }
+
+    /// Total entries including padding (weight-buffer M20K footprint).
+    pub fn total_entries(&self) -> usize {
+        self.streams
+            .iter()
+            .flat_map(|per_oc| per_oc.iter())
+            .map(|s| s.entries.len())
+            .sum()
+    }
+
+    /// Padding overhead ratio: entries / nonzeros (1.0 = no padding).
+    pub fn padding_overhead(&self) -> f64 {
+        let nz = self.total_nonzeros();
+        if nz == 0 {
+            1.0
+        } else {
+            self.total_entries() as f64 / nz as f64
+        }
+    }
+}
+
+/// Encode a conv weight tensor (HWIO) into per-(oc, split) streams.
+/// Rows (k_y, c_i) are dealt round-robin across `splits` streams.
+pub fn encode_conv(w: &Tensor, splits: usize) -> ConvRle {
+    assert_eq!(w.shape.len(), 4, "expected HWIO conv weights");
+    let (kh, kw, ci, co) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert!(splits >= 1);
+    let max_run = (1u32 << RUNLENGTH_BITS) - 1;
+    let rows = kh * ci;
+
+    let mut streams: Vec<Vec<SplitStream>> = Vec::with_capacity(co);
+    for oc in 0..co {
+        let mut per_split: Vec<SplitStream> = vec![SplitStream::default(); splits];
+        // split-local row counters: position of the previous entry
+        let mut last_row: Vec<Option<usize>> = vec![None; splits];
+        for row in 0..rows {
+            let (ky, c) = (row / ci, row % ci);
+            let split = row % splits;
+            let local_row = row / splits; // row index within this split
+            for kx in 0..kw {
+                let v = w.data[((ky * kw + kx) * ci + c) * co + oc];
+                if v == 0.0 {
+                    continue;
+                }
+                let stream = &mut per_split[split];
+                let mut gap = match last_row[split] {
+                    None => local_row as u32,
+                    Some(prev) => (local_row - prev) as u32,
+                };
+                // insert pad entries for gaps beyond the field width
+                while gap > max_run {
+                    stream.entries.push(WeightEntry {
+                        runlength: max_run,
+                        x: 0,
+                        value: 0.0,
+                    });
+                    gap -= max_run;
+                }
+                stream.entries.push(WeightEntry {
+                    runlength: gap,
+                    x: kx as u8,
+                    value: v,
+                });
+                stream.nonzeros += 1;
+                last_row[split] = Some(local_row);
+            }
+        }
+        streams.push(per_split);
+    }
+    ConvRle {
+        kh,
+        kw,
+        ci,
+        co,
+        splits,
+        streams,
+    }
+}
+
+/// Encode MatMul weights (Ci, Co) — a 1×1 "conv" over a 1×1 image.
+pub fn encode_matmul(w: &Tensor, splits: usize) -> ConvRle {
+    assert_eq!(w.shape.len(), 2);
+    let (ci, co) = (w.shape[0], w.shape[1]);
+    let as_conv = Tensor::from_vec(&[1, 1, ci, co], w.data.clone());
+    encode_conv(&as_conv, splits)
+}
+
+/// Decode back to a dense tensor — used by tests to prove the encoding
+/// is lossless, and by codegen's memory-init verifier.
+pub fn decode_conv(rle: &ConvRle) -> Tensor {
+    let (kh, kw, ci, co) = (rle.kh, rle.kw, rle.ci, rle.co);
+    let mut out = Tensor::zeros(&[kh, kw, ci, co]);
+    for oc in 0..co {
+        for (split, stream) in rle.streams[oc].iter().enumerate() {
+            // The first entry's runlength is its absolute local row; each
+            // later entry advances from the previous one.
+            let mut local_row: u64 = 0;
+            let mut first = true;
+            for e in &stream.entries {
+                if first {
+                    local_row = e.runlength as u64;
+                    first = false;
+                } else {
+                    local_row += e.runlength as u64;
+                }
+                if e.value == 0.0 {
+                    continue; // pad entry: only advances the counter
+                }
+                let row = (local_row as usize) * rle.splits + split;
+                let (ky, c) = (row / ci, row % ci);
+                out.data[((ky * kw + e.x as usize) * ci + c) * co + oc] = e.value;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::prune::prune_tensor;
+    use crate::util::prop::Cases;
+    use crate::util::Rng;
+
+    fn random_sparse(rng: &mut Rng, shape: &[usize], sparsity: f64) -> Tensor {
+        let mut t = Tensor::randn(shape, rng, 1.0);
+        prune_tensor(&mut t, sparsity);
+        t
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[3, 3, 4, 5], &mut rng, 1.0);
+        for splits in [1, 2, 3, 4, 12] {
+            let rle = encode_conv(&w, splits);
+            let back = decode_conv(&rle);
+            assert_eq!(back.data, w.data, "splits={splits}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_sparse_all_split_counts() {
+        Cases::new(40).run(|rng, size| {
+            let kh = 1 + size % 5;
+            let kw = 1 + (size * 7) % 5;
+            let ci = 1 + size % 9;
+            let co = 1 + (size * 3) % 6;
+            let sp = rng.f64() * 0.95;
+            let w = random_sparse(rng, &[kh, kw, ci, co], sp);
+            let splits = 1 + rng.below(kh * ci);
+            let rle = encode_conv(&w, splits);
+            let back = decode_conv(&rle);
+            if back.data == w.data {
+                Ok(())
+            } else {
+                Err(format!(
+                    "mismatch kh={kh} kw={kw} ci={ci} co={co} splits={splits} sp={sp:.2}"
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn nonzero_counting() {
+        let mut rng = Rng::new(3);
+        let w = random_sparse(&mut rng, &[3, 3, 8, 16], 0.85);
+        let expected_nz = w.data.iter().filter(|&&v| v != 0.0).count();
+        let rle = encode_conv(&w, 4);
+        assert_eq!(rle.total_nonzeros(), expected_nz);
+        assert!(rle.total_entries() >= expected_nz);
+    }
+
+    #[test]
+    fn lockstep_padding_grows_with_splits() {
+        // With extreme splits, imbalance padding must push the padded
+        // cycle count above nnz/splits.
+        let mut rng = Rng::new(4);
+        let w = random_sparse(&mut rng, &[3, 3, 16, 8], 0.9);
+        let rle1 = encode_conv(&w, 1);
+        let rle8 = encode_conv(&w, 8);
+        let ideal8 = (rle1.total_cycles() as f64 / 8.0).ceil() as usize;
+        assert!(
+            rle8.total_cycles() >= ideal8,
+            "padded {} < ideal {}",
+            rle8.total_cycles(),
+            ideal8
+        );
+        // and the speedup is sublinear (the paper's nonlinearity)
+        let speedup = rle1.total_cycles() as f64 / rle8.total_cycles() as f64;
+        assert!(speedup < 8.0, "speedup={speedup}");
+        assert!(speedup > 1.5, "speedup={speedup}");
+    }
+
+    #[test]
+    fn long_gap_inserts_pad_entries() {
+        // single nonzero at the last row, runlength 4 bits => row index
+        // beyond 15 needs pads
+        let mut w = Tensor::zeros(&[1, 1, 40, 1]);
+        w.data[39] = 2.5;
+        let rle = encode_conv(&w, 1);
+        let s = &rle.streams[0][0];
+        assert!(s.entries.len() > 1, "need pad entries, got {:?}", s.entries);
+        assert_eq!(s.nonzeros, 1);
+        assert_eq!(decode_conv(&rle).data, w.data);
+    }
+
+    #[test]
+    fn matmul_encoding() {
+        let mut rng = Rng::new(5);
+        let w = random_sparse(&mut rng, &[64, 10], 0.85);
+        let rle = encode_matmul(&w, 8);
+        assert_eq!(rle.co, 10);
+        let back = decode_conv(&rle);
+        assert_eq!(back.data, w.data);
+    }
+
+    #[test]
+    fn empty_output_channel_zero_cycles() {
+        let w = Tensor::zeros(&[3, 3, 4, 2]);
+        let rle = encode_conv(&w, 2);
+        assert_eq!(rle.total_cycles(), 0);
+        assert_eq!(rle.padding_overhead(), 1.0);
+    }
+
+    #[test]
+    fn dense_padding_overhead_is_one_when_splits_divide() {
+        let mut rng = Rng::new(6);
+        // fully dense, rows divisible by splits -> perfectly balanced
+        let w = Tensor::randn(&[2, 3, 8, 4], &mut rng, 1.0);
+        let rle = encode_conv(&w, 4); // 16 rows / 4 splits = 4 each
+        assert!((rle.padding_overhead() - 1.0).abs() < 1e-9);
+        let ideal = rle.total_nonzeros() / 4 / rle.co;
+        assert_eq!(rle.oc_cycles(0), ideal);
+    }
+}

@@ -1,0 +1,108 @@
+//! Numerical equivalence checking between graph versions.
+//!
+//! The paper validates its transforms by re-running the dumped graphdef
+//! through TensorFlow and confirming ImageNet accuracy is unchanged. Our
+//! analog: run both graphs through the reference interpreter on random
+//! inputs and require the outputs to match to tolerance.
+
+use crate::graph::{Graph, Op, Tensor};
+use crate::interp;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// Compare two graphs on `trials` random inputs. Returns Err with a
+/// description of the first mismatch. Tolerance is relative to the output
+/// magnitude (transforms reassociate float math, so exact equality is not
+/// expected).
+pub fn assert_equivalent(
+    a: &Graph,
+    b: &Graph,
+    trials: usize,
+    tol: f32,
+) -> Result<(), String> {
+    let feeds_spec: Vec<(String, Vec<usize>)> = a
+        .nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            Op::Placeholder { shape } => Some((n.name.clone(), shape.clone())),
+            _ => None,
+        })
+        .collect();
+    if feeds_spec.is_empty() {
+        return Err("graph has no placeholders".into());
+    }
+    let mut rng = Rng::new(0xE9);
+    for t in 0..trials {
+        let mut feeds = BTreeMap::new();
+        for (name, shape) in &feeds_spec {
+            feeds.insert(name.clone(), Tensor::randn(shape, &mut rng, 1.0));
+        }
+        let oa = interp::run_outputs(a, &feeds).map_err(|e| format!("graph A: {e}"))?;
+        let ob = interp::run_outputs(b, &feeds).map_err(|e| format!("graph B: {e}"))?;
+        if oa.len() != ob.len() {
+            return Err(format!("output count {} vs {}", oa.len(), ob.len()));
+        }
+        for (k, (ta, tb)) in oa.iter().zip(&ob).enumerate() {
+            if ta.shape != tb.shape {
+                return Err(format!(
+                    "trial {t} output {k}: shape {:?} vs {:?}",
+                    ta.shape, tb.shape
+                ));
+            }
+            let scale = ta.max_abs().max(1e-3);
+            for (i, (&x, &y)) in ta.data.iter().zip(&tb.data).enumerate() {
+                if (x - y).abs() > tol * scale {
+                    return Err(format!(
+                        "trial {t} output {k}[{i}]: {x} vs {y} (scale {scale})"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Padding;
+
+    fn conv_graph(scale: f32) -> Graph {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(77);
+        g.op("input", Op::Placeholder { shape: vec![1, 4, 4, 2] }, &[]);
+        let mut w = Tensor::randn(&[3, 3, 2, 3], &mut rng, 0.5);
+        for v in w.data.iter_mut() {
+            *v *= scale;
+        }
+        g.constant("w", w);
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w"],
+        );
+        g.outputs = vec!["conv".into()];
+        g
+    }
+
+    #[test]
+    fn identical_graphs_are_equivalent() {
+        let g = conv_graph(1.0);
+        assert_equivalent(&g, &g.clone(), 3, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn different_weights_are_not() {
+        let a = conv_graph(1.0);
+        let b = conv_graph(1.01);
+        assert!(assert_equivalent(&a, &b, 1, 1e-6).is_err());
+    }
+
+    #[test]
+    fn no_placeholder_is_error() {
+        let mut g = Graph::new();
+        g.constant("c", Tensor::scalar(1.0));
+        g.outputs = vec!["c".into()];
+        assert!(assert_equivalent(&g, &g.clone(), 1, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny command-line parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `hpipe <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`; `--flag` with no
+//! value is boolean true.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(
+            self.flags.get(key).map(|s| s.as_str()),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("compile resnet50 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("compile"));
+        assert_eq!(a.positional, vec!["resnet50", "extra"]);
+    }
+
+    #[test]
+    fn flags_space_and_equals() {
+        let a = parse("simulate --dsp-target 5000 --device=s10_2800 --verbose");
+        assert_eq!(a.usize("dsp-target", 0), 5000);
+        assert_eq!(a.str("device", ""), "s10_2800");
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.usize("batch", 4), 4);
+        assert_eq!(a.f64("sparsity", 0.85), 0.85);
+        assert_eq!(a.opt("missing"), None);
+    }
+
+    #[test]
+    fn flag_before_subcommand_value_not_swallowed() {
+        // `--flag sub`: "sub" is consumed as the flag's value by design;
+        // callers put flags after the subcommand.
+        let a = parse("compile --net resnet50 --sparsity 0.85");
+        assert_eq!(a.subcommand.as_deref(), Some("compile"));
+        assert_eq!(a.str("net", ""), "resnet50");
+        assert_eq!(a.f64("sparsity", 0.0), 0.85);
+    }
+}

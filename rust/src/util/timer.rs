@@ -1,0 +1,158 @@
+//! Criterion-less benchmark harness.
+//!
+//! `cargo bench` targets in this repo use `harness = false` and drive this
+//! module: warm up, run timed iterations, report min/median/mean/p95 in a
+//! stable text format that the EXPERIMENTS.md tables are built from.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters={:<6} min={:>12?} median={:>12?} mean={:>12?} p95={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.p95
+        );
+    }
+
+    /// Median in nanoseconds (convenience for derived metrics).
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        min: samples[0],
+        median: samples[samples.len() / 2],
+        mean: total / iters as u32,
+        p95: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+    };
+    stats.print();
+    stats
+}
+
+/// Time a single run of a closure and return (result, elapsed).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Pretty table printer for bench/report binaries: fixed-width columns.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_ref(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench("noop", 2, 16, || {
+            std::hint::black_box(3 + 4);
+        });
+        assert!(s.min <= s.median);
+        assert!(s.median <= s.p95);
+        assert_eq!(s.iters, 16);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["layer", "cycles"]);
+        t.row(&["conv1".into(), "123".into()]);
+        t.row(&["res2a_branch2a".into(), "7".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same width
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+        assert!(r.contains("res2a_branch2a"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

@@ -1,0 +1,136 @@
+//! End-to-end integration: AOT artifacts -> PJRT runtime -> coordinator,
+//! cross-validated against the reference interpreter.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass with a
+//! note) when artifacts/ is absent so `cargo test` works on a fresh
+//! checkout.
+
+use hpipe::coordinator::serve_demo;
+use hpipe::graph::{graphdef, Op, Tensor};
+use hpipe::interp;
+use hpipe::runtime::Runtime;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_matches_reference_interpreter() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load_manifest().unwrap();
+    let graph = graphdef::load(&dir.join("tinycnn")).unwrap();
+    let model = rt.model("tinycnn_b1").expect("batch-1 model");
+
+    let mut rng = hpipe::util::Rng::new(42);
+    for trial in 0..5 {
+        let input: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let pjrt = model.run(&input).unwrap();
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            Tensor::from_vec(&[1, 16, 16, 3], input.clone()),
+        );
+        let outs = interp::run_outputs(&graph, &feeds).unwrap();
+        assert_eq!(pjrt.len(), outs[0].data.len());
+        for (i, (a, b)) in pjrt.iter().zip(&outs[0].data).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "trial {trial} [{i}]: pjrt {a} vs interp {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch8_model_matches_batch1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load_manifest().unwrap();
+    let m1 = rt.model("tinycnn_b1").unwrap();
+    let m8 = rt.model("tinycnn_b8").unwrap();
+    let per = 16 * 16 * 3;
+    let mut rng = hpipe::util::Rng::new(7);
+    let batch: Vec<f32> = (0..8 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let out8 = m8.run(&batch).unwrap();
+    for i in 0..8 {
+        let out1 = m1.run(&batch[i * per..(i + 1) * per]).unwrap();
+        for (j, (a, b)) in out1.iter().zip(&out8[i * 10..(i + 1) * 10]).enumerate() {
+            assert!((a - b).abs() < 1e-4, "image {i} class {j}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn serve_demo_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut report = serve_demo(&dir, 24, 4).unwrap();
+    assert_eq!(report.requests, 24);
+    assert!(report.batches >= 24 / 4);
+    let (agree, total) = report.interp_agreement.unwrap();
+    assert_eq!(agree, total, "PJRT and interpreter must classify alike");
+    assert!(report.latency.percentile(50.0).as_micros() > 0);
+}
+
+#[test]
+fn python_graphdef_matches_rust_tiny_builder_topology() {
+    let Some(dir) = artifacts_dir() else { return };
+    let py = graphdef::load(&dir.join("tinycnn")).unwrap();
+    let rs = hpipe::nets::tiny_cnn(hpipe::nets::NetConfig::test_scale());
+    // same op multiset per type (weights differ: trained vs He-init)
+    let count = |g: &hpipe::graph::Graph, t: &str| {
+        g.nodes.iter().filter(|n| n.op.type_name() == t).count()
+    };
+    for ty in ["Conv2D", "BiasAdd", "Relu", "MaxPool", "Mean", "MatMul", "Softmax"] {
+        assert_eq!(count(&py, ty), count(&rs, ty), "op {ty}");
+    }
+    // identical node names for the compute stages
+    for name in ["conv0", "conv1", "conv2", "pool2", "logits", "predictions"] {
+        assert!(py.get(name).is_some(), "missing {name}");
+        assert!(rs.get(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn trained_tinycnn_compiles_and_simulates() {
+    // The Python-trained network goes through the FULL HPIPE compiler:
+    // prune -> fold -> balance -> codegen -> cycle simulation.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut graph = graphdef::load(&dir.join("tinycnn")).unwrap();
+    hpipe::sparsity::prune_graph(&mut graph, 0.5);
+    let (graph, _) = hpipe::transform::optimize(&graph);
+    let opts = hpipe::compile::CompileOptions::new(hpipe::arch::S10_2800.clone(), 300);
+    let plan = hpipe::compile::compile(&graph, "tinycnn-trained", &opts).unwrap();
+    assert!(plan.totals.dsps > 0 && plan.totals.dsps <= 300);
+    let sim = hpipe::sim::simulate(&plan, 4).unwrap();
+    assert_eq!(sim.completion_cycles.len(), 4);
+}
+
+#[test]
+fn kernel_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load_manifest().unwrap();
+    let k = rt.model("sparse_conv_demo").expect("kernel artifact");
+    let n: usize = k.input_shape.iter().product();
+    let out = k.run(&vec![1.0; n]).unwrap();
+    assert!(out.iter().any(|&v| v != 0.0), "kernel output all zero");
+}
+
+#[test]
+fn tiny_graphdef_has_placeholder_input() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = graphdef::load(&dir.join("tinycnn")).unwrap();
+    match &g.get("input").unwrap().op {
+        Op::Placeholder { shape } => assert_eq!(shape, &vec![1, 16, 16, 3]),
+        op => panic!("unexpected input op {op:?}"),
+    }
+}

@@ -1,0 +1,98 @@
+//! §VII future-work feature: variable precision compilation and the
+//! Agilex low-precision DSP packing ("these features could provide
+//! further performance improvements per area of 2x or more").
+
+use hpipe::arch::{device_by_name, AGILEX_027, S10_2800};
+use hpipe::compile::{compile, CompileOptions};
+use hpipe::nets::{resnet50, NetConfig};
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+
+fn optimized_resnet() -> hpipe::graph::Graph {
+    let mut g = resnet50(NetConfig::test_scale());
+    prune_graph(&mut g, 0.85);
+    optimize(&g).0
+}
+
+#[test]
+fn agilex_device_registered() {
+    let d = device_by_name("agilex_027").unwrap();
+    assert_eq!(d.mults_per_dsp_at(16), 2);
+    assert_eq!(d.mults_per_dsp_at(8), 4, "8-bit packs 2x (§VII / [28])");
+    // Stratix 10 never packs
+    assert_eq!(S10_2800.mults_per_dsp_at(8), 2);
+}
+
+#[test]
+fn eight_bit_on_agilex_halves_dsp_cost() {
+    let g = optimized_resnet();
+    let o16 =
+        CompileOptions::new(AGILEX_027.clone(), 1200).with_precision(16);
+    let o8 = CompileOptions::new(AGILEX_027.clone(), 1200).with_precision(8);
+    let p16 = compile(&g, "resnet50", &o16).unwrap();
+    let p8 = compile(&g, "resnet50", &o8).unwrap();
+    // the same DSP budget buys more multipliers at 8-bit (2x per DSP;
+    // at test scale unroll caps bind before the full 2x materializes)
+    let m16: usize = p16.stages.iter().map(|s| s.mults).sum();
+    let m8: usize = p8.stages.iter().map(|s| s.mults).sum();
+    assert!(m8 > m16, "8-bit mults {m8} vs 16-bit {m16}");
+    assert!(
+        p8.interval_cycles() <= p16.interval_cycles(),
+        "8-bit interval {} vs 16-bit {}",
+        p8.interval_cycles(),
+        p16.interval_cycles()
+    );
+    // and pays half the DSPs per multiplier on compute stages
+    let per_mult_16 = p16.totals.dsps as f64 / m16 as f64;
+    let per_mult_8 = p8.totals.dsps as f64 / m8 as f64;
+    assert!(
+        per_mult_8 < 0.65 * per_mult_16,
+        "DSP/mult: 8-bit {per_mult_8:.3} vs 16-bit {per_mult_16:.3}"
+    );
+}
+
+#[test]
+fn lower_precision_shrinks_weight_memory() {
+    let g = optimized_resnet();
+    let o16 = CompileOptions::new(S10_2800.clone(), 800).with_precision(16);
+    let o8 = CompileOptions::new(S10_2800.clone(), 800).with_precision(8);
+    let p16 = compile(&g, "resnet50", &o16).unwrap();
+    let p8 = compile(&g, "resnet50", &o8).unwrap();
+    // identical splits would shrink memory by (8+8)/(16+8); splits can
+    // differ slightly, so check the aggregate moves the right way
+    assert!(
+        (p8.totals.m20ks as f64) < 0.9 * p16.totals.m20ks as f64,
+        "8-bit m20ks {} vs 16-bit {}",
+        p8.totals.m20ks,
+        p16.totals.m20ks
+    );
+}
+
+#[test]
+fn per_layer_precision_study_fixed_point() {
+    // variable precision end to end: crush one layer to 6 bits via the
+    // PrecisionConfig override and confirm the error is localized (the
+    // network still classifies like f32 most of the time at 16-bit
+    // elsewhere), mirroring the paper's per-operation annotations.
+    use hpipe::graph::{FixedFormat, Tensor};
+    use hpipe::interp::fixed::{run_fixed, PrecisionConfig};
+    let g = hpipe::nets::tiny_cnn(NetConfig::test_scale());
+    let mut rng = hpipe::util::Rng::new(0x5E7);
+    let mut uniform_err = 0f32;
+    let mut override_err = 0f32;
+    for _ in 0..10 {
+        let mut feeds = std::collections::BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            Tensor::randn(&[1, 16, 16, 3], &mut rng, 1.0),
+        );
+        let base = run_fixed(&g, &feeds, &PrecisionConfig::paper_16bit()).unwrap();
+        let mut cfg = PrecisionConfig::paper_16bit();
+        cfg.overrides.insert("conv2/weights".into(), FixedFormat::q(6, 4));
+        let over = run_fixed(&g, &feeds, &cfg).unwrap();
+        uniform_err = uniform_err.max(base.max_abs_error);
+        override_err = override_err.max(over.max_abs_error);
+    }
+    assert!(override_err > uniform_err, "override had no effect");
+    assert!(override_err < 0.5, "6-bit single layer should degrade, not destroy");
+}
