@@ -16,7 +16,7 @@ use hpipe::sparsity::prune_graph;
 use hpipe::transform::optimize;
 use hpipe::util::timer::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hpipe::util::error::Result<()> {
     let full = std::env::args().any(|a| a == "--full-scale");
     let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
     let dsp_target = if full { 5000 } else { 1200 };
@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     }
     tab.print();
 
-    let sim = simulate(&plan, 12).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sim = simulate(&plan, 12)?;
     println!(
         "\nsimulated: latency {:.3} ms, throughput {:.0} img/s at {:.0} MHz (paper: 4550 img/s @ 580 MHz full-scale)",
         sim.latency_ms(plan.fmax_mhz),

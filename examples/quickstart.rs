@@ -14,7 +14,7 @@ use hpipe::sim::simulate;
 use hpipe::sparsity::prune_graph;
 use hpipe::transform::optimize;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hpipe::util::error::Result<()> {
     // 1. build + prune the network
     let mut graph = tiny_cnn(NetConfig::test_scale());
     let report = prune_graph(&mut graph, 0.5);
@@ -50,11 +50,29 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 5. cycle-level simulation
-    let sim = simulate(&plan, 8).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sim = simulate(&plan, 8)?;
     println!(
         "simulated 8 images: latency {:.3} ms, steady-state {:.0} img/s",
         sim.latency_ms(plan.fmax_mhz),
         sim.throughput_img_s(plan.fmax_mhz)
+    );
+
+    // 6. actually execute it: compile a software execution plan (sparse
+    //    RLE kernels + fused conv chains) and classify one image
+    let exec_plan = hpipe::exec::ExecutionPlan::build(&graph)?;
+    let mut rng = hpipe::util::Rng::new(42);
+    let mut feeds = std::collections::BTreeMap::new();
+    feeds.insert(
+        "input".to_string(),
+        hpipe::graph::Tensor::randn(&[1, 16, 16, 3], &mut rng, 1.0),
+    );
+    let (result, took) = hpipe::util::timer::time_once(|| exec_plan.run(&feeds));
+    let probs = result?;
+    println!(
+        "executed through the plan in {took:?}: class {} ({} sparse kernels, {} fused chains)",
+        hpipe::interp::argmax(&probs[0])[0],
+        exec_plan.stats().sparse_convs,
+        exec_plan.stats().fused_chains
     );
     Ok(())
 }

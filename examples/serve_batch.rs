@@ -3,18 +3,18 @@
 //!   make artifacts           # trains TinyCNN + lowers it to HLO text
 //!   cargo run --release --example serve_batch [-- <requests> <batch>]
 //!
-//! Loads the AOT-compiled, Pallas-kernel TinyCNN through the PJRT CPU
-//! client, serves batched classification requests through the Layer-3
-//! coordinator (request queue -> dynamic batcher -> XLA executable), and
-//! reports latency percentiles + throughput. Every result is
-//! cross-checked against the Rust reference interpreter running the same
-//! trained graphdef — proving Layer 1 (kernel), Layer 2 (JAX model),
-//! Layer 3 (coordinator) and the AOT path all agree.
+//! Loads the trained TinyCNN graphdef, compiles it into a sparse-aware
+//! execution plan, and serves batched classification requests through
+//! the Layer-3 coordinator (request queue -> dynamic batcher -> compiled
+//! executor), reporting latency percentiles + throughput. Every result
+//! is cross-checked against the Rust reference interpreter running the
+//! same trained graphdef — proving the kernels, the plan compiler and
+//! the coordinator all agree.
 
 use hpipe::coordinator::serve_demo;
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hpipe::util::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
     let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         std::env::var("HPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
     if !artifacts.join("manifest.json").exists() {
-        anyhow::bail!(
+        hpipe::bail!(
             "artifacts not found at {} — run `make artifacts` first",
             artifacts.display()
         );
@@ -31,9 +31,9 @@ fn main() -> anyhow::Result<()> {
     let mut report = serve_demo(&artifacts, requests, batch)?;
     report.print();
     let (agree, total) = report.interp_agreement.unwrap_or((0, 0));
-    anyhow::ensure!(
+    hpipe::ensure!(
         agree == total,
-        "PJRT vs interpreter disagreement: {agree}/{total}"
+        "executor vs interpreter disagreement: {agree}/{total}"
     );
     println!("OK: all layers agree");
     Ok(())

@@ -11,7 +11,7 @@ use hpipe::sparsity::prune_graph;
 use hpipe::transform::optimize;
 use hpipe::util::timer::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hpipe::util::error::Result<()> {
     let full = std::env::args().any(|a| a == "--full-scale");
     let cfg = if full { NetConfig::imagenet() } else { NetConfig::test_scale() };
     let dsp_target = if full { 5000 } else { 1200 };

@@ -4,7 +4,10 @@
 //!     estimates to within 1% and bought 23% throughput);
 //!  2. Add skip-path buffer sizing (§V-C deadlock avoidance);
 //!  3. gather vs scatter convolution cost (§III-A's argument);
-//!  4. compiler hot-path timings (balancer, RLE encode, simulator rate).
+//!  4. compiler hot-path timings (balancer, RLE encode, simulator rate);
+//!  5. §VII future work: precision vs performance-per-area on Agilex;
+//!  6. software executor: interpreter vs planned dense vs planned sparse
+//!     on the whole pruned+folded ResNet-50 (the exec engine's win).
 
 use hpipe::arch::S10_2800;
 use hpipe::compile::{compile, CompileOptions};
@@ -181,4 +184,45 @@ fn main() {
         "simulator rate: {:.1}M line-events/s",
         events as f64 / (s.median_ns() / 1e9) / 1e6
     );
+
+    // ---------- 6. software execution engine ----------
+    println!("\n=== ablation 6: interp vs planned executor (whole pruned ResNet-50) ===");
+    {
+        use hpipe::exec::{ExecutionPlan, PlanOptions};
+        use hpipe::graph::Tensor;
+        use std::collections::BTreeMap;
+        let mut feeds = BTreeMap::new();
+        let in_shape = match &g.get("input").unwrap().op {
+            Op::Placeholder { shape } => shape.clone(),
+            _ => unreachable!(),
+        };
+        feeds.insert(
+            "input".to_string(),
+            Tensor::randn(&in_shape, &mut rng, 1.0),
+        );
+        let interp_iters = if full { 1 } else { 3 };
+        let it = bench("exec_ablation/interp", 1, interp_iters, || {
+            let _ = hpipe::interp::run_outputs(&g, &feeds).unwrap();
+        });
+        let dense = ExecutionPlan::build_with(&g, &PlanOptions::dense_only()).unwrap();
+        let sparse = ExecutionPlan::build_with(&g, &PlanOptions::default()).unwrap();
+        let mut dctx = dense.new_context();
+        let mut sctx = sparse.new_context();
+        let d = bench("exec_ablation/planned_dense", 2, 10, || {
+            dense.run_with(&mut dctx, &feeds).unwrap();
+        });
+        let sp = bench("exec_ablation/planned_sparse", 2, 10, || {
+            sparse.run_with(&mut sctx, &feeds).unwrap();
+        });
+        println!(
+            "plan composition: {:?}",
+            sparse.stats()
+        );
+        println!(
+            "whole-net speedups: dense-plan {:.1}x, sparse-plan {:.1}x over interp (sparse/dense {:.2}x)",
+            it.median_ns() / d.median_ns(),
+            it.median_ns() / sp.median_ns(),
+            d.median_ns() / sp.median_ns()
+        );
+    }
 }

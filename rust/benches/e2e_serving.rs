@@ -1,21 +1,52 @@
-//! End-to-end serving benchmark (the L3 hot path + PJRT execution) and
-//! the sparse-conv kernel micro-benchmark. Skips gracefully when
-//! `make artifacts` has not run.
+//! End-to-end serving benchmark: the L3 hot path (queue -> batcher ->
+//! compiled executor -> respond) plus executor micro-benchmarks.
+//!
+//! Uses the trained artifacts when `make artifacts` has run; otherwise
+//! synthesizes an equivalent artifact directory (He-init TinyCNN
+//! graphdef + manifest) so the benchmark always runs.
 
 use hpipe::coordinator::serve_demo;
+use hpipe::graph::graphdef;
+use hpipe::nets::{tiny_cnn, NetConfig};
 use hpipe::runtime::Runtime;
 use hpipe::util::timer::bench;
-use std::path::Path;
+use hpipe::util::Json;
+use std::path::{Path, PathBuf};
+
+/// Return an artifacts dir, synthesizing one under target/ if needed.
+fn artifacts_dir() -> PathBuf {
+    let real = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if real.join("manifest.json").exists() {
+        return real;
+    }
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("bench_artifacts");
+    println!("artifacts/ missing — synthesizing He-init TinyCNN artifacts in target/");
+    let g = tiny_cnn(NetConfig::test_scale());
+    graphdef::save(&g, &dir.join("tinycnn")).expect("writing graphdef");
+    let mut models = Json::obj();
+    models
+        .set("1", Json::from("tinycnn.graphdef"))
+        .set("8", Json::from("tinycnn.graphdef"));
+    let mut kernels = Json::obj();
+    let mut k = Json::obj();
+    k.set("path", Json::from("builtin"))
+        .set("input_shape", Json::from(vec![1usize, 16, 16, 8]));
+    kernels.set("sparse_conv_demo", k);
+    let mut root = Json::obj();
+    root.set("input_shape", Json::from(vec![1usize, 16, 16, 3]))
+        .set("models", models)
+        .set("kernels", kernels);
+    std::fs::write(dir.join("manifest.json"), root.pretty()).expect("writing manifest");
+    dir
+}
 
 fn main() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("e2e_serving: artifacts/ missing — run `make artifacts` first (skipping)");
-        return;
-    }
-    println!("=== end-to-end serving benchmark (TinyCNN via PJRT) ===");
+    let dir = artifacts_dir();
+    println!("=== end-to-end serving benchmark (TinyCNN via compiled executor) ===");
 
-    // PJRT execute micro-bench: batch-1 and batch-8 models + raw kernel
+    // executor micro-bench: batch-1 and batch-8 models + sparse kernel
     let mut rt = Runtime::cpu(&dir).unwrap();
     rt.load_manifest().unwrap();
     let mut rng = hpipe::util::Rng::new(0xB);
@@ -23,13 +54,13 @@ fn main() {
         let m1 = rt.model("tinycnn_b1").unwrap();
         let n1: usize = m1.input_shape.iter().product();
         let x1: Vec<f32> = (0..n1).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let s1 = bench("pjrt_execute/tinycnn_b1", 3, 20, || {
+        let s1 = bench("exec_plan/tinycnn_b1", 3, 20, || {
             let _ = m1.run(&x1).unwrap();
         });
         let m8 = rt.model("tinycnn_b8").unwrap();
         let n8: usize = m8.input_shape.iter().product();
         let x8: Vec<f32> = (0..n8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let s8 = bench("pjrt_execute/tinycnn_b8", 3, 20, || {
+        let s8 = bench("exec_plan/tinycnn_b8", 3, 20, || {
             let _ = m8.run(&x8).unwrap();
         });
         println!(
@@ -39,7 +70,7 @@ fn main() {
         let k = rt.model("sparse_conv_demo").unwrap();
         let nk: usize = k.input_shape.iter().product();
         let xk: Vec<f32> = (0..nk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        bench("pjrt_execute/sparse_conv_demo", 3, 20, || {
+        bench("exec_plan/sparse_conv_demo", 3, 20, || {
             let _ = k.run(&xk).unwrap();
         });
     }

@@ -1,0 +1,148 @@
+//! Executor engine benchmark: reference interpreter vs planned-dense vs
+//! planned-sparse convolution on a ResNet-50 conv layer, across weight
+//! sparsity levels. Emits `BENCH_exec.json` at the repo root so the perf
+//! trajectory of the hot path is recorded alongside the code.
+//!
+//! Acceptance targets (ISSUE 1): planned sparse ≥ 5x faster than
+//! `interp::run` at 80% sparsity, and sparse beats planned-dense at
+//! ≥ 70% sparsity.
+
+use hpipe::exec::{ExecutionPlan, PlanOptions};
+use hpipe::graph::{Graph, Op, Padding, Tensor};
+use hpipe::interp;
+use hpipe::sparsity::prune_tensor;
+use hpipe::util::timer::bench;
+use hpipe::util::{Json, Rng};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// res4-style 3x3 conv at test scale: 14x14 spatial, 128 -> 128 channels
+/// (the paper's res4 blocks at half width; ~29M MACs dense).
+const H: usize = 14;
+const CI: usize = 128;
+const CO: usize = 128;
+const K: usize = 3;
+
+fn conv_graph(w: Tensor) -> Graph {
+    let mut g = Graph::new();
+    g.op("input", Op::Placeholder { shape: vec![1, H, H, CI] }, &[]);
+    g.constant("w", w);
+    g.op(
+        "conv",
+        Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+        &["input", "w"],
+    );
+    g.outputs = vec!["conv".into()];
+    g
+}
+
+fn main() {
+    let mut rng = Rng::new(0xE8EC);
+    let feeds: BTreeMap<String, Tensor> = {
+        let mut m = BTreeMap::new();
+        m.insert("input".into(), Tensor::randn(&[1, H, H, CI], &mut rng, 1.0));
+        m
+    };
+    println!(
+        "=== exec engine: interp vs planned-dense vs planned-sparse ({K}x{K} conv, {CI}->{CO} @ {H}x{H}) ==="
+    );
+
+    // The interpreter's cost is sparsity-independent (it multiplies the
+    // zeros); measure it once, on 80%-pruned weights.
+    let w_interp = {
+        let mut w = Tensor::randn(&[K, K, CI, CO], &mut rng, 0.1);
+        prune_tensor(&mut w, 0.8);
+        w
+    };
+    let g_interp = conv_graph(w_interp);
+    let interp_stats = bench("interp/conv", 1, 3, || {
+        let _ = interp::run_outputs(&g_interp, &feeds).unwrap();
+    });
+    let interp_ns = interp_stats.median_ns();
+
+    let mut rows = Json::Arr(vec![]);
+    let mut sparse_ns_at = BTreeMap::new();
+    let mut dense_ns_at = BTreeMap::new();
+    for pct in [0u32, 50, 70, 80, 90] {
+        let sparsity = pct as f64 / 100.0;
+        let mut w = Tensor::randn(&[K, K, CI, CO], &mut rng, 0.1);
+        prune_tensor(&mut w, sparsity);
+        let g = conv_graph(w);
+
+        let dense = ExecutionPlan::build_with(&g, &PlanOptions::dense_only()).unwrap();
+        let sparse = ExecutionPlan::build_with(&g, &PlanOptions::sparse_always()).unwrap();
+        let mut dctx = dense.new_context();
+        let mut sctx = sparse.new_context();
+        let d = bench(&format!("planned_dense/conv_s{pct}"), 3, 30, || {
+            dense.run_with(&mut dctx, &feeds).unwrap();
+        });
+        let s = bench(&format!("planned_sparse/conv_s{pct}"), 3, 30, || {
+            sparse.run_with(&mut sctx, &feeds).unwrap();
+        });
+        dense_ns_at.insert(pct, d.median_ns());
+        sparse_ns_at.insert(pct, s.median_ns());
+        println!(
+            "  s={sparsity:.2}: interp/dense {:.1}x  interp/sparse {:.1}x  dense/sparse {:.2}x",
+            interp_ns / d.median_ns(),
+            interp_ns / s.median_ns(),
+            d.median_ns() / s.median_ns()
+        );
+        let mut row = Json::obj();
+        row.set("sparsity", Json::from(sparsity))
+            .set("interp_ns", Json::from(interp_ns))
+            .set("planned_dense_ns", Json::from(d.median_ns()))
+            .set("planned_sparse_ns", Json::from(s.median_ns()))
+            .set(
+                "speedup_dense_vs_interp",
+                Json::from(interp_ns / d.median_ns()),
+            )
+            .set(
+                "speedup_sparse_vs_interp",
+                Json::from(interp_ns / s.median_ns()),
+            )
+            .set(
+                "speedup_sparse_vs_dense",
+                Json::from(d.median_ns() / s.median_ns()),
+            );
+        rows.push(row);
+    }
+
+    let sparse_5x_at_80 = interp_ns / sparse_ns_at[&80] >= 5.0;
+    let sparse_beats_dense_at_70 = sparse_ns_at[&70] < dense_ns_at[&70];
+    let mut acceptance = Json::obj();
+    acceptance
+        .set(
+            "speedup_sparse_vs_interp_at_0.8",
+            Json::from(interp_ns / sparse_ns_at[&80]),
+        )
+        .set("sparse_ge_5x_interp_at_0.8", Json::from(sparse_5x_at_80))
+        .set(
+            "sparse_beats_dense_at_0.7",
+            Json::from(sparse_beats_dense_at_70),
+        );
+    let mut root = Json::obj();
+    root.set("bench", Json::from("exec_engine/resnet50_conv_layer"))
+        .set(
+            "layer",
+            Json::from_pairs(vec![
+                ("kh", Json::from(K)),
+                ("kw", Json::from(K)),
+                ("ci", Json::from(CI)),
+                ("co", Json::from(CO)),
+                ("h", Json::from(H)),
+                ("w", Json::from(H)),
+                ("macs_dense", Json::from(H * H * K * K * CI * CO)),
+            ]),
+        )
+        .set("results", rows)
+        .set("acceptance", acceptance);
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_exec.json");
+    std::fs::write(&out, root.pretty()).expect("writing BENCH_exec.json");
+    println!(
+        "\nwrote {} (sparse>=5x interp @0.8: {}, sparse beats dense @0.7: {})",
+        out.display(),
+        sparse_5x_at_80,
+        sparse_beats_dense_at_70
+    );
+}

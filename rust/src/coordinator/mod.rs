@@ -2,12 +2,13 @@
 //!
 //! The host side of HPIPE: client threads submit images over a queue
 //! (the PCIe analog), the coordinator drains the queue through the
-//! dynamic batcher, executes the AOT-compiled model on the PJRT runtime
-//! — Python never runs here — and returns classifications with latency
-//! accounting. `serve_demo` is the end-to-end driver used by
-//! `hpipe serve`, `examples/serve_batch.rs` and the e2e bench; it also
-//! cross-validates the PJRT results against the Rust reference
-//! interpreter on the same trained graphdef.
+//! dynamic batcher, executes the compiled [`crate::exec::ExecutionPlan`]
+//! through the runtime — no interpreter anywhere near the hot path —
+//! and returns classifications with latency accounting. `serve_demo` is
+//! the end-to-end driver used by `hpipe serve`,
+//! `examples/serve_batch.rs` and the e2e bench; it also cross-validates
+//! the executor's results against the Rust reference interpreter (the
+//! correctness oracle) on the same graphdef.
 
 pub mod batcher;
 pub mod metrics;
@@ -15,8 +16,8 @@ pub mod metrics;
 use crate::graph::graphdef;
 use crate::interp;
 use crate::runtime::Runtime;
+use crate::util::error::{Context, Result};
 use crate::util::Rng;
-use anyhow::{Context, Result};
 use batcher::{next_batch, BatchPolicy};
 use metrics::{LatencyStats, ServeReport};
 use std::path::Path;
@@ -50,9 +51,9 @@ impl ClassResult {
     }
 }
 
-/// The serving loop: owns the runtime (PJRT handles are not Send, so the
-/// coordinator runs on the thread that created it; clients talk to it
-/// through channels).
+/// The serving loop: owns the runtime (execution contexts are
+/// single-threaded by design, so the coordinator runs on the thread that
+/// created it; clients talk to it through channels).
 pub struct Coordinator {
     pub runtime: Runtime,
     pub policy: BatchPolicy,
@@ -133,11 +134,11 @@ impl Coordinator {
 }
 
 /// End-to-end serving demo (the mandated E2E driver):
-/// 1. load the trained TinyCNN artifacts (HLO + graphdef),
+/// 1. load the TinyCNN graphdef artifacts and compile execution plans,
 /// 2. spawn a client thread that submits `n_requests` synthetic images,
-/// 3. serve them through the batcher + PJRT executable,
-/// 4. cross-check every classification against the Rust reference
-///    interpreter running the same trained graphdef.
+/// 3. serve them through the batcher + compiled executor,
+/// 4. cross-check classifications against the Rust reference
+///    interpreter running the same graphdef.
 pub fn serve_demo(artifacts_dir: &Path, n_requests: usize, max_batch: usize) -> Result<ServeReport> {
     let mut runtime = Runtime::cpu(artifacts_dir)?;
     let loaded = runtime.load_manifest()?;
@@ -151,7 +152,7 @@ pub fn serve_demo(artifacts_dir: &Path, n_requests: usize, max_batch: usize) -> 
         .context("loading tinycnn graphdef")?;
     let input_shape = match &graph.get("input").context("input node")?.op {
         crate::graph::Op::Placeholder { shape } => shape.clone(),
-        _ => anyhow::bail!("input is not a placeholder"),
+        _ => crate::bail!("input is not a placeholder"),
     };
     let per_image: usize = input_shape.iter().product();
 
@@ -199,7 +200,7 @@ pub fn serve_demo(artifacts_dir: &Path, n_requests: usize, max_batch: usize) -> 
             "input".to_string(),
             crate::graph::Tensor::from_vec(&input_shape, inputs[r.id as usize].clone()),
         );
-        let outs = interp::run_outputs(&graph, &feeds).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let outs = interp::run_outputs(&graph, &feeds)?;
         if interp::argmax(&outs[0])[0] == r.argmax() {
             agree += 1;
         }

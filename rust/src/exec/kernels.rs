@@ -1,0 +1,391 @@
+//! Dense slice-level kernels for the compiled executor.
+//!
+//! Every kernel writes *all* elements of its output slice (the arena
+//! reuses buffers across nodes, so stale data must never survive) and
+//! takes preallocated scratch where it needs any — no allocation happens
+//! inside a kernel. Convolutions go through im2col + a k-blocked GEMM so
+//! the inner loop is a contiguous axpy the compiler can vectorize; the
+//! (kh, kw, ci) patch layout matches the HWIO weight layout, making the
+//! weight tensor directly usable as the GEMM B matrix.
+
+use crate::graph::{Padding, Tensor};
+
+/// Activation fused into a producing kernel (Conv/MatMul/affine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Relu6,
+}
+
+impl Act {
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Act::None => v,
+            Act::Relu => v.max(0.0),
+            Act::Relu6 => v.clamp(0.0, 6.0),
+        }
+    }
+
+    /// Apply in place over a slice (no-op for `Act::None`).
+    #[inline]
+    pub fn apply_slice(self, xs: &mut [f32]) {
+        match self {
+            Act::None => {}
+            Act::Relu => {
+                for v in xs.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            Act::Relu6 => {
+                for v in xs.iter_mut() {
+                    *v = v.clamp(0.0, 6.0);
+                }
+            }
+        }
+    }
+}
+
+/// Pre-resolved geometry of a convolution / pooling window over an NHWC
+/// activation (batch 1, as everywhere in the pipeline).
+#[derive(Clone, Debug)]
+pub struct ConvGeom {
+    pub h: usize,
+    pub w: usize,
+    pub ci: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub co: usize,
+    pub stride: (usize, usize),
+    /// Resolved (top, bottom, left, right) padding.
+    pub pad: (usize, usize, usize, usize),
+    pub ho: usize,
+    pub wo: usize,
+}
+
+impl ConvGeom {
+    pub fn new(
+        x_shape: &[usize],
+        kh: usize,
+        kw: usize,
+        co: usize,
+        stride: (usize, usize),
+        padding: Padding,
+    ) -> ConvGeom {
+        let (h, w, ci) = (x_shape[1], x_shape[2], x_shape[3]);
+        let pad = padding.resolve(h, w, kh, kw, stride.0, stride.1);
+        let ho = (h + pad.0 + pad.1 - kh) / stride.0 + 1;
+        let wo = (w + pad.2 + pad.3 - kw) / stride.1 + 1;
+        ConvGeom { h, w, ci, kh, kw, co, stride, pad, ho, wo }
+    }
+
+    /// GEMM K dimension: one im2col patch.
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.ci
+    }
+
+    /// GEMM M dimension: output spatial positions.
+    pub fn out_positions(&self) -> usize {
+        self.ho * self.wo
+    }
+
+    /// True when the input itself is a valid im2col matrix (1x1 kernel,
+    /// unit stride, no padding) and the copy can be skipped.
+    pub fn identity_patches(&self) -> bool {
+        self.kh == 1
+            && self.kw == 1
+            && self.stride == (1, 1)
+            && self.pad == (0, 0, 0, 0)
+    }
+}
+
+/// Fill `patches` (row-major [M, K], K = kh*kw*ci) with im2col patches of
+/// `x`. Padding positions become zero.
+pub fn im2col(x: &[f32], g: &ConvGeom, patches: &mut [f32]) {
+    let k = g.patch_len();
+    let m = g.out_positions();
+    patches[..m * k].fill(0.0);
+    let (sh, sw) = g.stride;
+    let (pt, _, pl, _) = g.pad;
+    for oy in 0..g.ho {
+        for ky in 0..g.kh {
+            let iy = (oy * sh + ky) as isize - pt as isize;
+            if iy < 0 || iy >= g.h as isize {
+                continue;
+            }
+            let iy = iy as usize;
+            for ox in 0..g.wo {
+                let row = &mut patches[(oy * g.wo + ox) * k..][..k];
+                for kx in 0..g.kw {
+                    let ix = (ox * sw + kx) as isize - pl as isize;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    let src = &x[(iy * g.w + ix as usize) * g.ci..][..g.ci];
+                    row[(ky * g.kw + kx) * g.ci..][..g.ci].copy_from_slice(src);
+                }
+            }
+        }
+    }
+}
+
+/// im2col transposed: `patches_t` is K-major ([K, M]) so each patch *row*
+/// k = (ky*kw + kx)*ci + ic is contiguous over the M output positions —
+/// the layout the sparse kernel axpys over (see `exec::sparse`).
+pub fn im2col_t(x: &[f32], g: &ConvGeom, patches_t: &mut [f32]) {
+    let m = g.out_positions();
+    patches_t[..g.patch_len() * m].fill(0.0);
+    let (sh, sw) = g.stride;
+    let (pt, _, pl, _) = g.pad;
+    for ky in 0..g.kh {
+        for kx in 0..g.kw {
+            for ic in 0..g.ci {
+                let k = (ky * g.kw + kx) * g.ci + ic;
+                let row = &mut patches_t[k * m..][..m];
+                for oy in 0..g.ho {
+                    let iy = (oy * sh + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    let iy = iy as usize;
+                    for ox in 0..g.wo {
+                        let ix = (ox * sw + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        row[oy * g.wo + ox] = x[(iy * g.w + ix as usize) * g.ci + ic];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// k-blocked GEMM: out[M, N] = a[M, K] · b[K, N], with `out` initialized
+/// from the per-column bias (or zero) and `act` applied at the end. The
+/// inner loop is a contiguous axpy over a row of `b`; blocking over K
+/// keeps the active slice of `b` hot across all M rows.
+pub fn gemm_bias_act(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k_dim: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    const KC: usize = 64;
+    match bias {
+        Some(bv) => {
+            for i in 0..m {
+                out[i * n..][..n].copy_from_slice(bv);
+            }
+        }
+        None => out[..m * n].fill(0.0),
+    }
+    let mut k0 = 0;
+    while k0 < k_dim {
+        let k1 = (k0 + KC).min(k_dim);
+        for i in 0..m {
+            let arow = &a[i * k_dim..][..k_dim];
+            let orow = &mut out[i * n..][..n];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..][..n];
+                for (o, &bb) in orow.iter_mut().zip(brow) {
+                    *o += av * bb;
+                }
+            }
+        }
+        k0 = k1;
+    }
+    act.apply_slice(&mut out[..m * n]);
+}
+
+/// Dense Conv2D (+ fused bias / activation): im2col into `scratch`, then
+/// GEMM against the HWIO weights. 1x1/stride-1/no-pad convs skip the
+/// im2col copy and GEMM directly over the input.
+pub fn conv2d_dense(
+    x: &[f32],
+    g: &ConvGeom,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    act: Act,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let m = g.out_positions();
+    let k = g.patch_len();
+    if g.identity_patches() {
+        gemm_bias_act(x, w.as_slice(), m, k, g.co, bias, act, out);
+    } else {
+        im2col(x, g, scratch);
+        gemm_bias_act(scratch, w.as_slice(), m, k, g.co, bias, act, out);
+    }
+}
+
+/// Dense depthwise conv (+ fused bias / activation). `mult` is the
+/// channel multiplier (weights are [kh, kw, ci, mult]).
+pub fn depthwise_dense(
+    x: &[f32],
+    g: &ConvGeom,
+    mult: usize,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    let (sh, sw) = g.stride;
+    let (pt, _, pl, _) = g.pad;
+    let co = g.ci * mult;
+    for oy in 0..g.ho {
+        for ox in 0..g.wo {
+            let orow = &mut out[(oy * g.wo + ox) * co..][..co];
+            for ic in 0..g.ci {
+                for im in 0..mult {
+                    let mut acc = match bias {
+                        Some(b) => b[ic * mult + im],
+                        None => 0.0,
+                    };
+                    for ky in 0..g.kh {
+                        let iy = (oy * sh + ky) as isize - pt as isize;
+                        if iy < 0 || iy >= g.h as isize {
+                            continue;
+                        }
+                        for kx in 0..g.kw {
+                            let ix = (ox * sw + kx) as isize - pl as isize;
+                            if ix < 0 || ix >= g.w as isize {
+                                continue;
+                            }
+                            acc += x[((iy as usize) * g.w + ix as usize) * g.ci + ic]
+                                * w.data[((ky * g.kw + kx) * g.ci + ic) * mult + im];
+                        }
+                    }
+                    orow[ic * mult + im] = act.apply(acc);
+                }
+            }
+        }
+    }
+}
+
+/// MaxPool over NHWC (geom.co == geom.ci == channels).
+pub fn max_pool(x: &[f32], g: &ConvGeom, out: &mut [f32]) {
+    let (sh, sw) = g.stride;
+    let (pt, _, pl, _) = g.pad;
+    let c = g.ci;
+    for oy in 0..g.ho {
+        for ox in 0..g.wo {
+            let orow = &mut out[(oy * g.wo + ox) * c..][..c];
+            orow.fill(f32::NEG_INFINITY);
+            for ky in 0..g.kh {
+                let iy = (oy * sh + ky) as isize - pt as isize;
+                if iy < 0 || iy >= g.h as isize {
+                    continue;
+                }
+                for kx in 0..g.kw {
+                    let ix = (ox * sw + kx) as isize - pl as isize;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    let xrow = &x[((iy as usize) * g.w + ix as usize) * c..][..c];
+                    for (o, &v) in orow.iter_mut().zip(xrow) {
+                        if v > *o {
+                            *o = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-channel affine over the last dim: out[i] = act(x[i]*a[c] + b[c]).
+/// Covers BiasAdd (a = None), Mul (b = None), AddC, and the folded
+/// FusedBatchNorm (both Some).
+pub fn affine(
+    x: &[f32],
+    ch: usize,
+    a: Option<&[f32]>,
+    b: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    for (i, (o, &v)) in out.iter_mut().zip(x).enumerate() {
+        let c = i % ch;
+        let mut y = v;
+        if let Some(av) = a {
+            y *= av[c];
+        }
+        if let Some(bv) = b {
+            y += bv[c];
+        }
+        *o = act.apply(y);
+    }
+}
+
+/// Elementwise unary activation into `out`.
+pub fn unary(x: &[f32], act: Act, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = act.apply(v);
+    }
+}
+
+/// Elementwise residual add.
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+/// Global average pool NHWC -> [1, C] (f64 accumulation, matching the
+/// reference interpreter bit-for-bit in the common case).
+pub fn global_mean(x: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
+    for ch in 0..c {
+        let mut s = 0f64;
+        for p in 0..h * w {
+            s += x[p * c + ch] as f64;
+        }
+        out[ch] = (s / (h * w) as f64) as f32;
+    }
+}
+
+/// Spatial zero-pad NHWC.
+pub fn pad(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    pads: (usize, usize, usize, usize),
+    out: &mut [f32],
+) {
+    let (t, b, l, r) = pads;
+    let (ho, wo) = (h + t + b, w + l + r);
+    out[..ho * wo * c].fill(0.0);
+    for y in 0..h {
+        let src = &x[y * w * c..][..w * c];
+        let dst = &mut out[((y + t) * wo + l) * c..][..w * c];
+        dst.copy_from_slice(src);
+    }
+}
+
+/// Row softmax over an [N, C] tensor.
+pub fn softmax(x: &[f32], n: usize, c: usize, out: &mut [f32]) {
+    for i in 0..n {
+        let src = &x[i * c..][..c];
+        let dst = &mut out[i * c..][..c];
+        let m = src.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0f32;
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = (v - m).exp();
+            sum += *d;
+        }
+        for d in dst.iter_mut() {
+            *d /= sum;
+        }
+    }
+}

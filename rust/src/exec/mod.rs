@@ -1,0 +1,987 @@
+//! Compiled execution engine — the software hot path.
+//!
+//! HPIPE's central argument (§III) is that *specializing compute per
+//! layer ahead of time* — custom-tailored units plus zero-skipping over
+//! RLE weight streams — beats generic one-op-at-a-time processing. This
+//! module is that principle applied to the software reproduction's own
+//! hot path: an [`ExecutionPlan`] is built **once** per graph and then
+//! executed per image with none of the interpreter's per-run costs.
+//!
+//! What building a plan does:
+//!
+//! * resolves topological order and **pre-binds every operand to a
+//!   buffer slot index** — no `BTreeMap<String, Tensor>` lookups and no
+//!   per-node output clones at runtime;
+//! * **folds constants**: any node whose inputs are all constants is
+//!   evaluated at build time with the reference-interpreter kernels;
+//! * **fuses** `Conv2D`/`DepthwiseConv2d`/`MatMul` → `BiasAdd` → `Relu`/
+//!   `Relu6` chains into single steps (bias-initialized accumulators,
+//!   activation applied on writeback);
+//! * selects a **specialized kernel per node**: im2col + k-blocked GEMM
+//!   for dense convolutions ([`kernels`]), and an RLE-stream-walking
+//!   sparse kernel ([`sparse`]) for weights at or above the sparsity
+//!   threshold — the software analog of the paper's zero-skipping PEs;
+//! * assigns outputs to a **buffer arena** with liveness-based reuse, so
+//!   steady-state serving performs zero heap allocations per image
+//!   (feeds are copied into their slots; everything else is overwritten
+//!   in place across runs via [`ExecutionPlan::run_with`]).
+//!
+//! Role split: [`crate::interp`] stays the *correctness oracle* — naive,
+//! obviously-right loops that transform passes and this executor are
+//! checked against (`rust/tests/exec_equiv.rs` asserts bit-close
+//! equivalence on randomized graphs across sparsity levels). The
+//! executor is the *serving path*: `runtime::LoadedModel`, the
+//! coordinator and the benches all run through plans.
+
+pub mod kernels;
+pub mod sparse;
+
+pub use kernels::{Act, ConvGeom};
+
+use crate::graph::{Graph, GraphError, Op, Tensor};
+use crate::sparsity::rle::{encode_conv, encode_matmul, ConvRle};
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// Knobs for plan construction.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    /// Use the RLE sparse kernel for Conv2D/MatMul weights whose zero
+    /// fraction is at least this value. `> 1.0` forces dense; `0.0`
+    /// forces sparse everywhere.
+    pub sparse_threshold: f64,
+    /// Fuse Conv/MatMul → BiasAdd → Relu/Relu6 chains into single steps.
+    pub fuse: bool,
+    /// `n_channel_splits` used when encoding RLE streams. Software
+    /// execution is serial, so 1 (no lockstep padding) is the fastest
+    /// choice; higher values mirror the hardware encoding.
+    pub splits: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions {
+            sparse_threshold: 0.5,
+            fuse: true,
+            splits: 1,
+        }
+    }
+}
+
+impl PlanOptions {
+    /// Never use the sparse kernel (baseline for ablations).
+    pub fn dense_only() -> PlanOptions {
+        PlanOptions {
+            sparse_threshold: 2.0,
+            ..Default::default()
+        }
+    }
+
+    /// Always use the sparse kernel for Conv2D/MatMul.
+    pub fn sparse_always() -> PlanOptions {
+        PlanOptions {
+            sparse_threshold: 0.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// A pre-resolved operand: either a build-time constant or an arena slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Src {
+    Const(usize),
+    Slot(usize),
+}
+
+/// One executable step (a graph node, possibly with fused followers).
+struct Step {
+    /// Graph node name (of the fused chain's last node) — diagnostics.
+    name: String,
+    out: usize,
+    inputs: Vec<Src>,
+    kind: StepKind,
+}
+
+enum StepKind {
+    DenseConv {
+        geom: ConvGeom,
+        w: usize,
+        bias: Option<usize>,
+        act: Act,
+    },
+    SparseConv {
+        geom: ConvGeom,
+        rle: ConvRle,
+        bias: Option<usize>,
+        act: Act,
+    },
+    Depthwise {
+        geom: ConvGeom,
+        mult: usize,
+        w: usize,
+        bias: Option<usize>,
+        act: Act,
+    },
+    DenseMatMul {
+        n: usize,
+        k: usize,
+        co: usize,
+        w: usize,
+        bias: Option<usize>,
+        act: Act,
+    },
+    SparseMatMul {
+        n: usize,
+        k: usize,
+        co: usize,
+        rle: ConvRle,
+        bias: Option<usize>,
+        act: Act,
+    },
+    MaxPool {
+        geom: ConvGeom,
+    },
+    /// Per-channel affine (BiasAdd / Mul / AddC / folded FusedBatchNorm).
+    Affine {
+        ch: usize,
+        a: Option<Vec<f32>>,
+        b: Option<Vec<f32>>,
+        act: Act,
+    },
+    Add,
+    Unary {
+        act: Act,
+    },
+    Mean {
+        h: usize,
+        w: usize,
+        c: usize,
+    },
+    Pad {
+        h: usize,
+        w: usize,
+        c: usize,
+        pads: (usize, usize, usize, usize),
+    },
+    Softmax {
+        n: usize,
+        c: usize,
+    },
+}
+
+/// Summary counters exposed for tests / benches / reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    pub steps: usize,
+    pub dense_convs: usize,
+    pub sparse_convs: usize,
+    pub dense_matmuls: usize,
+    pub sparse_matmuls: usize,
+    pub fused_chains: usize,
+    pub folded_consts: usize,
+    /// f32 elements across all arena slots (reused buffers counted once).
+    pub arena_f32: usize,
+    pub scratch_f32: usize,
+}
+
+/// A compiled, reusable execution plan for one graph.
+pub struct ExecutionPlan {
+    steps: Vec<Step>,
+    consts: Vec<Tensor>,
+    slot_lens: Vec<usize>,
+    scratch_len: usize,
+    acc_len: usize,
+    /// (placeholder name, slot, expected shape).
+    feeds: Vec<(String, usize, Vec<usize>)>,
+    outputs: Vec<(Src, Vec<usize>)>,
+    stats: PlanStats,
+}
+
+/// Reusable per-run buffers: the arena slots plus kernel scratch. Create
+/// once with [`ExecutionPlan::new_context`]; every subsequent
+/// [`ExecutionPlan::run_with`] is allocation-free.
+pub struct ExecContext {
+    slots: Vec<Vec<f32>>,
+    scratch: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+impl ExecutionPlan {
+    /// Build a plan with default options.
+    pub fn build(graph: &Graph) -> Result<ExecutionPlan, GraphError> {
+        ExecutionPlan::build_with(graph, &PlanOptions::default())
+    }
+
+    /// Build a plan. Fails on structural errors and on graphs whose
+    /// compute-op weights / per-channel parameters are not constants
+    /// (the interpreter remains the general-purpose fallback for those).
+    pub fn build_with(graph: &Graph, opts: &PlanOptions) -> Result<ExecutionPlan, GraphError> {
+        let order = graph.topo_order()?;
+        let shapes = graph.infer_shapes()?;
+        let mut stats = PlanStats::default();
+
+        // ---- constants + constant folding ----
+        let mut consts: Vec<Tensor> = Vec::new();
+        let mut const_idx: HashMap<String, usize> = HashMap::new();
+        for &i in &order {
+            let n = &graph.nodes[i];
+            match &n.op {
+                Op::Const => {
+                    let v = n.value.clone().ok_or_else(|| {
+                        GraphError::Invalid(n.name.clone(), "Const without value".into())
+                    })?;
+                    const_idx.insert(n.name.clone(), consts.len());
+                    consts.push(v);
+                }
+                Op::Placeholder { .. } => {}
+                op => {
+                    if !n.inputs.is_empty()
+                        && n.inputs.iter().all(|s| const_idx.contains_key(s))
+                    {
+                        let ins: Vec<&Tensor> =
+                            n.inputs.iter().map(|s| &consts[const_idx[s]]).collect();
+                        if let Some(v) = fold_node(op, &ins) {
+                            const_idx.insert(n.name.clone(), consts.len());
+                            consts.push(v);
+                            stats.folded_consts += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- fusion scan ----
+        let consumers = graph.consumers();
+        let output_set: HashSet<&String> = graph.outputs.iter().collect();
+        fn single_consumer<'a>(
+            consumers: &'a HashMap<String, Vec<String>>,
+            name: &str,
+        ) -> Option<&'a String> {
+            match consumers.get(name).map(|v| v.as_slice()) {
+                Some([only]) => Some(only),
+                _ => None,
+            }
+        }
+        // intermediate node -> head; head -> (bias const name, act, tail)
+        let mut absorbed: HashSet<String> = HashSet::new();
+        let mut chains: HashMap<String, (Option<String>, Act, String)> = HashMap::new();
+        if opts.fuse {
+            for &i in &order {
+                let n = &graph.nodes[i];
+                if !n.op.is_compute() || const_idx.contains_key(&n.name) {
+                    continue;
+                }
+                let mut tail = n.name.clone();
+                let mut bias: Option<String> = None;
+                let mut act = Act::None;
+                let mut members: Vec<String> = Vec::new();
+                if !output_set.contains(&tail) {
+                    if let Some(c) = single_consumer(&consumers, &tail) {
+                        let cn = graph.get(c).unwrap();
+                        if matches!(cn.op, Op::BiasAdd)
+                            && cn.inputs[0] == tail
+                            && const_idx.contains_key(&cn.inputs[1])
+                        {
+                            bias = Some(cn.inputs[1].clone());
+                            tail = c.clone();
+                            members.push(c.clone());
+                        }
+                    }
+                }
+                if !output_set.contains(&tail) {
+                    if let Some(r) = single_consumer(&consumers, &tail) {
+                        let rn = graph.get(r).unwrap();
+                        let a = match rn.op {
+                            Op::Relu => Some(Act::Relu),
+                            Op::Relu6 => Some(Act::Relu6),
+                            _ => None,
+                        };
+                        if let Some(a) = a {
+                            act = a;
+                            tail = r.clone();
+                            members.push(r.clone());
+                        }
+                    }
+                }
+                if tail != n.name {
+                    stats.fused_chains += 1;
+                    absorbed.extend(members);
+                    chains.insert(n.name.clone(), (bias, act, tail));
+                }
+            }
+        }
+
+        // ---- emit proto steps ----
+        struct Proto {
+            name: String,
+            out_name: String,
+            out_shape: Vec<usize>,
+            input_names: Vec<String>,
+            kind: StepKind,
+        }
+        let invalid = |n: &str, m: &str| GraphError::Invalid(n.to_string(), m.to_string());
+        let want_const = |const_idx: &HashMap<String, usize>,
+                          node: &str,
+                          input: &str|
+         -> Result<usize, GraphError> {
+            const_idx.get(input).copied().ok_or_else(|| {
+                invalid(node, &format!("exec plan requires constant input '{input}'"))
+            })
+        };
+
+        let mut protos: Vec<Proto> = Vec::new();
+        let mut feeds: Vec<(String, usize, Vec<usize>)> = Vec::new();
+        let mut placeholder_names: Vec<String> = Vec::new();
+        for &i in &order {
+            let n = &graph.nodes[i];
+            if const_idx.contains_key(&n.name) || absorbed.contains(&n.name) {
+                continue;
+            }
+            if let Op::Placeholder { .. } = n.op {
+                placeholder_names.push(n.name.clone());
+                continue;
+            }
+            let x_shape = |k: usize| -> Result<&Vec<usize>, GraphError> {
+                let name = n.inputs.get(k).ok_or_else(|| {
+                    invalid(&n.name, &format!("missing input {k}"))
+                })?;
+                shapes
+                    .get(name)
+                    .ok_or_else(|| GraphError::UnknownInput(n.name.clone(), name.clone()))
+            };
+            // Fused chain info (compute heads only).
+            let (fused_bias, fused_act, tail) = match chains.get(&n.name) {
+                Some((b, a, t)) => (b.clone(), *a, t.clone()),
+                None => (None, Act::None, n.name.clone()),
+            };
+            let bias_idx = match &fused_bias {
+                Some(bn) => Some(want_const(&const_idx, &n.name, bn)?),
+                None => None,
+            };
+            let out_shape = shapes[&tail].clone();
+            let kind = match &n.op {
+                Op::Conv2D { stride, padding } => {
+                    let widx = want_const(&const_idx, &n.name, &n.inputs[1])?;
+                    let w = &consts[widx];
+                    let geom = ConvGeom::new(
+                        x_shape(0)?,
+                        w.shape[0],
+                        w.shape[1],
+                        w.shape[3],
+                        *stride,
+                        *padding,
+                    );
+                    if w.sparsity() >= opts.sparse_threshold {
+                        stats.sparse_convs += 1;
+                        StepKind::SparseConv {
+                            geom,
+                            rle: encode_conv(w, opts.splits),
+                            bias: bias_idx,
+                            act: fused_act,
+                        }
+                    } else {
+                        stats.dense_convs += 1;
+                        StepKind::DenseConv { geom, w: widx, bias: bias_idx, act: fused_act }
+                    }
+                }
+                Op::DepthwiseConv2d { stride, padding } => {
+                    let widx = want_const(&const_idx, &n.name, &n.inputs[1])?;
+                    let w = &consts[widx];
+                    let mult = w.shape[3];
+                    let geom = ConvGeom::new(
+                        x_shape(0)?,
+                        w.shape[0],
+                        w.shape[1],
+                        w.shape[2] * mult,
+                        *stride,
+                        *padding,
+                    );
+                    StepKind::Depthwise { geom, mult, w: widx, bias: bias_idx, act: fused_act }
+                }
+                Op::MatMul => {
+                    let widx = want_const(&const_idx, &n.name, &n.inputs[1])?;
+                    let w = &consts[widx];
+                    let xs = x_shape(0)?;
+                    let (nrows, k, co) = (xs[0], w.shape[0], w.shape[1]);
+                    if w.sparsity() >= opts.sparse_threshold {
+                        stats.sparse_matmuls += 1;
+                        StepKind::SparseMatMul {
+                            n: nrows,
+                            k,
+                            co,
+                            rle: encode_matmul(w, opts.splits),
+                            bias: bias_idx,
+                            act: fused_act,
+                        }
+                    } else {
+                        stats.dense_matmuls += 1;
+                        StepKind::DenseMatMul {
+                            n: nrows,
+                            k,
+                            co,
+                            w: widx,
+                            bias: bias_idx,
+                            act: fused_act,
+                        }
+                    }
+                }
+                Op::MaxPool { ksize, stride, padding } => {
+                    let xs = x_shape(0)?;
+                    let geom =
+                        ConvGeom::new(xs, ksize.0, ksize.1, xs[3], *stride, *padding);
+                    StepKind::MaxPool { geom }
+                }
+                Op::BiasAdd => {
+                    let bidx = want_const(&const_idx, &n.name, &n.inputs[1])?;
+                    let b = consts[bidx].data.clone();
+                    StepKind::Affine { ch: b.len(), a: None, b: Some(b), act: Act::None }
+                }
+                Op::Mul => {
+                    let aidx = want_const(&const_idx, &n.name, &n.inputs[1])?;
+                    let a = consts[aidx].data.clone();
+                    StepKind::Affine { ch: a.len(), a: Some(a), b: None, act: Act::None }
+                }
+                Op::AddC => {
+                    let bidx = want_const(&const_idx, &n.name, &n.inputs[1])?;
+                    let b = consts[bidx].data.clone();
+                    StepKind::Affine { ch: b.len(), a: None, b: Some(b), act: Act::None }
+                }
+                Op::FusedBatchNorm { epsilon } => {
+                    // Fold the four parameter vectors into one affine at
+                    // build time: a = γ/√(σ²+ε), b = β − μ·a.
+                    let p = |k: usize| -> Result<&Tensor, GraphError> {
+                        Ok(&consts[want_const(&const_idx, &n.name, &n.inputs[k])?])
+                    };
+                    let (scale, offset, mean, var) = (p(1)?, p(2)?, p(3)?, p(4)?);
+                    let a: Vec<f32> = scale
+                        .data
+                        .iter()
+                        .zip(&var.data)
+                        .map(|(&s, &v)| s / (v + epsilon).sqrt())
+                        .collect();
+                    let b: Vec<f32> = offset
+                        .data
+                        .iter()
+                        .zip(mean.data.iter().zip(&a))
+                        .map(|(&o, (&m, &av))| o - m * av)
+                        .collect();
+                    StepKind::Affine { ch: a.len(), a: Some(a), b: Some(b), act: Act::None }
+                }
+                Op::Relu => StepKind::Unary { act: Act::Relu },
+                Op::Relu6 => StepKind::Unary { act: Act::Relu6 },
+                Op::Add => StepKind::Add,
+                Op::Mean => {
+                    let xs = x_shape(0)?;
+                    // The whole pipeline is batch-1 (like the interp
+                    // oracle, whose global_mean reads batch 0 only); a
+                    // larger batch would under-fill the reused slot.
+                    if xs[0] != 1 {
+                        return Err(invalid(&n.name, "Mean expects batch dim 1"));
+                    }
+                    StepKind::Mean { h: xs[1], w: xs[2], c: xs[3] }
+                }
+                Op::Pad { pads } => {
+                    let xs = x_shape(0)?;
+                    StepKind::Pad { h: xs[1], w: xs[2], c: xs[3], pads: *pads }
+                }
+                Op::Softmax => {
+                    let xs = x_shape(0)?;
+                    if xs.len() != 2 {
+                        return Err(invalid(&n.name, "Softmax expects an [N, C] input"));
+                    }
+                    StepKind::Softmax { n: xs[0], c: xs[1] }
+                }
+                Op::Placeholder { .. } | Op::Const => unreachable!(),
+            };
+            let input_names: Vec<String> = match kind {
+                StepKind::Add => vec![n.inputs[0].clone(), n.inputs[1].clone()],
+                _ => vec![n.inputs[0].clone()],
+            };
+            protos.push(Proto {
+                name: tail.clone(),
+                out_name: tail,
+                out_shape,
+                input_names,
+                kind,
+            });
+        }
+
+        // ---- liveness + arena slot assignment ----
+        let mut last_use: HashMap<String, usize> = HashMap::new();
+        for (si, p) in protos.iter().enumerate() {
+            for inp in &p.input_names {
+                if !const_idx.contains_key(inp) {
+                    last_use.insert(inp.clone(), si);
+                }
+            }
+        }
+        fn alloc(
+            len: usize,
+            slot_lens: &mut Vec<usize>,
+            free: &mut HashMap<usize, Vec<usize>>,
+        ) -> usize {
+            if let Some(list) = free.get_mut(&len) {
+                if let Some(s) = list.pop() {
+                    return s;
+                }
+            }
+            slot_lens.push(len);
+            slot_lens.len() - 1
+        }
+        let mut slot_lens: Vec<usize> = Vec::new();
+        let mut free: HashMap<usize, Vec<usize>> = HashMap::new();
+        let mut slot_of: HashMap<String, usize> = HashMap::new();
+        for name in &placeholder_names {
+            let shape = shapes[name].clone();
+            let len = shape.iter().product();
+            let slot = alloc(len, &mut slot_lens, &mut free);
+            slot_of.insert(name.clone(), slot);
+            feeds.push((name.clone(), slot, shape));
+        }
+        let resolve = |name: &String,
+                       node: &str,
+                       slot_of: &HashMap<String, usize>|
+         -> Result<Src, GraphError> {
+            if let Some(&c) = const_idx.get(name) {
+                return Ok(Src::Const(c));
+            }
+            slot_of
+                .get(name)
+                .map(|&s| Src::Slot(s))
+                .ok_or_else(|| GraphError::UnknownInput(node.to_string(), name.clone()))
+        };
+        let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
+        for (si, p) in protos.into_iter().enumerate() {
+            let inputs = p
+                .input_names
+                .iter()
+                .map(|i| resolve(i, &p.name, &slot_of))
+                .collect::<Result<Vec<_>, _>>()?;
+            let out_len: usize = p.out_shape.iter().product();
+            let out = alloc(out_len, &mut slot_lens, &mut free);
+            slot_of.insert(p.out_name.clone(), out);
+            // Free inputs whose last read was this step (outputs stay).
+            let mut seen: Vec<&String> = Vec::new();
+            for inp in &p.input_names {
+                if last_use.get(inp) == Some(&si)
+                    && !output_set.contains(inp)
+                    && !seen.contains(&inp)
+                {
+                    seen.push(inp);
+                    if let Some(&s) = slot_of.get(inp) {
+                        free.entry(slot_lens[s]).or_default().push(s);
+                    }
+                }
+            }
+            steps.push(Step { name: p.name, out, inputs, kind: p.kind });
+        }
+
+        // ---- scratch sizing ----
+        let mut scratch_len = 0usize;
+        let mut acc_len = 0usize;
+        for s in &steps {
+            match &s.kind {
+                StepKind::DenseConv { geom, .. } if !geom.identity_patches() => {
+                    scratch_len = scratch_len.max(geom.patch_len() * geom.out_positions());
+                }
+                StepKind::SparseConv { geom, .. } => {
+                    scratch_len = scratch_len.max(geom.patch_len() * geom.out_positions());
+                    acc_len = acc_len.max(geom.out_positions());
+                }
+                _ => {}
+            }
+        }
+
+        // ---- outputs ----
+        let mut outputs = Vec::with_capacity(graph.outputs.len());
+        for name in &graph.outputs {
+            let src = resolve(name, "<outputs>", &slot_of)?;
+            let shape = shapes
+                .get(name)
+                .cloned()
+                .ok_or_else(|| GraphError::UnknownInput("<outputs>".into(), name.clone()))?;
+            outputs.push((src, shape));
+        }
+
+        stats.steps = steps.len();
+        stats.arena_f32 = slot_lens.iter().sum();
+        stats.scratch_f32 = scratch_len + acc_len;
+        Ok(ExecutionPlan {
+            steps,
+            consts,
+            slot_lens,
+            scratch_len,
+            acc_len,
+            feeds,
+            outputs,
+            stats,
+        })
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        self.stats
+    }
+
+    /// Allocate the per-run buffers once; reuse across runs for
+    /// allocation-free steady state.
+    pub fn new_context(&self) -> ExecContext {
+        ExecContext {
+            slots: self.slot_lens.iter().map(|&l| vec![0.0; l]).collect(),
+            scratch: vec![0.0; self.scratch_len],
+            acc: vec![0.0; self.acc_len],
+        }
+    }
+
+    /// Execute into a reusable context. Allocation-free after the first
+    /// call with a given context.
+    pub fn run_with(
+        &self,
+        ctx: &mut ExecContext,
+        feeds: &BTreeMap<String, Tensor>,
+    ) -> Result<(), GraphError> {
+        for (i, (name, _, shape)) in self.feeds.iter().enumerate() {
+            let t = feeds.get(name).ok_or_else(|| {
+                GraphError::Invalid(name.clone(), "missing feed".into())
+            })?;
+            if &t.shape != shape {
+                return Err(GraphError::Shape(
+                    name.clone(),
+                    format!("feed shape {:?} != {:?}", t.shape, shape),
+                ));
+            }
+            self.write_feed(ctx, i, &t.data)?;
+        }
+        self.execute_steps(ctx);
+        Ok(())
+    }
+
+    /// Number of placeholder feeds; `feed_name(i)` gives the i-th name.
+    pub fn num_feeds(&self) -> usize {
+        self.feeds.len()
+    }
+
+    pub fn feed_name(&self, i: usize) -> &str {
+        &self.feeds[i].0
+    }
+
+    /// Copy raw feed data straight into feed `i`'s arena slot — the
+    /// zero-allocation path for callers that already hold a flat slice
+    /// (length must match the placeholder's element count).
+    pub fn write_feed(
+        &self,
+        ctx: &mut ExecContext,
+        i: usize,
+        data: &[f32],
+    ) -> Result<(), GraphError> {
+        let (name, slot, shape) = &self.feeds[i];
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            return Err(GraphError::Shape(
+                name.clone(),
+                format!("feed length {} != shape {:?}", data.len(), shape),
+            ));
+        }
+        ctx.slots[*slot].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Run the plan's steps over whatever feed data is in the context
+    /// (see [`Self::write_feed`]).
+    pub fn execute_steps(&self, ctx: &mut ExecContext) {
+        for step in &self.steps {
+            self.exec_step(step, ctx);
+        }
+    }
+
+    /// Borrow output `i` (data slice, shape) from a context after
+    /// [`Self::run_with`].
+    pub fn output<'a>(&'a self, ctx: &'a ExecContext, i: usize) -> (&'a [f32], &'a [usize]) {
+        let (src, shape) = &self.outputs[i];
+        let data: &[f32] = match *src {
+            Src::Const(c) => &self.consts[c].data,
+            Src::Slot(s) => &ctx.slots[s],
+        };
+        (data, shape)
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Convenience one-shot run: returns the graph outputs as tensors
+    /// (matches `interp::run_outputs` output-for-output; the equivalence
+    /// property test in `rust/tests/exec_equiv.rs` relies on this).
+    pub fn run(&self, feeds: &BTreeMap<String, Tensor>) -> Result<Vec<Tensor>, GraphError> {
+        let mut ctx = self.new_context();
+        self.run_with(&mut ctx, feeds)?;
+        Ok((0..self.outputs.len())
+            .map(|i| {
+                let (data, shape) = self.output(&ctx, i);
+                Tensor::from_vec(shape, data.to_vec())
+            })
+            .collect())
+    }
+
+    fn exec_step(&self, step: &Step, ctx: &mut ExecContext) {
+        let ExecContext { slots, scratch, acc } = ctx;
+        let mut out = std::mem::take(&mut slots[step.out]);
+        {
+            let x = resolve_src(&self.consts, slots, step.inputs[0]);
+            let bias = |b: &Option<usize>| -> Option<&[f32]> {
+                b.map(|i| self.consts[i].as_slice())
+            };
+            match &step.kind {
+                StepKind::DenseConv { geom, w, bias: b, act } => {
+                    kernels::conv2d_dense(
+                        x,
+                        geom,
+                        &self.consts[*w],
+                        bias(b),
+                        *act,
+                        scratch,
+                        &mut out,
+                    );
+                }
+                StepKind::SparseConv { geom, rle, bias: b, act } => {
+                    sparse::sparse_conv(x, geom, rle, bias(b), *act, scratch, acc, &mut out);
+                }
+                StepKind::Depthwise { geom, mult, w, bias: b, act } => {
+                    kernels::depthwise_dense(
+                        x,
+                        geom,
+                        *mult,
+                        &self.consts[*w],
+                        bias(b),
+                        *act,
+                        &mut out,
+                    );
+                }
+                StepKind::DenseMatMul { n, k, co, w, bias: b, act } => {
+                    kernels::gemm_bias_act(
+                        x,
+                        self.consts[*w].as_slice(),
+                        *n,
+                        *k,
+                        *co,
+                        bias(b),
+                        *act,
+                        &mut out,
+                    );
+                }
+                StepKind::SparseMatMul { n, k, co, rle, bias: b, act } => {
+                    sparse::sparse_matmul(x, *n, *k, *co, rle, bias(b), *act, &mut out);
+                }
+                StepKind::MaxPool { geom } => kernels::max_pool(x, geom, &mut out),
+                StepKind::Affine { ch, a, b, act } => {
+                    kernels::affine(
+                        x,
+                        *ch,
+                        a.as_deref(),
+                        b.as_deref(),
+                        *act,
+                        &mut out,
+                    );
+                }
+                StepKind::Add => {
+                    let y = resolve_src(&self.consts, slots, step.inputs[1]);
+                    kernels::add(x, y, &mut out);
+                }
+                StepKind::Unary { act } => kernels::unary(x, *act, &mut out),
+                StepKind::Mean { h, w, c } => kernels::global_mean(x, *h, *w, *c, &mut out),
+                StepKind::Pad { h, w, c, pads } => {
+                    kernels::pad(x, *h, *w, *c, *pads, &mut out)
+                }
+                StepKind::Softmax { n, c } => kernels::softmax(x, *n, *c, &mut out),
+            }
+        }
+        slots[step.out] = out;
+    }
+
+    /// Names of executed steps in order (diagnostics / tests).
+    pub fn step_names(&self) -> Vec<&str> {
+        self.steps.iter().map(|s| s.name.as_str()).collect()
+    }
+}
+
+fn resolve_src<'a>(consts: &'a [Tensor], slots: &'a [Vec<f32>], s: Src) -> &'a [f32] {
+    match s {
+        Src::Const(i) => consts[i].as_slice(),
+        Src::Slot(i) => &slots[i],
+    }
+}
+
+/// Evaluate a node whose inputs are all constants, using the reference
+/// interpreter's kernels. `None` for ops that are never folded.
+fn fold_node(op: &Op, ins: &[&Tensor]) -> Option<Tensor> {
+    use crate::interp as k;
+    Some(match op {
+        Op::Conv2D { stride, padding } => k::conv2d(ins[0], ins[1], *stride, *padding),
+        Op::DepthwiseConv2d { stride, padding } => {
+            k::depthwise_conv2d(ins[0], ins[1], *stride, *padding)
+        }
+        Op::MatMul => k::matmul(ins[0], ins[1]),
+        Op::BiasAdd => k::bias_add(ins[0], ins[1]),
+        Op::MaxPool { ksize, stride, padding } => {
+            k::max_pool(ins[0], *ksize, *stride, *padding)
+        }
+        Op::Relu => k::map_unary(ins[0], |x| x.max(0.0)),
+        Op::Relu6 => k::map_unary(ins[0], |x| x.clamp(0.0, 6.0)),
+        Op::Add => k::zip_binary(ins[0], ins[1], |a, b| a + b),
+        Op::Mean => k::global_mean(ins[0]),
+        Op::FusedBatchNorm { epsilon } => {
+            k::batch_norm(ins[0], ins[1], ins[2], ins[3], ins[4], *epsilon)
+        }
+        Op::Pad { pads } => k::pad(ins[0], *pads),
+        Op::Mul => k::per_channel(ins[0], ins[1], |x, c| x * c),
+        Op::AddC => k::per_channel(ins[0], ins[1], |x, c| x + c),
+        Op::Softmax => k::softmax(ins[0]),
+        Op::Placeholder { .. } | Op::Const => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Padding, Tensor};
+    use crate::interp;
+    use crate::nets::{tiny_cnn, NetConfig};
+    use crate::sparsity::prune_graph;
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    fn feeds_for(g: &Graph, rng: &mut Rng) -> BTreeMap<String, Tensor> {
+        let mut feeds = BTreeMap::new();
+        for n in &g.nodes {
+            if let Op::Placeholder { shape } = &n.op {
+                feeds.insert(n.name.clone(), Tensor::randn(shape, rng, 1.0));
+            }
+        }
+        feeds
+    }
+
+    fn assert_matches_interp(g: &Graph, opts: &PlanOptions, seed: u64, tol: f32) {
+        let plan = ExecutionPlan::build_with(g, opts).unwrap();
+        let mut rng = Rng::new(seed);
+        let feeds = feeds_for(g, &mut rng);
+        let got = plan.run(&feeds).unwrap();
+        let want = interp::run_outputs(g, &feeds).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.shape, b.shape);
+            assert_close(&a.data, &b.data, tol, tol).unwrap();
+        }
+    }
+
+    #[test]
+    fn tiny_cnn_dense_matches_interp() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        assert_matches_interp(&g, &PlanOptions::dense_only(), 1, 1e-4);
+    }
+
+    #[test]
+    fn tiny_cnn_sparse_matches_interp() {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.8);
+        assert_matches_interp(&g, &PlanOptions::sparse_always(), 2, 1e-4);
+        // multi-split encoding executes identically
+        let opts = PlanOptions { splits: 4, ..PlanOptions::sparse_always() };
+        assert_matches_interp(&g, &opts, 3, 1e-4);
+    }
+
+    #[test]
+    fn fusion_reduces_steps_and_preserves_output() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let fused = ExecutionPlan::build(&g).unwrap();
+        let unfused =
+            ExecutionPlan::build_with(&g, &PlanOptions { fuse: false, ..Default::default() })
+                .unwrap();
+        assert!(fused.stats().fused_chains >= 3, "{:?}", fused.stats());
+        assert!(fused.stats().steps < unfused.stats().steps);
+        assert_matches_interp(&g, &PlanOptions::default(), 4, 1e-4);
+    }
+
+    #[test]
+    fn arena_reuses_buffers() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        // Upper bound if every step had a private buffer:
+        let private: usize = {
+            let shapes = g.infer_shapes().unwrap();
+            g.nodes
+                .iter()
+                .filter(|n| !matches!(n.op, Op::Const))
+                .map(|n| shapes[&n.name].iter().product::<usize>())
+                .sum()
+        };
+        assert!(
+            plan.stats().arena_f32 < private,
+            "arena {} !< private {}",
+            plan.stats().arena_f32,
+            private
+        );
+    }
+
+    #[test]
+    fn run_with_is_repeatable() {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.6);
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let mut ctx = plan.new_context();
+        let mut rng = Rng::new(9);
+        let feeds_a = feeds_for(&g, &mut rng);
+        let feeds_b = feeds_for(&g, &mut rng);
+        plan.run_with(&mut ctx, &feeds_a).unwrap();
+        let first: Vec<f32> = plan.output(&ctx, 0).0.to_vec();
+        plan.run_with(&mut ctx, &feeds_b).unwrap();
+        plan.run_with(&mut ctx, &feeds_a).unwrap();
+        // context reuse must not leak state between runs
+        assert_eq!(plan.output(&ctx, 0).0, &first[..]);
+    }
+
+    #[test]
+    fn constant_folding_precomputes_const_subgraphs() {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(5);
+        g.op("input", Op::Placeholder { shape: vec![1, 4, 4, 2] }, &[]);
+        g.constant("cx", Tensor::randn(&[1, 4, 4, 2], &mut rng, 1.0));
+        g.constant("w", Tensor::randn(&[1, 1, 2, 2], &mut rng, 1.0));
+        // const-only chain: conv(cx, w) -> relu -> folds entirely
+        g.op(
+            "cconv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["cx", "w"],
+        );
+        g.op("crelu", Op::Relu, &["cconv"]);
+        // live chain mixes the folded const back in
+        g.op("sum", Op::Add, &["input", "crelu"]);
+        g.outputs = vec!["sum".into()];
+        let plan = ExecutionPlan::build(&g).unwrap();
+        assert_eq!(plan.stats().folded_consts, 2, "{:?}", plan.stats());
+        // only the Add executes at runtime
+        assert_eq!(plan.stats().steps, 1);
+        assert_matches_interp(&g, &PlanOptions::default(), 6, 1e-5);
+    }
+
+    #[test]
+    fn missing_feed_is_error() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        assert!(plan.run(&BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn non_const_weights_rejected() {
+        let mut g = Graph::new();
+        g.op("x", Op::Placeholder { shape: vec![1, 4, 4, 2] }, &[]);
+        g.op("wdyn", Op::Placeholder { shape: vec![1, 1, 2, 2] }, &[]);
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["x", "wdyn"],
+        );
+        g.outputs = vec!["conv".into()];
+        assert!(matches!(
+            ExecutionPlan::build(&g),
+            Err(GraphError::Invalid(_, _))
+        ));
+    }
+}

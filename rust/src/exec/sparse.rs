@@ -1,0 +1,121 @@
+//! Sparse-aware convolution kernels that execute HPIPE's runlength-encoded
+//! weight streams directly (§V-B of the paper).
+//!
+//! The hardware streams one `WeightEntry` per multiplier per cycle:
+//! the runlength decoder advances the (k_y, c_i) row counter, the X-mux
+//! picks the k_w position, and only *nonzero* weights ever reach a DSP.
+//! The software analog here is weight-stationary: for every decoded
+//! nonzero we axpy its contribution across all output positions of its
+//! output channel. With the transposed im2col buffer ([K, M], see
+//! [`super::kernels::im2col_t`]) each axpy is contiguous over M, so the
+//! per-MAC cost matches the dense GEMM inner loop and total work scales
+//! with the nonzero count — zero weights are skipped at runtime exactly
+//! as in the zero-skipping PEs, and lockstep pad entries (value 0.0) only
+//! advance the row counter.
+
+use super::kernels::{im2col_t, Act, ConvGeom};
+use crate::sparsity::rle::ConvRle;
+
+/// Sparse Conv2D (+ fused bias / activation) from RLE weight streams.
+///
+/// `patches_t` must hold at least `patch_len * out_positions` elements,
+/// `acc` at least `out_positions`.
+pub fn sparse_conv(
+    x: &[f32],
+    g: &ConvGeom,
+    rle: &ConvRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    patches_t: &mut [f32],
+    acc: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(rle.ci, g.ci);
+    debug_assert_eq!(rle.co, g.co);
+    let m = g.out_positions();
+    im2col_t(x, g, patches_t);
+    for oc in 0..g.co {
+        let accv = &mut acc[..m];
+        accv.fill(match bias {
+            Some(b) => b[oc],
+            None => 0.0,
+        });
+        for (split, stream) in rle.streams[oc].iter().enumerate() {
+            // Runlength decode: the first entry's runlength is its
+            // absolute split-local row, later entries advance from the
+            // previous one (mirrors sparsity::rle::decode_conv).
+            let mut local_row = 0usize;
+            let mut first = true;
+            for e in &stream.entries {
+                if first {
+                    local_row = e.runlength as usize;
+                    first = false;
+                } else {
+                    local_row += e.runlength as usize;
+                }
+                if e.value == 0.0 {
+                    continue; // lockstep / runlength pad entry
+                }
+                let row = local_row * rle.splits + split;
+                let (ky, ic) = (row / g.ci, row % g.ci);
+                let k = (ky * g.kw + e.x as usize) * g.ci + ic;
+                let prow = &patches_t[k * m..][..m];
+                let v = e.value;
+                for (a, &p) in accv.iter_mut().zip(prow) {
+                    *a += v * p;
+                }
+            }
+        }
+        // Scatter the accumulated output channel back to NHWC.
+        for (mi, &a) in accv.iter().enumerate() {
+            out[mi * g.co + oc] = act.apply(a);
+        }
+    }
+}
+
+/// Sparse MatMul (+ fused bias / activation) from RLE streams of the
+/// (Ci, Co) weight matrix (encoded as a 1x1 conv, so rows are plain
+/// input-channel indices).
+pub fn sparse_matmul(
+    x: &[f32],
+    n: usize,
+    ci: usize,
+    co: usize,
+    rle: &ConvRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(rle.ci, ci);
+    debug_assert_eq!(rle.co, co);
+    debug_assert_eq!(rle.kh, 1);
+    debug_assert_eq!(rle.kw, 1);
+    for i in 0..n {
+        let xrow = &x[i * ci..][..ci];
+        let orow = &mut out[i * co..][..co];
+        for oc in 0..co {
+            let mut s = match bias {
+                Some(b) => b[oc],
+                None => 0.0,
+            };
+            for (split, stream) in rle.streams[oc].iter().enumerate() {
+                let mut local_row = 0usize;
+                let mut first = true;
+                for e in &stream.entries {
+                    if first {
+                        local_row = e.runlength as usize;
+                        first = false;
+                    } else {
+                        local_row += e.runlength as usize;
+                    }
+                    if e.value == 0.0 {
+                        continue;
+                    }
+                    let ic = local_row * rle.splits + split;
+                    s += e.value * xrow[ic];
+                }
+            }
+            orow[oc] = act.apply(s);
+        }
+    }
+}

@@ -8,8 +8,9 @@
 //! elements) are inlined for readability.
 
 use super::{Graph, Node, Op, Tensor};
+use crate::util::error::{Context, Result};
 use crate::util::Json;
-use anyhow::{bail, Context, Result};
+use crate::bail;
 use std::fs;
 use std::path::Path;
 
@@ -69,7 +70,7 @@ pub fn save(graph: &Graph, dir: &Path) -> Result<()> {
 pub fn load(dir: &Path) -> Result<Graph> {
     let text = fs::read_to_string(dir.join("graph.json"))
         .with_context(|| format!("reading {}", dir.join("graph.json").display()))?;
-    let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let root = Json::parse(&text)?;
     if root.get("format").as_str() != Some("hpipe-graphdef-v1") {
         bail!("unrecognized graphdef format");
     }
@@ -131,7 +132,7 @@ pub fn load(dir: &Path) -> Result<Graph> {
         .map(|v| v.as_str().map(|s| s.to_string()))
         .collect::<Option<_>>()
         .context("output names")?;
-    graph.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    graph.validate()?;
     Ok(graph)
 }
 

@@ -35,19 +35,30 @@ pub struct Graph {
 }
 
 /// Errors raised by graph construction / validation.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum GraphError {
-    #[error("duplicate node name '{0}'")]
     Duplicate(String),
-    #[error("node '{0}' references unknown input '{1}'")]
     UnknownInput(String, String),
-    #[error("graph contains a cycle involving '{0}'")]
     Cycle(String),
-    #[error("shape error at node '{0}': {1}")]
     Shape(String, String),
-    #[error("node '{0}': {1}")]
     Invalid(String, String),
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Duplicate(n) => write!(f, "duplicate node name '{n}'"),
+            GraphError::UnknownInput(n, i) => {
+                write!(f, "node '{n}' references unknown input '{i}'")
+            }
+            GraphError::Cycle(n) => write!(f, "graph contains a cycle involving '{n}'"),
+            GraphError::Shape(n, msg) => write!(f, "shape error at node '{n}': {msg}"),
+            GraphError::Invalid(n, msg) => write!(f, "node '{n}': {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 impl Graph {
     pub fn new() -> Graph {

@@ -87,6 +87,7 @@ impl Tensor {
     pub fn at4_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
         debug_assert_eq!(self.shape.len(), 4);
         let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        debug_assert!(n < self.shape[0] && h < sh && w < sw && c < sc);
         &mut self.data[((n * sh + h) * sw + w) * sc + c]
     }
 
@@ -94,6 +95,19 @@ impl Tensor {
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         debug_assert_eq!(self.shape.len(), 2);
         self.data[i * self.shape[1] + j]
+    }
+
+    /// Contiguous row-major view of the data — the accessor the exec
+    /// kernels use (they index raw slices with precomputed geometry).
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable contiguous view.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
     }
 
     /// Reshape without moving data (element count must match).
@@ -220,6 +234,30 @@ mod tests {
         assert_eq!(t.at4(0, 2, 3, 1), 5.0);
         assert_eq!(t.at4(0, 2, 3, 0), 0.0);
         assert_eq!(t.len(), 24);
+    }
+
+    #[test]
+    fn slice_accessors_are_row_major_views() {
+        let mut t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        t.as_mut_slice()[3] = 9.0;
+        assert_eq!(t.at2(1, 1), 9.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic]
+    fn at4_out_of_bounds_panics_in_debug() {
+        let t = Tensor::zeros(&[1, 2, 2, 2]);
+        let _ = t.at4(0, 0, 0, 2);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic]
+    fn at4_mut_out_of_bounds_panics_in_debug() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 2]);
+        *t.at4_mut(0, 2, 0, 0) = 1.0;
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //! loops. This is the *oracle* the rest of the system is checked against:
 //! transform passes must preserve its output, the fixed-point executor
 //! ([`fixed`]) is compared against it to quantify quantization error
-//! (Table III), and the PJRT-executed JAX artifacts must agree with it on
-//! the TinyCNN end-to-end model.
+//! (Table III), and the compiled execution engine ([`crate::exec`]) must
+//! match it bit-close on every graph (`rust/tests/exec_equiv.rs`). Keep
+//! these loops naive — their obviousness is the point.
 
 pub mod fixed;
 

@@ -4,7 +4,9 @@
 //! compiler, the layer-pipelined sparse-aware accelerator architecture
 //! (as a cycle-level simulator standing in for the Stratix 10 device),
 //! all the baselines the paper compares against, and a serving runtime
-//! that executes the AOT-compiled JAX/Pallas model through PJRT.
+//! that executes graphs through the compiled sparse-aware execution
+//! engine ([`exec`]) — planned once per graph, zero-skipping over RLE
+//! weight streams, checked against the reference interpreter oracle.
 //!
 //! See DESIGN.md for the module map and EXPERIMENTS.md for measured
 //! reproductions of every table and figure.
@@ -13,6 +15,7 @@ pub mod arch;
 pub mod baselines;
 pub mod compile;
 pub mod coordinator;
+pub mod exec;
 pub mod graph;
 pub mod interp;
 pub mod nets;

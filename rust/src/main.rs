@@ -4,13 +4,12 @@
 //!   compile   --net <name> [--sparsity F] [--dsp-target N] [--device D]
 //!             [--out DIR] [--full-scale] [--per-layer]    compile a plan
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
-//!   serve     --model DIR [--requests N] [--batch N]   PJRT serving demo
+//!   serve     --model DIR [--requests N] [--batch N]   exec serving demo
 //!   accuracy  --net <name> [--bits N]          fixed-point vs f32 study
 //!
 //! `hpipe compile --net resnet50 --sparsity 0.85 --dsp-target 5000
 //!  --full-scale` reproduces the paper's main configuration.
 
-use anyhow::{bail, Context, Result};
 use hpipe::arch::device_by_name;
 use hpipe::compile::{codegen, compile, CompileOptions};
 use hpipe::graph::Tensor;
@@ -20,6 +19,7 @@ use hpipe::sim::simulate;
 use hpipe::sparsity::prune_graph;
 use hpipe::transform::optimize;
 use hpipe::util::cli::Args;
+use hpipe::util::error::{Context, Result};
 use hpipe::util::timer::Table;
 use hpipe::util::Rng;
 use std::path::PathBuf;
@@ -136,7 +136,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let (_, plan) = build_plan(args)?;
     let images = args.usize("images", 16);
     let t0 = std::time::Instant::now();
-    let r = simulate(&plan, images).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let r = simulate(&plan, images)?;
     println!(
         "simulated {images} images ({} total cycles) in {:?}",
         r.total_cycles,
@@ -178,7 +178,7 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
         let mut feeds = std::collections::BTreeMap::new();
         let in_shape = match &g.get("input").unwrap().op {
             hpipe::graph::Op::Placeholder { shape } => shape.clone(),
-            _ => bail!("no input"),
+            _ => hpipe::bail!("no input"),
         };
         feeds.insert("input".to_string(), Tensor::randn(&in_shape, &mut rng, 1.0));
         let r = run_fixed(&g, &feeds, &PrecisionConfig::uniform(bits, bits / 2))?;

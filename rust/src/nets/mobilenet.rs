@@ -207,6 +207,30 @@ mod tests {
         assert_eq!(outs[0].shape, vec![1, 10]);
     }
 
+    /// Smoke path through the compiled executor (covers the depthwise
+    /// kernel, Relu6 fusion and the V2 inverted-residual Adds).
+    #[test]
+    fn v1_and_v2_test_scale_run_in_executor() {
+        use std::collections::BTreeMap;
+        for (seed, g) in [
+            (31u64, mobilenet_v1(NetConfig::test_scale())),
+            (32, mobilenet_v2(NetConfig::test_scale())),
+        ] {
+            let plan = crate::exec::ExecutionPlan::build(&g).unwrap();
+            let mut feeds = BTreeMap::new();
+            let mut rng = crate::util::Rng::new(seed);
+            feeds.insert(
+                "input".to_string(),
+                crate::graph::Tensor::randn(&[1, 32, 32, 3], &mut rng, 1.0),
+            );
+            let got = plan.run(&feeds).unwrap();
+            let want = crate::interp::run_outputs(&g, &feeds).unwrap();
+            for (a, b) in got[0].data.iter().zip(&want[0].data) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
     #[test]
     fn v1_channel_progression() {
         let g = mobilenet_v1(NetConfig::imagenet());

@@ -184,6 +184,34 @@ mod tests {
         assert!((s - 1.0).abs() < 1e-4, "softmax sums to {s}");
     }
 
+    /// Smoke path through the compiled executor: the full (pruned +
+    /// folded) test-scale network must classify identically to the
+    /// interpreter oracle.
+    #[test]
+    fn test_scale_runs_in_executor() {
+        use std::collections::BTreeMap;
+        let mut g = resnet50(NetConfig::test_scale());
+        crate::sparsity::prune_graph(&mut g, 0.85);
+        let (g, _) = crate::transform::optimize(&g);
+        let plan = crate::exec::ExecutionPlan::build(&g).unwrap();
+        assert!(plan.stats().sparse_convs > 0, "{:?}", plan.stats());
+        let mut feeds = BTreeMap::new();
+        let mut rng = crate::util::Rng::new(8);
+        feeds.insert(
+            "input".to_string(),
+            crate::graph::Tensor::randn(&[1, 32, 32, 3], &mut rng, 1.0),
+        );
+        let got = plan.run(&feeds).unwrap();
+        let want = crate::interp::run_outputs(&g, &feeds).unwrap();
+        assert_eq!(
+            crate::interp::argmax(&got[0]),
+            crate::interp::argmax(&want[0])
+        );
+        for (a, b) in got[0].data.iter().zip(&want[0].data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
     #[test]
     fn has_pad_node_for_compiler_to_merge() {
         let g = resnet50(NetConfig::test_scale());

@@ -2,8 +2,9 @@
 //!
 //! A small CNN classifier used to prove the whole stack composes: the
 //! same topology is built in Python (`python/compile/model.py`), trained
-//! for a few hundred steps on synthetic data, AOT-lowered to HLO, and
-//! served by the Rust coordinator through PJRT. The Rust builder below is
+//! for a few hundred steps on synthetic data, exported as a graphdef,
+//! and served by the Rust coordinator through the compiled execution
+//! engine. The Rust builder below is
 //! structurally identical (a test in `rust/tests/` cross-checks against
 //! the Python-exported graphdef when artifacts are present), so the
 //! compiler/simulator pipeline can also run on it.
@@ -84,6 +85,25 @@ mod tests {
         let outs = crate::interp::run_outputs(&g, &feeds).unwrap();
         let s: f32 = outs[0].data.iter().sum();
         assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    /// Same smoke path through the compiled executor (the serving-side
+    /// twin of `runs_end_to_end_in_interpreter`).
+    #[test]
+    fn runs_end_to_end_in_executor() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = crate::exec::ExecutionPlan::build(&g).unwrap();
+        let mut rng = crate::util::Rng::new(4);
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            crate::graph::Tensor::randn(&[1, TINY_INPUT, TINY_INPUT, 3], &mut rng, 1.0),
+        );
+        let outs = plan.run(&feeds).unwrap();
+        let s: f32 = outs[0].data.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        // fused conv/bias/relu chains must have been formed
+        assert!(plan.stats().fused_chains >= 3);
     }
 
     #[test]

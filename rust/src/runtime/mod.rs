@@ -1,13 +1,28 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Model runtime: load graphdef artifacts and execute them through the
+//! compiled execution engine.
 //!
-//! The request-path half of the three-layer architecture: Python/JAX
-//! lowered the Pallas-kernel model to HLO text once (`make artifacts`);
-//! this module compiles it on the PJRT CPU client at startup and executes
-//! it for every inference — no Python anywhere near the hot path.
-//! Pattern follows /opt/xla-example/load_hlo.
+//! The request-path half of the serving architecture: artifacts produced
+//! by the Python side (`python/compile/aot.py` writes `manifest.json`
+//! next to the trained `tinycnn` graphdef) are loaded once at startup,
+//! compiled into [`ExecutionPlan`]s — topo order resolved, buffers
+//! pre-bound, per-layer kernels selected, RLE sparse streams encoded —
+//! and executed for every inference with zero per-image allocations.
+//! This replaced the earlier PJRT/XLA path: the offline build has no
+//! `xla` crate, and the compiled executor is the project's own
+//! sparse-aware hot path (see `exec` module docs for the plan-vs-oracle
+//! role split).
+//!
+//! HPIPE is a batch-1 architecture (§V), so batch-N "models" are the
+//! batch-1 plan run N times over a contiguous input block; batching
+//! exists to amortize transfer + queueing, exactly like the PCIe DMA
+//! batching the coordinator models.
 
-use crate::util::Json;
-use anyhow::{bail, Context, Result};
+use crate::exec::{ExecContext, ExecutionPlan};
+use crate::graph::{graphdef, Graph, Op, Tensor};
+use crate::sparsity::prune_tensor;
+use crate::util::error::{Context, Result};
+use crate::util::{Json, Rng};
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -15,85 +30,131 @@ use std::path::{Path, PathBuf};
 pub struct LoadedModel {
     pub name: String,
     pub batch: usize,
+    /// Input shape with the leading dim set to `batch`.
     pub input_shape: Vec<usize>,
-    exe: xla::PjRtLoadedExecutable,
+    plan: ExecutionPlan,
+    ctx: RefCell<ExecContext>,
 }
 
 impl LoadedModel {
+    /// Compile a graph into a runnable model. The graph must have
+    /// exactly one Placeholder and its leading (batch) dim must be 1 —
+    /// both enforced here so violations surface as errors, not panics
+    /// in the serving loop.
+    pub fn from_graph(name: &str, graph: &Graph, batch: usize) -> Result<LoadedModel> {
+        let placeholders: Vec<(String, Vec<usize>)> = graph
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Placeholder { shape } => Some((n.name.clone(), shape.clone())),
+                _ => None,
+            })
+            .collect();
+        crate::ensure!(
+            placeholders.len() == 1,
+            "graph must have exactly one Placeholder input, found {}",
+            placeholders.len()
+        );
+        let (input_name, per_image_shape) = placeholders.into_iter().next().unwrap();
+        crate::ensure!(
+            per_image_shape.first() == Some(&1),
+            "placeholder '{input_name}' must have batch dim 1, has shape {per_image_shape:?}"
+        );
+        crate::ensure!(batch >= 1, "batch must be >= 1");
+        let plan = ExecutionPlan::build(graph)?;
+        crate::ensure!(plan.num_outputs() >= 1, "graph has no outputs");
+        crate::ensure!(
+            plan.num_feeds() == 1 && plan.feed_name(0) == input_name,
+            "plan feed binding does not match placeholder '{input_name}'"
+        );
+        let ctx = RefCell::new(plan.new_context());
+        let mut input_shape = per_image_shape;
+        input_shape[0] = batch;
+        Ok(LoadedModel {
+            name: name.to_string(),
+            batch,
+            input_shape,
+            plan,
+            ctx,
+        })
+    }
+
+    /// Plan composition counters (sparse vs dense kernels, fusions...).
+    pub fn plan_stats(&self) -> crate::exec::PlanStats {
+        self.plan.stats()
+    }
+
     /// Run one batch. `input` is row-major f32 of `input_shape` (with
-    /// the leading dim = batch). Returns the first output tensor's data.
+    /// the leading dim = batch). Returns the first output tensor's data,
+    /// concatenated over the batch.
     pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
         let expect: usize = self.input_shape.iter().product();
         if input.len() != expect {
-            bail!(
+            crate::bail!(
                 "input length {} != shape {:?} ({} elements)",
                 input.len(),
                 self.input_shape,
                 expect
             );
         }
-        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        let per = expect / self.batch;
+        let mut ctx = self.ctx.borrow_mut();
+        let mut out_all: Vec<f32> = Vec::new();
+        for b in 0..self.batch {
+            // Zero-allocation hot path: the image slice goes straight
+            // into the plan's feed slot (single copy, no Tensor wrap).
+            self.plan
+                .write_feed(&mut ctx, 0, &input[b * per..(b + 1) * per])?;
+            self.plan.execute_steps(&mut ctx);
+            let (data, _) = self.plan.output(&ctx, 0);
+            if out_all.capacity() == 0 {
+                out_all.reserve_exact(data.len() * self.batch);
+            }
+            out_all.extend_from_slice(data);
+        }
+        Ok(out_all)
     }
 }
 
-/// The artifact registry: owns the PJRT client and every loaded model.
+/// The artifact registry: owns every loaded (compiled) model.
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub artifacts_dir: PathBuf,
     models: BTreeMap<String, LoadedModel>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU runtime rooted at an artifacts directory. The name
+    /// is kept from the PJRT era so call sites read the same.
     pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
-            client,
             artifacts_dir: artifacts_dir.to_path_buf(),
             models: BTreeMap::new(),
         })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "exec-cpu".to_string()
     }
 
-    /// Compile an HLO-text file into a named executable.
-    pub fn load_hlo(
-        &mut self,
-        name: &str,
-        path: &Path,
-        batch: usize,
-        input_shape: Vec<usize>,
-    ) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        self.models.insert(
-            name.to_string(),
-            LoadedModel {
-                name: name.to_string(),
-                batch,
-                input_shape,
-                exe,
-            },
-        );
+    /// Compile a graph into a named executable.
+    pub fn load_graph(&mut self, name: &str, graph: &Graph, batch: usize) -> Result<()> {
+        let model = LoadedModel::from_graph(name, graph, batch)
+            .with_context(|| format!("compiling model '{name}'"))?;
+        self.models.insert(name.to_string(), model);
         Ok(())
     }
 
     /// Load everything listed in `artifacts/manifest.json` (written by
-    /// python/compile/aot.py).
+    /// python/compile/aot.py): every batch variant of the trained
+    /// TinyCNN graphdef, plus demo kernel entries.
+    ///
+    /// The manifest's HLO path fields (`models` values, `kernels[*]
+    /// .path`) are ignored: they point at the XLA artifacts the retired
+    /// PJRT runtime consumed. Models execute the `tinycnn` graphdef
+    /// through compiled plans, and kernel entries get a deterministic
+    /// synthetic sparse-conv graph of the declared input shape (so
+    /// `sparse_conv_demo` benchmarks the RLE kernel, not the exported
+    /// HLO).
     pub fn load_manifest(&mut self) -> Result<Vec<String>> {
         let manifest_path = self.artifacts_dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).with_context(|| {
@@ -102,33 +163,31 @@ impl Runtime {
                 manifest_path.display()
             )
         })?;
-        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let base_shape = root
-            .get("input_shape")
-            .usize_vec()
-            .context("manifest input_shape")?;
+        let root = Json::parse(&text)?;
         let mut loaded = Vec::new();
         if let Some(models) = root.get("models").as_obj() {
-            for (batch_str, rel) in models {
+            let graph = graphdef::load(&self.artifacts_dir.join("tinycnn"))
+                .context("loading tinycnn graphdef")?;
+            for batch_str in models.keys() {
                 let batch: usize = batch_str.parse().context("batch key")?;
-                let mut shape = base_shape.clone();
-                shape[0] = batch;
                 let name = format!("tinycnn_b{batch}");
-                let path = self.artifacts_dir.join(rel.as_str().context("model path")?);
-                self.load_hlo(&name, &path, batch, shape)?;
+                self.load_graph(&name, &graph, batch)?;
                 loaded.push(name);
             }
         }
         if let Some(kernels) = root.get("kernels").as_obj() {
             for (kname, spec) in kernels {
-                let path = self
-                    .artifacts_dir
-                    .join(spec.get("path").as_str().context("kernel path")?);
                 let shape = spec
                     .get("input_shape")
                     .usize_vec()
                     .context("kernel input_shape")?;
-                self.load_hlo(kname, &path, 1, shape)?;
+                crate::ensure!(
+                    shape.len() == 4,
+                    "kernel '{kname}': only 4-D (NHWC) demo kernels are supported, \
+                     got input_shape {shape:?}"
+                );
+                let graph = sparse_conv_demo_graph(&shape, 0.8);
+                self.load_graph(kname, &graph, 1)?;
                 loaded.push(kname.clone());
             }
         }
@@ -152,4 +211,94 @@ impl Runtime {
     }
 }
 
-// Integration tests live in rust/tests/e2e.rs (they need artifacts/).
+/// A deterministic single-layer sparse conv graph standing in for the
+/// former HLO kernel artifact: 3x3 SAME conv, 8 output channels, weights
+/// magnitude-pruned to `sparsity` so the plan selects the RLE kernel.
+fn sparse_conv_demo_graph(input_shape: &[usize], sparsity: f64) -> Graph {
+    let mut g = Graph::new();
+    let mut rng = Rng::new(0x5BA25E);
+    g.op("input", Op::Placeholder { shape: input_shape.to_vec() }, &[]);
+    let ci = input_shape[3];
+    let mut w = Tensor::randn(&[3, 3, ci, 8], &mut rng, 0.3);
+    prune_tensor(&mut w, sparsity);
+    g.constant("w", w);
+    g.op(
+        "conv",
+        Op::Conv2D { stride: (1, 1), padding: crate::graph::Padding::Same },
+        &["input", "w"],
+    );
+    g.outputs = vec!["conv".into()];
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::nets::{tiny_cnn, NetConfig};
+
+    #[test]
+    fn loaded_model_matches_interpreter() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let m = LoadedModel::from_graph("tinycnn_b1", &g, 1).unwrap();
+        let mut rng = Rng::new(21);
+        let n: usize = m.input_shape.iter().product();
+        let input: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let got = m.run(&input).unwrap();
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            Tensor::from_vec(&m.input_shape, input.clone()),
+        );
+        let want = interp::run_outputs(&g, &feeds).unwrap();
+        assert_eq!(got.len(), want[0].data.len());
+        for (a, b) in got.iter().zip(&want[0].data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batch_model_is_per_image_consistent() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let m1 = LoadedModel::from_graph("tinycnn_b1", &g, 1).unwrap();
+        let m4 = LoadedModel::from_graph("tinycnn_b4", &g, 4).unwrap();
+        let per: usize = m1.input_shape.iter().product();
+        let mut rng = Rng::new(33);
+        let block: Vec<f32> = (0..4 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let out4 = m4.run(&block).unwrap();
+        let probs = out4.len() / 4;
+        for i in 0..4 {
+            let out1 = m1.run(&block[i * per..(i + 1) * per]).unwrap();
+            assert_eq!(out1, &out4[i * probs..(i + 1) * probs]);
+        }
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let m = LoadedModel::from_graph("m", &g, 1).unwrap();
+        assert!(m.run(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn runtime_registry_and_batch_pick() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let mut rt = Runtime::cpu(Path::new("/nonexistent")).unwrap();
+        rt.load_graph("tinycnn_b1", &g, 1).unwrap();
+        rt.load_graph("tinycnn_b8", &g, 8).unwrap();
+        assert_eq!(rt.model_names(), vec!["tinycnn_b1", "tinycnn_b8"]);
+        assert_eq!(rt.best_batch_model(3).unwrap().batch, 1);
+        assert_eq!(rt.best_batch_model(8).unwrap().batch, 8);
+        assert_eq!(rt.best_batch_model(100).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn demo_kernel_graph_is_sparse_and_runs() {
+        let g = sparse_conv_demo_graph(&[1, 8, 8, 4], 0.8);
+        let m = LoadedModel::from_graph("sparse_conv_demo", &g, 1).unwrap();
+        assert!(m.plan_stats().sparse_convs >= 1);
+        let n: usize = m.input_shape.iter().product();
+        let out = m.run(&vec![1.0; n]).unwrap();
+        assert!(out.iter().any(|&v| v != 0.0));
+    }
+}

@@ -68,13 +68,26 @@ pub struct Deadlock {
     pub stuck: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("pipeline deadlock at cycle {}: stuck stages {:?}", .0.at_cycle, .0.stuck)]
     Deadlock(Deadlock),
-    #[error("plan has no stages")]
     Empty,
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock(d) => write!(
+                f,
+                "pipeline deadlock at cycle {}: stuck stages {:?}",
+                d.at_cycle, d.stuck
+            ),
+            SimError::Empty => write!(f, "plan has no stages"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 struct Station {
     /// Producer station index per input slot.

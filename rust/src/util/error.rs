@@ -1,0 +1,153 @@
+//! Minimal `anyhow`-style error handling.
+//!
+//! The offline vendor set has no `anyhow`/`thiserror`, so the application
+//! layers (graphdef I/O, codegen, runtime, coordinator, CLI, examples)
+//! use this module instead: a single string-carrying [`Error`], a
+//! [`Result`] alias, a [`Context`] extension trait for `Result`/`Option`,
+//! and the [`err!`]/[`bail!`]/[`ensure!`] macros. Typed errors that code
+//! matches on (e.g. `GraphError`, `SimError`) stay as enums and convert
+//! into [`Error`] via the blanket `From<E: std::error::Error>` impl —
+//! which is also why `Error` itself deliberately does *not* implement
+//! `std::error::Error` (the same coherence trick `anyhow` uses).
+
+use std::fmt;
+
+/// A dynamic error: a message plus the chain of contexts added via
+/// [`Context::context`], rendered outermost-first like `anyhow`.
+pub struct Error {
+    msg: String,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context line.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: no `impl std::error::Error for Error` — that would overlap with
+// the blanket conversion below (see module docs).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Context` analog for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` analog).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::err!($($arg)*).into()) };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing header").unwrap_err();
+        assert!(e.to_string().starts_with("writing header: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key '{}'", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key 'x'");
+        assert_eq!(Some(3).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(n: usize) -> Result<usize> {
+            crate::ensure!(n < 10, "n too big: {n}");
+            if n == 5 {
+                crate::bail!("five is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "n too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        let e = crate::err!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn error_context_wraps() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+}

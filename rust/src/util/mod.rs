@@ -1,14 +1,17 @@
-//! Shared infrastructure: JSON, PRNG, property testing, CLI, bench timing.
+//! Shared infrastructure: JSON, PRNG, property testing, CLI, bench
+//! timing, error handling.
 //!
-//! These exist because the offline build environment vendors only the
-//! `xla` crate's dependency closure — no serde/rand/clap/criterion — so
-//! the repository carries its own minimal implementations.
+//! These exist because the offline build environment has no crates.io
+//! access — no serde/rand/clap/criterion/anyhow — so the repository
+//! carries its own minimal implementations and builds dependency-free.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod timer;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;

@@ -1,9 +1,11 @@
-//! End-to-end integration: AOT artifacts -> PJRT runtime -> coordinator,
-//! cross-validated against the reference interpreter.
+//! End-to-end integration: trained artifacts -> compiled-executor
+//! runtime -> coordinator, cross-validated against the reference
+//! interpreter.
 //!
 //! These tests need `make artifacts` to have run; they skip (pass with a
 //! note) when artifacts/ is absent so `cargo test` works on a fresh
-//! checkout.
+//! checkout. (The executor itself is covered without artifacts by
+//! `exec_equiv.rs` and the in-crate unit tests.)
 
 use hpipe::coordinator::serve_demo;
 use hpipe::graph::{graphdef, Op, Tensor};
@@ -23,7 +25,7 @@ fn artifacts_dir() -> Option<PathBuf> {
 }
 
 #[test]
-fn pjrt_matches_reference_interpreter() {
+fn executor_matches_reference_interpreter() {
     let Some(dir) = artifacts_dir() else { return };
     let mut rt = Runtime::cpu(&dir).unwrap();
     rt.load_manifest().unwrap();
@@ -33,18 +35,18 @@ fn pjrt_matches_reference_interpreter() {
     let mut rng = hpipe::util::Rng::new(42);
     for trial in 0..5 {
         let input: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let pjrt = model.run(&input).unwrap();
+        let got = model.run(&input).unwrap();
         let mut feeds = BTreeMap::new();
         feeds.insert(
             "input".to_string(),
             Tensor::from_vec(&[1, 16, 16, 3], input.clone()),
         );
         let outs = interp::run_outputs(&graph, &feeds).unwrap();
-        assert_eq!(pjrt.len(), outs[0].data.len());
-        for (i, (a, b)) in pjrt.iter().zip(&outs[0].data).enumerate() {
+        assert_eq!(got.len(), outs[0].data.len());
+        for (i, (a, b)) in got.iter().zip(&outs[0].data).enumerate() {
             assert!(
                 (a - b).abs() < 1e-3,
-                "trial {trial} [{i}]: pjrt {a} vs interp {b}"
+                "trial {trial} [{i}]: exec {a} vs interp {b}"
             );
         }
     }
@@ -76,7 +78,7 @@ fn serve_demo_end_to_end() {
     assert_eq!(report.requests, 24);
     assert!(report.batches >= 24 / 4);
     let (agree, total) = report.interp_agreement.unwrap();
-    assert_eq!(agree, total, "PJRT and interpreter must classify alike");
+    assert_eq!(agree, total, "executor and interpreter must classify alike");
     assert!(report.latency.percentile(50.0).as_micros() > 0);
 }
 

@@ -1,0 +1,180 @@
+//! Equivalence property test: the compiled executor must match the
+//! reference-interpreter oracle (≤ 1e-4 relative) on randomized
+//! TinyCNN-style and ResNet-block graphs, across sparsity levels
+//! 0.0–0.9, across plan options (dense/sparse kernels, fusion on/off,
+//! RLE split counts), and both before and after the transform passes.
+
+use hpipe::exec::{ExecutionPlan, PlanOptions};
+use hpipe::graph::{Graph, Op, Padding};
+use hpipe::interp;
+use hpipe::nets::NetBuilder;
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::prop::{assert_close, Cases};
+use hpipe::util::Rng;
+use std::collections::BTreeMap;
+
+/// Randomized small CNN: conv+bias+relu stages with random widths,
+/// strides and optional pools, then GAP -> FC -> softmax.
+fn random_cnn(rng: &mut Rng, size: usize) -> Graph {
+    let mut b = NetBuilder::new(rng.next_u64());
+    let mut h = 8 + (size % 3) * 4; // 8 / 12 / 16
+    let c0 = 2 + rng.below(3);
+    let x = b.input("input", h, h, c0);
+    let mut prev = x;
+    let mut cin = c0;
+    let depth = 1 + rng.below(3);
+    for i in 0..depth {
+        let cout = 4 * (1 + rng.below(3));
+        let stride = 1 + rng.below(2);
+        let c = b.conv(&format!("conv{i}"), &prev, 3, cin, cout, stride, Padding::Same);
+        h = h.div_ceil(stride);
+        let bi = b.bias(&format!("conv{i}/biasadd"), &c, cout);
+        prev = b.relu(&format!("conv{i}/relu"), &bi);
+        if h >= 2 && rng.chance(0.5) {
+            prev = b.g.op(
+                &format!("pool{i}"),
+                Op::MaxPool { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid },
+                &[&prev],
+            );
+            h = (h - 2) / 2 + 1;
+        }
+        cin = cout;
+    }
+    b.head(&prev, cin, 5);
+    b.g
+}
+
+/// Randomized ResNet bottleneck block (BN after every conv, optional
+/// projection shortcut with stride, Add + Relu), preceded by a
+/// standalone Pad half the time so pad-merging paths get exercised.
+fn random_resnet_block(rng: &mut Rng) -> Graph {
+    let mut b = NetBuilder::new(rng.next_u64());
+    let hw = 8;
+    let cin = 8 * (1 + rng.below(2));
+    let mid = 4 * (1 + rng.below(2));
+    let x = b.input("input", hw, hw, cin);
+    let stem = if rng.chance(0.5) {
+        let p = b.g.op("stem_pad", Op::Pad { pads: (1, 1, 1, 1) }, &[&x]);
+        let c = b.conv("stem", &p, 3, cin, cin, 1, Padding::Valid);
+        let bn = b.bn("stem_bn", &c, cin);
+        b.relu("stem_relu", &bn)
+    } else {
+        x
+    };
+    let use_proj = rng.chance(0.5);
+    let (stride, out_c) = if use_proj {
+        (1 + rng.below(2), 8 * (1 + rng.below(2)))
+    } else {
+        (1, cin)
+    };
+    let shortcut = if use_proj {
+        let sc = b.conv("proj", &stem, 1, cin, out_c, stride, Padding::Same);
+        b.bn("proj_bn", &sc, out_c)
+    } else {
+        stem.clone()
+    };
+    let c_a = b.conv("branch2a", &stem, 1, cin, mid, stride, Padding::Same);
+    let bn_a = b.bn("bn2a", &c_a, mid);
+    let r_a = b.relu("relu2a", &bn_a);
+    let c_b = b.conv("branch2b", &r_a, 3, mid, mid, 1, Padding::Same);
+    let bn_b = b.bn("bn2b", &c_b, mid);
+    let r_b = b.relu("relu2b", &bn_b);
+    let c_c = b.conv("branch2c", &r_b, 1, mid, out_c, 1, Padding::Same);
+    let bn_c = b.bn("bn2c", &c_c, out_c);
+    let add = b.g.op("res_add", Op::Add, &[&shortcut, &bn_c]);
+    let out = b.relu("res_relu", &add);
+    b.g.outputs = vec![out];
+    b.g
+}
+
+fn random_options(rng: &mut Rng) -> PlanOptions {
+    PlanOptions {
+        sparse_threshold: *rng.choose(&[0.0, 0.3, 0.5, 2.0]),
+        fuse: rng.chance(0.8),
+        splits: 1 + rng.below(4),
+    }
+}
+
+fn check_equivalence(g: &Graph, opts: &PlanOptions, rng: &mut Rng) -> Result<(), String> {
+    let plan = ExecutionPlan::build_with(g, opts).map_err(|e| e.to_string())?;
+    let mut feeds = BTreeMap::new();
+    for n in &g.nodes {
+        if let Op::Placeholder { shape } = &n.op {
+            feeds.insert(
+                n.name.clone(),
+                hpipe::graph::Tensor::randn(shape, rng, 1.0),
+            );
+        }
+    }
+    let got = plan.run(&feeds).map_err(|e| e.to_string())?;
+    let want = interp::run_outputs(g, &feeds).map_err(|e| e.to_string())?;
+    if got.len() != want.len() {
+        return Err(format!("output count {} vs {}", got.len(), want.len()));
+    }
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        if a.shape != b.shape {
+            return Err(format!("output {i} shape {:?} vs {:?}", a.shape, b.shape));
+        }
+        assert_close(&a.data, &b.data, 1e-5, 1e-4)
+            .map_err(|e| format!("output {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_random_cnn_matches_interp_across_sparsity() {
+    Cases::new(24).seed(0xE0).run(|rng, size| {
+        let mut g = random_cnn(rng, size);
+        let sparsity = rng.f64() * 0.9;
+        prune_graph(&mut g, sparsity);
+        let g = if rng.chance(0.5) { optimize(&g).0 } else { g };
+        check_equivalence(&g, &random_options(rng), rng)
+            .map_err(|e| format!("sparsity {sparsity:.2}: {e}"))
+    });
+}
+
+#[test]
+fn prop_resnet_block_matches_interp_across_sparsity() {
+    Cases::new(24).seed(0xE1).run(|rng, _size| {
+        let mut g = random_resnet_block(rng);
+        let sparsity = rng.f64() * 0.9;
+        prune_graph(&mut g, sparsity);
+        let g = if rng.chance(0.5) { optimize(&g).0 } else { g };
+        check_equivalence(&g, &random_options(rng), rng)
+            .map_err(|e| format!("sparsity {sparsity:.2}: {e}"))
+    });
+}
+
+/// Fusion must not fire when the conv's value is observed by a second
+/// consumer (here: a residual Add reads the conv output directly).
+#[test]
+fn multi_consumer_conv_is_not_fused_incorrectly() {
+    let mut b = NetBuilder::new(77);
+    let x = b.input("input", 6, 6, 4);
+    let c = b.conv("conv", &x, 3, 4, 4, 1, Padding::Same);
+    let bi = b.bias("bias", &c, 4);
+    let r = b.relu("relu", &bi);
+    // second reader of the raw conv output
+    let skip = b.g.op("skip", Op::Add, &[&c, &r]);
+    b.g.outputs = vec![skip, c.clone()];
+    let g = b.g;
+    let mut rng = Rng::new(3);
+    check_equivalence(&g, &PlanOptions::default(), &mut rng).unwrap();
+}
+
+/// Sparsity extremes: fully dense weights through the sparse kernel and
+/// 90%-pruned weights through the dense kernel must both still match.
+#[test]
+fn kernel_choice_never_changes_results() {
+    let mut rng = Rng::new(11);
+    for sparsity in [0.0, 0.9] {
+        let mut g = random_cnn(&mut rng, 2);
+        prune_graph(&mut g, sparsity);
+        for opts in [PlanOptions::dense_only(), PlanOptions::sparse_always()] {
+            check_equivalence(&g, &opts, &mut rng)
+                .map_err(|e| format!("sparsity {sparsity}: {e}"))
+                .unwrap();
+        }
+    }
+}
