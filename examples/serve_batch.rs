@@ -9,7 +9,8 @@
 //! executor), reporting latency percentiles + throughput. Every result
 //! is cross-checked against the Rust reference interpreter running the
 //! same trained graphdef — proving the kernels, the plan compiler and
-//! the coordinator all agree.
+//! the coordinator all agree. A third argument > 1 streams each batch
+//! through that many layer-pipeline stage threads.
 
 use hpipe::coordinator::serve_demo;
 use std::path::PathBuf;
@@ -18,6 +19,7 @@ fn main() -> hpipe::util::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
     let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let threads: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1);
     let artifacts = PathBuf::from(
         std::env::var("HPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
@@ -27,8 +29,11 @@ fn main() -> hpipe::util::error::Result<()> {
             artifacts.display()
         );
     }
-    println!("serving {requests} requests (max batch {batch}) from {}", artifacts.display());
-    let mut report = serve_demo(&artifacts, requests, batch)?;
+    println!(
+        "serving {requests} requests (max batch {batch}, {threads} pipeline threads) from {}",
+        artifacts.display()
+    );
+    let mut report = serve_demo(&artifacts, requests, batch, threads)?;
     report.print();
     let (agree, total) = report.interp_agreement.unwrap_or((0, 0));
     hpipe::ensure!(

@@ -77,9 +77,10 @@ fn main() {
     drop(rt);
 
     // whole serving path: queue -> batcher -> execute -> respond
-    for (requests, batch) in [(64usize, 1usize), (64, 8)] {
-        let mut report = serve_demo(&dir, requests, batch).unwrap();
-        println!("\nserve_demo requests={requests} max_batch={batch}:");
+    // (threads > 1 streams each batch through the layer pipeline)
+    for (requests, batch, threads) in [(64usize, 1usize, 1usize), (64, 8, 1), (64, 8, 4)] {
+        let mut report = serve_demo(&dir, requests, batch, threads).unwrap();
+        println!("\nserve_demo requests={requests} max_batch={batch} threads={threads}:");
         report.print();
     }
 }

@@ -51,9 +51,11 @@ impl ClassResult {
     }
 }
 
-/// The serving loop: owns the runtime (execution contexts are
-/// single-threaded by design, so the coordinator runs on the thread that
-/// created it; clients talk to it through channels).
+/// The serving loop: owns the runtime and runs on the thread that
+/// created it; clients talk to it through channels. Models loaded with
+/// `threads > 1` fan each drained batch out across their layer-pipeline
+/// stage threads internally (`exec::PipelinePlan`), so the coordinator
+/// itself stays single-threaded while batch execution is not.
 pub struct Coordinator {
     pub runtime: Runtime,
     pub policy: BatchPolicy,
@@ -134,17 +136,25 @@ impl Coordinator {
 }
 
 /// End-to-end serving demo (the mandated E2E driver):
-/// 1. load the TinyCNN graphdef artifacts and compile execution plans,
+/// 1. load the TinyCNN graphdef artifacts and compile execution plans
+///    (`threads > 1` partitions them into that many pipeline stages for
+///    batch requests — the throughput-oriented serving mode),
 /// 2. spawn a client thread that submits `n_requests` synthetic images,
 /// 3. serve them through the batcher + compiled executor,
 /// 4. cross-check classifications against the Rust reference
 ///    interpreter running the same graphdef.
-pub fn serve_demo(artifacts_dir: &Path, n_requests: usize, max_batch: usize) -> Result<ServeReport> {
-    let mut runtime = Runtime::cpu(artifacts_dir)?;
+pub fn serve_demo(
+    artifacts_dir: &Path,
+    n_requests: usize,
+    max_batch: usize,
+    threads: usize,
+) -> Result<ServeReport> {
+    let mut runtime = Runtime::cpu(artifacts_dir)?.with_threads(threads);
     let loaded = runtime.load_manifest()?;
     println!(
-        "runtime: platform={} loaded {:?}",
+        "runtime: platform={} threads={} loaded {:?}",
         runtime.platform(),
+        runtime.threads,
         loaded
     );
 

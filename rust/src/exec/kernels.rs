@@ -111,7 +111,7 @@ pub fn im2col(x: &[f32], g: &ConvGeom, patches: &mut [f32]) {
     for oy in 0..g.ho {
         for ky in 0..g.kh {
             let iy = (oy * sh + ky) as isize - pt as isize;
-            if iy < 0 || iy >= g.h as isize {
+            if !(0..g.h as isize).contains(&iy) {
                 continue;
             }
             let iy = iy as usize;
@@ -119,7 +119,7 @@ pub fn im2col(x: &[f32], g: &ConvGeom, patches: &mut [f32]) {
                 let row = &mut patches[(oy * g.wo + ox) * k..][..k];
                 for kx in 0..g.kw {
                     let ix = (ox * sw + kx) as isize - pl as isize;
-                    if ix < 0 || ix >= g.w as isize {
+                    if !(0..g.w as isize).contains(&ix) {
                         continue;
                     }
                     let src = &x[(iy * g.w + ix as usize) * g.ci..][..g.ci];
@@ -145,13 +145,13 @@ pub fn im2col_t(x: &[f32], g: &ConvGeom, patches_t: &mut [f32]) {
                 let row = &mut patches_t[k * m..][..m];
                 for oy in 0..g.ho {
                     let iy = (oy * sh + ky) as isize - pt as isize;
-                    if iy < 0 || iy >= g.h as isize {
+                    if !(0..g.h as isize).contains(&iy) {
                         continue;
                     }
                     let iy = iy as usize;
                     for ox in 0..g.wo {
                         let ix = (ox * sw + kx) as isize - pl as isize;
-                        if ix < 0 || ix >= g.w as isize {
+                        if !(0..g.w as isize).contains(&ix) {
                             continue;
                         }
                         row[oy * g.wo + ox] = x[(iy * g.w + ix as usize) * g.ci + ic];
@@ -166,6 +166,7 @@ pub fn im2col_t(x: &[f32], g: &ConvGeom, patches_t: &mut [f32]) {
 /// from the per-column bias (or zero) and `act` applied at the end. The
 /// inner loop is a contiguous axpy over a row of `b`; blocking over K
 /// keeps the active slice of `b` hot across all M rows.
+#[allow(clippy::too_many_arguments)] // kernel ABI: dims + fused epilogue
 pub fn gemm_bias_act(
     a: &[f32],
     b: &[f32],
@@ -254,12 +255,12 @@ pub fn depthwise_dense(
                     };
                     for ky in 0..g.kh {
                         let iy = (oy * sh + ky) as isize - pt as isize;
-                        if iy < 0 || iy >= g.h as isize {
+                        if !(0..g.h as isize).contains(&iy) {
                             continue;
                         }
                         for kx in 0..g.kw {
                             let ix = (ox * sw + kx) as isize - pl as isize;
-                            if ix < 0 || ix >= g.w as isize {
+                            if !(0..g.w as isize).contains(&ix) {
                                 continue;
                             }
                             acc += x[((iy as usize) * g.w + ix as usize) * g.ci + ic]
@@ -284,12 +285,12 @@ pub fn max_pool(x: &[f32], g: &ConvGeom, out: &mut [f32]) {
             orow.fill(f32::NEG_INFINITY);
             for ky in 0..g.kh {
                 let iy = (oy * sh + ky) as isize - pt as isize;
-                if iy < 0 || iy >= g.h as isize {
+                if !(0..g.h as isize).contains(&iy) {
                     continue;
                 }
                 for kx in 0..g.kw {
                     let ix = (ox * sw + kx) as isize - pl as isize;
-                    if ix < 0 || ix >= g.w as isize {
+                    if !(0..g.w as isize).contains(&ix) {
                         continue;
                     }
                     let xrow = &x[((iy as usize) * g.w + ix as usize) * c..][..c];

@@ -32,11 +32,41 @@
 //! equivalence on randomized graphs across sparsity levels). The
 //! executor is the *serving path*: `runtime::LoadedModel`, the
 //! coordinator and the benches all run through plans.
+//!
+//! # Pipelined execution
+//!
+//! HPIPE's §III dataflow runs *every* layer at once: each layer owns
+//! dedicated hardware, activations stream between layers through bounded
+//! line buffers, and batch-1 throughput is set by the slowest stage, not
+//! by the sum of all stages. [`pipeline::PipelinePlan`] is the software
+//! twin of that dataflow for throughput-oriented serving:
+//!
+//! * the plan's steps are split into `N` **contiguous stages** by a
+//!   linear-partition DP that minimizes the bottleneck stage — the same
+//!   objective as the paper's balance-to-the-slowest-stage DSP
+//!   allocation (Algorithm 1), with per-step costs from the compile-side
+//!   cycle model (`compile::throughput`, the numbers the `sim` stations
+//!   consume), so *sparse-aware* costs drive the cut placement;
+//! * one **worker thread per stage** executes its step range per image,
+//!   with multiple images in flight — stage `j` runs image `i + 1`
+//!   while stage `j + 1` runs image `i`;
+//! * at each cut, the values that cross it (computed by arena liveness
+//!   over the cut) are copied into **double-buffered boundary
+//!   messages** exchanged over SPSC channels — the software analog of
+//!   the paper's stage-boundary line buffers, replacing the single
+//!   shared arena that assumes one in-flight image. Bounded channels
+//!   provide the paper's coarse backpressure.
+//!
+//! The single-image latency path stays on the sequential
+//! [`ExecutionPlan`]; the pipeline is engaged by `runtime::LoadedModel`
+//! for batch serving when configured with `threads > 1`.
 
 pub mod kernels;
+pub mod pipeline;
 pub mod sparse;
 
 pub use kernels::{Act, ConvGeom};
+pub use pipeline::PipelinePlan;
 
 use crate::graph::{Graph, GraphError, Op, Tensor};
 use crate::sparsity::rle::{encode_conv, encode_matmul, ConvRle};
@@ -848,20 +878,10 @@ mod tests {
     use crate::util::prop::assert_close;
     use crate::util::Rng;
 
-    fn feeds_for(g: &Graph, rng: &mut Rng) -> BTreeMap<String, Tensor> {
-        let mut feeds = BTreeMap::new();
-        for n in &g.nodes {
-            if let Op::Placeholder { shape } = &n.op {
-                feeds.insert(n.name.clone(), Tensor::randn(shape, rng, 1.0));
-            }
-        }
-        feeds
-    }
-
     fn assert_matches_interp(g: &Graph, opts: &PlanOptions, seed: u64, tol: f32) {
         let plan = ExecutionPlan::build_with(g, opts).unwrap();
         let mut rng = Rng::new(seed);
-        let feeds = feeds_for(g, &mut rng);
+        let feeds = g.random_feeds(&mut rng);
         let got = plan.run(&feeds).unwrap();
         let want = interp::run_outputs(g, &feeds).unwrap();
         assert_eq!(got.len(), want.len());
@@ -927,8 +947,8 @@ mod tests {
         let plan = ExecutionPlan::build(&g).unwrap();
         let mut ctx = plan.new_context();
         let mut rng = Rng::new(9);
-        let feeds_a = feeds_for(&g, &mut rng);
-        let feeds_b = feeds_for(&g, &mut rng);
+        let feeds_a = g.random_feeds(&mut rng);
+        let feeds_b = g.random_feeds(&mut rng);
         plan.run_with(&mut ctx, &feeds_a).unwrap();
         let first: Vec<f32> = plan.output(&ctx, 0).0.to_vec();
         plan.run_with(&mut ctx, &feeds_b).unwrap();

@@ -1,0 +1,705 @@
+//! Layer-pipelined execution — the software twin of HPIPE's dataflow.
+//!
+//! HPIPE gives every layer its own hardware and runs all layers
+//! concurrently; batch-1 throughput comes from *inter-layer* parallelism
+//! (§III). [`PipelinePlan`] reproduces that execution model in software:
+//! the steps of a compiled [`ExecutionPlan`] are statically partitioned
+//! into `N` contiguous stages balanced by estimated per-step cycle cost
+//! (the same per-layer model the cycle simulator's stations consume —
+//! see [`ExecutionPlan::step_costs`]), one worker thread runs each
+//! stage, and images stream between stages over bounded SPSC channels so
+//! several images are in flight at once.
+//!
+//! The sequential executor's single shared buffer arena cannot hold more
+//! than one in-flight image, so at every stage boundary the values that
+//! cross the cut are copied into a *boundary message* — a small set of
+//! double-buffered tensors that replace the shared arena at the cut.
+//! Each stage owns a private context holding only the arena slots its
+//! steps touch (stage-local arena); build-time debug asserts verify that
+//! no step reads a slot that neither its own stage produced nor a
+//! boundary message delivered.
+//!
+//! Backpressure mirrors the paper's bounded line buffers: each cut owns
+//! [`PIPE_DEPTH`] boundary messages recycled through a return channel, so
+//! a fast producer stage blocks once both buffers are outstanding.
+//!
+//! Workers are scoped to each `run_*` call: a batch pays one thread
+//! spawn and one stage-context allocation per stage, amortized across
+//! its images. That keeps the pipeline free of `'static` plumbing and
+//! shutdown protocol; persistent stage workers that survive across
+//! batches (so the pipeline never drains between them) are the
+//! coordinator-level follow-on recorded in ROADMAP.md.
+
+use super::{ConvGeom, ExecContext, ExecutionPlan, PlanOptions, Src, Step, StepKind};
+use crate::arch::StageGeometry;
+use crate::compile::throughput::{stage_cycles, WeightSummary, LINE_OVERHEAD};
+use crate::graph::{Graph, GraphError, Op, Padding, Tensor};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+/// Boundary messages in flight per cut: double buffering, exactly like
+/// the two-deep stage-boundary line buffers the simulator models.
+pub const PIPE_DEPTH: usize = 2;
+
+/// One boundary handoff: the arena slots crossing a cut, copied out of
+/// the producer stage's context for one image.
+struct Msg {
+    img: usize,
+    bufs: Vec<Vec<f32>>,
+}
+
+fn conv_geo(g: &ConvGeom) -> StageGeometry {
+    StageGeometry {
+        in_w: g.w,
+        in_c: g.ci,
+        out_w: g.wo,
+        out_h: g.ho,
+        out_c: g.co,
+        kh: g.kh,
+        kw: g.kw,
+        stride: g.stride.0,
+    }
+}
+
+impl ExecutionPlan {
+    /// Estimated cycles per step, for pipeline balancing.
+    ///
+    /// Compute steps (conv / depthwise / matmul / pool) reuse the
+    /// compile-side per-layer cycle model (`compile::throughput`) — the
+    /// same numbers the cycle simulator's stations run on — so sparse
+    /// layers weigh less than dense ones, exactly as their software
+    /// kernels do. Steps already carrying RLE streams are charged the
+    /// encoder's real lock-step stream lengths. Element-wise streaming
+    /// steps have no channel-parallel hardware analog in software, so
+    /// they are charged one cycle per output element; they are noise
+    /// next to any convolution either way.
+    pub fn step_costs(&self) -> Vec<u64> {
+        self.steps.iter().map(|s| self.step_cost(s)).collect()
+    }
+
+    fn step_cost(&self, step: &Step) -> u64 {
+        let elems = |slot: usize| self.slot_lens[slot] as u64;
+        match &step.kind {
+            StepKind::DenseConv { geom, w, .. } => {
+                let summary = WeightSummary::from_conv(&self.consts[*w]);
+                let op = Op::Conv2D { stride: geom.stride, padding: Padding::Same };
+                stage_cycles(&op, &conv_geo(geom), 1, Some(&summary), true)
+            }
+            StepKind::SparseConv { geom, rle, .. } => {
+                geom.ho as u64 * (rle.total_cycles() as u64 + LINE_OVERHEAD)
+            }
+            StepKind::Depthwise { geom, .. } => {
+                let op = Op::DepthwiseConv2d { stride: geom.stride, padding: Padding::Same };
+                stage_cycles(&op, &conv_geo(geom), 1, None, true)
+            }
+            StepKind::DenseMatMul { n, k, co, w, .. } => {
+                let summary = WeightSummary::from_matmul(&self.consts[*w]);
+                let geo = StageGeometry {
+                    in_w: *k,
+                    in_c: *k,
+                    out_w: *co,
+                    out_h: *n,
+                    out_c: *co,
+                    kh: 1,
+                    kw: 1,
+                    stride: 1,
+                };
+                stage_cycles(&Op::MatMul, &geo, 1, Some(&summary), true)
+            }
+            StepKind::SparseMatMul { rle, .. } => rle.total_cycles() as u64 + LINE_OVERHEAD,
+            StepKind::MaxPool { geom } => {
+                let op = Op::MaxPool {
+                    ksize: (geom.kh, geom.kw),
+                    stride: geom.stride,
+                    padding: Padding::Same,
+                };
+                stage_cycles(&op, &conv_geo(geom), 1, None, true)
+            }
+            StepKind::Mean { h, w, c } => (h * w * c) as u64 + LINE_OVERHEAD,
+            StepKind::Softmax { n, c } => (n * c) as u64 + LINE_OVERHEAD,
+            StepKind::Affine { .. }
+            | StepKind::Add
+            | StepKind::Unary { .. }
+            | StepKind::Pad { .. } => elems(step.out) + LINE_OVERHEAD,
+        }
+    }
+}
+
+/// Contiguous partition of `costs` into `k` non-empty parts minimizing
+/// the bottleneck (largest part sum) — the classic linear-partition DP,
+/// the software analog of the paper's balance-to-the-slowest-stage
+/// allocation. Returns `k` half-open step ranges.
+fn partition_min_bottleneck(costs: &[u64], k: usize) -> Vec<(usize, usize)> {
+    let n = costs.len();
+    if n == 0 {
+        return vec![(0, 0)];
+    }
+    let k = k.clamp(1, n);
+    let mut prefix = vec![0u64; n + 1];
+    for (i, &c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    // dp[j][i]: minimal bottleneck covering the first i steps with j
+    // parts; cut[j][i]: where part j starts in that optimum.
+    let mut dp = vec![vec![u64::MAX; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0;
+    for j in 1..=k {
+        for i in j..=n {
+            for t in (j - 1)..i {
+                if dp[j - 1][t] == u64::MAX {
+                    continue;
+                }
+                let cand = dp[j - 1][t].max(prefix[i] - prefix[t]);
+                if cand < dp[j][i] {
+                    dp[j][i] = cand;
+                    cut[j][i] = t;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![0usize; k + 1];
+    bounds[k] = n;
+    let mut i = n;
+    for j in (1..=k).rev() {
+        i = cut[j][i];
+        bounds[j - 1] = i;
+    }
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+/// Read/write history of one arena slot across the plan's step sequence.
+/// Feeds count as writes at step −1; graph outputs as reads at step `n`.
+#[derive(Default)]
+struct SlotUse {
+    writes: Vec<i64>,
+    reads: Vec<i64>,
+}
+
+impl SlotUse {
+    /// The step whose write a read at `r` observes.
+    fn producer(&self, r: i64) -> Option<i64> {
+        self.writes.iter().copied().filter(|&w| w < r).max()
+    }
+
+    /// True when the value in this slot at cut `c` is still needed by a
+    /// step (or output) at or after `c`.
+    fn live_across(&self, c: i64) -> bool {
+        self.reads
+            .iter()
+            .any(|&r| r >= c && matches!(self.producer(r), Some(w) if w < c))
+    }
+}
+
+fn slot_uses(plan: &ExecutionPlan) -> Vec<SlotUse> {
+    let mut uses: Vec<SlotUse> = Vec::with_capacity(plan.slot_lens.len());
+    uses.resize_with(plan.slot_lens.len(), SlotUse::default);
+    for (_, slot, _) in &plan.feeds {
+        uses[*slot].writes.push(-1);
+    }
+    for (i, step) in plan.steps.iter().enumerate() {
+        for src in &step.inputs {
+            if let Src::Slot(s) = *src {
+                uses[s].reads.push(i as i64);
+            }
+        }
+        uses[step.out].writes.push(i as i64);
+    }
+    let end = plan.steps.len() as i64;
+    for (src, _) in &plan.outputs {
+        if let Src::Slot(s) = *src {
+            uses[s].reads.push(end);
+        }
+    }
+    uses
+}
+
+/// A statically partitioned, multi-threaded pipeline over an
+/// [`ExecutionPlan`] (see the module docs for the execution model).
+pub struct PipelinePlan {
+    plan: ExecutionPlan,
+    /// Half-open step ranges, one per stage, in plan order.
+    ranges: Vec<(usize, usize)>,
+    /// Estimated cycle cost of each stage (sum of its step costs).
+    stage_costs: Vec<u64>,
+    /// `xfer[j]`: arena slots whose values cross the cut between stage
+    /// `j` and `j + 1` (sorted).
+    xfer: Vec<Vec<usize>>,
+    /// Arena slots each stage's private context allocates (sorted).
+    stage_slots: Vec<Vec<usize>>,
+    /// Per-stage (scratch, acc) sizes — sized to the stage's own steps.
+    stage_scratch: Vec<(usize, usize)>,
+}
+
+impl PipelinePlan {
+    /// Build a plan and partition it into (at most) `stages` stages.
+    pub fn build(
+        graph: &Graph,
+        opts: &PlanOptions,
+        stages: usize,
+    ) -> Result<PipelinePlan, GraphError> {
+        Ok(PipelinePlan::from_plan(
+            ExecutionPlan::build_with(graph, opts)?,
+            stages,
+        ))
+    }
+
+    /// Partition an existing plan into (at most) `stages` stages. The
+    /// stage count is clamped to the number of steps; a 1-stage pipeline
+    /// degenerates to sequential execution on the calling thread.
+    pub fn from_plan(plan: ExecutionPlan, stages: usize) -> PipelinePlan {
+        let costs = plan.step_costs();
+        let ranges = partition_min_bottleneck(&costs, stages.max(1));
+        let k = ranges.len();
+        let stage_costs: Vec<u64> = ranges
+            .iter()
+            .map(|&(a, b)| costs[a..b].iter().sum())
+            .collect();
+
+        let uses = slot_uses(&plan);
+        let xfer: Vec<Vec<usize>> = (1..k)
+            .map(|j| {
+                let c = ranges[j].0 as i64;
+                (0..plan.slot_lens.len())
+                    .filter(|&s| uses[s].live_across(c))
+                    .collect()
+            })
+            .collect();
+
+        // Stage-local arena: each stage allocates only the slots its
+        // steps touch plus its boundary slots (and feeds / outputs at
+        // the ends of the pipeline).
+        let mut stage_slots: Vec<Vec<usize>> = Vec::with_capacity(k);
+        let mut stage_scratch: Vec<(usize, usize)> = Vec::with_capacity(k);
+        for (j, &(a, b)) in ranges.iter().enumerate() {
+            let mut slots: BTreeSet<usize> = BTreeSet::new();
+            if j == 0 {
+                slots.extend(plan.feeds.iter().map(|(_, s, _)| *s));
+            }
+            if j > 0 {
+                slots.extend(xfer[j - 1].iter().copied());
+            }
+            if j + 1 < k {
+                slots.extend(xfer[j].iter().copied());
+            }
+            if j + 1 == k {
+                slots.extend(plan.outputs.iter().filter_map(|(src, _)| match *src {
+                    Src::Slot(s) => Some(s),
+                    Src::Const(_) => None,
+                }));
+            }
+            let (mut scratch, mut acc) = (0usize, 0usize);
+            for step in &plan.steps[a..b] {
+                slots.insert(step.out);
+                for src in &step.inputs {
+                    if let Src::Slot(s) = *src {
+                        slots.insert(s);
+                    }
+                }
+                match &step.kind {
+                    StepKind::DenseConv { geom, .. } if !geom.identity_patches() => {
+                        scratch = scratch.max(geom.patch_len() * geom.out_positions());
+                    }
+                    StepKind::SparseConv { geom, .. } => {
+                        scratch = scratch.max(geom.patch_len() * geom.out_positions());
+                        acc = acc.max(geom.out_positions());
+                    }
+                    _ => {}
+                }
+            }
+            stage_slots.push(slots.into_iter().collect());
+            stage_scratch.push((scratch, acc));
+        }
+
+        // Stage-locality invariants (the arena-reentrancy audit): every
+        // value a stage reads was produced in-stage, fed in (stage 0),
+        // or delivered by the incoming boundary; every outgoing boundary
+        // value exists in the sending stage's context.
+        #[cfg(debug_assertions)]
+        for (j, &(a, b)) in ranges.iter().enumerate() {
+            for (i, step) in plan.steps[a..b].iter().enumerate() {
+                for src in &step.inputs {
+                    if let Src::Slot(s) = *src {
+                        let r = (a + i) as i64;
+                        let w = uses[s].producer(r).unwrap_or(i64::MIN);
+                        let local = w >= a as i64
+                            || (j == 0 && w == -1)
+                            || (j > 0 && xfer[j - 1].contains(&s));
+                        debug_assert!(
+                            local,
+                            "step '{}' reads slot {s} that is not stage-local to stage {j}",
+                            step.name
+                        );
+                    }
+                }
+            }
+            if j + 1 < k {
+                for &s in &xfer[j] {
+                    debug_assert!(
+                        stage_slots[j].contains(&s),
+                        "boundary slot {s} missing from stage {j}'s arena"
+                    );
+                }
+            }
+        }
+
+        PipelinePlan {
+            plan,
+            ranges,
+            stage_costs,
+            xfer,
+            stage_slots,
+            stage_scratch,
+        }
+    }
+
+    /// The underlying sequential plan (single-image latency path).
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Half-open step ranges, one per stage.
+    pub fn stage_ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Estimated per-stage cycle costs (the balanced partition sums).
+    pub fn stage_costs(&self) -> &[u64] {
+        &self.stage_costs
+    }
+
+    /// Arena slots copied across the cut between stage `j` and `j + 1`.
+    pub fn boundary_slots(&self, j: usize) -> &[usize] {
+        &self.xfer[j]
+    }
+
+    /// Run a stream of images through the pipeline; per image, the feed
+    /// map is validated like [`ExecutionPlan::run_with`] and the graph
+    /// outputs are returned in order. Output `i` of image `k` is
+    /// bit-identical to a sequential `plan.run(&images[k])`.
+    pub fn run_stream(
+        &self,
+        images: &[BTreeMap<String, Tensor>],
+    ) -> Result<Vec<Vec<Tensor>>, GraphError> {
+        for feeds in images {
+            for (name, _, shape) in &self.plan.feeds {
+                let t = feeds.get(name).ok_or_else(|| {
+                    GraphError::Invalid(name.clone(), "missing feed".into())
+                })?;
+                if &t.shape != shape {
+                    return Err(GraphError::Shape(
+                        name.clone(),
+                        format!("feed shape {:?} != {:?}", t.shape, shape),
+                    ));
+                }
+            }
+        }
+        let mut results: Vec<Vec<Tensor>> = Vec::with_capacity(images.len());
+        let feed = |img: usize, ctx: &mut ExecContext| {
+            for (i, (name, _, _)) in self.plan.feeds.iter().enumerate() {
+                let t = &images[img][name];
+                self.plan.write_feed(ctx, i, &t.data).expect("feed validated");
+            }
+        };
+        let mut collect = |_img: usize, ctx: &ExecContext| {
+            let outs = (0..self.plan.num_outputs())
+                .map(|i| {
+                    let (data, shape) = self.plan.output(ctx, i);
+                    Tensor::from_vec(shape, data.to_vec())
+                })
+                .collect();
+            results.push(outs);
+        };
+        self.run_inner(images.len(), &feed, &mut collect);
+        Ok(results)
+    }
+
+    /// Flat serving path: `input` holds `batch` images contiguously for
+    /// a single-placeholder plan; returns the first output concatenated
+    /// over the batch (the pipelined counterpart of the runtime's
+    /// sequential per-image loop).
+    pub fn run_batch(&self, input: &[f32], batch: usize) -> Result<Vec<f32>, GraphError> {
+        if self.plan.num_feeds() != 1 {
+            return Err(GraphError::Invalid(
+                "<pipeline>".into(),
+                format!("run_batch needs exactly 1 feed, plan has {}", self.plan.num_feeds()),
+            ));
+        }
+        let per: usize = self.plan.feeds[0].2.iter().product();
+        if input.len() != per * batch {
+            return Err(GraphError::Shape(
+                self.plan.feeds[0].0.clone(),
+                format!("input length {} != {batch} images of {per}", input.len()),
+            ));
+        }
+        let mut out: Vec<f32> = Vec::new();
+        let feed = |img: usize, ctx: &mut ExecContext| {
+            self.plan
+                .write_feed(ctx, 0, &input[img * per..(img + 1) * per])
+                .expect("feed validated");
+        };
+        let mut collect = |_img: usize, ctx: &ExecContext| {
+            let (data, _) = self.plan.output(ctx, 0);
+            if out.capacity() == 0 {
+                out.reserve_exact(data.len() * batch);
+            }
+            out.extend_from_slice(data);
+        };
+        self.run_inner(batch, &feed, &mut collect);
+        Ok(out)
+    }
+
+    /// Core streaming loop. Spawns one worker per stage except the last,
+    /// which runs on the calling thread (so `collect` needs no `Send`);
+    /// images are handed between stages through bounded channels with
+    /// [`PIPE_DEPTH`] recycled boundary messages per cut.
+    fn run_inner<F>(
+        &self,
+        n_images: usize,
+        feed: &F,
+        collect: &mut dyn FnMut(usize, &ExecContext),
+    ) where
+        F: Fn(usize, &mut ExecContext) + Sync,
+    {
+        let k = self.ranges.len();
+        std::thread::scope(|scope| {
+            let mut incoming: Option<(Receiver<Msg>, SyncSender<Msg>)> = None;
+            for j in 0..k - 1 {
+                let (data_tx, data_rx) = sync_channel::<Msg>(PIPE_DEPTH);
+                let (recycle_tx, recycle_rx) = sync_channel::<Msg>(PIPE_DEPTH);
+                for _ in 0..PIPE_DEPTH {
+                    recycle_tx.send(self.new_msg(j)).expect("seeding recycle channel");
+                }
+                let inc = incoming.take();
+                scope.spawn(move || {
+                    let mut ctx = self.stage_context(j);
+                    for img in 0..n_images {
+                        if j == 0 {
+                            feed(img, &mut ctx);
+                        }
+                        if let Some((rx, back)) = &inc {
+                            let msg = rx.recv().expect("upstream stage hung up");
+                            debug_assert_eq!(msg.img, img, "stage {j} images out of order");
+                            self.copy_in(j, &msg, &mut ctx);
+                            let _ = back.send(msg);
+                        }
+                        self.run_range(j, &mut ctx);
+                        let mut msg = recycle_rx.recv().expect("downstream stage hung up");
+                        msg.img = img;
+                        self.copy_out(j, &ctx, &mut msg);
+                        data_tx.send(msg).expect("downstream stage hung up");
+                    }
+                });
+                incoming = Some((data_rx, recycle_tx));
+            }
+            let j = k - 1;
+            let inc = incoming.take();
+            let mut ctx = self.stage_context(j);
+            for img in 0..n_images {
+                if j == 0 {
+                    feed(img, &mut ctx);
+                }
+                if let Some((rx, back)) = &inc {
+                    let msg = rx.recv().expect("upstream stage hung up");
+                    debug_assert_eq!(msg.img, img, "final stage images out of order");
+                    self.copy_in(j, &msg, &mut ctx);
+                    let _ = back.send(msg);
+                }
+                self.run_range(j, &mut ctx);
+                collect(img, &ctx);
+            }
+        });
+    }
+
+    /// A fresh boundary message for cut `j`, buffers pre-sized to the
+    /// crossing slots.
+    fn new_msg(&self, j: usize) -> Msg {
+        Msg {
+            img: 0,
+            bufs: self.xfer[j]
+                .iter()
+                .map(|&s| vec![0.0f32; self.plan.slot_lens[s]])
+                .collect(),
+        }
+    }
+
+    /// A private context for stage `j`: full-size buffers for the
+    /// stage-local arena slots, empty placeholders for the rest.
+    fn stage_context(&self, j: usize) -> ExecContext {
+        let mut slots: Vec<Vec<f32>> = vec![Vec::new(); self.plan.slot_lens.len()];
+        for &s in &self.stage_slots[j] {
+            slots[s] = vec![0.0; self.plan.slot_lens[s]];
+        }
+        let (scratch, acc) = self.stage_scratch[j];
+        ExecContext {
+            slots,
+            scratch: vec![0.0; scratch],
+            acc: vec![0.0; acc],
+        }
+    }
+
+    fn copy_in(&self, j: usize, msg: &Msg, ctx: &mut ExecContext) {
+        for (buf, &slot) in msg.bufs.iter().zip(&self.xfer[j - 1]) {
+            debug_assert_eq!(
+                buf.len(),
+                ctx.slots[slot].len(),
+                "boundary slot {slot} is not stage-local to stage {j}"
+            );
+            ctx.slots[slot].copy_from_slice(buf);
+        }
+    }
+
+    fn copy_out(&self, j: usize, ctx: &ExecContext, msg: &mut Msg) {
+        for (buf, &slot) in msg.bufs.iter_mut().zip(&self.xfer[j]) {
+            debug_assert_eq!(
+                buf.len(),
+                ctx.slots[slot].len(),
+                "boundary slot {slot} is not stage-local to stage {j}"
+            );
+            buf.copy_from_slice(&ctx.slots[slot]);
+        }
+    }
+
+    fn run_range(&self, j: usize, ctx: &mut ExecContext) {
+        let (a, b) = self.ranges[j];
+        for step in &self.plan.steps[a..b] {
+            debug_assert_eq!(
+                ctx.slots[step.out].len(),
+                self.plan.slot_lens[step.out],
+                "output slot {} of step '{}' is not stage-local to stage {j}",
+                step.out,
+                step.name
+            );
+            self.plan.exec_step(step, ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::nets::{tiny_cnn, NetConfig};
+    use crate::sparsity::prune_graph;
+    use crate::util::Rng;
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        let costs = [4u64, 4, 4, 4];
+        assert_eq!(partition_min_bottleneck(&costs, 2), vec![(0, 2), (2, 4)]);
+        assert_eq!(
+            partition_min_bottleneck(&costs, 4),
+            vec![(0, 1), (1, 2), (2, 3), (3, 4)]
+        );
+        // the dominant step gets a stage of its own
+        let skewed = [10u64, 1, 1, 1];
+        assert_eq!(partition_min_bottleneck(&skewed, 2), vec![(0, 1), (1, 4)]);
+        // more stages than steps clamps
+        assert_eq!(partition_min_bottleneck(&[3u64], 4), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn more_stages_never_raise_the_bottleneck() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let costs = ExecutionPlan::build(&g).unwrap().step_costs();
+        let bottleneck = |k: usize| -> u64 {
+            partition_min_bottleneck(&costs, k)
+                .iter()
+                .map(|&(a, b)| costs[a..b].iter().sum::<u64>())
+                .max()
+                .unwrap()
+        };
+        let (b1, b2, b4) = (bottleneck(1), bottleneck(2), bottleneck(4));
+        assert!(b2 <= b1, "{b2} > {b1}");
+        assert!(b4 <= b2, "{b4} > {b2}");
+    }
+
+    #[test]
+    fn boundaries_carry_live_values_only() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 3).unwrap();
+        assert_eq!(pipe.num_stages(), 3);
+        for j in 0..pipe.num_stages() - 1 {
+            let x = pipe.boundary_slots(j);
+            assert!(!x.is_empty(), "cut {j} carries nothing");
+            // far fewer slots cross a cut than the arena holds
+            assert!(x.len() < pipe.plan().stats().steps.max(2));
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_across_stage_counts() {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.6);
+        let seq = ExecutionPlan::build(&g).unwrap();
+        let mut rng = Rng::new(0x91FE);
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..6).map(|_| g.random_feeds(&mut rng)).collect();
+        for stages in [1usize, 2, 3, 4] {
+            let pipe = PipelinePlan::build(&g, &PlanOptions::default(), stages).unwrap();
+            let got = pipe.run_stream(&images).unwrap();
+            assert_eq!(got.len(), images.len());
+            for (i, feeds) in images.iter().enumerate() {
+                let want = seq.run(feeds).unwrap();
+                assert_eq!(got[i].len(), want.len());
+                for (a, b) in got[i].iter().zip(&want) {
+                    assert_eq!(a.shape, b.shape);
+                    // same kernels in the same order: bit-identical
+                    assert_eq!(a.data, b.data, "stages={stages} image={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_matches_interpreter() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 2).unwrap();
+        let per: usize = pipe.plan().feeds[0].2.iter().product();
+        let mut rng = Rng::new(0xBA7C);
+        let input: Vec<f32> = (0..3 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let out = pipe.run_batch(&input, 3).unwrap();
+        let probs = out.len() / 3;
+        for i in 0..3 {
+            let mut feeds = BTreeMap::new();
+            let image = input[i * per..(i + 1) * per].to_vec();
+            feeds.insert(
+                "input".to_string(),
+                Tensor::from_vec(&pipe.plan().feeds[0].2, image),
+            );
+            let want = interp::run_outputs(&g, &feeds).unwrap();
+            for (a, b) in out[i * probs..(i + 1) * probs].iter().zip(&want[0].data) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_rejects_bad_lengths() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 2).unwrap();
+        assert!(pipe.run_batch(&[0.0; 7], 1).is_err());
+    }
+
+    #[test]
+    fn stage_contexts_are_stage_local() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 3).unwrap();
+        let total: usize = pipe.plan().slot_lens.iter().sum();
+        for j in 0..pipe.num_stages() {
+            let ctx = pipe.stage_context(j);
+            let held: usize = ctx.slots.iter().map(|s| s.len()).sum();
+            assert!(held <= total);
+            // every boundary slot the stage participates in is allocated
+            if j > 0 {
+                for &s in pipe.boundary_slots(j - 1) {
+                    assert_eq!(ctx.slots[s].len(), pipe.plan().slot_lens[s]);
+                }
+            }
+        }
+    }
+}

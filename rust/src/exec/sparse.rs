@@ -20,6 +20,7 @@ use crate::sparsity::rle::ConvRle;
 ///
 /// `patches_t` must hold at least `patch_len * out_positions` elements,
 /// `acc` at least `out_positions`.
+#[allow(clippy::too_many_arguments)] // kernel ABI: geometry + scratch + fused epilogue
 pub fn sparse_conv(
     x: &[f32],
     g: &ConvGeom,
@@ -76,6 +77,7 @@ pub fn sparse_conv(
 /// Sparse MatMul (+ fused bias / activation) from RLE streams of the
 /// (Ci, Co) weight matrix (encoded as a 1x1 conv, so rows are plain
 /// input-channel indices).
+#[allow(clippy::too_many_arguments)] // kernel ABI: dims + fused epilogue
 pub fn sparse_matmul(
     x: &[f32],
     n: usize,

@@ -111,6 +111,18 @@ impl Graph {
         self.index.get(name).copied()
     }
 
+    /// Random-normal feed tensors for every Placeholder — the shared
+    /// test/bench helper for driving interpreters and execution plans.
+    pub fn random_feeds(&self, rng: &mut crate::util::Rng) -> BTreeMap<String, Tensor> {
+        let mut feeds = BTreeMap::new();
+        for n in &self.nodes {
+            if let Op::Placeholder { shape } = &n.op {
+                feeds.insert(n.name.clone(), Tensor::randn(shape, rng, 1.0));
+            }
+        }
+        feeds
+    }
+
     pub fn len(&self) -> usize {
         self.nodes.len()
     }

@@ -218,12 +218,12 @@ fn qconv2d(
                 let mut acc = 0i64;
                 for ky in 0..kh {
                     let iy = (oy * stride.0 + ky) as isize - t as isize;
-                    if iy < 0 || iy >= h as isize {
+                    if !(0..h as isize).contains(&iy) {
                         continue;
                     }
                     for kx in 0..kw {
                         let ix = (ox * stride.1 + kx) as isize - l as isize;
-                        if ix < 0 || ix >= wi as isize {
+                        if !(0..wi as isize).contains(&ix) {
                             continue;
                         }
                         if depthwise {
@@ -345,12 +345,12 @@ fn qmaxpool(
                 let mut m = i64::MIN;
                 for ky in 0..ksize.0 {
                     let iy = (oy * stride.0 + ky) as isize - t as isize;
-                    if iy < 0 || iy >= h as isize {
+                    if !(0..h as isize).contains(&iy) {
                         continue;
                     }
                     for kx in 0..ksize.1 {
                         let ix = (ox * stride.1 + kx) as isize - l as isize;
-                        if ix < 0 || ix >= w as isize {
+                        if !(0..w as isize).contains(&ix) {
                             continue;
                         }
                         m = m.max(x.data[((iy as usize * w) + ix as usize) * c + ch]);

@@ -100,12 +100,12 @@ pub fn conv2d(x: &Tensor, w: &Tensor, stride: (usize, usize), padding: Padding) 
                 let mut acc = 0f32;
                 for ky in 0..kh {
                     let iy = (oy * stride.0 + ky) as isize - t as isize;
-                    if iy < 0 || iy >= h as isize {
+                    if !(0..h as isize).contains(&iy) {
                         continue;
                     }
                     for kx in 0..kw {
                         let ix = (ox * stride.1 + kx) as isize - l as isize;
-                        if ix < 0 || ix >= wi as isize {
+                        if !(0..wi as isize).contains(&ix) {
                             continue;
                         }
                         for ic in 0..ci {
@@ -140,12 +140,12 @@ pub fn depthwise_conv2d(
                     let mut acc = 0f32;
                     for ky in 0..kh {
                         let iy = (oy * stride.0 + ky) as isize - t as isize;
-                        if iy < 0 || iy >= h as isize {
+                        if !(0..h as isize).contains(&iy) {
                             continue;
                         }
                         for kx in 0..kw {
                             let ix = (ox * stride.1 + kx) as isize - l as isize;
-                            if ix < 0 || ix >= wi as isize {
+                            if !(0..wi as isize).contains(&ix) {
                                 continue;
                             }
                             acc += x.at4(0, iy as usize, ix as usize, ic)
@@ -224,12 +224,12 @@ pub fn max_pool(
                 let mut m = f32::NEG_INFINITY;
                 for ky in 0..ksize.0 {
                     let iy = (oy * stride.0 + ky) as isize - t as isize;
-                    if iy < 0 || iy >= h as isize {
+                    if !(0..h as isize).contains(&iy) {
                         continue;
                     }
                     for kx in 0..ksize.1 {
                         let ix = (ox * stride.1 + kx) as isize - l as isize;
-                        if ix < 0 || ix >= w as isize {
+                        if !(0..w as isize).contains(&ix) {
                             continue;
                         }
                         m = m.max(x.at4(0, iy as usize, ix as usize, ch));

@@ -4,7 +4,10 @@
 //!   compile   --net <name> [--sparsity F] [--dsp-target N] [--device D]
 //!             [--out DIR] [--full-scale] [--per-layer]    compile a plan
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
-//!   serve     --model DIR [--requests N] [--batch N]   exec serving demo
+//!   serve     --model DIR [--requests N] [--batch N] [--threads N]
+//!                                                     exec serving demo
+//!                                        (threads > 1 streams batches
+//!                                        through the layer pipeline)
 //!   accuracy  --net <name> [--bits N]          fixed-point vs f32 study
 //!
 //! `hpipe compile --net resnet50 --sparsity 0.85 --dsp-target 5000
@@ -161,7 +164,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.str("model", "artifacts"));
     let requests = args.usize("requests", 64);
     let batch = args.usize("batch", 8);
-    let mut report = hpipe::coordinator::serve_demo(&dir, requests, batch)?;
+    let threads = args.usize("threads", 1);
+    let mut report = hpipe::coordinator::serve_demo(&dir, requests, batch, threads)?;
     report.print();
     Ok(())
 }

@@ -87,6 +87,7 @@ impl NetBuilder {
     }
 
     /// Conv2D with He-initialized weights.
+    #[allow(clippy::too_many_arguments)] // full conv signature mirrors the op
     pub fn conv(
         &mut self,
         name: &str,

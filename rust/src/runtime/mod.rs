@@ -15,9 +15,13 @@
 //! HPIPE is a batch-1 architecture (§V), so batch-N "models" are the
 //! batch-1 plan run N times over a contiguous input block; batching
 //! exists to amortize transfer + queueing, exactly like the PCIe DMA
-//! batching the coordinator models.
+//! batching the coordinator models. With `threads > 1` the batch is
+//! instead *streamed* through the layer-pipelined executor
+//! ([`crate::exec::PipelinePlan`]) — the software twin of the paper's
+//! all-layers-concurrent dataflow — while single-image requests keep
+//! the sequential plan (lowest latency, no handoff cost).
 
-use crate::exec::{ExecContext, ExecutionPlan};
+use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan};
 use crate::graph::{graphdef, Graph, Op, Tensor};
 use crate::sparsity::prune_tensor;
 use crate::util::error::{Context, Result};
@@ -30,18 +34,36 @@ use std::path::{Path, PathBuf};
 pub struct LoadedModel {
     pub name: String,
     pub batch: usize,
+    /// Pipeline stages (worker threads) used for batch serving; 1 means
+    /// fully sequential execution.
+    pub threads: usize,
     /// Input shape with the leading dim set to `batch`.
     pub input_shape: Vec<usize>,
-    plan: ExecutionPlan,
-    ctx: RefCell<ExecContext>,
+    pipeline: PipelinePlan,
+    /// Sequential-path context, allocated on first sequential run —
+    /// models that only ever serve through the pipeline (threads > 1,
+    /// batch > 1) never pay for the full arena.
+    ctx: RefCell<Option<ExecContext>>,
 }
 
 impl LoadedModel {
+    /// Compile a graph into a runnable model with the default
+    /// single-threaded (sequential) execution.
+    pub fn from_graph(name: &str, graph: &Graph, batch: usize) -> Result<LoadedModel> {
+        LoadedModel::from_graph_with(name, graph, batch, 1)
+    }
+
     /// Compile a graph into a runnable model. The graph must have
     /// exactly one Placeholder and its leading (batch) dim must be 1 —
     /// both enforced here so violations surface as errors, not panics
-    /// in the serving loop.
-    pub fn from_graph(name: &str, graph: &Graph, batch: usize) -> Result<LoadedModel> {
+    /// in the serving loop. `threads > 1` partitions the plan into that
+    /// many pipeline stages for batch runs.
+    pub fn from_graph_with(
+        name: &str,
+        graph: &Graph,
+        batch: usize,
+        threads: usize,
+    ) -> Result<LoadedModel> {
         let placeholders: Vec<(String, Vec<usize>)> = graph
             .nodes
             .iter()
@@ -61,27 +83,35 @@ impl LoadedModel {
             "placeholder '{input_name}' must have batch dim 1, has shape {per_image_shape:?}"
         );
         crate::ensure!(batch >= 1, "batch must be >= 1");
+        crate::ensure!(threads >= 1, "threads must be >= 1");
         let plan = ExecutionPlan::build(graph)?;
         crate::ensure!(plan.num_outputs() >= 1, "graph has no outputs");
         crate::ensure!(
             plan.num_feeds() == 1 && plan.feed_name(0) == input_name,
             "plan feed binding does not match placeholder '{input_name}'"
         );
-        let ctx = RefCell::new(plan.new_context());
+        let pipeline = PipelinePlan::from_plan(plan, threads);
+        let ctx = RefCell::new(None);
         let mut input_shape = per_image_shape;
         input_shape[0] = batch;
         Ok(LoadedModel {
             name: name.to_string(),
             batch,
+            threads,
             input_shape,
-            plan,
+            pipeline,
             ctx,
         })
     }
 
     /// Plan composition counters (sparse vs dense kernels, fusions...).
     pub fn plan_stats(&self) -> crate::exec::PlanStats {
-        self.plan.stats()
+        self.pipeline.plan().stats()
+    }
+
+    /// The stage partition backing this model's batch serving path.
+    pub fn pipeline(&self) -> &PipelinePlan {
+        &self.pipeline
     }
 
     /// Run one batch. `input` is row-major f32 of `input_shape` (with
@@ -98,15 +128,21 @@ impl LoadedModel {
             );
         }
         let per = expect / self.batch;
-        let mut ctx = self.ctx.borrow_mut();
+        if self.threads > 1 && self.batch > 1 {
+            // Throughput path: stream the batch through the layer
+            // pipeline, several images in flight across stage threads.
+            return Ok(self.pipeline.run_batch(input, self.batch)?);
+        }
+        let plan = self.pipeline.plan();
+        let mut guard = self.ctx.borrow_mut();
+        let ctx = guard.get_or_insert_with(|| plan.new_context());
         let mut out_all: Vec<f32> = Vec::new();
         for b in 0..self.batch {
             // Zero-allocation hot path: the image slice goes straight
             // into the plan's feed slot (single copy, no Tensor wrap).
-            self.plan
-                .write_feed(&mut ctx, 0, &input[b * per..(b + 1) * per])?;
-            self.plan.execute_steps(&mut ctx);
-            let (data, _) = self.plan.output(&ctx, 0);
+            plan.write_feed(ctx, 0, &input[b * per..(b + 1) * per])?;
+            plan.execute_steps(ctx);
+            let (data, _) = plan.output(ctx, 0);
             if out_all.capacity() == 0 {
                 out_all.reserve_exact(data.len() * self.batch);
             }
@@ -119,6 +155,9 @@ impl LoadedModel {
 /// The artifact registry: owns every loaded (compiled) model.
 pub struct Runtime {
     pub artifacts_dir: PathBuf,
+    /// Pipeline stages configured for every model loaded after this is
+    /// set (see [`Runtime::with_threads`]); 1 = sequential.
+    pub threads: usize,
     models: BTreeMap<String, LoadedModel>,
 }
 
@@ -128,8 +167,16 @@ impl Runtime {
     pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
         Ok(Runtime {
             artifacts_dir: artifacts_dir.to_path_buf(),
+            threads: 1,
             models: BTreeMap::new(),
         })
+    }
+
+    /// Configure the pipeline stage count for subsequently loaded
+    /// models (clamped to at least 1).
+    pub fn with_threads(mut self, threads: usize) -> Runtime {
+        self.threads = threads.max(1);
+        self
     }
 
     pub fn platform(&self) -> String {
@@ -138,7 +185,7 @@ impl Runtime {
 
     /// Compile a graph into a named executable.
     pub fn load_graph(&mut self, name: &str, graph: &Graph, batch: usize) -> Result<()> {
-        let model = LoadedModel::from_graph(name, graph, batch)
+        let model = LoadedModel::from_graph_with(name, graph, batch, self.threads)
             .with_context(|| format!("compiling model '{name}'"))?;
         self.models.insert(name.to_string(), model);
         Ok(())
@@ -271,6 +318,19 @@ mod tests {
             let out1 = m1.run(&block[i * per..(i + 1) * per]).unwrap();
             assert_eq!(out1, &out4[i * probs..(i + 1) * probs]);
         }
+    }
+
+    #[test]
+    fn pipelined_model_matches_sequential_model() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let seq = LoadedModel::from_graph("seq", &g, 4).unwrap();
+        let piped = LoadedModel::from_graph_with("piped", &g, 4, 4).unwrap();
+        assert!(piped.pipeline().num_stages() > 1);
+        let n: usize = seq.input_shape.iter().product();
+        let mut rng = Rng::new(55);
+        let input: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // identical kernel sequence per image: bit-identical outputs
+        assert_eq!(seq.run(&input).unwrap(), piped.run(&input).unwrap());
     }
 
     #[test]

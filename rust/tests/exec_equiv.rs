@@ -3,11 +3,14 @@
 //! TinyCNN-style and ResNet-block graphs, across sparsity levels
 //! 0.0–0.9, across plan options (dense/sparse kernels, fusion on/off,
 //! RLE split counts), and both before and after the transform passes.
+//! The layer-pipelined executor is held to a harder bar: across stage
+//! counts it must match the *sequential plan bit for bit* (same kernels
+//! in the same order), and match the interpreter to the same tolerance.
 
-use hpipe::exec::{ExecutionPlan, PlanOptions};
-use hpipe::graph::{Graph, Op, Padding};
+use hpipe::exec::{ExecutionPlan, PipelinePlan, PlanOptions};
+use hpipe::graph::{Graph, Op, Padding, Tensor};
 use hpipe::interp;
-use hpipe::nets::NetBuilder;
+use hpipe::nets::{tiny_cnn, NetBuilder, NetConfig};
 use hpipe::sparsity::prune_graph;
 use hpipe::transform::optimize;
 use hpipe::util::prop::{assert_close, Cases};
@@ -98,15 +101,7 @@ fn random_options(rng: &mut Rng) -> PlanOptions {
 
 fn check_equivalence(g: &Graph, opts: &PlanOptions, rng: &mut Rng) -> Result<(), String> {
     let plan = ExecutionPlan::build_with(g, opts).map_err(|e| e.to_string())?;
-    let mut feeds = BTreeMap::new();
-    for n in &g.nodes {
-        if let Op::Placeholder { shape } = &n.op {
-            feeds.insert(
-                n.name.clone(),
-                hpipe::graph::Tensor::randn(shape, rng, 1.0),
-            );
-        }
-    }
+    let feeds = g.random_feeds(rng);
     let got = plan.run(&feeds).map_err(|e| e.to_string())?;
     let want = interp::run_outputs(g, &feeds).map_err(|e| e.to_string())?;
     if got.len() != want.len() {
@@ -161,6 +156,95 @@ fn multi_consumer_conv_is_not_fused_incorrectly() {
     let g = b.g;
     let mut rng = Rng::new(3);
     check_equivalence(&g, &PlanOptions::default(), &mut rng).unwrap();
+}
+
+/// Pipelined execution across stage counts {1, 2, 4} and sparsity
+/// {0.0, 0.5, 0.9}: every image streamed through the pipeline must
+/// match the interpreter oracle, for randomized CNNs and random plan
+/// options (ISSUE 2 satellite).
+#[test]
+fn prop_pipeline_matches_interp_across_stage_counts_and_sparsity() {
+    let mut case = 0u64;
+    for &sparsity in &[0.0f64, 0.5, 0.9] {
+        for &stages in &[1usize, 2, 4] {
+            for rep in 0..2usize {
+                case += 1;
+                let mut rng = Rng::new(0xB1BE ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+                let mut g = random_cnn(&mut rng, rep + 1);
+                prune_graph(&mut g, sparsity);
+                let opts = random_options(&mut rng);
+                let pipe = PipelinePlan::build(&g, &opts, stages).unwrap();
+                let images: Vec<BTreeMap<String, Tensor>> =
+                    (0..3).map(|_| g.random_feeds(&mut rng)).collect();
+                let got = pipe.run_stream(&images).unwrap();
+                for (i, fm) in images.iter().enumerate() {
+                    let want = interp::run_outputs(&g, fm).unwrap();
+                    assert_eq!(got[i].len(), want.len());
+                    for (a, b) in got[i].iter().zip(&want) {
+                        assert_eq!(a.shape, b.shape);
+                        assert_close(&a.data, &b.data, 1e-5, 1e-4)
+                            .map_err(|e| {
+                                format!(
+                                    "sparsity {sparsity} stages {stages} rep {rep} \
+                                     image {i}: {e}"
+                                )
+                            })
+                            .unwrap();
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// ResNet bottleneck blocks have skip paths whose values cross stage
+/// cuts far from where they were produced — the hard case for the
+/// boundary-liveness analysis (§V-C's skip-path buffering in hardware).
+#[test]
+fn prop_pipeline_resnet_block_matches_interp() {
+    for (case, &stages) in [2usize, 3, 4].iter().enumerate() {
+        let mut rng = Rng::new(0x5C1B + case as u64);
+        let mut g = random_resnet_block(&mut rng);
+        prune_graph(&mut g, 0.5);
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), stages).unwrap();
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..4).map(|_| g.random_feeds(&mut rng)).collect();
+        let got = pipe.run_stream(&images).unwrap();
+        for (i, fm) in images.iter().enumerate() {
+            let want = interp::run_outputs(&g, fm).unwrap();
+            for (a, b) in got[i].iter().zip(&want) {
+                assert_eq!(a.shape, b.shape);
+                assert_close(&a.data, &b.data, 1e-5, 1e-4)
+                    .map_err(|e| format!("stages {stages} image {i}: {e}"))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+/// Stress: many images in flight through a 4-stage pipeline. Per-image
+/// outputs must equal the sequential plan's *bit for bit* — the same
+/// kernels run in the same order, so any divergence is a race or a
+/// boundary-handoff bug, not float noise.
+#[test]
+fn pipeline_stress_images_match_sequential_bitwise() {
+    let mut g = tiny_cnn(NetConfig::test_scale());
+    prune_graph(&mut g, 0.7);
+    let seq = ExecutionPlan::build(&g).unwrap();
+    let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 4).unwrap();
+    assert!(pipe.num_stages() > 1);
+    let mut rng = Rng::new(0x57E5);
+    let images: Vec<BTreeMap<String, Tensor>> =
+        (0..64).map(|_| g.random_feeds(&mut rng)).collect();
+    let got = pipe.run_stream(&images).unwrap();
+    assert_eq!(got.len(), images.len());
+    for (i, fm) in images.iter().enumerate() {
+        let want = seq.run(fm).unwrap();
+        for (a, b) in got[i].iter().zip(&want) {
+            assert_eq!(a.shape, b.shape, "image {i}");
+            assert_eq!(a.data, b.data, "image {i}");
+        }
+    }
 }
 
 /// Sparsity extremes: fully dense weights through the sparse kernel and
