@@ -74,5 +74,27 @@ fn main() -> hpipe::util::error::Result<()> {
         exec_plan.stats().sparse_convs,
         exec_plan.stats().fused_chains
     );
+
+    // 7. batch is a first-class plan dimension: a batch-4 plan holds
+    //    4x activations in its arena and walks each RLE weight stream
+    //    once per *batch*, broadcasting every surviving weight across
+    //    all four images — not once per image
+    let batched_plan = hpipe::exec::ExecutionPlan::build_batched(&graph, 4)?;
+    let images: Vec<hpipe::graph::Tensor> = (0..4)
+        .map(|_| hpipe::graph::Tensor::randn(&[1, 16, 16, 3], &mut rng, 1.0))
+        .collect();
+    let mut batched_feeds = std::collections::BTreeMap::new();
+    batched_feeds.insert(
+        "input".to_string(),
+        hpipe::graph::Tensor::concat_batch(&images.iter().collect::<Vec<_>>()),
+    );
+    let (bresult, btook) = hpipe::util::timer::time_once(|| batched_plan.run(&batched_feeds));
+    let bout = bresult?;
+    println!(
+        "executed a native batch-{} plan in {btook:?}: output shape {:?} \
+         (one weight-stream walk for the whole batch)",
+        batched_plan.batch(),
+        bout[0].shape
+    );
     Ok(())
 }

@@ -3,14 +3,16 @@
 //!   make artifacts           # trains TinyCNN + lowers it to HLO text
 //!   cargo run --release --example serve_batch [-- <requests> <batch>]
 //!
-//! Loads the trained TinyCNN graphdef, compiles it into a sparse-aware
-//! execution plan, and serves batched classification requests through
-//! the Layer-3 coordinator (request queue -> dynamic batcher -> compiled
-//! executor), reporting latency percentiles + throughput. Every result
+//! Loads the trained TinyCNN graphdef, compiles it into sparse-aware
+//! *natively batched* execution plans (a batch-N model's plan executes
+//! all N images per run, walking each RLE weight stream once per batch),
+//! and serves dynamic classification batches through the Layer-3
+//! coordinator (request queue -> dynamic batcher -> one whole-batch plan
+//! execution), reporting latency percentiles + throughput. Every result
 //! is cross-checked against the Rust reference interpreter running the
 //! same trained graphdef — proving the kernels, the plan compiler and
 //! the coordinator all agree. A third argument > 1 streams each batch
-//! through that many layer-pipeline stage threads.
+//! through that many layer-pipeline stage threads in batched groups.
 
 use hpipe::coordinator::serve_demo;
 use std::path::PathBuf;

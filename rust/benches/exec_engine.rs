@@ -1,18 +1,20 @@
 //! Executor engine benchmark: reference interpreter vs planned-dense vs
 //! planned-sparse convolution on a ResNet-50 conv layer across weight
-//! sparsity levels, plus sequential vs layer-pipelined throughput on a
-//! ResNet-50 conv-stack workload at 1/2/4/8 stages. Emits
-//! `BENCH_exec.json` at the repo root so the perf trajectory of the hot
-//! path is recorded alongside the code.
+//! sparsity levels, sequential vs layer-pipelined throughput on a
+//! ResNet-50 conv-stack workload at 1/2/4/8 stages, and natively
+//! batched plans at B ∈ {1, 2, 4, 8} vs the retired run-N-times loop on
+//! the same conv stack. Emits `BENCH_exec.json` at the repo root so the
+//! perf trajectory of the hot path is recorded alongside the code.
 //!
 //! Acceptance targets: planned sparse ≥ 5x faster than `interp::run` at
 //! 80% sparsity, sparse beats planned-dense at ≥ 70% sparsity (ISSUE 1),
-//! and pipelined throughput at 4 stages beats the sequential planned
-//! executor (ISSUE 2).
+//! pipelined throughput at 4 stages beats the sequential planned
+//! executor (ISSUE 2), and the batch-8 plan (one RLE weight-stream walk
+//! per batch) beats running the batch-1 plan 8 times (ISSUE 3).
 //!
 //! `BENCH_SMOKE=1` caps iterations/images for CI and turns the
-//! pipelined-vs-sequential comparison into a hard gate (nonzero exit on
-//! regression).
+//! pipelined-vs-sequential and batched-vs-loop comparisons into hard
+//! gates (nonzero exit on regression).
 
 use hpipe::exec::{ExecutionPlan, PipelinePlan, PlanOptions};
 use hpipe::graph::{Graph, Op, Padding, Tensor};
@@ -196,7 +198,7 @@ fn main() {
         let costs = pipe.stage_costs().to_vec();
         let img_s = best_img_s(pipe_reps, pipe_images, || {
             let out = pipe.run_batch(&flat, pipe_images).unwrap();
-            std::hint::black_box(out[0]);
+            std::hint::black_box(out[0][0]);
         });
         (img_s, costs)
     };
@@ -240,6 +242,92 @@ fn main() {
     }
     let pipelined_wins = pipe4_img_s >= seq_img_s;
 
+    // ---- natively batched plans vs the run-N-times loop (ISSUE 3) ----
+    let batch_images = if smoke { 8usize } else { 32 };
+    println!(
+        "\n=== batched plans: {CHAIN_LAYERS}x conv chain (s={CHAIN_SPARSITY}), \
+         {batch_images} images, batch-B plan vs batch-1 plan run N times ==="
+    );
+    let flat_b: Vec<f32> = (0..batch_images * per)
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    // The old serving path: the batch-1 plan executed once per image,
+    // re-walking every RLE weight stream N times.
+    let loop_plan = ExecutionPlan::build(&chain).unwrap();
+    let mut loop_ctx = loop_plan.new_context();
+    let mut measure_loop = || {
+        best_img_s(pipe_reps, batch_images, || {
+            for i in 0..batch_images {
+                loop_plan
+                    .write_feed(&mut loop_ctx, 0, &flat_b[i * per..(i + 1) * per])
+                    .unwrap();
+                loop_plan.execute_steps(&mut loop_ctx);
+                std::hint::black_box(loop_plan.output(&loop_ctx, 0).0[0]);
+            }
+        })
+    };
+    // The batched path: a batch-B plan walks each weight stream once
+    // per group and broadcasts every surviving weight across B images.
+    let measure_batched = |b: usize| {
+        let plan = ExecutionPlan::build_batched(&chain, b).unwrap();
+        let mut ctx = plan.new_context();
+        let per_group = per * b;
+        let groups = batch_images / b;
+        best_img_s(pipe_reps, batch_images, || {
+            for g in 0..groups {
+                plan.write_feed(&mut ctx, 0, &flat_b[g * per_group..(g + 1) * per_group])
+                    .unwrap();
+                plan.execute_steps(&mut ctx);
+                std::hint::black_box(plan.output(&ctx, 0).0[0]);
+            }
+        })
+    };
+    let mut loop_img_s = measure_loop();
+    println!("  run-N-times loop (B=1 plan): {loop_img_s:.1} img/s");
+    let mut measured: Vec<(usize, f64)> = Vec::new();
+    for b in [1usize, 2, 4, 8] {
+        let img_s = measure_batched(b);
+        println!(
+            "  batched @B={b}: {img_s:.1} img/s ({:.2}x vs loop)",
+            img_s / loop_img_s
+        );
+        measured.push((b, img_s));
+    }
+    let mut batched8_img_s = measured.last().unwrap().1;
+    // Same retry policy as the pipeline gate: one full re-measure of
+    // both sides before a verdict, so a descheduled run on a shared CI
+    // runner doesn't fail the gate while a real regression still does.
+    let mut batched_gate_retried = false;
+    if smoke && batched8_img_s < loop_img_s {
+        println!("  batched gate missed on first attempt; re-measuring both sides");
+        batched_gate_retried = true;
+        loop_img_s = measure_loop();
+        batched8_img_s = measure_batched(8);
+        measured.last_mut().unwrap().1 = batched8_img_s;
+        println!("  retry: batched @8 {batched8_img_s:.1} vs loop {loop_img_s:.1} img/s");
+    }
+    let batched_wins = batched8_img_s >= loop_img_s;
+
+    // Rows are built AFTER the verdict so the artifact's per-B speedups
+    // share the final baseline (self-consistent with the gate outcome).
+    let mut batched_rows = Json::Arr(vec![]);
+    for &(b, img_s) in &measured {
+        let mut row = Json::obj();
+        row.set("batch", Json::from(b))
+            .set("img_s", Json::from(img_s))
+            .set("speedup_vs_loop", Json::from(img_s / loop_img_s));
+        batched_rows.push(row);
+    }
+
+    let mut batched = Json::obj();
+    batched
+        .set("images", Json::from(batch_images))
+        .set("loop_img_s", Json::from(loop_img_s))
+        .set("batched_8_img_s", Json::from(batched8_img_s))
+        .set("gate_retried", Json::from(batched_gate_retried))
+        .set("batches", batched_rows)
+        .set("batched_8_beats_loop", Json::from(batched_wins));
+
     let mut pipeline = Json::obj();
     pipeline
         .set(
@@ -273,7 +361,8 @@ fn main() {
             "sparse_beats_dense_at_0.7",
             Json::from(sparse_beats_dense_at_70),
         )
-        .set("pipelined_4_beats_sequential", Json::from(pipelined_wins));
+        .set("pipelined_4_beats_sequential", Json::from(pipelined_wins))
+        .set("batched_8_beats_loop", Json::from(batched_wins));
     let mut root = Json::obj();
     root.set("bench", Json::from("exec_engine/resnet50_conv_layer"))
         .set(
@@ -290,24 +379,37 @@ fn main() {
         )
         .set("results", rows)
         .set("pipeline", pipeline)
+        .set("batched", batched)
         .set("acceptance", acceptance);
 
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_exec.json");
     std::fs::write(&out, root.pretty()).expect("writing BENCH_exec.json");
     println!(
         "\nwrote {} (sparse>=5x interp @0.8: {}, sparse beats dense @0.7: {}, \
-         pipelined@4 beats sequential: {})",
+         pipelined@4 beats sequential: {}, batched@8 beats loop: {})",
         out.display(),
         sparse_5x_at_80,
         sparse_beats_dense_at_70,
-        pipelined_wins
+        pipelined_wins,
+        batched_wins
     );
 
+    let mut failed = false;
     if smoke && !pipelined_wins {
         eprintln!(
             "BENCH_SMOKE gate failed: pipelined @4 stages ({pipe4_img_s:.1} img/s) \
              is slower than sequential ({seq_img_s:.1} img/s) on both attempts"
         );
+        failed = true;
+    }
+    if smoke && !batched_wins {
+        eprintln!(
+            "BENCH_SMOKE gate failed: batched @B=8 ({batched8_img_s:.1} img/s) \
+             is slower than the run-N-times loop ({loop_img_s:.1} img/s) on both attempts"
+        );
+        failed = true;
+    }
+    if failed {
         std::process::exit(1);
     }
 }

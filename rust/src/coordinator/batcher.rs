@@ -91,4 +91,37 @@ mod tests {
         );
         assert_eq!(b, vec![42]);
     }
+
+    /// The timeout path: a partial batch must form and flush when the
+    /// channel goes *quiet* (sender still connected) before `max_batch`
+    /// items arrive — `recv_timeout` hitting `Timeout`, not
+    /// `Disconnected`. A batcher that waited for a full batch or for
+    /// hangup would stall every straggler forever.
+    #[test]
+    fn partial_batch_flushes_on_quiet_channel() {
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = next_batch(
+            &rx,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+        );
+        let waited = t0.elapsed();
+        // flushed the 3 waiting items without the other 5...
+        assert_eq!(b, vec![0, 1, 2]);
+        // ...after giving stragglers the grace window but not (say) 100x
+        // it — the sender is still alive, so only the timeout can have
+        // ended the wait.
+        assert!(waited >= Duration::from_millis(5), "returned early: {waited:?}");
+        assert!(waited < Duration::from_millis(500), "stalled: {waited:?}");
+        // the sender is in fact still usable afterwards
+        tx.send(99).unwrap();
+        let b2 = next_batch(
+            &rx,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b2, vec![99]);
+    }
 }

@@ -2,9 +2,11 @@
 //!
 //! The host side of HPIPE: client threads submit images over a queue
 //! (the PCIe analog), the coordinator drains the queue through the
-//! dynamic batcher, executes the compiled [`crate::exec::ExecutionPlan`]
-//! through the runtime — no interpreter anywhere near the hot path —
-//! and returns classifications with latency accounting. `serve_demo` is
+//! dynamic batcher, and hands each drained batch to a **natively
+//! batched** [`crate::exec::ExecutionPlan`] through the runtime — one
+//! plan execution per batch (shared weight streams across the batch's
+//! images), no interpreter and no run-N-times loop anywhere near the
+//! hot path — returning classifications with latency accounting. `serve_demo` is
 //! the end-to-end driver used by `hpipe serve`,
 //! `examples/serve_batch.rs` and the e2e bench; it also cross-validates
 //! the executor's results against the Rust reference interpreter (the
@@ -95,17 +97,25 @@ impl Coordinator {
                 .best_batch_model(batch.len())
                 .context("no model loaded")?;
             // concatenate request payloads; the executable may be smaller
-            // than the drained batch — chunk and pad the tail chunk
+            // than the drained batch — chunk, and each full chunk is one
+            // whole-batch plan execution straight off the request block
+            // (only a short tail chunk pays a copy, zero-padded up to
+            // the plan's batch)
             let mut flat = Vec::with_capacity(batch.len() * per_image);
             for r in &batch {
                 flat.extend_from_slice(&r.data);
             }
             let mut outputs: Vec<f32> = Vec::new();
             let mut probs_per = 0usize;
-            for chunk in flat.chunks(model.batch * per_image) {
-                let mut c = chunk.to_vec();
-                c.resize(model.batch * per_image, 0.0);
-                let out = model.run(&c)?;
+            let full = model.batch * per_image;
+            for chunk in flat.chunks(full) {
+                let out = if chunk.len() == full {
+                    model.run(chunk)?
+                } else {
+                    let mut c = chunk.to_vec();
+                    c.resize(full, 0.0);
+                    model.run(&c)?
+                };
                 probs_per = out.len() / model.batch.max(1);
                 outputs.extend(out);
             }

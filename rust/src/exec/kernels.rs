@@ -7,6 +7,12 @@
 //! the inner loop is a contiguous axpy the compiler can vectorize; the
 //! (kh, kw, ci) patch layout matches the HWIO weight layout, making the
 //! weight tensor directly usable as the GEMM B matrix.
+//!
+//! Batch is a first-class dimension: every geometry carries the plan's
+//! batch `n` ([`ConvGeom::n`]) and kernels process all `n` images of a
+//! slot per call — im2col emits an [n·M, K] patch matrix feeding *one*
+//! GEMM, so each weight tile is read once per batch instead of once per
+//! image (the weight-reuse-across-batch the batched plans exist for).
 
 use crate::graph::{Padding, Tensor};
 
@@ -48,9 +54,13 @@ impl Act {
 }
 
 /// Pre-resolved geometry of a convolution / pooling window over an NHWC
-/// activation (batch 1, as everywhere in the pipeline).
+/// activation. `n` is the batch dimension the plan was compiled for:
+/// batched kernels process all `n` images of a slot in one call, sharing
+/// one weight-stream walk / GEMM tile pass across the batch.
 #[derive(Clone, Debug)]
 pub struct ConvGeom {
+    /// Batch (images per activation slot).
+    pub n: usize,
     pub h: usize,
     pub w: usize,
     pub ci: usize,
@@ -73,11 +83,11 @@ impl ConvGeom {
         stride: (usize, usize),
         padding: Padding,
     ) -> ConvGeom {
-        let (h, w, ci) = (x_shape[1], x_shape[2], x_shape[3]);
+        let (n, h, w, ci) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
         let pad = padding.resolve(h, w, kh, kw, stride.0, stride.1);
         let ho = (h + pad.0 + pad.1 - kh) / stride.0 + 1;
         let wo = (w + pad.2 + pad.3 - kw) / stride.1 + 1;
-        ConvGeom { h, w, ci, kh, kw, co, stride, pad, ho, wo }
+        ConvGeom { n, h, w, ci, kh, kw, co, stride, pad, ho, wo }
     }
 
     /// GEMM K dimension: one im2col patch.
@@ -85,9 +95,14 @@ impl ConvGeom {
         self.kh * self.kw * self.ci
     }
 
-    /// GEMM M dimension: output spatial positions.
+    /// Per-image output spatial positions.
     pub fn out_positions(&self) -> usize {
         self.ho * self.wo
+    }
+
+    /// GEMM M dimension: output positions across the whole batch.
+    pub fn total_positions(&self) -> usize {
+        self.n * self.ho * self.wo
     }
 
     /// True when the input itself is a valid im2col matrix (1x1 kernel,
@@ -100,61 +115,71 @@ impl ConvGeom {
     }
 }
 
-/// Fill `patches` (row-major [M, K], K = kh*kw*ci) with im2col patches of
-/// `x`. Padding positions become zero.
+/// Fill `patches` (row-major [n·M, K], K = kh*kw*ci) with im2col patches
+/// of all `n` images of `x`. Padding positions become zero.
 pub fn im2col(x: &[f32], g: &ConvGeom, patches: &mut [f32]) {
     let k = g.patch_len();
     let m = g.out_positions();
-    patches[..m * k].fill(0.0);
+    patches[..g.n * m * k].fill(0.0);
     let (sh, sw) = g.stride;
     let (pt, _, pl, _) = g.pad;
-    for oy in 0..g.ho {
-        for ky in 0..g.kh {
-            let iy = (oy * sh + ky) as isize - pt as isize;
-            if !(0..g.h as isize).contains(&iy) {
-                continue;
-            }
-            let iy = iy as usize;
-            for ox in 0..g.wo {
-                let row = &mut patches[(oy * g.wo + ox) * k..][..k];
-                for kx in 0..g.kw {
-                    let ix = (ox * sw + kx) as isize - pl as isize;
-                    if !(0..g.w as isize).contains(&ix) {
-                        continue;
+    for img in 0..g.n {
+        let xi = &x[img * g.h * g.w * g.ci..][..g.h * g.w * g.ci];
+        let pi = &mut patches[img * m * k..][..m * k];
+        for oy in 0..g.ho {
+            for ky in 0..g.kh {
+                let iy = (oy * sh + ky) as isize - pt as isize;
+                if !(0..g.h as isize).contains(&iy) {
+                    continue;
+                }
+                let iy = iy as usize;
+                for ox in 0..g.wo {
+                    let row = &mut pi[(oy * g.wo + ox) * k..][..k];
+                    for kx in 0..g.kw {
+                        let ix = (ox * sw + kx) as isize - pl as isize;
+                        if !(0..g.w as isize).contains(&ix) {
+                            continue;
+                        }
+                        let src = &xi[(iy * g.w + ix as usize) * g.ci..][..g.ci];
+                        row[(ky * g.kw + kx) * g.ci..][..g.ci].copy_from_slice(src);
                     }
-                    let src = &x[(iy * g.w + ix as usize) * g.ci..][..g.ci];
-                    row[(ky * g.kw + kx) * g.ci..][..g.ci].copy_from_slice(src);
                 }
             }
         }
     }
 }
 
-/// im2col transposed: `patches_t` is K-major ([K, M]) so each patch *row*
-/// k = (ky*kw + kx)*ci + ic is contiguous over the M output positions —
-/// the layout the sparse kernel axpys over (see `exec::sparse`).
+/// im2col transposed: `patches_t` is K-major ([K, n·M]) so each patch
+/// *row* k = (ky*kw + kx)*ci + ic is contiguous over the output positions
+/// of the *whole batch* — the layout the sparse kernel axpys over (see
+/// `exec::sparse`): one decoded weight feeds all `n` images.
 pub fn im2col_t(x: &[f32], g: &ConvGeom, patches_t: &mut [f32]) {
     let m = g.out_positions();
-    patches_t[..g.patch_len() * m].fill(0.0);
+    let mt = g.total_positions();
+    patches_t[..g.patch_len() * mt].fill(0.0);
     let (sh, sw) = g.stride;
     let (pt, _, pl, _) = g.pad;
     for ky in 0..g.kh {
         for kx in 0..g.kw {
             for ic in 0..g.ci {
                 let k = (ky * g.kw + kx) * g.ci + ic;
-                let row = &mut patches_t[k * m..][..m];
-                for oy in 0..g.ho {
-                    let iy = (oy * sh + ky) as isize - pt as isize;
-                    if !(0..g.h as isize).contains(&iy) {
-                        continue;
-                    }
-                    let iy = iy as usize;
-                    for ox in 0..g.wo {
-                        let ix = (ox * sw + kx) as isize - pl as isize;
-                        if !(0..g.w as isize).contains(&ix) {
+                let row = &mut patches_t[k * mt..][..mt];
+                for img in 0..g.n {
+                    let xi = &x[img * g.h * g.w * g.ci..][..g.h * g.w * g.ci];
+                    let ri = &mut row[img * m..][..m];
+                    for oy in 0..g.ho {
+                        let iy = (oy * sh + ky) as isize - pt as isize;
+                        if !(0..g.h as isize).contains(&iy) {
                             continue;
                         }
-                        row[oy * g.wo + ox] = x[(iy * g.w + ix as usize) * g.ci + ic];
+                        let iy = iy as usize;
+                        for ox in 0..g.wo {
+                            let ix = (ox * sw + kx) as isize - pl as isize;
+                            if !(0..g.w as isize).contains(&ix) {
+                                continue;
+                            }
+                            ri[oy * g.wo + ox] = xi[(iy * g.w + ix as usize) * g.ci + ic];
+                        }
                     }
                 }
             }
@@ -208,9 +233,11 @@ pub fn gemm_bias_act(
     act.apply_slice(&mut out[..m * n]);
 }
 
-/// Dense Conv2D (+ fused bias / activation): im2col into `scratch`, then
-/// GEMM against the HWIO weights. 1x1/stride-1/no-pad convs skip the
-/// im2col copy and GEMM directly over the input.
+/// Dense Conv2D (+ fused bias / activation): im2col all `g.n` images
+/// into `scratch`, then one GEMM against the HWIO weights — the weight
+/// tiles stay hot across the whole batch's rows. 1x1/stride-1/no-pad
+/// convs skip the im2col copy and GEMM directly over the input (which is
+/// a valid [n·M, K] patch matrix for any batch).
 pub fn conv2d_dense(
     x: &[f32],
     g: &ConvGeom,
@@ -220,7 +247,7 @@ pub fn conv2d_dense(
     scratch: &mut [f32],
     out: &mut [f32],
 ) {
-    let m = g.out_positions();
+    let m = g.total_positions();
     let k = g.patch_len();
     if g.identity_patches() {
         gemm_bias_act(x, w.as_slice(), m, k, g.co, bias, act, out);
@@ -230,8 +257,9 @@ pub fn conv2d_dense(
     }
 }
 
-/// Dense depthwise conv (+ fused bias / activation). `mult` is the
-/// channel multiplier (weights are [kh, kw, ci, mult]).
+/// Dense depthwise conv (+ fused bias / activation) over all `g.n`
+/// images. `mult` is the channel multiplier (weights are
+/// [kh, kw, ci, mult]).
 pub fn depthwise_dense(
     x: &[f32],
     g: &ConvGeom,
@@ -244,59 +272,67 @@ pub fn depthwise_dense(
     let (sh, sw) = g.stride;
     let (pt, _, pl, _) = g.pad;
     let co = g.ci * mult;
-    for oy in 0..g.ho {
-        for ox in 0..g.wo {
-            let orow = &mut out[(oy * g.wo + ox) * co..][..co];
-            for ic in 0..g.ci {
-                for im in 0..mult {
-                    let mut acc = match bias {
-                        Some(b) => b[ic * mult + im],
-                        None => 0.0,
-                    };
-                    for ky in 0..g.kh {
-                        let iy = (oy * sh + ky) as isize - pt as isize;
-                        if !(0..g.h as isize).contains(&iy) {
-                            continue;
-                        }
-                        for kx in 0..g.kw {
-                            let ix = (ox * sw + kx) as isize - pl as isize;
-                            if !(0..g.w as isize).contains(&ix) {
+    for img in 0..g.n {
+        let xi = &x[img * g.h * g.w * g.ci..][..g.h * g.w * g.ci];
+        let oi = &mut out[img * g.ho * g.wo * co..][..g.ho * g.wo * co];
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                let orow = &mut oi[(oy * g.wo + ox) * co..][..co];
+                for ic in 0..g.ci {
+                    for im in 0..mult {
+                        let mut acc = match bias {
+                            Some(b) => b[ic * mult + im],
+                            None => 0.0,
+                        };
+                        for ky in 0..g.kh {
+                            let iy = (oy * sh + ky) as isize - pt as isize;
+                            if !(0..g.h as isize).contains(&iy) {
                                 continue;
                             }
-                            acc += x[((iy as usize) * g.w + ix as usize) * g.ci + ic]
-                                * w.data[((ky * g.kw + kx) * g.ci + ic) * mult + im];
+                            for kx in 0..g.kw {
+                                let ix = (ox * sw + kx) as isize - pl as isize;
+                                if !(0..g.w as isize).contains(&ix) {
+                                    continue;
+                                }
+                                acc += xi[((iy as usize) * g.w + ix as usize) * g.ci + ic]
+                                    * w.data[((ky * g.kw + kx) * g.ci + ic) * mult + im];
+                            }
                         }
+                        orow[ic * mult + im] = act.apply(acc);
                     }
-                    orow[ic * mult + im] = act.apply(acc);
                 }
             }
         }
     }
 }
 
-/// MaxPool over NHWC (geom.co == geom.ci == channels).
+/// MaxPool over NHWC (geom.co == geom.ci == channels), all `g.n` images.
 pub fn max_pool(x: &[f32], g: &ConvGeom, out: &mut [f32]) {
     let (sh, sw) = g.stride;
     let (pt, _, pl, _) = g.pad;
     let c = g.ci;
-    for oy in 0..g.ho {
-        for ox in 0..g.wo {
-            let orow = &mut out[(oy * g.wo + ox) * c..][..c];
-            orow.fill(f32::NEG_INFINITY);
-            for ky in 0..g.kh {
-                let iy = (oy * sh + ky) as isize - pt as isize;
-                if !(0..g.h as isize).contains(&iy) {
-                    continue;
-                }
-                for kx in 0..g.kw {
-                    let ix = (ox * sw + kx) as isize - pl as isize;
-                    if !(0..g.w as isize).contains(&ix) {
+    for img in 0..g.n {
+        let xi = &x[img * g.h * g.w * c..][..g.h * g.w * c];
+        let oi = &mut out[img * g.ho * g.wo * c..][..g.ho * g.wo * c];
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                let orow = &mut oi[(oy * g.wo + ox) * c..][..c];
+                orow.fill(f32::NEG_INFINITY);
+                for ky in 0..g.kh {
+                    let iy = (oy * sh + ky) as isize - pt as isize;
+                    if !(0..g.h as isize).contains(&iy) {
                         continue;
                     }
-                    let xrow = &x[((iy as usize) * g.w + ix as usize) * c..][..c];
-                    for (o, &v) in orow.iter_mut().zip(xrow) {
-                        if v > *o {
-                            *o = v;
+                    for kx in 0..g.kw {
+                        let ix = (ox * sw + kx) as isize - pl as isize;
+                        if !(0..g.w as isize).contains(&ix) {
+                            continue;
+                        }
+                        let xrow = &xi[((iy as usize) * g.w + ix as usize) * c..][..c];
+                        for (o, &v) in orow.iter_mut().zip(xrow) {
+                            if v > *o {
+                                *o = v;
+                            }
                         }
                     }
                 }
@@ -316,6 +352,7 @@ pub fn affine(
     act: Act,
     out: &mut [f32],
 ) {
+    debug_assert_eq!(x.len(), out.len(), "affine operand/output length mismatch");
     for (i, (o, &v)) in out.iter_mut().zip(x).enumerate() {
         let c = i % ch;
         let mut y = v;
@@ -331,33 +368,44 @@ pub fn affine(
 
 /// Elementwise unary activation into `out`.
 pub fn unary(x: &[f32], act: Act, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len(), "unary operand/output length mismatch");
     for (o, &v) in out.iter_mut().zip(x) {
         *o = act.apply(v);
     }
 }
 
-/// Elementwise residual add.
+/// Elementwise residual add. The zips would silently truncate on a
+/// mismatched operand (e.g. a per-image constant that missed batch
+/// tiling), leaving stale arena data in the tail — assert instead.
 pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len(), "add operand/output length mismatch");
+    debug_assert_eq!(b.len(), out.len(), "add operand/output length mismatch");
     for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
         *o = x + y;
     }
 }
 
-/// Global average pool NHWC -> [1, C] (f64 accumulation, matching the
-/// reference interpreter bit-for-bit in the common case).
-pub fn global_mean(x: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
-    for ch in 0..c {
-        let mut s = 0f64;
-        for p in 0..h * w {
-            s += x[p * c + ch] as f64;
+/// Global average pool NHWC -> [n, C], per image (f64 accumulation,
+/// matching the reference interpreter bit-for-bit in the common case).
+pub fn global_mean(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    for img in 0..n {
+        let xi = &x[img * h * w * c..][..h * w * c];
+        let oi = &mut out[img * c..][..c];
+        for ch in 0..c {
+            let mut s = 0f64;
+            for p in 0..h * w {
+                s += xi[p * c + ch] as f64;
+            }
+            oi[ch] = (s / (h * w) as f64) as f32;
         }
-        out[ch] = (s / (h * w) as f64) as f32;
     }
 }
 
-/// Spatial zero-pad NHWC.
+/// Spatial zero-pad NHWC, all `n` images.
+#[allow(clippy::too_many_arguments)] // kernel ABI: batch + spatial dims
 pub fn pad(
     x: &[f32],
+    n: usize,
     h: usize,
     w: usize,
     c: usize,
@@ -366,11 +414,15 @@ pub fn pad(
 ) {
     let (t, b, l, r) = pads;
     let (ho, wo) = (h + t + b, w + l + r);
-    out[..ho * wo * c].fill(0.0);
-    for y in 0..h {
-        let src = &x[y * w * c..][..w * c];
-        let dst = &mut out[((y + t) * wo + l) * c..][..w * c];
-        dst.copy_from_slice(src);
+    out[..n * ho * wo * c].fill(0.0);
+    for img in 0..n {
+        let xi = &x[img * h * w * c..][..h * w * c];
+        let oi = &mut out[img * ho * wo * c..][..ho * wo * c];
+        for y in 0..h {
+            let src = &xi[y * w * c..][..w * c];
+            let dst = &mut oi[((y + t) * wo + l) * c..][..w * c];
+            dst.copy_from_slice(src);
+        }
     }
 }
 

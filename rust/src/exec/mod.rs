@@ -24,7 +24,16 @@
 //! * assigns outputs to a **buffer arena** with liveness-based reuse, so
 //!   steady-state serving performs zero heap allocations per image
 //!   (feeds are copied into their slots; everything else is overwritten
-//!   in place across runs via [`ExecutionPlan::run_with`]).
+//!   in place across runs via [`ExecutionPlan::run_with`]);
+//! * compiles for a **native batch dimension** ([`PlanOptions::batch`]):
+//!   a batch-B plan's arena slots hold `B ×` activations and every step
+//!   executes the whole batch at once — dense convs im2col all B images
+//!   into one k-blocked GEMM with shared weight tiles, and the sparse
+//!   kernels walk each RLE weight stream *once*, broadcasting every
+//!   surviving weight across the batch's activation planes. That is the
+//!   software analog of weight-reuse-across-batch: the dominant memory
+//!   optimization for CNN accelerators, applied to our own weight
+//!   streams instead of running a batch-1 plan B times.
 //!
 //! Role split: [`crate::interp`] stays the *correctness oracle* — naive,
 //! obviously-right loops that transform passes and this executor are
@@ -85,6 +94,13 @@ pub struct PlanOptions {
     /// execution is serial, so 1 (no lockstep padding) is the fastest
     /// choice; higher values mirror the hardware encoding.
     pub splits: usize,
+    /// Batch dimension the plan is compiled for: arena slots hold
+    /// `batch ×` activations, and every kernel processes the whole batch
+    /// per step — one im2col'd GEMM / one RLE weight-stream walk feeds
+    /// all images, instead of the plan being run `batch` times. The
+    /// graph's placeholders must have leading (batch) dim 1; feeds then
+    /// carry `[batch, ...]` tensors.
+    pub batch: usize,
 }
 
 impl Default for PlanOptions {
@@ -93,6 +109,7 @@ impl Default for PlanOptions {
             sparse_threshold: 0.5,
             fuse: true,
             splits: 1,
+            batch: 1,
         }
     }
 }
@@ -112,6 +129,19 @@ impl PlanOptions {
             sparse_threshold: 0.0,
             ..Default::default()
         }
+    }
+
+    /// Default options at batch `b`.
+    pub fn batched(b: usize) -> PlanOptions {
+        PlanOptions {
+            batch: b,
+            ..Default::default()
+        }
+    }
+
+    /// This configuration with the batch dim replaced.
+    pub fn with_batch(self, b: usize) -> PlanOptions {
+        PlanOptions { batch: b, ..self }
     }
 }
 
@@ -182,11 +212,13 @@ enum StepKind {
         act: Act,
     },
     Mean {
+        n: usize,
         h: usize,
         w: usize,
         c: usize,
     },
     Pad {
+        n: usize,
         h: usize,
         w: usize,
         c: usize,
@@ -213,14 +245,17 @@ pub struct PlanStats {
     pub scratch_f32: usize,
 }
 
-/// A compiled, reusable execution plan for one graph.
+/// A compiled, reusable execution plan for one graph at one batch size.
 pub struct ExecutionPlan {
     steps: Vec<Step>,
     consts: Vec<Tensor>,
     slot_lens: Vec<usize>,
     scratch_len: usize,
     acc_len: usize,
-    /// (placeholder name, slot, expected shape).
+    /// Batch dimension the plan was compiled for (see
+    /// [`PlanOptions::batch`]); feed / output shapes carry it.
+    batch: usize,
+    /// (placeholder name, slot, expected batched shape).
     feeds: Vec<(String, usize, Vec<usize>)>,
     outputs: Vec<(Src, Vec<usize>)>,
     stats: PlanStats,
@@ -236,18 +271,56 @@ pub struct ExecContext {
 }
 
 impl ExecutionPlan {
-    /// Build a plan with default options.
+    /// Build a plan with default options (batch 1).
     pub fn build(graph: &Graph) -> Result<ExecutionPlan, GraphError> {
         ExecutionPlan::build_with(graph, &PlanOptions::default())
+    }
+
+    /// Build a plan natively compiled for `batch` images per execution
+    /// (default options otherwise).
+    pub fn build_batched(graph: &Graph, batch: usize) -> Result<ExecutionPlan, GraphError> {
+        ExecutionPlan::build_with(graph, &PlanOptions::batched(batch))
     }
 
     /// Build a plan. Fails on structural errors and on graphs whose
     /// compute-op weights / per-channel parameters are not constants
     /// (the interpreter remains the general-purpose fallback for those).
+    /// With `opts.batch > 1` the plan is compiled *for that batch*:
+    /// every placeholder must have leading dim 1, arena slots and
+    /// liveness account for `batch ×` activations, and each step's
+    /// kernel processes the whole batch (shared weight tiles / one RLE
+    /// stream walk — see [`kernels`] and [`sparse`]).
     pub fn build_with(graph: &Graph, opts: &PlanOptions) -> Result<ExecutionPlan, GraphError> {
         let order = graph.topo_order()?;
         let shapes = graph.infer_shapes()?;
         let mut stats = PlanStats::default();
+
+        let batch = opts.batch.max(1);
+        if batch > 1 {
+            for n in &graph.nodes {
+                if let Op::Placeholder { shape } = &n.op {
+                    if shape.first() != Some(&1) {
+                        return Err(GraphError::Invalid(
+                            n.name.clone(),
+                            format!(
+                                "batch-{batch} plan needs batch-1 placeholders, \
+                                 got shape {shape:?}"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        // Scale a per-image activation shape to the plan's batch. Every
+        // non-const value flowing through the plan keeps a leading batch
+        // dim of 1 per image (NHWC / [1, C]), so slots grow uniformly.
+        let bshape = |s: &[usize]| -> Vec<usize> {
+            let mut v = s.to_vec();
+            if batch > 1 && !v.is_empty() {
+                v[0] *= batch;
+            }
+            v
+        };
 
         // ---- constants + constant folding ----
         let mut consts: Vec<Tensor> = Vec::new();
@@ -387,13 +460,13 @@ impl ExecutionPlan {
                 Some(bn) => Some(want_const(&const_idx, &n.name, bn)?),
                 None => None,
             };
-            let out_shape = shapes[&tail].clone();
+            let out_shape = bshape(&shapes[&tail]);
             let kind = match &n.op {
                 Op::Conv2D { stride, padding } => {
                     let widx = want_const(&const_idx, &n.name, &n.inputs[1])?;
                     let w = &consts[widx];
                     let geom = ConvGeom::new(
-                        x_shape(0)?,
+                        &bshape(x_shape(0)?),
                         w.shape[0],
                         w.shape[1],
                         w.shape[3],
@@ -418,7 +491,7 @@ impl ExecutionPlan {
                     let w = &consts[widx];
                     let mult = w.shape[3];
                     let geom = ConvGeom::new(
-                        x_shape(0)?,
+                        &bshape(x_shape(0)?),
                         w.shape[0],
                         w.shape[1],
                         w.shape[2] * mult,
@@ -431,7 +504,8 @@ impl ExecutionPlan {
                     let widx = want_const(&const_idx, &n.name, &n.inputs[1])?;
                     let w = &consts[widx];
                     let xs = x_shape(0)?;
-                    let (nrows, k, co) = (xs[0], w.shape[0], w.shape[1]);
+                    // One GEMM over the whole batch's rows.
+                    let (nrows, k, co) = (xs[0] * batch, w.shape[0], w.shape[1]);
                     if w.sparsity() >= opts.sparse_threshold {
                         stats.sparse_matmuls += 1;
                         StepKind::SparseMatMul {
@@ -455,9 +529,9 @@ impl ExecutionPlan {
                     }
                 }
                 Op::MaxPool { ksize, stride, padding } => {
-                    let xs = x_shape(0)?;
+                    let xs = bshape(x_shape(0)?);
                     let geom =
-                        ConvGeom::new(xs, ksize.0, ksize.1, xs[3], *stride, *padding);
+                        ConvGeom::new(&xs, ksize.0, ksize.1, xs[3], *stride, *padding);
                     StepKind::MaxPool { geom }
                 }
                 Op::BiasAdd => {
@@ -501,24 +575,25 @@ impl ExecutionPlan {
                 Op::Add => StepKind::Add,
                 Op::Mean => {
                     let xs = x_shape(0)?;
-                    // The whole pipeline is batch-1 (like the interp
-                    // oracle, whose global_mean reads batch 0 only); a
-                    // larger batch would under-fill the reused slot.
+                    // Per-image check (the interp oracle's global_mean
+                    // reads batch 0 only); the plan's batch dim is
+                    // handled by the kernel's per-image loop.
                     if xs[0] != 1 {
-                        return Err(invalid(&n.name, "Mean expects batch dim 1"));
+                        return Err(invalid(&n.name, "Mean expects per-image batch dim 1"));
                     }
-                    StepKind::Mean { h: xs[1], w: xs[2], c: xs[3] }
+                    StepKind::Mean { n: batch, h: xs[1], w: xs[2], c: xs[3] }
                 }
                 Op::Pad { pads } => {
                     let xs = x_shape(0)?;
-                    StepKind::Pad { h: xs[1], w: xs[2], c: xs[3], pads: *pads }
+                    let n = xs[0] * batch;
+                    StepKind::Pad { n, h: xs[1], w: xs[2], c: xs[3], pads: *pads }
                 }
                 Op::Softmax => {
                     let xs = x_shape(0)?;
                     if xs.len() != 2 {
                         return Err(invalid(&n.name, "Softmax expects an [N, C] input"));
                     }
-                    StepKind::Softmax { n: xs[0], c: xs[1] }
+                    StepKind::Softmax { n: xs[0] * batch, c: xs[1] }
                 }
                 Op::Placeholder { .. } | Op::Const => unreachable!(),
             };
@@ -561,7 +636,7 @@ impl ExecutionPlan {
         let mut free: HashMap<usize, Vec<usize>> = HashMap::new();
         let mut slot_of: HashMap<String, usize> = HashMap::new();
         for name in &placeholder_names {
-            let shape = shapes[name].clone();
+            let shape = bshape(&shapes[name]);
             let len = shape.iter().product();
             let slot = alloc(len, &mut slot_lens, &mut free);
             slot_of.insert(name.clone(), slot);
@@ -579,13 +654,32 @@ impl ExecutionPlan {
                 .map(|&s| Src::Slot(s))
                 .ok_or_else(|| GraphError::UnknownInput(node.to_string(), name.clone()))
         };
+        // Per-image consts read by batched elementwise steps get tiled
+        // across the batch; memoized so a const shared by several Adds
+        // (or an output) is tiled once.
+        let mut tiled: HashMap<usize, usize> = HashMap::new();
+        let mut tile = |c: usize, consts: &mut Vec<Tensor>| -> usize {
+            *tiled.entry(c).or_insert_with(|| {
+                consts.push(tile_batch(&consts[c], batch));
+                consts.len() - 1
+            })
+        };
         let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
         for (si, p) in protos.into_iter().enumerate() {
-            let inputs = p
+            let mut inputs = p
                 .input_names
                 .iter()
                 .map(|i| resolve(i, &p.name, &slot_of))
                 .collect::<Result<Vec<_>, _>>()?;
+            // A batched Add can read a (per-image) folded constant; tile
+            // it across the batch so elementwise kernels line up.
+            if batch > 1 && matches!(p.kind, StepKind::Add) {
+                for src in inputs.iter_mut() {
+                    if let Src::Const(c) = *src {
+                        *src = Src::Const(tile(c, &mut consts));
+                    }
+                }
+            }
             let out_len: usize = p.out_shape.iter().product();
             let out = alloc(out_len, &mut slot_lens, &mut free);
             slot_of.insert(p.out_name.clone(), out);
@@ -611,11 +705,11 @@ impl ExecutionPlan {
         for s in &steps {
             match &s.kind {
                 StepKind::DenseConv { geom, .. } if !geom.identity_patches() => {
-                    scratch_len = scratch_len.max(geom.patch_len() * geom.out_positions());
+                    scratch_len = scratch_len.max(geom.patch_len() * geom.total_positions());
                 }
                 StepKind::SparseConv { geom, .. } => {
-                    scratch_len = scratch_len.max(geom.patch_len() * geom.out_positions());
-                    acc_len = acc_len.max(geom.out_positions());
+                    scratch_len = scratch_len.max(geom.patch_len() * geom.total_positions());
+                    acc_len = acc_len.max(geom.total_positions());
                 }
                 _ => {}
             }
@@ -624,12 +718,19 @@ impl ExecutionPlan {
         // ---- outputs ----
         let mut outputs = Vec::with_capacity(graph.outputs.len());
         for name in &graph.outputs {
-            let src = resolve(name, "<outputs>", &slot_of)?;
+            let mut src = resolve(name, "<outputs>", &slot_of)?;
             let shape = shapes
                 .get(name)
                 .cloned()
                 .ok_or_else(|| GraphError::UnknownInput("<outputs>".into(), name.clone()))?;
-            outputs.push((src, shape));
+            // Constant outputs are tiled so every output of a batch-B
+            // plan equals B sequential batch-1 runs concatenated.
+            if batch > 1 {
+                if let Src::Const(c) = src {
+                    src = Src::Const(tile(c, &mut consts));
+                }
+            }
+            outputs.push((src, bshape(&shape)));
         }
 
         stats.steps = steps.len();
@@ -641,10 +742,16 @@ impl ExecutionPlan {
             slot_lens,
             scratch_len,
             acc_len,
+            batch,
             feeds,
             outputs,
             stats,
         })
+    }
+
+    /// Batch dimension this plan was compiled for.
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     pub fn stats(&self) -> PlanStats {
@@ -816,9 +923,11 @@ impl ExecutionPlan {
                     kernels::add(x, y, &mut out);
                 }
                 StepKind::Unary { act } => kernels::unary(x, *act, &mut out),
-                StepKind::Mean { h, w, c } => kernels::global_mean(x, *h, *w, *c, &mut out),
-                StepKind::Pad { h, w, c, pads } => {
-                    kernels::pad(x, *h, *w, *c, *pads, &mut out)
+                StepKind::Mean { n, h, w, c } => {
+                    kernels::global_mean(x, *n, *h, *w, *c, &mut out)
+                }
+                StepKind::Pad { n, h, w, c, pads } => {
+                    kernels::pad(x, *n, *h, *w, *c, *pads, &mut out)
                 }
                 StepKind::Softmax { n, c } => kernels::softmax(x, *n, *c, &mut out),
             }
@@ -837,6 +946,18 @@ fn resolve_src<'a>(consts: &'a [Tensor], slots: &'a [Vec<f32>], s: Src) -> &'a [
         Src::Const(i) => consts[i].as_slice(),
         Src::Slot(i) => &slots[i],
     }
+}
+
+/// Repeat a per-image constant `b` times along the leading dim, so it
+/// lines up element-for-element with a batched activation slot.
+fn tile_batch(t: &Tensor, b: usize) -> Tensor {
+    let mut shape = if t.shape.is_empty() { vec![1] } else { t.shape.clone() };
+    shape[0] *= b;
+    let mut data = Vec::with_capacity(t.data.len() * b);
+    for _ in 0..b {
+        data.extend_from_slice(&t.data);
+    }
+    Tensor::from_vec(&shape, data)
 }
 
 /// Evaluate a node whose inputs are all constants, using the reference

@@ -10,8 +10,14 @@
 //! stage, and images stream between stages over bounded SPSC channels so
 //! several images are in flight at once.
 //!
+//! The streamed unit is one *plan execution*: for a batch-B plan each
+//! in-flight item is a whole B-image batch, boundary messages carry
+//! batched tensors, and a cut is crossed once per batch rather than once
+//! per image — the weight-amortization of the batched kernels composes
+//! with the stage parallelism of the pipeline.
+//!
 //! The sequential executor's single shared buffer arena cannot hold more
-//! than one in-flight image, so at every stage boundary the values that
+//! than one in-flight item, so at every stage boundary the values that
 //! cross the cut are copied into a *boundary message* — a small set of
 //! double-buffered tensors that replace the shared arena at the cut.
 //! Each stage owns a private context holding only the arena slots its
@@ -79,18 +85,22 @@ impl ExecutionPlan {
 
     fn step_cost(&self, step: &Step) -> u64 {
         let elems = |slot: usize| self.slot_lens[slot] as u64;
+        // The cycle model is per image; batched steps do the whole
+        // batch's work per execution, so model-based costs scale by the
+        // geometry's batch dim (element-count costs are already batched
+        // through the slot lengths / stored dims).
         match &step.kind {
             StepKind::DenseConv { geom, w, .. } => {
                 let summary = WeightSummary::from_conv(&self.consts[*w]);
                 let op = Op::Conv2D { stride: geom.stride, padding: Padding::Same };
-                stage_cycles(&op, &conv_geo(geom), 1, Some(&summary), true)
+                geom.n as u64 * stage_cycles(&op, &conv_geo(geom), 1, Some(&summary), true)
             }
             StepKind::SparseConv { geom, rle, .. } => {
-                geom.ho as u64 * (rle.total_cycles() as u64 + LINE_OVERHEAD)
+                (geom.n * geom.ho) as u64 * (rle.total_cycles() as u64 + LINE_OVERHEAD)
             }
             StepKind::Depthwise { geom, .. } => {
                 let op = Op::DepthwiseConv2d { stride: geom.stride, padding: Padding::Same };
-                stage_cycles(&op, &conv_geo(geom), 1, None, true)
+                geom.n as u64 * stage_cycles(&op, &conv_geo(geom), 1, None, true)
             }
             StepKind::DenseMatMul { n, k, co, w, .. } => {
                 let summary = WeightSummary::from_matmul(&self.consts[*w]);
@@ -104,18 +114,23 @@ impl ExecutionPlan {
                     kw: 1,
                     stride: 1,
                 };
-                stage_cycles(&Op::MatMul, &geo, 1, Some(&summary), true)
+                // stage_cycles charges one weight pass regardless of row
+                // count; `n` holds batch × rows, so scale like the
+                // sparse arm below does.
+                *n as u64 * stage_cycles(&Op::MatMul, &geo, 1, Some(&summary), true)
             }
-            StepKind::SparseMatMul { rle, .. } => rle.total_cycles() as u64 + LINE_OVERHEAD,
+            StepKind::SparseMatMul { n, rle, .. } => {
+                *n as u64 * (rle.total_cycles() as u64 + LINE_OVERHEAD)
+            }
             StepKind::MaxPool { geom } => {
                 let op = Op::MaxPool {
                     ksize: (geom.kh, geom.kw),
                     stride: geom.stride,
                     padding: Padding::Same,
                 };
-                stage_cycles(&op, &conv_geo(geom), 1, None, true)
+                geom.n as u64 * stage_cycles(&op, &conv_geo(geom), 1, None, true)
             }
-            StepKind::Mean { h, w, c } => (h * w * c) as u64 + LINE_OVERHEAD,
+            StepKind::Mean { n, h, w, c } => (n * h * w * c) as u64 + LINE_OVERHEAD,
             StepKind::Softmax { n, c } => (n * c) as u64 + LINE_OVERHEAD,
             StepKind::Affine { .. }
             | StepKind::Add
@@ -298,11 +313,11 @@ impl PipelinePlan {
                 }
                 match &step.kind {
                     StepKind::DenseConv { geom, .. } if !geom.identity_patches() => {
-                        scratch = scratch.max(geom.patch_len() * geom.out_positions());
+                        scratch = scratch.max(geom.patch_len() * geom.total_positions());
                     }
                     StepKind::SparseConv { geom, .. } => {
-                        scratch = scratch.max(geom.patch_len() * geom.out_positions());
-                        acc = acc.max(geom.out_positions());
+                        scratch = scratch.max(geom.patch_len() * geom.total_positions());
+                        acc = acc.max(geom.total_positions());
                     }
                     _ => {}
                 }
@@ -377,10 +392,11 @@ impl PipelinePlan {
         &self.xfer[j]
     }
 
-    /// Run a stream of images through the pipeline; per image, the feed
-    /// map is validated like [`ExecutionPlan::run_with`] and the graph
-    /// outputs are returned in order. Output `i` of image `k` is
-    /// bit-identical to a sequential `plan.run(&images[k])`.
+    /// Run a stream of plan executions through the pipeline (for a
+    /// batch-B plan each item's feed tensors carry B images); per item,
+    /// the feed map is validated like [`ExecutionPlan::run_with`] and
+    /// the graph outputs are returned in order. Output `i` of item `k`
+    /// is bit-identical to a sequential `plan.run(&images[k])`.
     pub fn run_stream(
         &self,
         images: &[BTreeMap<String, Tensor>],
@@ -418,39 +434,53 @@ impl PipelinePlan {
         Ok(results)
     }
 
-    /// Flat serving path: `input` holds `batch` images contiguously for
-    /// a single-placeholder plan; returns the first output concatenated
-    /// over the batch (the pipelined counterpart of the runtime's
-    /// sequential per-image loop).
-    pub fn run_batch(&self, input: &[f32], batch: usize) -> Result<Vec<f32>, GraphError> {
+    /// Flat serving path: `input` holds `n_images` images contiguously
+    /// for a single-placeholder plan. The images are streamed through
+    /// the pipeline in **groups of the plan's batch** — each boundary
+    /// handoff carries one whole batched tensor set, one cross-cut copy
+    /// per batch instead of per image — so `n_images` must be a multiple
+    /// of [`ExecutionPlan::batch`]. Returns every graph output, each
+    /// concatenated over all images (the pipelined counterpart of a
+    /// sequence of whole-batch plan executions).
+    pub fn run_batch(&self, input: &[f32], n_images: usize) -> Result<Vec<Vec<f32>>, GraphError> {
         if self.plan.num_feeds() != 1 {
             return Err(GraphError::Invalid(
                 "<pipeline>".into(),
                 format!("run_batch needs exactly 1 feed, plan has {}", self.plan.num_feeds()),
             ));
         }
-        let per: usize = self.plan.feeds[0].2.iter().product();
-        if input.len() != per * batch {
-            return Err(GraphError::Shape(
-                self.plan.feeds[0].0.clone(),
-                format!("input length {} != {batch} images of {per}", input.len()),
+        let b = self.plan.batch();
+        if n_images == 0 || n_images % b != 0 {
+            return Err(GraphError::Invalid(
+                "<pipeline>".into(),
+                format!("{n_images} images do not fill whole batches of {b}"),
             ));
         }
-        let mut out: Vec<f32> = Vec::new();
-        let feed = |img: usize, ctx: &mut ExecContext| {
+        let groups = n_images / b;
+        let per_group: usize = self.plan.feeds[0].2.iter().product();
+        if input.len() != per_group * groups {
+            return Err(GraphError::Shape(
+                self.plan.feeds[0].0.clone(),
+                format!("input length {} != {groups} batches of {per_group}", input.len()),
+            ));
+        }
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); self.plan.num_outputs()];
+        let feed = |grp: usize, ctx: &mut ExecContext| {
             self.plan
-                .write_feed(ctx, 0, &input[img * per..(img + 1) * per])
+                .write_feed(ctx, 0, &input[grp * per_group..(grp + 1) * per_group])
                 .expect("feed validated");
         };
-        let mut collect = |_img: usize, ctx: &ExecContext| {
-            let (data, _) = self.plan.output(ctx, 0);
-            if out.capacity() == 0 {
-                out.reserve_exact(data.len() * batch);
+        let mut collect = |_grp: usize, ctx: &ExecContext| {
+            for (i, out) in outs.iter_mut().enumerate() {
+                let (data, _) = self.plan.output(ctx, i);
+                if out.capacity() == 0 {
+                    out.reserve_exact(data.len() * groups);
+                }
+                out.extend_from_slice(data);
             }
-            out.extend_from_slice(data);
         };
-        self.run_inner(batch, &feed, &mut collect);
-        Ok(out)
+        self.run_inner(groups, &feed, &mut collect);
+        Ok(outs)
     }
 
     /// Core streaming loop. Spawns one worker per stage except the last,
@@ -662,7 +692,7 @@ mod tests {
         let per: usize = pipe.plan().feeds[0].2.iter().product();
         let mut rng = Rng::new(0xBA7C);
         let input: Vec<f32> = (0..3 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let out = pipe.run_batch(&input, 3).unwrap();
+        let out = pipe.run_batch(&input, 3).unwrap().remove(0);
         let probs = out.len() / 3;
         for i in 0..3 {
             let mut feeds = BTreeMap::new();

@@ -6,20 +6,24 @@
 //! picks the k_w position, and only *nonzero* weights ever reach a DSP.
 //! The software analog here is weight-stationary: for every decoded
 //! nonzero we axpy its contribution across all output positions of its
-//! output channel. With the transposed im2col buffer ([K, M], see
-//! [`super::kernels::im2col_t`]) each axpy is contiguous over M, so the
-//! per-MAC cost matches the dense GEMM inner loop and total work scales
-//! with the nonzero count — zero weights are skipped at runtime exactly
-//! as in the zero-skipping PEs, and lockstep pad entries (value 0.0) only
-//! advance the row counter.
+//! output channel. With the transposed im2col buffer ([K, n·M], see
+//! [`super::kernels::im2col_t`]) each axpy is contiguous over the whole
+//! batch's output positions, so the per-MAC cost matches the dense GEMM
+//! inner loop and total work scales with the nonzero count — zero
+//! weights are skipped at runtime exactly as in the zero-skipping PEs,
+//! and lockstep pad entries (value 0.0) only advance the row counter.
+//! Batch is where the weight traffic amortizes: each RLE stream is
+//! decoded **once per plan execution**, not once per image, and every
+//! surviving weight is broadcast across all `n` activation planes.
 
 use super::kernels::{im2col_t, Act, ConvGeom};
 use crate::sparsity::rle::ConvRle;
 
-/// Sparse Conv2D (+ fused bias / activation) from RLE weight streams.
+/// Sparse Conv2D (+ fused bias / activation) from RLE weight streams,
+/// over all `g.n` images in one weight-stream walk.
 ///
-/// `patches_t` must hold at least `patch_len * out_positions` elements,
-/// `acc` at least `out_positions`.
+/// `patches_t` must hold at least `patch_len * total_positions`
+/// elements, `acc` at least `total_positions`.
 #[allow(clippy::too_many_arguments)] // kernel ABI: geometry + scratch + fused epilogue
 pub fn sparse_conv(
     x: &[f32],
@@ -33,7 +37,7 @@ pub fn sparse_conv(
 ) {
     debug_assert_eq!(rle.ci, g.ci);
     debug_assert_eq!(rle.co, g.co);
-    let m = g.out_positions();
+    let m = g.total_positions();
     im2col_t(x, g, patches_t);
     for oc in 0..g.co {
         let accv = &mut acc[..m];
@@ -76,7 +80,10 @@ pub fn sparse_conv(
 
 /// Sparse MatMul (+ fused bias / activation) from RLE streams of the
 /// (Ci, Co) weight matrix (encoded as a 1x1 conv, so rows are plain
-/// input-channel indices).
+/// input-channel indices). Weight-stationary like [`sparse_conv`]: each
+/// stream is decoded once per execution and every surviving weight is
+/// broadcast across all `n` rows (the batch), so decode cost amortizes
+/// over the batch instead of being paid per image.
 #[allow(clippy::too_many_arguments)] // kernel ABI: dims + fused epilogue
 pub fn sparse_matmul(
     x: &[f32],
@@ -92,32 +99,37 @@ pub fn sparse_matmul(
     debug_assert_eq!(rle.co, co);
     debug_assert_eq!(rle.kh, 1);
     debug_assert_eq!(rle.kw, 1);
-    for i in 0..n {
-        let xrow = &x[i * ci..][..ci];
-        let orow = &mut out[i * co..][..co];
-        for oc in 0..co {
-            let mut s = match bias {
-                Some(b) => b[oc],
-                None => 0.0,
-            };
-            for (split, stream) in rle.streams[oc].iter().enumerate() {
-                let mut local_row = 0usize;
-                let mut first = true;
-                for e in &stream.entries {
-                    if first {
-                        local_row = e.runlength as usize;
-                        first = false;
-                    } else {
-                        local_row += e.runlength as usize;
-                    }
-                    if e.value == 0.0 {
-                        continue;
-                    }
-                    let ic = local_row * rle.splits + split;
-                    s += e.value * xrow[ic];
+    for oc in 0..co {
+        let init = match bias {
+            Some(b) => b[oc],
+            None => 0.0,
+        };
+        for i in 0..n {
+            out[i * co + oc] = init;
+        }
+        for (split, stream) in rle.streams[oc].iter().enumerate() {
+            let mut local_row = 0usize;
+            let mut first = true;
+            for e in &stream.entries {
+                if first {
+                    local_row = e.runlength as usize;
+                    first = false;
+                } else {
+                    local_row += e.runlength as usize;
+                }
+                if e.value == 0.0 {
+                    continue;
+                }
+                let ic = local_row * rle.splits + split;
+                let v = e.value;
+                for i in 0..n {
+                    out[i * co + oc] += v * x[i * ci + ic];
                 }
             }
-            orow[oc] = act.apply(s);
+        }
+        for i in 0..n {
+            let o = &mut out[i * co + oc];
+            *o = act.apply(*o);
         }
     }
 }

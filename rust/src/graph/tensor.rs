@@ -110,6 +110,27 @@ impl Tensor {
         &mut self.data
     }
 
+    /// Concatenate tensors along the leading (batch) dim: `k` tensors of
+    /// shape `[n, ...]` become one `[k·n, ...]` tensor. The builder for
+    /// batched-plan feeds (`exec::PlanOptions::batch`): per-image feed
+    /// tensors stack into the `[B, ...]` block a batch-B plan consumes.
+    /// Panics on an empty list or mismatched trailing dims.
+    pub fn concat_batch(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty(), "concat_batch of no tensors");
+        let first = parts[0];
+        assert!(!first.shape.is_empty(), "concat_batch needs a leading dim");
+        let mut shape = first.shape.clone();
+        let mut data = Vec::with_capacity(first.data.len() * parts.len());
+        let mut lead = 0usize;
+        for t in parts {
+            assert_eq!(t.shape[1..], first.shape[1..], "concat_batch trailing dims differ");
+            lead += t.shape[0];
+            data.extend_from_slice(&t.data);
+        }
+        shape[0] = lead;
+        Tensor::from_vec(&shape, data)
+    }
+
     /// Reshape without moving data (element count must match).
     pub fn reshape(&self, shape: &[usize]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
@@ -258,6 +279,25 @@ mod tests {
     fn at4_mut_out_of_bounds_panics_in_debug() {
         let mut t = Tensor::zeros(&[1, 2, 2, 2]);
         *t.at4_mut(0, 2, 0, 0) = 1.0;
+    }
+
+    #[test]
+    fn concat_batch_stacks_leading_dim() {
+        let a = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[1, 2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = Tensor::concat_batch(&[&a, &b, &a]);
+        assert_eq!(c.shape, vec![3, 2, 2]);
+        assert_eq!(&c.data[..4], &a.data[..]);
+        assert_eq!(&c.data[4..8], &b.data[..]);
+        assert_eq!(&c.data[8..], &a.data[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "trailing dims differ")]
+    fn concat_batch_rejects_mismatched_shapes() {
+        let a = Tensor::zeros(&[1, 2, 2]);
+        let b = Tensor::zeros(&[1, 2, 3]);
+        let _ = Tensor::concat_batch(&[&a, &b]);
     }
 
     #[test]

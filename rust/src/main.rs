@@ -6,8 +6,11 @@
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
 //!   serve     --model DIR [--requests N] [--batch N] [--threads N]
 //!                                                     exec serving demo
-//!                                        (threads > 1 streams batches
-//!                                        through the layer pipeline)
+//!                            (--batch N serves through *natively
+//!                            batched* plans — one weight-stream walk
+//!                            feeds the whole batch; threads > 1
+//!                            streams batched groups through the layer
+//!                            pipeline)
 //!   accuracy  --net <name> [--bits N]          fixed-point vs f32 study
 //!
 //! `hpipe compile --net resnet50 --sparsity 0.85 --dsp-target 5000

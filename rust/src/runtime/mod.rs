@@ -12,14 +12,18 @@
 //! sparse-aware hot path (see `exec` module docs for the plan-vs-oracle
 //! role split).
 //!
-//! HPIPE is a batch-1 architecture (§V), so batch-N "models" are the
-//! batch-1 plan run N times over a contiguous input block; batching
-//! exists to amortize transfer + queueing, exactly like the PCIe DMA
-//! batching the coordinator models. With `threads > 1` the batch is
-//! instead *streamed* through the layer-pipelined executor
-//! ([`crate::exec::PipelinePlan`]) — the software twin of the paper's
-//! all-layers-concurrent dataflow — while single-image requests keep
-//! the sequential plan (lowest latency, no handoff cost).
+//! Batch is a **native plan dimension**: a batch-N model compiles its
+//! plan *for N images* ([`crate::exec::PlanOptions::batch`]) so one
+//! execution runs the whole batch — each RLE weight stream is walked
+//! once and each dense weight tile is loaded once per batch, not per
+//! image (the weight-traffic amortization HPIPE's PCIe DMA batching
+//! only gave to transfers). With `threads > 1` the batch is *streamed*
+//! through the layer-pipelined executor
+//! ([`crate::exec::PipelinePlan`]) in sub-batch groups — the software
+//! twin of the paper's all-layers-concurrent dataflow, with batched
+//! boundary tensors at every cut — while a batch-1 latency plan is kept
+//! for single-image requests ([`LoadedModel::run_one`]: lowest latency,
+//! no batching or handoff cost).
 
 use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan};
 use crate::graph::{graphdef, Graph, Op, Tensor};
@@ -39,11 +43,45 @@ pub struct LoadedModel {
     pub threads: usize,
     /// Input shape with the leading dim set to `batch`.
     pub input_shape: Vec<usize>,
+    /// Layer pipeline over the *batched* plan. The plan's native batch
+    /// is the model's group size: the whole `batch` with `threads == 1`,
+    /// a sub-batch divisor when the pipeline needs several groups in
+    /// flight to keep its stages busy.
     pipeline: PipelinePlan,
+    /// Batch-1 plan for the single-image latency path ([`Self::run_one`]);
+    /// `None` when the batched plan is itself batch-1.
+    latency: Option<ExecutionPlan>,
     /// Sequential-path context, allocated on first sequential run —
-    /// models that only ever serve through the pipeline (threads > 1,
-    /// batch > 1) never pay for the full arena.
+    /// models that only ever serve through the pipeline never pay for
+    /// the full arena.
     ctx: RefCell<Option<ExecContext>>,
+    /// Context for the latency plan, allocated on first `run_one`.
+    latency_ctx: RefCell<Option<ExecContext>>,
+}
+
+/// Images per plan execution for a `batch`-image model served through
+/// `threads` pipeline stages. With one stage the whole batch is one
+/// execution (maximal weight amortization, zero handoffs); with a
+/// pipeline, the largest divisor of `batch` that still leaves at least
+/// `threads` groups in flight, so every stage has work while each group
+/// still amortizes weight traffic. When the batch is too small for
+/// `threads` groups even at group 1, fall back to the largest divisor
+/// leaving at least two groups — a partially filled pipeline still
+/// overlaps, and per-image groups would forfeit all batch
+/// amortization. (Prime batches with `threads > 1` are stuck at group
+/// 1: uniform groups admit no middle ground between per-image and
+/// whole-batch; remainder groups are the ragged-tail ROADMAP
+/// follow-on.)
+fn group_size(batch: usize, threads: usize) -> usize {
+    if threads <= 1 {
+        return batch.max(1);
+    }
+    let largest = |min_groups: usize| {
+        (1..=batch)
+            .rev()
+            .find(|d| batch % d == 0 && batch / d >= min_groups)
+    };
+    largest(threads).or_else(|| largest(2)).unwrap_or(1)
 }
 
 impl LoadedModel {
@@ -53,11 +91,13 @@ impl LoadedModel {
         LoadedModel::from_graph_with(name, graph, batch, 1)
     }
 
-    /// Compile a graph into a runnable model. The graph must have
-    /// exactly one Placeholder and its leading (batch) dim must be 1 —
-    /// both enforced here so violations surface as errors, not panics
-    /// in the serving loop. `threads > 1` partitions the plan into that
-    /// many pipeline stages for batch runs.
+    /// Compile a graph into a runnable model whose plan is built *for
+    /// the batch*: one execution covers `group_size(batch, threads)`
+    /// images natively (no run-N-times loop anywhere). The graph must
+    /// have exactly one Placeholder and its leading (batch) dim must be
+    /// 1 — both enforced here so violations surface as errors, not
+    /// panics in the serving loop. `threads > 1` partitions the plan
+    /// into that many pipeline stages for batch runs.
     pub fn from_graph_with(
         name: &str,
         graph: &Graph,
@@ -84,14 +124,24 @@ impl LoadedModel {
         );
         crate::ensure!(batch >= 1, "batch must be >= 1");
         crate::ensure!(threads >= 1, "threads must be >= 1");
-        let plan = ExecutionPlan::build(graph)?;
+        let group = group_size(batch, threads);
+        let plan = ExecutionPlan::build_batched(graph, group)?;
         crate::ensure!(plan.num_outputs() >= 1, "graph has no outputs");
         crate::ensure!(
             plan.num_feeds() == 1 && plan.feed_name(0) == input_name,
             "plan feed binding does not match placeholder '{input_name}'"
         );
+        // Deliberately eager: the latency plan must be ready the moment
+        // a single-image request arrives, not pay a full compile on the
+        // first one. It does duplicate weight consts + RLE streams with
+        // the batched plan — deduplicating those across a model's plan
+        // family is the "shared-weight plan families" ROADMAP follow-on.
+        let latency = if group > 1 {
+            Some(ExecutionPlan::build(graph)?)
+        } else {
+            None
+        };
         let pipeline = PipelinePlan::from_plan(plan, threads);
-        let ctx = RefCell::new(None);
         let mut input_shape = per_image_shape;
         input_shape[0] = batch;
         Ok(LoadedModel {
@@ -100,7 +150,9 @@ impl LoadedModel {
             threads,
             input_shape,
             pipeline,
-            ctx,
+            latency,
+            ctx: RefCell::new(None),
+            latency_ctx: RefCell::new(None),
         })
     }
 
@@ -114,10 +166,32 @@ impl LoadedModel {
         &self.pipeline
     }
 
+    /// Images per native plan execution (the batched plan's batch dim).
+    pub fn group(&self) -> usize {
+        self.pipeline.plan().batch()
+    }
+
     /// Run one batch. `input` is row-major f32 of `input_shape` (with
-    /// the leading dim = batch). Returns the first output tensor's data,
-    /// concatenated over the batch.
+    /// the leading dim = batch). Returns the output tensor's data
+    /// concatenated over the batch. Errors on multi-output graphs so a
+    /// second head can never be dropped silently — use
+    /// [`Self::run_all`] for those.
     pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let n_outs = self.pipeline.plan().num_outputs();
+        crate::ensure!(
+            n_outs == 1,
+            "model '{}' has {n_outs} outputs; run() would drop all but the first — \
+             use run_all()",
+            self.name
+        );
+        Ok(self.run_all(input)?.pop().unwrap())
+    }
+
+    /// Run one batch and return *every* graph output, each concatenated
+    /// over the batch. The whole batch is executed through the batched
+    /// plan — sequentially in whole-group steps, or streamed through
+    /// the layer pipeline when the model was loaded with `threads > 1`.
+    pub fn run_all(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
         let expect: usize = self.input_shape.iter().product();
         if input.len() != expect {
             crate::bail!(
@@ -127,28 +201,61 @@ impl LoadedModel {
                 expect
             );
         }
-        let per = expect / self.batch;
-        if self.threads > 1 && self.batch > 1 {
+        let plan = self.pipeline.plan();
+        let group = plan.batch();
+        if self.threads > 1 && self.batch > group {
             // Throughput path: stream the batch through the layer
-            // pipeline, several images in flight across stage threads.
+            // pipeline, several batched groups in flight across stage
+            // threads (one boundary handoff per group, not per image).
             return Ok(self.pipeline.run_batch(input, self.batch)?);
         }
-        let plan = self.pipeline.plan();
+        // Sequential path: the plan executes whole groups natively
+        // (with threads == 1 the group IS the batch — a single
+        // execution, no per-image loop).
+        let runs = self.batch / group;
+        let per_run = expect / runs;
         let mut guard = self.ctx.borrow_mut();
         let ctx = guard.get_or_insert_with(|| plan.new_context());
-        let mut out_all: Vec<f32> = Vec::new();
-        for b in 0..self.batch {
-            // Zero-allocation hot path: the image slice goes straight
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); plan.num_outputs()];
+        for r in 0..runs {
+            // Zero-allocation hot path: the group's slice goes straight
             // into the plan's feed slot (single copy, no Tensor wrap).
-            plan.write_feed(ctx, 0, &input[b * per..(b + 1) * per])?;
+            plan.write_feed(ctx, 0, &input[r * per_run..(r + 1) * per_run])?;
             plan.execute_steps(ctx);
-            let (data, _) = plan.output(ctx, 0);
-            if out_all.capacity() == 0 {
-                out_all.reserve_exact(data.len() * self.batch);
+            for (i, out) in outs.iter_mut().enumerate() {
+                let (data, _) = plan.output(ctx, i);
+                if out.capacity() == 0 {
+                    out.reserve_exact(data.len() * runs);
+                }
+                out.extend_from_slice(data);
             }
-            out_all.extend_from_slice(data);
         }
-        Ok(out_all)
+        Ok(outs)
+    }
+
+    /// Single-image latency path: executes the batch-1 plan
+    /// sequentially (no batching, no pipeline handoffs). `image` holds
+    /// one image; returns every output for it.
+    pub fn run_one(&self, image: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let plan = self.latency.as_ref().unwrap_or_else(|| self.pipeline.plan());
+        debug_assert_eq!(plan.batch(), 1, "latency plan must be batch-1");
+        let per: usize = self.input_shape.iter().product::<usize>() / self.batch;
+        if image.len() != per {
+            crate::bail!(
+                "image length {} != {per} (one image of shape {:?})",
+                image.len(),
+                &self.input_shape[1..]
+            );
+        }
+        let mut guard = self.latency_ctx.borrow_mut();
+        let ctx = guard.get_or_insert_with(|| plan.new_context());
+        plan.write_feed(ctx, 0, image)?;
+        plan.execute_steps(ctx);
+        let mut outs = Vec::with_capacity(plan.num_outputs());
+        for i in 0..plan.num_outputs() {
+            outs.push(plan.output(ctx, i).0.to_vec());
+        }
+        Ok(outs)
     }
 }
 
@@ -309,6 +416,8 @@ mod tests {
         let g = tiny_cnn(NetConfig::test_scale());
         let m1 = LoadedModel::from_graph("tinycnn_b1", &g, 1).unwrap();
         let m4 = LoadedModel::from_graph("tinycnn_b4", &g, 4).unwrap();
+        // threads == 1: the whole batch is one native plan execution
+        assert_eq!(m4.group(), 4);
         let per: usize = m1.input_shape.iter().product();
         let mut rng = Rng::new(33);
         let block: Vec<f32> = (0..4 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -317,6 +426,49 @@ mod tests {
         for i in 0..4 {
             let out1 = m1.run(&block[i * per..(i + 1) * per]).unwrap();
             assert_eq!(out1, &out4[i * probs..(i + 1) * probs]);
+            // the latency path agrees with both
+            let one = m4.run_one(&block[i * per..(i + 1) * per]).unwrap();
+            assert_eq!(one[0], out1);
+        }
+    }
+
+    #[test]
+    fn group_size_balances_amortization_and_stages() {
+        assert_eq!(group_size(8, 1), 8); // sequential: one execution
+        assert_eq!(group_size(8, 4), 2); // 4 groups of 2 keep 4 stages busy
+        assert_eq!(group_size(8, 2), 4);
+        // batch < threads: keep >= 2 groups for overlap, not per-image
+        assert_eq!(group_size(4, 8), 2);
+        assert_eq!(group_size(1, 4), 1);
+        assert_eq!(group_size(6, 2), 3);
+        assert_eq!(group_size(7, 2), 1); // prime: no uniform middle ground
+    }
+
+    #[test]
+    fn multi_output_model_requires_run_all() {
+        use crate::graph::Padding;
+        let mut g = Graph::new();
+        let mut rng = Rng::new(0xA11);
+        g.op("input", Op::Placeholder { shape: vec![1, 6, 6, 3] }, &[]);
+        g.constant("w", Tensor::randn(&[3, 3, 3, 4], &mut rng, 0.2));
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w"],
+        );
+        g.op("relu", Op::Relu, &["conv"]);
+        g.outputs = vec!["conv".into(), "relu".into()];
+        let m = LoadedModel::from_graph("twohead", &g, 2).unwrap();
+        let n: usize = m.input_shape.iter().product();
+        let input: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // run() must refuse rather than silently drop the second head
+        assert!(m.run(&input).is_err());
+        let outs = m.run_all(&input).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].len(), outs[1].len());
+        // relu head is the clamped conv head
+        for (c, r) in outs[0].iter().zip(&outs[1]) {
+            assert_eq!(c.max(0.0), *r);
         }
     }
 

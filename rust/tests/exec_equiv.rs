@@ -6,6 +6,12 @@
 //! The layer-pipelined executor is held to a harder bar: across stage
 //! counts it must match the *sequential plan bit for bit* (same kernels
 //! in the same order), and match the interpreter to the same tolerance.
+//!
+//! Batched plans (ISSUE 3) are held to the bitwise bar too: a batch-B
+//! plan — one im2col'd GEMM / one RLE weight-stream walk feeding all B
+//! images — must equal B sequential batch-1 runs exactly, across batch
+//! sizes, sparsity levels, plan options, and through the multi-stage
+//! pipeline (where each in-flight item is a whole batched group).
 
 use hpipe::exec::{ExecutionPlan, PipelinePlan, PlanOptions};
 use hpipe::graph::{Graph, Op, Padding, Tensor};
@@ -96,6 +102,7 @@ fn random_options(rng: &mut Rng) -> PlanOptions {
         sparse_threshold: *rng.choose(&[0.0, 0.3, 0.5, 2.0]),
         fuse: rng.chance(0.8),
         splits: 1 + rng.below(4),
+        ..Default::default()
     }
 }
 
@@ -245,6 +252,190 @@ fn pipeline_stress_images_match_sequential_bitwise() {
             assert_eq!(a.data, b.data, "image {i}");
         }
     }
+}
+
+/// Stack per-image feed maps into the `[B, ...]` feed block a batch-B
+/// plan consumes.
+fn batch_feeds(images: &[BTreeMap<String, Tensor>]) -> BTreeMap<String, Tensor> {
+    let mut batched = BTreeMap::new();
+    for name in images[0].keys() {
+        let parts: Vec<&Tensor> = images.iter().map(|m| &m[name]).collect();
+        batched.insert(name.clone(), Tensor::concat_batch(&parts));
+    }
+    batched
+}
+
+/// Tentpole acceptance (ISSUE 3): a batch-B plan must equal B sequential
+/// batch-1 runs of the same plan options *bit for bit* — the batched
+/// kernels change the amortization (shared weight tiles, one RLE stream
+/// walk), never the per-image accumulation order — across
+/// B ∈ {1, 3, 8} × sparsity {0.0, 0.5, 0.9} on randomized CNNs.
+#[test]
+fn prop_batched_plan_matches_sequential_bitwise() {
+    let mut case = 0u64;
+    for &sparsity in &[0.0f64, 0.5, 0.9] {
+        for &batch in &[1usize, 3, 8] {
+            case += 1;
+            let mut rng = Rng::new(0xBA7C4ED ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+            let mut g = random_cnn(&mut rng, case as usize % 3);
+            prune_graph(&mut g, sparsity);
+            let opts = random_options(&mut rng);
+            let plan1 = ExecutionPlan::build_with(&g, &opts).unwrap();
+            let planb = ExecutionPlan::build_with(&g, &opts.with_batch(batch)).unwrap();
+            assert_eq!(planb.batch(), batch);
+            let images: Vec<BTreeMap<String, Tensor>> =
+                (0..batch).map(|_| g.random_feeds(&mut rng)).collect();
+            let got = planb.run(&batch_feeds(&images)).unwrap();
+            let want: Vec<Vec<Tensor>> = images.iter().map(|m| plan1.run(m).unwrap()).collect();
+            for (oi, out) in got.iter().enumerate() {
+                assert_eq!(out.shape[0], batch * want[0][oi].shape[0]);
+                let per = out.data.len() / batch;
+                for (b, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        &out.data[b * per..(b + 1) * per],
+                        &w[oi].data[..],
+                        "sparsity {sparsity} batch {batch} output {oi} image {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Batched ResNet bottleneck blocks: residual Adds, folded batch norms,
+/// standalone Pads and projection shortcuts must all batch bitwise.
+#[test]
+fn prop_batched_resnet_block_matches_sequential_bitwise() {
+    for (case, &batch) in [2usize, 4].iter().enumerate() {
+        let mut rng = Rng::new(0xB10C + case as u64);
+        let mut g = random_resnet_block(&mut rng);
+        prune_graph(&mut g, 0.6);
+        let plan1 = ExecutionPlan::build(&g).unwrap();
+        let planb = ExecutionPlan::build_batched(&g, batch).unwrap();
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..batch).map(|_| g.random_feeds(&mut rng)).collect();
+        let got = planb.run(&batch_feeds(&images)).unwrap();
+        for (oi, out) in got.iter().enumerate() {
+            let per = out.data.len() / batch;
+            for (b, m) in images.iter().enumerate() {
+                let want = plan1.run(m).unwrap();
+                assert_eq!(
+                    &out.data[b * per..(b + 1) * per],
+                    &want[oi].data[..],
+                    "batch {batch} output {oi} image {b}"
+                );
+            }
+        }
+    }
+}
+
+/// A batched Add that reads a *folded constant* (per-image shape) must
+/// see it tiled across the batch, not zipped short.
+#[test]
+fn batched_plan_tiles_folded_consts_across_batch() {
+    let mut g = Graph::new();
+    let mut rng = Rng::new(0x71_1E);
+    g.op("input", Op::Placeholder { shape: vec![1, 4, 4, 2] }, &[]);
+    g.constant("cx", Tensor::randn(&[1, 4, 4, 2], &mut rng, 1.0));
+    g.constant("w", Tensor::randn(&[1, 1, 2, 2], &mut rng, 1.0));
+    g.op(
+        "cconv",
+        Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+        &["cx", "w"],
+    );
+    g.op("crelu", Op::Relu, &["cconv"]);
+    g.op("sum", Op::Add, &["input", "crelu"]);
+    g.outputs = vec!["sum".into()];
+    let plan1 = ExecutionPlan::build(&g).unwrap();
+    let planb = ExecutionPlan::build_batched(&g, 3).unwrap();
+    let images: Vec<BTreeMap<String, Tensor>> =
+        (0..3).map(|_| g.random_feeds(&mut rng)).collect();
+    let got = planb.run(&batch_feeds(&images)).unwrap();
+    let per = got[0].data.len() / 3;
+    assert_ne!(per, 0);
+    for (b, m) in images.iter().enumerate() {
+        let want = plan1.run(m).unwrap();
+        assert_eq!(&got[0].data[b * per..(b + 1) * per], &want[0].data[..], "image {b}");
+    }
+}
+
+/// Batched depthwise convolution (MobileNet-style separable block).
+#[test]
+fn batched_depthwise_matches_sequential_bitwise() {
+    let mut g = Graph::new();
+    let mut rng = Rng::new(0xD47);
+    g.op("input", Op::Placeholder { shape: vec![1, 8, 8, 4] }, &[]);
+    g.constant("dw", Tensor::randn(&[3, 3, 4, 2], &mut rng, 0.3));
+    g.constant("db", Tensor::randn(&[8], &mut rng, 0.1));
+    g.op(
+        "depthwise",
+        Op::DepthwiseConv2d { stride: (2, 2), padding: Padding::Same },
+        &["input", "dw"],
+    );
+    g.op("bias", Op::BiasAdd, &["depthwise", "db"]);
+    g.op("relu", Op::Relu6, &["bias"]);
+    g.outputs = vec!["relu".into()];
+    let plan1 = ExecutionPlan::build(&g).unwrap();
+    let planb = ExecutionPlan::build_batched(&g, 5).unwrap();
+    let images: Vec<BTreeMap<String, Tensor>> =
+        (0..5).map(|_| g.random_feeds(&mut rng)).collect();
+    let got = planb.run(&batch_feeds(&images)).unwrap();
+    let per = got[0].data.len() / 5;
+    for (b, m) in images.iter().enumerate() {
+        let want = plan1.run(m).unwrap();
+        assert_eq!(&got[0].data[b * per..(b + 1) * per], &want[0].data[..], "image {b}");
+    }
+}
+
+/// Batched groups through the multi-stage pipeline (ISSUE 3 satellite
+/// stress test): 16 groups of 3 images stream through a 4-stage
+/// pipeline built over a batch-3 plan — each boundary handoff carries a
+/// whole batched tensor set — and every image must match the
+/// sequential batch-1 plan bit for bit.
+#[test]
+fn batched_pipeline_stress_matches_sequential_bitwise() {
+    let mut g = tiny_cnn(NetConfig::test_scale());
+    prune_graph(&mut g, 0.7);
+    let seq = ExecutionPlan::build(&g).unwrap();
+    let (b, groups) = (3usize, 16usize);
+    let pipe = PipelinePlan::build(&g, &PlanOptions::batched(b), 4).unwrap();
+    assert_eq!(pipe.plan().batch(), b);
+    assert!(pipe.num_stages() > 1);
+    let in_shape = match &g.get("input").unwrap().op {
+        Op::Placeholder { shape } => shape.clone(),
+        _ => unreachable!(),
+    };
+    let per: usize = in_shape.iter().product();
+    let mut rng = Rng::new(0x57E55);
+    let n_images = b * groups;
+    let input: Vec<f32> = (0..n_images * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let outs = pipe.run_batch(&input, n_images).unwrap();
+    for i in 0..n_images {
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            Tensor::from_vec(&in_shape, input[i * per..(i + 1) * per].to_vec()),
+        );
+        let want = seq.run(&feeds).unwrap();
+        for (oi, w) in want.iter().enumerate() {
+            let po = w.data.len();
+            assert_eq!(&outs[oi][i * po..(i + 1) * po], &w.data[..], "image {i} output {oi}");
+        }
+    }
+}
+
+/// Partial groups can't stream: a batch-4 plan refuses 6 images.
+#[test]
+fn pipeline_run_batch_rejects_partial_groups() {
+    let g = tiny_cnn(NetConfig::test_scale());
+    let pipe = PipelinePlan::build(&g, &PlanOptions::batched(4), 2).unwrap();
+    let in_shape = match &g.get("input").unwrap().op {
+        Op::Placeholder { shape } => shape.clone(),
+        _ => unreachable!(),
+    };
+    let per: usize = in_shape.iter().product();
+    assert!(pipe.run_batch(&vec![0.0; 6 * per], 6).is_err());
+    assert!(pipe.run_batch(&vec![0.0; 4 * per], 0).is_err());
 }
 
 /// Sparsity extremes: fully dense weights through the sparse kernel and
