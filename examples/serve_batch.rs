@@ -12,7 +12,9 @@
 //! is cross-checked against the Rust reference interpreter running the
 //! same trained graphdef — proving the kernels, the plan compiler and
 //! the coordinator all agree. A third argument > 1 streams each batch
-//! through that many layer-pipeline stage threads in batched groups.
+//! through that many layer-pipeline stage threads in batched groups; a
+//! fourth argument > 1 splits the dominant stage's conv rows across an
+//! intra-stage worker team (the software `n_channel_splits` knob).
 
 use hpipe::coordinator::serve_demo;
 use std::path::PathBuf;
@@ -22,6 +24,7 @@ fn main() -> hpipe::util::error::Result<()> {
     let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
     let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
     let threads: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let team: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
     let artifacts = PathBuf::from(
         std::env::var("HPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
@@ -32,10 +35,11 @@ fn main() -> hpipe::util::error::Result<()> {
         );
     }
     println!(
-        "serving {requests} requests (max batch {batch}, {threads} pipeline threads) from {}",
+        "serving {requests} requests (max batch {batch}, {threads} pipeline threads, \
+         team {team}) from {}",
         artifacts.display()
     );
-    let mut report = serve_demo(&artifacts, requests, batch, threads)?;
+    let mut report = serve_demo(&artifacts, requests, batch, threads, team)?;
     report.print();
     let (agree, total) = report.interp_agreement.unwrap_or((0, 0));
     hpipe::ensure!(

@@ -77,10 +77,18 @@ fn main() {
     drop(rt);
 
     // whole serving path: queue -> batcher -> execute -> respond
-    // (threads > 1 streams each batch through the layer pipeline)
-    for (requests, batch, threads) in [(64usize, 1usize, 1usize), (64, 8, 1), (64, 8, 4)] {
-        let mut report = serve_demo(&dir, requests, batch, threads).unwrap();
-        println!("\nserve_demo requests={requests} max_batch={batch} threads={threads}:");
+    // (threads > 1 streams each batch through the layer pipeline;
+    // team > 1 splits the dominant stage's convs across a worker team)
+    for (requests, batch, threads, team) in [
+        (64usize, 1usize, 1usize, 1usize),
+        (64, 8, 1, 1),
+        (64, 8, 4, 1),
+        (64, 8, 2, 2),
+    ] {
+        let mut report = serve_demo(&dir, requests, batch, threads, team).unwrap();
+        println!(
+            "\nserve_demo requests={requests} max_batch={batch} threads={threads} team={team}:"
+        );
         report.print();
     }
 }

@@ -1,20 +1,25 @@
 //! Executor engine benchmark: reference interpreter vs planned-dense vs
 //! planned-sparse convolution on a ResNet-50 conv layer across weight
 //! sparsity levels, sequential vs layer-pipelined throughput on a
-//! ResNet-50 conv-stack workload at 1/2/4/8 stages, and natively
-//! batched plans at B ∈ {1, 2, 4, 8} vs the retired run-N-times loop on
-//! the same conv stack. Emits `BENCH_exec.json` at the repo root so the
-//! perf trajectory of the hot path is recorded alongside the code.
+//! ResNet-50 conv-stack workload at 1/2/4/8 stages, natively batched
+//! plans at B ∈ {1, 2, 4, 8} vs the retired run-N-times loop, and the
+//! prepacked register-tiled kernels (plan-time weight packing +
+//! pre-decoded RLE streams, with an intra-stage worker team on the
+//! pipeline's dominant stage) vs the PR 3 kernels on the same conv
+//! stack. Emits `BENCH_exec.json` at the repo root so the perf
+//! trajectory of the hot path is recorded alongside the code.
 //!
 //! Acceptance targets: planned sparse ≥ 5x faster than `interp::run` at
 //! 80% sparsity, sparse beats planned-dense at ≥ 70% sparsity (ISSUE 1),
 //! pipelined throughput at 4 stages beats the sequential planned
-//! executor (ISSUE 2), and the batch-8 plan (one RLE weight-stream walk
-//! per batch) beats running the batch-1 plan 8 times (ISSUE 3).
+//! executor (ISSUE 2), the batch-8 plan (one RLE weight-stream walk per
+//! batch) beats running the batch-1 plan 8 times (ISSUE 3), and the
+//! packed kernels beat the PR 3 kernels both sequentially and pipelined
+//! with an intra-stage split (ISSUE 4).
 //!
 //! `BENCH_SMOKE=1` caps iterations/images for CI and turns the
-//! pipelined-vs-sequential and batched-vs-loop comparisons into hard
-//! gates (nonzero exit on regression).
+//! pipelined-vs-sequential, batched-vs-loop and packed-vs-PR3
+//! comparisons into hard gates (nonzero exit on regression).
 
 use hpipe::exec::{ExecutionPlan, PipelinePlan, PlanOptions};
 use hpipe::graph::{Graph, Op, Padding, Tensor};
@@ -319,6 +324,84 @@ fn main() {
         batched_rows.push(row);
     }
 
+    // ---- prepacked register-tiled kernels vs the PR 3 kernels (ISSUE 4) ----
+    const PACKED_STAGES: usize = 4;
+    const PACKED_TEAM: usize = 2;
+    println!(
+        "\n=== packed kernels: {CHAIN_LAYERS}x conv chain (s={CHAIN_SPARSITY}), \
+         {pipe_images} images, prepacked microkernels vs PR 3 kernels ==="
+    );
+    let measure_seq_with = |opts: &PlanOptions| -> f64 {
+        let plan = ExecutionPlan::build_with(&chain, opts).unwrap();
+        let mut ctx = plan.new_context();
+        best_img_s(pipe_reps, pipe_images, || {
+            for i in 0..pipe_images {
+                plan.write_feed(&mut ctx, 0, &flat[i * per..(i + 1) * per])
+                    .unwrap();
+                plan.execute_steps(&mut ctx);
+                std::hint::black_box(plan.output(&ctx, 0).0[0]);
+            }
+        })
+    };
+    let measure_pipe_with = |opts: &PlanOptions, stages: usize, team: usize| -> f64 {
+        let pipe = PipelinePlan::from_plan_team(
+            ExecutionPlan::build_with(&chain, opts).unwrap(),
+            stages,
+            team,
+        );
+        best_img_s(pipe_reps, pipe_images, || {
+            let out = pipe.run_batch(&flat, pipe_images).unwrap();
+            std::hint::black_box(out[0][0]);
+        })
+    };
+    let packed_opts = PlanOptions::default();
+    let pr3_opts = PlanOptions::unpacked();
+    let mut packed_seq = measure_seq_with(&packed_opts);
+    let mut pr3_seq = measure_seq_with(&pr3_opts);
+    println!(
+        "  sequential: packed {packed_seq:.1} vs PR3 {pr3_seq:.1} img/s ({:.2}x)",
+        packed_seq / pr3_seq
+    );
+    let mut packed_pipe = measure_pipe_with(&packed_opts, PACKED_STAGES, PACKED_TEAM);
+    let mut pr3_pipe = measure_pipe_with(&pr3_opts, PACKED_STAGES, 1);
+    println!(
+        "  pipelined @{PACKED_STAGES} stages: packed+team{PACKED_TEAM} {packed_pipe:.1} \
+         vs PR3 {pr3_pipe:.1} img/s ({:.2}x)",
+        packed_pipe / pr3_pipe
+    );
+    // Same retry policy as the other gates: one full re-measure of every
+    // side before a verdict.
+    let mut packed_gate_retried = false;
+    if smoke && (packed_seq < pr3_seq || packed_pipe < pr3_pipe) {
+        println!("  packed gate missed on first attempt; re-measuring all sides");
+        packed_gate_retried = true;
+        packed_seq = measure_seq_with(&packed_opts);
+        pr3_seq = measure_seq_with(&pr3_opts);
+        packed_pipe = measure_pipe_with(&packed_opts, PACKED_STAGES, PACKED_TEAM);
+        pr3_pipe = measure_pipe_with(&pr3_opts, PACKED_STAGES, 1);
+        println!(
+            "  retry: seq packed {packed_seq:.1} vs PR3 {pr3_seq:.1}; \
+             pipe packed {packed_pipe:.1} vs PR3 {pr3_pipe:.1} img/s"
+        );
+    }
+    let packed_seq_wins = packed_seq >= pr3_seq;
+    let packed_pipe_wins = packed_pipe >= pr3_pipe;
+
+    let mut packed = Json::obj();
+    packed
+        .set("images", Json::from(pipe_images))
+        .set("packed_seq_img_s", Json::from(packed_seq))
+        .set("pr3_seq_img_s", Json::from(pr3_seq))
+        .set("speedup_seq", Json::from(packed_seq / pr3_seq))
+        .set("stages", Json::from(PACKED_STAGES))
+        .set("team", Json::from(PACKED_TEAM))
+        .set("packed_pipe_team_img_s", Json::from(packed_pipe))
+        .set("pr3_pipe_img_s", Json::from(pr3_pipe))
+        .set("speedup_pipe", Json::from(packed_pipe / pr3_pipe))
+        .set("gate_retried", Json::from(packed_gate_retried))
+        .set("packed_seq_beats_pr3", Json::from(packed_seq_wins))
+        .set("packed_pipe_team_beats_pr3", Json::from(packed_pipe_wins));
+
     let mut batched = Json::obj();
     batched
         .set("images", Json::from(batch_images))
@@ -362,7 +445,9 @@ fn main() {
             Json::from(sparse_beats_dense_at_70),
         )
         .set("pipelined_4_beats_sequential", Json::from(pipelined_wins))
-        .set("batched_8_beats_loop", Json::from(batched_wins));
+        .set("batched_8_beats_loop", Json::from(batched_wins))
+        .set("packed_seq_beats_pr3", Json::from(packed_seq_wins))
+        .set("packed_pipe_team_beats_pr3", Json::from(packed_pipe_wins));
     let mut root = Json::obj();
     root.set("bench", Json::from("exec_engine/resnet50_conv_layer"))
         .set(
@@ -380,18 +465,22 @@ fn main() {
         .set("results", rows)
         .set("pipeline", pipeline)
         .set("batched", batched)
+        .set("packed", packed)
         .set("acceptance", acceptance);
 
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_exec.json");
     std::fs::write(&out, root.pretty()).expect("writing BENCH_exec.json");
     println!(
         "\nwrote {} (sparse>=5x interp @0.8: {}, sparse beats dense @0.7: {}, \
-         pipelined@4 beats sequential: {}, batched@8 beats loop: {})",
+         pipelined@4 beats sequential: {}, batched@8 beats loop: {}, \
+         packed beats PR3 seq: {}, packed+team beats PR3 pipe: {})",
         out.display(),
         sparse_5x_at_80,
         sparse_beats_dense_at_70,
         pipelined_wins,
-        batched_wins
+        batched_wins,
+        packed_seq_wins,
+        packed_pipe_wins
     );
 
     let mut failed = false;
@@ -406,6 +495,21 @@ fn main() {
         eprintln!(
             "BENCH_SMOKE gate failed: batched @B=8 ({batched8_img_s:.1} img/s) \
              is slower than the run-N-times loop ({loop_img_s:.1} img/s) on both attempts"
+        );
+        failed = true;
+    }
+    if smoke && !packed_seq_wins {
+        eprintln!(
+            "BENCH_SMOKE gate failed: packed sequential ({packed_seq:.1} img/s) \
+             is slower than the PR 3 kernels ({pr3_seq:.1} img/s) on both attempts"
+        );
+        failed = true;
+    }
+    if smoke && !packed_pipe_wins {
+        eprintln!(
+            "BENCH_SMOKE gate failed: packed pipelined@{PACKED_STAGES}+team{PACKED_TEAM} \
+             ({packed_pipe:.1} img/s) is slower than the PR 3 pipeline \
+             ({pr3_pipe:.1} img/s) on both attempts"
         );
         failed = true;
     }

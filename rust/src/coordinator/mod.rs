@@ -148,7 +148,9 @@ impl Coordinator {
 /// End-to-end serving demo (the mandated E2E driver):
 /// 1. load the TinyCNN graphdef artifacts and compile execution plans
 ///    (`threads > 1` partitions them into that many pipeline stages for
-///    batch requests — the throughput-oriented serving mode),
+///    batch requests — the throughput-oriented serving mode — and
+///    `team > 1` splits the dominant stage's conv rows across an
+///    intra-stage worker team),
 /// 2. spawn a client thread that submits `n_requests` synthetic images,
 /// 3. serve them through the batcher + compiled executor,
 /// 4. cross-check classifications against the Rust reference
@@ -158,13 +160,17 @@ pub fn serve_demo(
     n_requests: usize,
     max_batch: usize,
     threads: usize,
+    team: usize,
 ) -> Result<ServeReport> {
-    let mut runtime = Runtime::cpu(artifacts_dir)?.with_threads(threads);
+    let mut runtime = Runtime::cpu(artifacts_dir)?
+        .with_threads(threads)
+        .with_team(team);
     let loaded = runtime.load_manifest()?;
     println!(
-        "runtime: platform={} threads={} loaded {:?}",
+        "runtime: platform={} threads={} team={} loaded {:?}",
         runtime.platform(),
         runtime.threads,
+        runtime.team,
         loaded
     );
 

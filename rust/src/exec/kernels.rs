@@ -13,6 +13,30 @@
 //! slot per call — im2col emits an [n·M, K] patch matrix feeding *one*
 //! GEMM, so each weight tile is read once per batch instead of once per
 //! image (the weight-reuse-across-batch the batched plans exist for).
+//!
+//! # Prepacked, register-tiled GEMM (ISSUE 4)
+//!
+//! HPIPE §V bakes each layer's weights into per-layer M20K memories laid
+//! out exactly as the layer's PEs consume them — the weight *layout* is
+//! decided at compile time, per layer, and never rearranged at runtime.
+//! The software analog here is [`PackedB`]: at **plan build time** each
+//! dense conv / matmul's HWIO weight matrix is repacked into
+//! cache-blocked column panels ([`NR`]-wide, zero-padded at the tail,
+//! grouped under [`KC`]-row k-blocks) so the hot loop streams weights in
+//! exactly the order the microkernel consumes them. The microkernel
+//! itself ([`gemm_packed_bias_act`]) computes an [`MR`]×[`NR`] register
+//! tile: the accumulators live in locals across a whole k-block (the
+//! autovectorizer keeps them in SIMD registers), each packed panel row
+//! is read once and feeds `MR` output rows, and `out` is touched once
+//! per k-block instead of once per multiply — the PR 3 axpy kernel
+//! ([`gemm_bias_act`], kept as the benchmark baseline) re-read and
+//! re-wrote the output row on every k step.
+//!
+//! Per-element accumulation order is *unchanged* (ascending k, one
+//! accumulator chain per output element, bias-seeded, activation on the
+//! final writeback), in both the MR-tile fast path and the masked edge
+//! path for M tails — so plan outputs stay batch-invariant and the
+//! equivalence suite can keep tight (ULP-level) bounds on dense paths.
 
 use crate::graph::{Padding, Tensor};
 
@@ -233,6 +257,197 @@ pub fn gemm_bias_act(
     act.apply_slice(&mut out[..m * n]);
 }
 
+/// Rows of A per register tile (output positions).
+pub const MR: usize = 4;
+/// Columns of B per packed panel / register tile (output channels).
+pub const NR: usize = 16;
+/// k-block depth: packed panel rows kept hot across all M rows.
+pub const KC: usize = 256;
+
+/// A weight matrix repacked at plan build time into microkernel-native
+/// panels — the software analog of baking a layer's weights into its
+/// own M20K banks in the layer's consumption order (HPIPE §V-A).
+///
+/// Layout: for each k-block of up to [`KC`] rows, for each [`NR`]-wide
+/// column panel (tail panels zero-padded to full width), the block's
+/// rows are stored contiguously as `kc × NR` values. The microkernel
+/// therefore reads the packed data strictly sequentially.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    /// Rows of the source matrix (GEMM K dimension).
+    pub k: usize,
+    /// Columns of the source matrix (GEMM N dimension).
+    pub n: usize,
+    /// Number of NR-wide column panels: `ceil(n / NR)`.
+    panels: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// f32 elements held by the packed copy (footprint accounting).
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Repack a row-major [k, n] matrix (e.g. HWIO conv weights flattened to
+/// [kh·kw·ci, co]) into [`PackedB`] panels. Runs at plan build time only.
+pub fn pack_b(b: &[f32], k: usize, n: usize) -> PackedB {
+    assert!(b.len() >= k * n, "pack_b: matrix shorter than k*n");
+    let panels = n.div_ceil(NR);
+    let mut data = Vec::with_capacity(k * panels * NR);
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        for p in 0..panels {
+            let n0 = p * NR;
+            for kk in k0..k1 {
+                let row = &b[kk * n..][..n];
+                for j in 0..NR {
+                    data.push(if n0 + j < n { row[n0 + j] } else { 0.0 });
+                }
+            }
+        }
+        k0 = k1;
+    }
+    PackedB { k, n, panels, data }
+}
+
+/// One MR×NR register tile (rows `i..i+mr`, panel columns `n0..n0+nw`)
+/// over one k-block of a packed panel. `first`/`last` mark the k-block's
+/// position: the first block seeds accumulators from the bias, later
+/// blocks resume from `out`, and only the last applies the activation.
+/// Both the full-MR fast path and the `mr < MR` edge path accumulate
+/// each output element over ascending k with a single accumulator chain,
+/// so tile placement never changes a result bit.
+#[allow(clippy::too_many_arguments)] // internal microkernel ABI
+#[inline]
+fn microtile(
+    a: &[f32],
+    k: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    i: usize,
+    mr: usize,
+    n: usize,
+    n0: usize,
+    nw: usize,
+    first: bool,
+    last: bool,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+        if first {
+            if let Some(bv) = bias {
+                accr[..nw].copy_from_slice(&bv[n0..n0 + nw]);
+            }
+        } else {
+            accr[..nw].copy_from_slice(&out[(i + r) * n + n0..][..nw]);
+        }
+    }
+    if mr == MR {
+        // Fast path: MR×NR accumulators stay in registers for the whole
+        // k-block; each packed panel row is read once and feeds MR rows.
+        for kk in 0..kc {
+            let brow = &panel[kk * NR..][..NR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = a[(i + r) * k + k0 + kk];
+                for (acc_v, &b_v) in accr.iter_mut().zip(brow) {
+                    *acc_v += av * b_v;
+                }
+            }
+        }
+    } else {
+        // Masked edge path (M tail): one row of NR accumulators at a
+        // time, identical per-element accumulation order.
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            let arow = &a[(i + r) * k + k0..][..kc];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &panel[kk * NR..][..NR];
+                for (acc_v, &b_v) in accr.iter_mut().zip(brow) {
+                    *acc_v += av * b_v;
+                }
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        let orow = &mut out[(i + r) * n + n0..][..nw];
+        for (o, &v) in orow.iter_mut().zip(&accr[..nw]) {
+            *o = if last { act.apply(v) } else { v };
+        }
+    }
+}
+
+/// Register-tiled GEMM over a prepacked B: out[M, N] = a[M, K] · pb,
+/// bias-seeded and with `act` fused into the final writeback. `a` is
+/// row-major (an im2col patch matrix or activation rows); rows are
+/// independent, so callers may hand disjoint row ranges of `a`/`out` to
+/// a worker team (see `ExecutionPlan` intra-stage splitting).
+pub fn gemm_packed_bias_act(
+    a: &[f32],
+    pb: &PackedB,
+    m: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    let (k, n) = (pb.k, pb.n);
+    debug_assert!(a.len() >= m * k, "gemm_packed: A shorter than m*k");
+    debug_assert!(out.len() >= m * n, "gemm_packed: out shorter than m*n");
+    let mut k0 = 0usize;
+    let mut block = 0usize; // start of this k-block's panels in pb.data
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let kc = k1 - k0;
+        let (first, last) = (k0 == 0, k1 == k);
+        for p in 0..pb.panels {
+            let panel = &pb.data[block + p * kc * NR..][..kc * NR];
+            let n0 = p * NR;
+            let nw = (n - n0).min(NR);
+            let mut i = 0usize;
+            while i < m {
+                let mr = (m - i).min(MR);
+                microtile(a, k, k0, kc, panel, i, mr, n, n0, nw, first, last, bias, act, out);
+                i += mr;
+            }
+        }
+        block += pb.panels * kc * NR;
+        k0 = k1;
+    }
+}
+
+/// Dense Conv2D through the prepacked register-tiled GEMM: im2col all
+/// `g.n` images into `scratch`, then [`gemm_packed_bias_act`] against
+/// the plan-time packed weights. 1x1/stride-1/no-pad convs skip the
+/// im2col copy exactly like [`conv2d_dense`].
+pub fn conv2d_dense_packed(
+    x: &[f32],
+    g: &ConvGeom,
+    pb: &PackedB,
+    bias: Option<&[f32]>,
+    act: Act,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let m = g.total_positions();
+    debug_assert_eq!(pb.k, g.patch_len());
+    debug_assert_eq!(pb.n, g.co);
+    if g.identity_patches() {
+        gemm_packed_bias_act(x, pb, m, bias, act, out);
+    } else {
+        im2col(x, g, scratch);
+        gemm_packed_bias_act(scratch, pb, m, bias, act, out);
+    }
+}
+
 /// Dense Conv2D (+ fused bias / activation): im2col all `g.n` images
 /// into `scratch`, then one GEMM against the HWIO weights — the weight
 /// tiles stay hot across the whole batch's rows. 1x1/stride-1/no-pad
@@ -260,6 +475,13 @@ pub fn conv2d_dense(
 /// Dense depthwise conv (+ fused bias / activation) over all `g.n`
 /// images. `mult` is the channel multiplier (weights are
 /// [kh, kw, ci, mult]).
+///
+/// The padding bounds checks are hoisted out of the tap loops: the valid
+/// `ky` / `kx` ranges are computed once per output position (two
+/// saturating subs and a min each), so interior positions — where the
+/// ranges are simply `0..kh` / `0..kw` — run the tap loops branch-free.
+/// Skipped taps contributed nothing before, so the per-element
+/// accumulation order (and therefore every result bit) is unchanged.
 pub fn depthwise_dense(
     x: &[f32],
     g: &ConvGeom,
@@ -276,7 +498,14 @@ pub fn depthwise_dense(
         let xi = &x[img * g.h * g.w * g.ci..][..g.h * g.w * g.ci];
         let oi = &mut out[img * g.ho * g.wo * co..][..g.ho * g.wo * co];
         for oy in 0..g.ho {
+            // iy = oy*sh + ky - pt must land in [0, h)
+            let base_y = oy * sh;
+            let ky_lo = pt.saturating_sub(base_y);
+            let ky_hi = (g.h + pt).saturating_sub(base_y).min(g.kh);
             for ox in 0..g.wo {
+                let base_x = ox * sw;
+                let kx_lo = pl.saturating_sub(base_x);
+                let kx_hi = (g.w + pl).saturating_sub(base_x).min(g.kw);
                 let orow = &mut oi[(oy * g.wo + ox) * co..][..co];
                 for ic in 0..g.ci {
                     for im in 0..mult {
@@ -284,17 +513,11 @@ pub fn depthwise_dense(
                             Some(b) => b[ic * mult + im],
                             None => 0.0,
                         };
-                        for ky in 0..g.kh {
-                            let iy = (oy * sh + ky) as isize - pt as isize;
-                            if !(0..g.h as isize).contains(&iy) {
-                                continue;
-                            }
-                            for kx in 0..g.kw {
-                                let ix = (ox * sw + kx) as isize - pl as isize;
-                                if !(0..g.w as isize).contains(&ix) {
-                                    continue;
-                                }
-                                acc += xi[((iy as usize) * g.w + ix as usize) * g.ci + ic]
+                        for ky in ky_lo..ky_hi {
+                            let iy = base_y + ky - pt;
+                            for kx in kx_lo..kx_hi {
+                                let ix = base_x + kx - pl;
+                                acc += xi[(iy * g.w + ix) * g.ci + ic]
                                     * w.data[((ky * g.kw + kx) * g.ci + ic) * mult + im];
                             }
                         }
@@ -440,5 +663,143 @@ pub fn softmax(x: &[f32], n: usize, c: usize, out: &mut [f32]) {
         for d in dst.iter_mut() {
             *d /= sum;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::prune::prune_tensor;
+    use crate::util::prop::Cases;
+    use crate::util::Rng;
+
+    /// Naive triple-loop reference GEMM with the same per-element
+    /// accumulation order (ascending k, bias-seeded, act on writeback)
+    /// as both the axpy kernel and the packed microkernel — so the
+    /// packed kernel must match it *exactly*.
+    fn naive_gemm(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        bias: Option<&[f32]>,
+        act: Act,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = bias.map_or(0.0, |bv| bv[j]);
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = act.apply(acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn packed_gemm_matches_naive_across_odd_shapes_and_sparsity() {
+        Cases::new(36).seed(0x9EAC).run(|rng, size| {
+            // Odd shapes on purpose: M tails (m % MR != 0), N panel
+            // tails (n % NR != 0) and k spanning multiple KC blocks.
+            let m = 1 + (size * 3 + rng.below(5)) % 23;
+            let n = 1 + (size * 7 + rng.below(9)) % 37;
+            let k = 1 + rng.below(2) * KC + rng.below(19);
+            let sparsity = *rng.choose(&[0.0, 0.5, 0.9]);
+            let a = Tensor::randn(&[m, k], rng, 1.0);
+            let mut b = Tensor::randn(&[k, n], rng, 1.0);
+            prune_tensor(&mut b, sparsity);
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let act = *rng.choose(&[Act::None, Act::Relu, Act::Relu6]);
+            let pb = pack_b(b.as_slice(), k, n);
+            assert_eq!(pb.len(), n.div_ceil(NR) * NR * k);
+            let mut got = vec![0.0f32; m * n];
+            gemm_packed_bias_act(a.as_slice(), &pb, m, Some(&bias), act, &mut got);
+            let want = naive_gemm(a.as_slice(), b.as_slice(), m, k, n, Some(&bias), act);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("m={m} k={k} n={n} sparsity={sparsity}: mismatch"))
+            }
+        });
+    }
+
+    #[test]
+    fn packed_gemm_row_ranges_compose() {
+        // The intra-stage worker team hands disjoint row ranges of the
+        // same packed GEMM to different threads; chunked execution must
+        // reproduce the single-call result bit for bit.
+        let mut rng = Rng::new(0x7EA3);
+        let (m, k, n) = (11usize, KC + 7, 21usize);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+        let pb = pack_b(b.as_slice(), k, n);
+        let mut full = vec![0.0f32; m * n];
+        gemm_packed_bias_act(a.as_slice(), &pb, m, None, Act::Relu, &mut full);
+        let mut parts = vec![0.0f32; m * n];
+        for (t, chunk) in parts.chunks_mut(4 * n).enumerate() {
+            let m0 = t * 4;
+            let rows = chunk.len() / n;
+            gemm_packed_bias_act(&a.as_slice()[m0 * k..], &pb, rows, None, Act::Relu, chunk);
+        }
+        assert_eq!(full, parts);
+    }
+
+    #[test]
+    fn depthwise_hoisted_bounds_match_checked_reference() {
+        Cases::new(16).seed(0xD3).run(|rng, size| {
+            let (h, w) = (3 + size % 5, 3 + (size * 2) % 5);
+            let ci = 1 + rng.below(4);
+            let mult = 1 + rng.below(2);
+            let (kh, kw) = (1 + rng.below(3), 1 + rng.below(3));
+            let stride = 1 + rng.below(2);
+            let shape = [2usize, h, w, ci];
+            let x = Tensor::randn(&shape, rng, 1.0);
+            let wt = Tensor::randn(&[kh, kw, ci, mult], rng, 1.0);
+            let g = ConvGeom::new(&shape, kh, kw, ci * mult, (stride, stride), Padding::Same);
+            let co = ci * mult;
+            let mut got = vec![0.0f32; 2 * g.ho * g.wo * co];
+            depthwise_dense(x.as_slice(), &g, mult, &wt, None, Act::None, &mut got);
+            // Reference: the per-tap bounds-checked loop the hoisted
+            // ranges replaced; identical tap order, so bitwise equal.
+            let (sh, sw) = g.stride;
+            let (pt, _, pl, _) = g.pad;
+            let mut want = vec![0.0f32; got.len()];
+            for img in 0..2 {
+                let xi = &x.as_slice()[img * h * w * ci..][..h * w * ci];
+                let oi = &mut want[img * g.ho * g.wo * co..][..g.ho * g.wo * co];
+                for oy in 0..g.ho {
+                    for ox in 0..g.wo {
+                        for ic in 0..ci {
+                            for im in 0..mult {
+                                let mut acc = 0.0f32;
+                                for ky in 0..kh {
+                                    let iy = (oy * sh + ky) as isize - pt as isize;
+                                    if !(0..h as isize).contains(&iy) {
+                                        continue;
+                                    }
+                                    for kx in 0..kw {
+                                        let ix = (ox * sw + kx) as isize - pl as isize;
+                                        if !(0..w as isize).contains(&ix) {
+                                            continue;
+                                        }
+                                        acc += xi[((iy as usize) * w + ix as usize) * ci + ic]
+                                            * wt.data[((ky * kw + kx) * ci + ic) * mult + im];
+                                    }
+                                }
+                                oi[(oy * g.wo + ox) * co + ic * mult + im] = acc;
+                            }
+                        }
+                    }
+                }
+            }
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("h={h} w={w} ci={ci} mult={mult} kh={kh} kw={kw} s={stride}"))
+            }
+        });
     }
 }

@@ -17,10 +17,17 @@
 //! * **fuses** `Conv2D`/`DepthwiseConv2d`/`MatMul` → `BiasAdd` → `Relu`/
 //!   `Relu6` chains into single steps (bias-initialized accumulators,
 //!   activation applied on writeback);
-//! * selects a **specialized kernel per node**: im2col + k-blocked GEMM
-//!   for dense convolutions ([`kernels`]), and an RLE-stream-walking
-//!   sparse kernel ([`sparse`]) for weights at or above the sparsity
-//!   threshold — the software analog of the paper's zero-skipping PEs;
+//! * selects a **specialized kernel per node**: im2col + register-tiled
+//!   GEMM for dense convolutions ([`kernels`]), and a pre-decoded sparse
+//!   kernel ([`sparse`]) for weights at or above the sparsity threshold
+//!   — the software analog of the paper's zero-skipping PEs;
+//! * **prepacks every compute node's weights** ([`PlanOptions::packed`],
+//!   on by default): dense weights are repacked into microkernel-native
+//!   [`kernels::PackedB`] panels and RLE streams are pre-decoded into
+//!   flat [`sparse::PackedRle`] nonzero arrays — the software analog of
+//!   baking each layer's weights into its own M20K banks (§V-A), so the
+//!   execution hot path never runs the runlength decoder and never
+//!   re-walks an unpacked weight layout;
 //! * assigns outputs to a **buffer arena** with liveness-based reuse, so
 //!   steady-state serving performs zero heap allocations per image
 //!   (feeds are copied into their slots; everything else is overwritten
@@ -101,6 +108,14 @@ pub struct PlanOptions {
     /// graph's placeholders must have leading (batch) dim 1; feeds then
     /// carry `[batch, ...]` tensors.
     pub batch: usize,
+    /// Prepack weights at plan build time: dense conv / matmul weights
+    /// into register-tile panels ([`kernels::PackedB`]) and RLE streams
+    /// into flat pre-decoded nonzero arrays ([`sparse::PackedRle`]), so
+    /// the hot loop runs the register-tiled microkernels and never
+    /// touches the runlength decoder. `false` restores the PR 3 axpy /
+    /// stream-walking kernels — kept purely as the benchmark baseline
+    /// (`benches/exec_engine.rs` gates packed ≥ baseline).
+    pub packed: bool,
 }
 
 impl Default for PlanOptions {
@@ -110,6 +125,7 @@ impl Default for PlanOptions {
             fuse: true,
             splits: 1,
             batch: 1,
+            packed: true,
         }
     }
 }
@@ -143,6 +159,15 @@ impl PlanOptions {
     pub fn with_batch(self, b: usize) -> PlanOptions {
         PlanOptions { batch: b, ..self }
     }
+
+    /// The PR 3 kernels (runtime RLE walking, axpy GEMM) — benchmark
+    /// baseline for the prepacked register-tiled kernels.
+    pub fn unpacked() -> PlanOptions {
+        PlanOptions {
+            packed: false,
+            ..Default::default()
+        }
+    }
 }
 
 /// A pre-resolved operand: either a build-time constant or an arena slot.
@@ -165,12 +190,18 @@ enum StepKind {
     DenseConv {
         geom: ConvGeom,
         w: usize,
+        /// Plan-time packed weight panels; `None` only for the PR 3
+        /// baseline ([`PlanOptions::unpacked`]).
+        packed: Option<kernels::PackedB>,
         bias: Option<usize>,
         act: Act,
     },
     SparseConv {
         geom: ConvGeom,
+        /// Encoded streams (kept for the cycle-cost model / baseline).
         rle: ConvRle,
+        /// Plan-time pre-decoded nonzeros; `None` only for the baseline.
+        packed: Option<sparse::PackedRle>,
         bias: Option<usize>,
         act: Act,
     },
@@ -186,6 +217,7 @@ enum StepKind {
         k: usize,
         co: usize,
         w: usize,
+        packed: Option<kernels::PackedB>,
         bias: Option<usize>,
         act: Act,
     },
@@ -194,6 +226,7 @@ enum StepKind {
         k: usize,
         co: usize,
         rle: ConvRle,
+        packed: Option<sparse::PackedRle>,
         bias: Option<usize>,
         act: Act,
     },
@@ -475,15 +508,30 @@ impl ExecutionPlan {
                     );
                     if w.sparsity() >= opts.sparse_threshold {
                         stats.sparse_convs += 1;
+                        let rle = encode_conv(w, opts.splits);
+                        // Pre-decode at plan build: the hot path never
+                        // runs the runlength decoder (HPIPE bakes weight
+                        // words into per-layer M20Ks the same way).
+                        let packed = opts.packed.then(|| sparse::pack_rle(&rle));
                         StepKind::SparseConv {
                             geom,
-                            rle: encode_conv(w, opts.splits),
+                            rle,
+                            packed,
                             bias: bias_idx,
                             act: fused_act,
                         }
                     } else {
                         stats.dense_convs += 1;
-                        StepKind::DenseConv { geom, w: widx, bias: bias_idx, act: fused_act }
+                        let packed = opts
+                            .packed
+                            .then(|| kernels::pack_b(w.as_slice(), geom.patch_len(), geom.co));
+                        StepKind::DenseConv {
+                            geom,
+                            w: widx,
+                            packed,
+                            bias: bias_idx,
+                            act: fused_act,
+                        }
                     }
                 }
                 Op::DepthwiseConv2d { stride, padding } => {
@@ -508,21 +556,26 @@ impl ExecutionPlan {
                     let (nrows, k, co) = (xs[0] * batch, w.shape[0], w.shape[1]);
                     if w.sparsity() >= opts.sparse_threshold {
                         stats.sparse_matmuls += 1;
+                        let rle = encode_matmul(w, opts.splits);
+                        let packed = opts.packed.then(|| sparse::pack_rle(&rle));
                         StepKind::SparseMatMul {
                             n: nrows,
                             k,
                             co,
-                            rle: encode_matmul(w, opts.splits),
+                            rle,
+                            packed,
                             bias: bias_idx,
                             act: fused_act,
                         }
                     } else {
                         stats.dense_matmuls += 1;
+                        let packed = opts.packed.then(|| kernels::pack_b(w.as_slice(), k, co));
                         StepKind::DenseMatMul {
                             n: nrows,
                             k,
                             co,
                             w: widx,
+                            packed,
                             bias: bias_idx,
                             act: fused_act,
                         }
@@ -867,8 +920,17 @@ impl ExecutionPlan {
                 b.map(|i| self.consts[i].as_slice())
             };
             match &step.kind {
-                StepKind::DenseConv { geom, w, bias: b, act } => {
-                    kernels::conv2d_dense(
+                StepKind::DenseConv { geom, w, packed, bias: b, act } => match packed {
+                    Some(pb) => kernels::conv2d_dense_packed(
+                        x,
+                        geom,
+                        pb,
+                        bias(b),
+                        *act,
+                        scratch,
+                        &mut out,
+                    ),
+                    None => kernels::conv2d_dense(
                         x,
                         geom,
                         &self.consts[*w],
@@ -876,11 +938,22 @@ impl ExecutionPlan {
                         *act,
                         scratch,
                         &mut out,
-                    );
-                }
-                StepKind::SparseConv { geom, rle, bias: b, act } => {
-                    sparse::sparse_conv(x, geom, rle, bias(b), *act, scratch, acc, &mut out);
-                }
+                    ),
+                },
+                StepKind::SparseConv { geom, rle, packed, bias: b, act } => match packed {
+                    Some(pr) => sparse::sparse_conv_packed(
+                        x,
+                        geom,
+                        pr,
+                        bias(b),
+                        *act,
+                        scratch,
+                        &mut out,
+                    ),
+                    None => {
+                        sparse::sparse_conv(x, geom, rle, bias(b), *act, scratch, acc, &mut out)
+                    }
+                },
                 StepKind::Depthwise { geom, mult, w, bias: b, act } => {
                     kernels::depthwise_dense(
                         x,
@@ -892,8 +965,9 @@ impl ExecutionPlan {
                         &mut out,
                     );
                 }
-                StepKind::DenseMatMul { n, k, co, w, bias: b, act } => {
-                    kernels::gemm_bias_act(
+                StepKind::DenseMatMul { n, k, co, w, packed, bias: b, act } => match packed {
+                    Some(pb) => kernels::gemm_packed_bias_act(x, pb, *n, bias(b), *act, &mut out),
+                    None => kernels::gemm_bias_act(
                         x,
                         self.consts[*w].as_slice(),
                         *n,
@@ -902,11 +976,14 @@ impl ExecutionPlan {
                         bias(b),
                         *act,
                         &mut out,
-                    );
-                }
-                StepKind::SparseMatMul { n, k, co, rle, bias: b, act } => {
-                    sparse::sparse_matmul(x, *n, *k, *co, rle, bias(b), *act, &mut out);
-                }
+                    ),
+                },
+                StepKind::SparseMatMul { n, k, co, rle, packed, bias: b, act } => match packed {
+                    Some(pr) => {
+                        sparse::sparse_matmul_packed(x, *n, *k, *co, pr, bias(b), *act, &mut out)
+                    }
+                    None => sparse::sparse_matmul(x, *n, *k, *co, rle, bias(b), *act, &mut out),
+                },
                 StepKind::MaxPool { geom } => kernels::max_pool(x, geom, &mut out),
                 StepKind::Affine { ch, a, b, act } => {
                     kernels::affine(
@@ -935,10 +1012,171 @@ impl ExecutionPlan {
         slots[step.out] = out;
     }
 
+    /// Execute one step with an intra-stage worker team of `team`
+    /// threads splitting the step's output rows — the software analog of
+    /// raising `n_channel_splits` on the slowest stage (HPIPE Algorithm
+    /// 1 gives the bottleneck layer more multipliers; we give it more
+    /// cores). Only the M-decomposable packed kernels split (dense /
+    /// sparse conv and matmul); every other step kind — and the PR 3
+    /// baseline kernels — runs on the calling thread. Workers write
+    /// disjoint output-row ranges and the per-element accumulation order
+    /// is unchanged, so team execution is bit-identical to
+    /// [`Self::exec_step`] (`rust/tests/exec_equiv.rs` asserts this).
+    fn exec_step_team(&self, step: &Step, ctx: &mut ExecContext, team: usize) {
+        if team <= 1 {
+            return self.exec_step(step, ctx);
+        }
+        let bias =
+            |b: &Option<usize>| -> Option<&[f32]> { b.map(|i| self.consts[i].as_slice()) };
+        match &step.kind {
+            StepKind::DenseConv { geom, packed: Some(pb), bias: b, act, .. } => {
+                let ExecContext { slots, scratch, .. } = ctx;
+                let mut out = std::mem::take(&mut slots[step.out]);
+                {
+                    let x = resolve_src(&self.consts, slots, step.inputs[0]);
+                    let m = geom.total_positions();
+                    let a: &[f32] = if geom.identity_patches() {
+                        x
+                    } else {
+                        kernels::im2col(x, geom, scratch);
+                        &scratch[..]
+                    };
+                    team_gemm_rows(a, pb, m, bias(b), *act, team, &mut out[..m * geom.co]);
+                }
+                slots[step.out] = out;
+            }
+            StepKind::SparseConv { geom, packed: Some(pr), bias: b, act, .. } => {
+                let ExecContext { slots, scratch, .. } = ctx;
+                let mut out = std::mem::take(&mut slots[step.out]);
+                {
+                    let x = resolve_src(&self.consts, slots, step.inputs[0]);
+                    let m = geom.total_positions();
+                    kernels::im2col_t(x, geom, scratch);
+                    team_sparse_rows(
+                        &scratch[..],
+                        m,
+                        pr,
+                        bias(b),
+                        *act,
+                        team,
+                        &mut out[..m * geom.co],
+                    );
+                }
+                slots[step.out] = out;
+            }
+            StepKind::DenseMatMul { n, packed: Some(pb), bias: b, act, .. } => {
+                let ExecContext { slots, .. } = ctx;
+                let mut out = std::mem::take(&mut slots[step.out]);
+                {
+                    let x = resolve_src(&self.consts, slots, step.inputs[0]);
+                    team_gemm_rows(x, pb, *n, bias(b), *act, team, &mut out[..*n * pb.n]);
+                }
+                slots[step.out] = out;
+            }
+            StepKind::SparseMatMul { n, k, co, packed: Some(pr), bias: b, act, .. } => {
+                let ExecContext { slots, .. } = ctx;
+                let mut out = std::mem::take(&mut slots[step.out]);
+                {
+                    let x = resolve_src(&self.consts, slots, step.inputs[0]);
+                    team_sparse_matmul_rows(
+                        x,
+                        *n,
+                        *k,
+                        *co,
+                        pr,
+                        bias(b),
+                        *act,
+                        team,
+                        &mut out[..*n * *co],
+                    );
+                }
+                slots[step.out] = out;
+            }
+            _ => self.exec_step(step, ctx),
+        }
+    }
+
     /// Names of executed steps in order (diagnostics / tests).
     pub fn step_names(&self) -> Vec<&str> {
         self.steps.iter().map(|s| s.name.as_str()).collect()
     }
+}
+
+/// Split a packed GEMM's output rows into `team` contiguous chunks, one
+/// scoped worker thread per chunk. Rows are independent in
+/// [`kernels::gemm_packed_bias_act`], so workers share `a` / `pb`
+/// read-only and write disjoint `out` slices.
+fn team_gemm_rows(
+    a: &[f32],
+    pb: &kernels::PackedB,
+    rows_total: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    team: usize,
+    out: &mut [f32],
+) {
+    let (k, co) = (pb.k, pb.n);
+    let rows_per = rows_total.div_ceil(team);
+    std::thread::scope(|scope| {
+        for (t, orows) in out[..rows_total * co].chunks_mut(rows_per * co).enumerate() {
+            let m0 = t * rows_per;
+            let rows = orows.len() / co;
+            let asub = &a[m0 * k..][..rows * k];
+            scope.spawn(move || {
+                kernels::gemm_packed_bias_act(asub, pb, rows, bias, act, orows);
+            });
+        }
+    });
+}
+
+/// Split a packed sparse conv's output positions into `team` contiguous
+/// ranges over the shared transposed patch matrix.
+fn team_sparse_rows(
+    patches_t: &[f32],
+    m: usize,
+    pr: &sparse::PackedRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    team: usize,
+    out: &mut [f32],
+) {
+    let co = pr.co;
+    let rows_per = m.div_ceil(team);
+    std::thread::scope(|scope| {
+        for (t, orows) in out[..m * co].chunks_mut(rows_per * co).enumerate() {
+            let m0 = t * rows_per;
+            let rows = orows.len() / co;
+            scope.spawn(move || {
+                sparse::sparse_packed_rows(patches_t, m, m0, m0 + rows, pr, bias, act, orows);
+            });
+        }
+    });
+}
+
+/// Split a packed sparse matmul's rows across `team` scoped workers.
+#[allow(clippy::too_many_arguments)] // internal team ABI: dims + epilogue
+fn team_sparse_matmul_rows(
+    x: &[f32],
+    n: usize,
+    ci: usize,
+    co: usize,
+    pr: &sparse::PackedRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    team: usize,
+    out: &mut [f32],
+) {
+    let rows_per = n.div_ceil(team);
+    std::thread::scope(|scope| {
+        for (t, orows) in out[..n * co].chunks_mut(rows_per * co).enumerate() {
+            let m0 = t * rows_per;
+            let rows = orows.len() / co;
+            let xsub = &x[m0 * ci..][..rows * ci];
+            scope.spawn(move || {
+                sparse::sparse_matmul_packed(xsub, rows, ci, co, pr, bias, act, orows);
+            });
+        }
+    });
 }
 
 fn resolve_src<'a>(consts: &'a [Tensor], slots: &'a [Vec<f32>], s: Src) -> &'a [f32] {

@@ -35,6 +35,21 @@
 //! shutdown protocol; persistent stage workers that survive across
 //! batches (so the pipeline never drains between them) are the
 //! coordinator-level follow-on recorded in ROADMAP.md.
+//!
+//! # Intra-stage worker teams
+//!
+//! When layers outnumber stages unevenly, the balance DP can only cut at
+//! step boundaries and one stage dominates the interval. HPIPE's answer
+//! is `n_channel_splits`: give the slowest layer more multipliers until
+//! stages re-balance (Algorithm 1). The software analog here is a
+//! **worker team** ([`PipelinePlan::from_plan_team`]): the conv / matmul
+//! steps of the *dominant* stage (argmax of the modeled stage costs) are
+//! executed with their output rows split across `team` scoped threads
+//! (`ExecutionPlan::exec_step_team`), shrinking the bottleneck stage's
+//! wall time instead of its step count. `team == 1` (the default) is
+//! exactly the PR 3 single-thread-per-stage behavior; any team size
+//! produces bit-identical outputs because workers write disjoint row
+//! ranges with unchanged per-element accumulation order.
 
 use super::{ConvGeom, ExecContext, ExecutionPlan, PlanOptions, Src, Step, StepKind};
 use crate::arch::StageGeometry;
@@ -244,6 +259,12 @@ pub struct PipelinePlan {
     stage_slots: Vec<Vec<usize>>,
     /// Per-stage (scratch, acc) sizes — sized to the stage's own steps.
     stage_scratch: Vec<(usize, usize)>,
+    /// Intra-stage worker-team size for the dominant stage's conv /
+    /// matmul steps; 1 = exact PR 3 behavior (no splitting).
+    team: usize,
+    /// Plan-global indices of the steps executed with the worker team
+    /// (the splittable steps of the bottleneck stage; empty if team==1).
+    team_steps: Vec<usize>,
 }
 
 impl PipelinePlan {
@@ -259,10 +280,37 @@ impl PipelinePlan {
         ))
     }
 
+    /// [`Self::build`] with an intra-stage worker team for the dominant
+    /// stage (see [`Self::from_plan_team`]).
+    pub fn build_team(
+        graph: &Graph,
+        opts: &PlanOptions,
+        stages: usize,
+        team: usize,
+    ) -> Result<PipelinePlan, GraphError> {
+        Ok(PipelinePlan::from_plan_team(
+            ExecutionPlan::build_with(graph, opts)?,
+            stages,
+            team,
+        ))
+    }
+
     /// Partition an existing plan into (at most) `stages` stages. The
     /// stage count is clamped to the number of steps; a 1-stage pipeline
     /// degenerates to sequential execution on the calling thread.
     pub fn from_plan(plan: ExecutionPlan, stages: usize) -> PipelinePlan {
+        PipelinePlan::from_plan_team(plan, stages, 1)
+    }
+
+    /// [`Self::from_plan`] plus an intra-stage worker team: when
+    /// `team > 1`, the cost model's dominant stage (argmax of the
+    /// balanced stage costs) executes its conv / matmul steps with their
+    /// output rows split across `team` scoped worker threads — the
+    /// software analog of raising `n_channel_splits` on the slowest
+    /// stage. With `stages == 1` the single stage is trivially dominant,
+    /// so every splittable step runs on the team (data-parallel
+    /// sequential execution). `team == 1` is exactly PR 3 behavior.
+    pub fn from_plan_team(plan: ExecutionPlan, stages: usize, team: usize) -> PipelinePlan {
         let costs = plan.step_costs();
         let ranges = partition_min_bottleneck(&costs, stages.max(1));
         let k = ranges.len();
@@ -358,6 +406,32 @@ impl PipelinePlan {
             }
         }
 
+        // Intra-stage team: mark the splittable (packed conv / matmul)
+        // steps of the stage the cost model says dominates.
+        let team = team.max(1);
+        let mut team_steps: Vec<usize> = Vec::new();
+        if team > 1 {
+            let bottleneck = stage_costs
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, &c)| c)
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            let (a, b) = ranges[bottleneck];
+            for (i, step) in plan.steps[a..b].iter().enumerate() {
+                let splittable = matches!(
+                    step.kind,
+                    StepKind::DenseConv { packed: Some(_), .. }
+                        | StepKind::SparseConv { packed: Some(_), .. }
+                        | StepKind::DenseMatMul { packed: Some(_), .. }
+                        | StepKind::SparseMatMul { packed: Some(_), .. }
+                );
+                if splittable {
+                    team_steps.push(a + i);
+                }
+            }
+        }
+
         PipelinePlan {
             plan,
             ranges,
@@ -365,6 +439,8 @@ impl PipelinePlan {
             xfer,
             stage_slots,
             stage_scratch,
+            team,
+            team_steps,
         }
     }
 
@@ -375,6 +451,16 @@ impl PipelinePlan {
 
     pub fn num_stages(&self) -> usize {
         self.ranges.len()
+    }
+
+    /// Intra-stage worker-team size (1 = no splitting).
+    pub fn team(&self) -> usize {
+        self.team
+    }
+
+    /// Plan-global indices of the steps the worker team splits.
+    pub fn team_steps(&self) -> &[usize] {
+        &self.team_steps
     }
 
     /// Half-open step ranges, one per stage.
@@ -596,7 +682,7 @@ impl PipelinePlan {
 
     fn run_range(&self, j: usize, ctx: &mut ExecContext) {
         let (a, b) = self.ranges[j];
-        for step in &self.plan.steps[a..b] {
+        for (i, step) in self.plan.steps[a..b].iter().enumerate() {
             debug_assert_eq!(
                 ctx.slots[step.out].len(),
                 self.plan.slot_lens[step.out],
@@ -604,7 +690,11 @@ impl PipelinePlan {
                 step.out,
                 step.name
             );
-            self.plan.exec_step(step, ctx);
+            if self.team > 1 && self.team_steps.contains(&(a + i)) {
+                self.plan.exec_step_team(step, ctx, self.team);
+            } else {
+                self.plan.exec_step(step, ctx);
+            }
         }
     }
 }
@@ -713,6 +803,43 @@ mod tests {
         let g = tiny_cnn(NetConfig::test_scale());
         let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 2).unwrap();
         assert!(pipe.run_batch(&[0.0; 7], 1).is_err());
+    }
+
+    #[test]
+    fn team_pipeline_matches_sequential_bitwise() {
+        // Worker teams split output rows with unchanged per-element
+        // accumulation order, so results must be bit-identical to the
+        // sequential plan across stage counts and team sizes.
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.6);
+        let seq = ExecutionPlan::build(&g).unwrap();
+        let mut rng = Rng::new(0x7EA2);
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..4).map(|_| g.random_feeds(&mut rng)).collect();
+        for (stages, team) in [(1usize, 2usize), (2, 2), (3, 3)] {
+            let pipe =
+                PipelinePlan::from_plan_team(ExecutionPlan::build(&g).unwrap(), stages, team);
+            assert_eq!(pipe.team(), team);
+            assert!(
+                !pipe.team_steps().is_empty(),
+                "stages={stages}: no splittable steps in the dominant stage"
+            );
+            let got = pipe.run_stream(&images).unwrap();
+            for (i, fm) in images.iter().enumerate() {
+                let want = seq.run(fm).unwrap();
+                for (a, b) in got[i].iter().zip(&want) {
+                    assert_eq!(a.data, b.data, "stages={stages} team={team} image={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn team_defaults_to_pr3_behavior() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 2).unwrap();
+        assert_eq!(pipe.team(), 1);
+        assert!(pipe.team_steps().is_empty());
     }
 
     #[test]

@@ -1,26 +1,250 @@
 //! Sparse-aware convolution kernels that execute HPIPE's runlength-encoded
-//! weight streams directly (§V-B of the paper).
+//! weight streams (§V-B of the paper).
 //!
 //! The hardware streams one `WeightEntry` per multiplier per cycle:
 //! the runlength decoder advances the (k_y, c_i) row counter, the X-mux
 //! picks the k_w position, and only *nonzero* weights ever reach a DSP.
-//! The software analog here is weight-stationary: for every decoded
-//! nonzero we axpy its contribution across all output positions of its
-//! output channel. With the transposed im2col buffer ([K, n·M], see
-//! [`super::kernels::im2col_t`]) each axpy is contiguous over the whole
-//! batch's output positions, so the per-MAC cost matches the dense GEMM
-//! inner loop and total work scales with the nonzero count — zero
-//! weights are skipped at runtime exactly as in the zero-skipping PEs,
-//! and lockstep pad entries (value 0.0) only advance the row counter.
-//! Batch is where the weight traffic amortizes: each RLE stream is
-//! decoded **once per plan execution**, not once per image, and every
-//! surviving weight is broadcast across all `n` activation planes.
+//! The software analog is weight-stationary: every surviving weight is
+//! broadcast across all output positions of its output channel, over the
+//! transposed im2col buffer ([K, n·M], see [`super::kernels::im2col_t`])
+//! so each axpy is contiguous over the whole batch — total work scales
+//! with the nonzero count, exactly as in the zero-skipping PEs.
+//!
+//! # Plan-time pre-decode ([`PackedRle`], ISSUE 4)
+//!
+//! The hardware never "decodes" at runtime in any meaningful sense: the
+//! weight buffer words sit in per-layer M20Ks in exactly the order the
+//! PEs consume them. The PR 1–3 software kernels, by contrast, re-ran
+//! the runlength decoder (split interleaving, gap accumulation, pad-entry
+//! skipping) on every plan execution. [`pack_rle`] moves all of that to
+//! **plan build time**: each stream is walked once through the shared
+//! decoder ([`crate::sparsity::rle::ConvRle::nonzeros`] — the only
+//! runlength decoder in the codebase) and flattened into plain
+//! `(patch-row k, lane, value)` arrays. On the hot path the packed
+//! kernels just stream those arrays — no branches, no counters, no pad
+//! entries.
+//!
+//! The packed layout groups [`OCB`] consecutive output channels into a
+//! *bundle* whose entries are sorted by patch row `k`: one patch-matrix
+//! row load feeds up to `OCB` channel accumulators (the "several output
+//! channels per patch-matrix pass" multi-accumulator scheme — the
+//! software analog of a PE column sharing one activation broadcast), and
+//! ascending-`k` order makes the patch-row walk sequential and
+//! prefetch-friendly. [`sparse_packed_rows`] additionally tiles the
+//! output positions in [`MT`]-wide blocks held in stack accumulators, so
+//! the patch-matrix working set per pass is `K × MT` floats instead of
+//! `K × n·M`, and so that an intra-stage worker team can take disjoint
+//! position ranges of the same convolution (the software analog of
+//! raising `n_channel_splits` on the slowest stage).
+//!
+//! Per output element the accumulation order is the bundle's entry order
+//! — fixed at plan build, independent of batch, tile placement or team
+//! split — so sparse results are *bit-identical* across batch sizes,
+//! pipelines and worker teams (the equivalence suite relies on this).
+//!
+//! The PR 3 stream-walking kernels ([`sparse_conv`], [`sparse_matmul`])
+//! are kept as the benchmark baseline behind
+//! `PlanOptions { packed: false, .. }`; they are the only runtime
+//! consumers of the shared decoder, and only when that baseline is
+//! explicitly requested.
 
 use super::kernels::{im2col_t, Act, ConvGeom};
 use crate::sparsity::rle::ConvRle;
 
-/// Sparse Conv2D (+ fused bias / activation) from RLE weight streams,
-/// over all `g.n` images in one weight-stream walk.
+/// Output channels per packed bundle (accumulator lanes per pass).
+pub const OCB: usize = 4;
+/// Output positions per accumulator tile (floats held on the stack per
+/// lane; OCB·MT f32 accumulators ≈ 2 KiB).
+pub const MT: usize = 128;
+
+/// Plan-time pre-decoded RLE streams: every nonzero flattened to a
+/// `(patch-row, lane, value)` triple, grouped into [`OCB`]-channel
+/// bundles sorted by patch row. Built once per plan by [`pack_rle`];
+/// never touched by the runlength decoder again.
+#[derive(Clone, Debug)]
+pub struct PackedRle {
+    /// Output channels (bundles cover `[b*OCB, min((b+1)*OCB, co))`).
+    pub co: usize,
+    /// GEMM K dimension the patch rows index into (kh·kw·ci).
+    pub k: usize,
+    /// Entry range of bundle `b`: `starts[b]..starts[b+1]`.
+    starts: Vec<usize>,
+    /// Patch-row index of each entry: k = (ky·kw + kx)·ci + ic.
+    ks: Vec<u32>,
+    /// Lane (output channel − bundle base) of each entry.
+    lanes: Vec<u8>,
+    vals: Vec<f32>,
+}
+
+impl PackedRle {
+    pub fn n_bundles(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Total pre-decoded nonzeros (equals the stream's real nonzeros).
+    pub fn nonzeros(&self) -> usize {
+        self.ks.len()
+    }
+}
+
+/// Pre-decode an RLE weight stream at plan build time. This is the only
+/// place execution-bound streams meet the runlength decoder.
+pub fn pack_rle(rle: &ConvRle) -> PackedRle {
+    let (ci, kw, co) = (rle.ci, rle.kw, rle.co);
+    let k_dim = rle.kh * kw * ci;
+    let mut starts = vec![0usize];
+    let mut ks: Vec<u32> = Vec::new();
+    let mut lanes: Vec<u8> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    let mut oc0 = 0usize;
+    while oc0 < co {
+        let ocs = (co - oc0).min(OCB);
+        let mut entries: Vec<(u32, u8, f32)> = Vec::new();
+        for lane in 0..ocs {
+            for nz in rle.nonzeros(oc0 + lane) {
+                let (ky, ic) = (nz.row / ci, nz.row % ci);
+                let k = (ky * kw + nz.x) * ci + ic;
+                entries.push((k as u32, lane as u8, nz.value));
+            }
+        }
+        // (k, lane) is unique per entry, so this order — and therefore
+        // every per-channel accumulation order — is deterministic.
+        entries.sort_by_key(|&(k, lane, _)| (k, lane));
+        for (k, lane, v) in entries {
+            ks.push(k);
+            lanes.push(lane);
+            vals.push(v);
+        }
+        starts.push(ks.len());
+        oc0 += ocs;
+    }
+    PackedRle { co, k: k_dim, starts, ks, lanes, vals }
+}
+
+/// Core of the packed sparse conv: accumulate output positions
+/// `[m0, m1)` of every output channel from the pre-decoded streams.
+///
+/// `patches_t` is the K-major [K, m_total] transposed patch matrix of
+/// the *whole* execution; `out_rows` holds rows `m0..m1` of the NHWC
+/// output, i.e. `(m1 - m0) · co` floats. Workers of an intra-stage team
+/// call this with disjoint `[m0, m1)` ranges and disjoint `out_rows`
+/// slices; single-threaded callers pass the full range.
+#[allow(clippy::too_many_arguments)] // kernel ABI: geometry + range + fused epilogue
+pub fn sparse_packed_rows(
+    patches_t: &[f32],
+    m_total: usize,
+    m0: usize,
+    m1: usize,
+    pr: &PackedRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    out_rows: &mut [f32],
+) {
+    let co = pr.co;
+    debug_assert!(m1 <= m_total);
+    debug_assert!(out_rows.len() >= (m1 - m0) * co);
+    let mut t0 = m0;
+    while t0 < m1 {
+        let t1 = (t0 + MT).min(m1);
+        let tw = t1 - t0;
+        for b in 0..pr.n_bundles() {
+            let oc0 = b * OCB;
+            let ocs = (co - oc0).min(OCB);
+            let mut acc = [[0.0f32; MT]; OCB];
+            for (lane, accl) in acc.iter_mut().enumerate().take(ocs) {
+                let init = bias.map_or(0.0, |bv| bv[oc0 + lane]);
+                accl[..tw].fill(init);
+            }
+            let (s, e) = (pr.starts[b], pr.starts[b + 1]);
+            let walk = pr.ks[s..e]
+                .iter()
+                .zip(&pr.lanes[s..e])
+                .zip(&pr.vals[s..e]);
+            for ((&k, &lane), &v) in walk {
+                let prow = &patches_t[k as usize * m_total + t0..][..tw];
+                let accl = &mut acc[lane as usize][..tw];
+                for (a, &p) in accl.iter_mut().zip(prow) {
+                    *a += v * p;
+                }
+            }
+            // Scatter the tile's lanes back to row-major NHWC.
+            for (lane, accl) in acc.iter().enumerate().take(ocs) {
+                for (t, &av) in accl[..tw].iter().enumerate() {
+                    out_rows[(t0 - m0 + t) * co + oc0 + lane] = act.apply(av);
+                }
+            }
+        }
+        t0 = t1;
+    }
+}
+
+/// Sparse Conv2D from pre-decoded streams (+ fused bias / activation),
+/// over all `g.n` images: im2col_t once, then one [`sparse_packed_rows`]
+/// pass over every output position. No runlength decoding happens here.
+pub fn sparse_conv_packed(
+    x: &[f32],
+    g: &ConvGeom,
+    pr: &PackedRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    patches_t: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(pr.co, g.co);
+    debug_assert_eq!(pr.k, g.patch_len());
+    let m = g.total_positions();
+    im2col_t(x, g, patches_t);
+    sparse_packed_rows(patches_t, m, 0, m, pr, bias, act, out);
+}
+
+/// Sparse MatMul from pre-decoded streams (+ fused bias / activation)
+/// over `n` rows of `x` ([n, ci] row-major). The [`OCB`] lanes of each
+/// bundle are the multi-accumulators: one pass over a row's entries
+/// feeds up to OCB output channels while the row stays in L1. Callers
+/// may hand disjoint row ranges (`x` / `out` sub-slices) to a worker
+/// team — rows are independent.
+#[allow(clippy::too_many_arguments)] // kernel ABI: dims + fused epilogue
+pub fn sparse_matmul_packed(
+    x: &[f32],
+    n: usize,
+    ci: usize,
+    co: usize,
+    pr: &PackedRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(pr.co, co);
+    debug_assert_eq!(pr.k, ci);
+    for b in 0..pr.n_bundles() {
+        let oc0 = b * OCB;
+        let ocs = (co - oc0).min(OCB);
+        let (s, e) = (pr.starts[b], pr.starts[b + 1]);
+        for i in 0..n {
+            let xrow = &x[i * ci..][..ci];
+            let mut acc = [0.0f32; OCB];
+            for (lane, a) in acc.iter_mut().enumerate().take(ocs) {
+                *a = bias.map_or(0.0, |bv| bv[oc0 + lane]);
+            }
+            let walk = pr.ks[s..e]
+                .iter()
+                .zip(&pr.lanes[s..e])
+                .zip(&pr.vals[s..e]);
+            for ((&k, &lane), &v) in walk {
+                acc[lane as usize] += v * xrow[k as usize];
+            }
+            let orow = &mut out[i * co + oc0..][..ocs];
+            for (o, &a) in orow.iter_mut().zip(&acc[..ocs]) {
+                *o = act.apply(a);
+            }
+        }
+    }
+}
+
+/// Sparse Conv2D (+ fused bias / activation) walking RLE weight streams
+/// at runtime — the **PR 3 baseline kernel**, kept for the
+/// packed-vs-baseline benchmark (`PlanOptions { packed: false, .. }`).
+/// The production hot path uses [`sparse_conv_packed`] instead.
 ///
 /// `patches_t` must hold at least `patch_len * total_positions`
 /// elements, `acc` at least `total_positions`.
@@ -45,30 +269,13 @@ pub fn sparse_conv(
             Some(b) => b[oc],
             None => 0.0,
         });
-        for (split, stream) in rle.streams[oc].iter().enumerate() {
-            // Runlength decode: the first entry's runlength is its
-            // absolute split-local row, later entries advance from the
-            // previous one (mirrors sparsity::rle::decode_conv).
-            let mut local_row = 0usize;
-            let mut first = true;
-            for e in &stream.entries {
-                if first {
-                    local_row = e.runlength as usize;
-                    first = false;
-                } else {
-                    local_row += e.runlength as usize;
-                }
-                if e.value == 0.0 {
-                    continue; // lockstep / runlength pad entry
-                }
-                let row = local_row * rle.splits + split;
-                let (ky, ic) = (row / g.ci, row % g.ci);
-                let k = (ky * g.kw + e.x as usize) * g.ci + ic;
-                let prow = &patches_t[k * m..][..m];
-                let v = e.value;
-                for (a, &p) in accv.iter_mut().zip(prow) {
-                    *a += v * p;
-                }
+        for nz in rle.nonzeros(oc) {
+            let (ky, ic) = (nz.row / g.ci, nz.row % g.ci);
+            let k = (ky * g.kw + nz.x) * g.ci + ic;
+            let prow = &patches_t[k * m..][..m];
+            let v = nz.value;
+            for (a, &p) in accv.iter_mut().zip(prow) {
+                *a += v * p;
             }
         }
         // Scatter the accumulated output channel back to NHWC.
@@ -78,12 +285,9 @@ pub fn sparse_conv(
     }
 }
 
-/// Sparse MatMul (+ fused bias / activation) from RLE streams of the
-/// (Ci, Co) weight matrix (encoded as a 1x1 conv, so rows are plain
-/// input-channel indices). Weight-stationary like [`sparse_conv`]: each
-/// stream is decoded once per execution and every surviving weight is
-/// broadcast across all `n` rows (the batch), so decode cost amortizes
-/// over the batch instead of being paid per image.
+/// Sparse MatMul (+ fused bias / activation) walking RLE streams of the
+/// (Ci, Co) weight matrix at runtime — the **PR 3 baseline kernel**
+/// (see [`sparse_conv`]); the hot path uses [`sparse_matmul_packed`].
 #[allow(clippy::too_many_arguments)] // kernel ABI: dims + fused epilogue
 pub fn sparse_matmul(
     x: &[f32],
@@ -107,29 +311,161 @@ pub fn sparse_matmul(
         for i in 0..n {
             out[i * co + oc] = init;
         }
-        for (split, stream) in rle.streams[oc].iter().enumerate() {
-            let mut local_row = 0usize;
-            let mut first = true;
-            for e in &stream.entries {
-                if first {
-                    local_row = e.runlength as usize;
-                    first = false;
-                } else {
-                    local_row += e.runlength as usize;
-                }
-                if e.value == 0.0 {
-                    continue;
-                }
-                let ic = local_row * rle.splits + split;
-                let v = e.value;
-                for i in 0..n {
-                    out[i * co + oc] += v * x[i * ci + ic];
-                }
+        for nz in rle.nonzeros(oc) {
+            let ic = nz.row;
+            let v = nz.value;
+            for i in 0..n {
+                out[i * co + oc] += v * x[i * ci + ic];
             }
         }
         for i in 0..n {
             let o = &mut out[i * co + oc];
             *o = act.apply(*o);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Tensor;
+    use crate::sparsity::prune::prune_tensor;
+    use crate::sparsity::rle::{encode_conv, encode_matmul};
+    use crate::util::prop::Cases;
+    use crate::util::Rng;
+
+    /// Naive reference matmul (ascending-k accumulation; zero weights
+    /// contribute nothing, matching the packed kernels' skipped terms).
+    fn naive_matmul(x: &[f32], w: &[f32], n: usize, ci: usize, co: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * co];
+        for i in 0..n {
+            for j in 0..co {
+                let mut acc = 0.0f32;
+                for k in 0..ci {
+                    let wv = w[k * co + j];
+                    if wv != 0.0 {
+                        acc += x[i * ci + k] * wv;
+                    }
+                }
+                out[i * co + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn packed_matmul_matches_naive_across_shapes_and_sparsity() {
+        Cases::new(30).seed(0x5AC7).run(|rng, size| {
+            // Odd shapes: co not a multiple of OCB, n crossing nothing.
+            let n = 1 + size % 9;
+            let ci = 1 + (size * 11 + rng.below(7)) % 67;
+            let co = 1 + (size * 5 + rng.below(6)) % 23;
+            let sparsity = *rng.choose(&[0.0, 0.5, 0.9]);
+            let x = Tensor::randn(&[n, ci], rng, 1.0);
+            let mut w = Tensor::randn(&[ci, co], rng, 1.0);
+            prune_tensor(&mut w, sparsity);
+            let rle = encode_matmul(&w, 1 + rng.below(3));
+            let pr = pack_rle(&rle);
+            assert_eq!(pr.nonzeros(), rle.total_nonzeros());
+            let mut got = vec![0.0f32; n * co];
+            sparse_matmul_packed(x.as_slice(), n, ci, co, &pr, None, Act::None, &mut got);
+            let want = naive_matmul(x.as_slice(), w.as_slice(), n, ci, co);
+            for (g, w_) in got.iter().zip(&want) {
+                let tol = 1e-5 + 1e-5 * w_.abs();
+                if (g - w_).abs() > tol {
+                    return Err(format!(
+                        "n={n} ci={ci} co={co} sp={sparsity}: {g} vs {w_}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_conv_matches_baseline_kernel() {
+        Cases::new(20).seed(0x5C0).run(|rng, size| {
+            let (h, w) = (4 + size % 5, 4 + (size * 2) % 5);
+            let ci = 1 + rng.below(6);
+            let co = 1 + rng.below(9);
+            let (kh, kw) = (1 + rng.below(3), 1 + rng.below(3));
+            let n = 1 + rng.below(3);
+            let sparsity = *rng.choose(&[0.0, 0.5, 0.9]);
+            let shape = [n, h, w, ci];
+            let x = Tensor::randn(&shape, rng, 1.0);
+            let mut wt = Tensor::randn(&[kh, kw, ci, co], rng, 1.0);
+            prune_tensor(&mut wt, sparsity);
+            let g = ConvGeom::new(
+                &shape,
+                kh,
+                kw,
+                co,
+                (1, 1),
+                crate::graph::Padding::Same,
+            );
+            let rle = encode_conv(&wt, 1 + rng.below(3));
+            let pr = pack_rle(&rle);
+            let m = g.total_positions();
+            let bias: Vec<f32> = (0..co).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            let mut patches = vec![0.0f32; g.patch_len() * m];
+            let mut got = vec![0.0f32; m * co];
+            sparse_conv_packed(
+                x.as_slice(),
+                &g,
+                &pr,
+                Some(&bias),
+                Act::Relu,
+                &mut patches,
+                &mut got,
+            );
+            let mut acc = vec![0.0f32; m];
+            let mut want = vec![0.0f32; m * co];
+            sparse_conv(
+                x.as_slice(),
+                &g,
+                &rle,
+                Some(&bias),
+                Act::Relu,
+                &mut patches,
+                &mut acc,
+                &mut want,
+            );
+            // Packed entries are k-sorted (stream order differs), so the
+            // comparison is tolerance-based, not bitwise.
+            for (a, b) in got.iter().zip(&want) {
+                let tol = 1e-4 + 1e-4 * b.abs();
+                if (a - b).abs() > tol {
+                    return Err(format!("sp={sparsity} kh={kh} kw={kw}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_rows_split_matches_full_pass_bitwise() {
+        // The intra-stage team splits one conv's output positions across
+        // workers; per-element accumulation order is unchanged, so the
+        // split must reproduce the full pass bit for bit — including
+        // ranges that straddle MT tile boundaries.
+        let mut rng = Rng::new(0x5B17);
+        let (m, ci, co) = (MT + 37, 48usize, 10usize);
+        let mut w = Tensor::randn(&[ci, co], &mut rng, 1.0);
+        prune_tensor(&mut w, 0.7);
+        let pr = pack_rle(&encode_matmul(&w, 2));
+        // synthetic K-major patch matrix
+        let patches: Vec<f32> = (0..ci * m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut full = vec![0.0f32; m * co];
+        sparse_packed_rows(&patches, m, 0, m, &pr, None, Act::None, &mut full);
+        for split in [1usize, 40, MT, MT + 1] {
+            let mut parts = vec![0.0f32; m * co];
+            let mut m0 = 0usize;
+            for chunk in parts.chunks_mut(split * co) {
+                let rows = chunk.len() / co;
+                sparse_packed_rows(&patches, m, m0, m0 + rows, &pr, None, Act::None, chunk);
+                m0 += rows;
+            }
+            assert_eq!(full, parts, "split={split}");
         }
     }
 }

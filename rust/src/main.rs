@@ -5,12 +5,15 @@
 //!             [--out DIR] [--full-scale] [--per-layer]    compile a plan
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
 //!   serve     --model DIR [--requests N] [--batch N] [--threads N]
-//!                                                     exec serving demo
+//!             [--team N]                              exec serving demo
 //!                            (--batch N serves through *natively
 //!                            batched* plans — one weight-stream walk
 //!                            feeds the whole batch; threads > 1
 //!                            streams batched groups through the layer
-//!                            pipeline)
+//!                            pipeline; team > 1 splits the dominant
+//!                            stage's conv rows across an intra-stage
+//!                            worker team — the software
+//!                            `n_channel_splits` knob)
 //!   accuracy  --net <name> [--bits N]          fixed-point vs f32 study
 //!
 //! `hpipe compile --net resnet50 --sparsity 0.85 --dsp-target 5000
@@ -168,7 +171,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.usize("requests", 64);
     let batch = args.usize("batch", 8);
     let threads = args.usize("threads", 1);
-    let mut report = hpipe::coordinator::serve_demo(&dir, requests, batch, threads)?;
+    let team = args.usize("team", 1);
+    let mut report = hpipe::coordinator::serve_demo(&dir, requests, batch, threads, team)?;
     report.print();
     Ok(())
 }

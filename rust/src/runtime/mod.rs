@@ -41,6 +41,11 @@ pub struct LoadedModel {
     /// Pipeline stages (worker threads) used for batch serving; 1 means
     /// fully sequential execution.
     pub threads: usize,
+    /// Intra-stage worker-team size: conv / matmul steps of the
+    /// pipeline's dominant stage split their output rows across this
+    /// many scoped threads (the software `n_channel_splits` knob).
+    /// 1 disables splitting — exact PR 3 behavior.
+    pub team: usize,
     /// Input shape with the leading dim set to `batch`.
     pub input_shape: Vec<usize>,
     /// Layer pipeline over the *batched* plan. The plan's native batch
@@ -88,7 +93,7 @@ impl LoadedModel {
     /// Compile a graph into a runnable model with the default
     /// single-threaded (sequential) execution.
     pub fn from_graph(name: &str, graph: &Graph, batch: usize) -> Result<LoadedModel> {
-        LoadedModel::from_graph_with(name, graph, batch, 1)
+        LoadedModel::from_graph_with(name, graph, batch, 1, 1)
     }
 
     /// Compile a graph into a runnable model whose plan is built *for
@@ -97,12 +102,16 @@ impl LoadedModel {
     /// have exactly one Placeholder and its leading (batch) dim must be
     /// 1 — both enforced here so violations surface as errors, not
     /// panics in the serving loop. `threads > 1` partitions the plan
-    /// into that many pipeline stages for batch runs.
+    /// into that many pipeline stages for batch runs; `team > 1`
+    /// additionally splits the dominant stage's conv rows across an
+    /// intra-stage worker team (and engages the pipeline path for batch
+    /// runs even at `threads == 1`).
     pub fn from_graph_with(
         name: &str,
         graph: &Graph,
         batch: usize,
         threads: usize,
+        team: usize,
     ) -> Result<LoadedModel> {
         let placeholders: Vec<(String, Vec<usize>)> = graph
             .nodes
@@ -124,6 +133,7 @@ impl LoadedModel {
         );
         crate::ensure!(batch >= 1, "batch must be >= 1");
         crate::ensure!(threads >= 1, "threads must be >= 1");
+        crate::ensure!(team >= 1, "team must be >= 1");
         let group = group_size(batch, threads);
         let plan = ExecutionPlan::build_batched(graph, group)?;
         crate::ensure!(plan.num_outputs() >= 1, "graph has no outputs");
@@ -141,13 +151,14 @@ impl LoadedModel {
         } else {
             None
         };
-        let pipeline = PipelinePlan::from_plan(plan, threads);
+        let pipeline = PipelinePlan::from_plan_team(plan, threads, team);
         let mut input_shape = per_image_shape;
         input_shape[0] = batch;
         Ok(LoadedModel {
             name: name.to_string(),
             batch,
             threads,
+            team,
             input_shape,
             pipeline,
             latency,
@@ -203,10 +214,12 @@ impl LoadedModel {
         }
         let plan = self.pipeline.plan();
         let group = plan.batch();
-        if self.threads > 1 && self.batch > group {
+        if (self.threads > 1 && self.batch > group) || self.team > 1 {
             // Throughput path: stream the batch through the layer
             // pipeline, several batched groups in flight across stage
             // threads (one boundary handoff per group, not per image).
+            // A worker team (team > 1) also routes here — even a 1-stage
+            // pipeline then splits its dominant convs across the team.
             return Ok(self.pipeline.run_batch(input, self.batch)?);
         }
         // Sequential path: the plan executes whole groups natively
@@ -265,6 +278,9 @@ pub struct Runtime {
     /// Pipeline stages configured for every model loaded after this is
     /// set (see [`Runtime::with_threads`]); 1 = sequential.
     pub threads: usize,
+    /// Intra-stage worker-team size for subsequently loaded models (see
+    /// [`Runtime::with_team`]); 1 = no splitting.
+    pub team: usize,
     models: BTreeMap<String, LoadedModel>,
 }
 
@@ -275,6 +291,7 @@ impl Runtime {
         Ok(Runtime {
             artifacts_dir: artifacts_dir.to_path_buf(),
             threads: 1,
+            team: 1,
             models: BTreeMap::new(),
         })
     }
@@ -286,13 +303,20 @@ impl Runtime {
         self
     }
 
+    /// Configure the intra-stage worker-team size for subsequently
+    /// loaded models (clamped to at least 1; 1 = PR 3 behavior).
+    pub fn with_team(mut self, team: usize) -> Runtime {
+        self.team = team.max(1);
+        self
+    }
+
     pub fn platform(&self) -> String {
         "exec-cpu".to_string()
     }
 
     /// Compile a graph into a named executable.
     pub fn load_graph(&mut self, name: &str, graph: &Graph, batch: usize) -> Result<()> {
-        let model = LoadedModel::from_graph_with(name, graph, batch, self.threads)
+        let model = LoadedModel::from_graph_with(name, graph, batch, self.threads, self.team)
             .with_context(|| format!("compiling model '{name}'"))?;
         self.models.insert(name.to_string(), model);
         Ok(())
@@ -476,13 +500,33 @@ mod tests {
     fn pipelined_model_matches_sequential_model() {
         let g = tiny_cnn(NetConfig::test_scale());
         let seq = LoadedModel::from_graph("seq", &g, 4).unwrap();
-        let piped = LoadedModel::from_graph_with("piped", &g, 4, 4).unwrap();
+        let piped = LoadedModel::from_graph_with("piped", &g, 4, 4, 1).unwrap();
         assert!(piped.pipeline().num_stages() > 1);
         let n: usize = seq.input_shape.iter().product();
         let mut rng = Rng::new(55);
         let input: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         // identical kernel sequence per image: bit-identical outputs
         assert_eq!(seq.run(&input).unwrap(), piped.run(&input).unwrap());
+    }
+
+    #[test]
+    fn team_model_matches_sequential_model() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let seq = LoadedModel::from_graph("seq", &g, 4).unwrap();
+        // team without pipeline stages: 1-stage pipeline, split convs
+        let solo_team = LoadedModel::from_graph_with("solo", &g, 4, 1, 2).unwrap();
+        assert_eq!(solo_team.pipeline().num_stages(), 1);
+        assert!(!solo_team.pipeline().team_steps().is_empty());
+        // team on top of a multi-stage pipeline
+        let piped_team = LoadedModel::from_graph_with("piped", &g, 4, 2, 2).unwrap();
+        assert!(piped_team.pipeline().num_stages() > 1);
+        let n: usize = seq.input_shape.iter().product();
+        let mut rng = Rng::new(56);
+        let input: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // disjoint row ranges, unchanged accumulation order: bitwise
+        let want = seq.run(&input).unwrap();
+        assert_eq!(want, solo_team.run(&input).unwrap());
+        assert_eq!(want, piped_team.run(&input).unwrap());
     }
 
     #[test]

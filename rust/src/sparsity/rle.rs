@@ -103,6 +103,56 @@ impl ConvRle {
     }
 }
 
+/// One decoded nonzero from an RLE stream walk: the absolute (k_y, c_i)
+/// row index, the kernel-x position, and the weight value. Pad entries
+/// (zero weights that only advance the row counter) are consumed by the
+/// decoder and never yielded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Nonzero {
+    /// Absolute row = k_y * c_i_total + c_i (split-interleaving undone).
+    pub row: usize,
+    /// Kernel-x position (the X-mux select).
+    pub x: usize,
+    pub value: f32,
+}
+
+impl ConvRle {
+    /// Walk every real nonzero of output channel `oc`, runlength-decoding
+    /// split by split (split 0's entries first, then split 1's, ...).
+    ///
+    /// This is the **one** runlength decoder: [`decode_conv`], the
+    /// executor's plan-time pre-decode (`exec::sparse::pack_rle`) and the
+    /// PR 3 baseline kernels all walk streams through it. The production
+    /// execution hot path decodes at *plan build only* — see
+    /// `exec::sparse` — so this iterator never runs per-inference there.
+    pub fn nonzeros(&self, oc: usize) -> impl Iterator<Item = Nonzero> + '_ {
+        let splits = self.splits;
+        self.streams[oc].iter().enumerate().flat_map(move |(split, stream)| {
+            // The first entry's runlength is its absolute split-local
+            // row; each later entry advances from the previous one.
+            let mut local_row = 0usize;
+            let mut first = true;
+            stream.entries.iter().filter_map(move |e| {
+                if first {
+                    local_row = e.runlength as usize;
+                    first = false;
+                } else {
+                    local_row += e.runlength as usize;
+                }
+                if e.value == 0.0 {
+                    None // pad entry: only advances the counter
+                } else {
+                    Some(Nonzero {
+                        row: local_row * splits + split,
+                        x: e.x as usize,
+                        value: e.value,
+                    })
+                }
+            })
+        })
+    }
+}
+
 /// Encode a conv weight tensor (HWIO) into per-(oc, split) streams.
 /// Rows (k_y, c_i) are dealt round-robin across `splits` streams.
 pub fn encode_conv(w: &Tensor, splits: usize) -> ConvRle {
@@ -175,25 +225,9 @@ pub fn decode_conv(rle: &ConvRle) -> Tensor {
     let (kh, kw, ci, co) = (rle.kh, rle.kw, rle.ci, rle.co);
     let mut out = Tensor::zeros(&[kh, kw, ci, co]);
     for oc in 0..co {
-        for (split, stream) in rle.streams[oc].iter().enumerate() {
-            // The first entry's runlength is its absolute local row; each
-            // later entry advances from the previous one.
-            let mut local_row: u64 = 0;
-            let mut first = true;
-            for e in &stream.entries {
-                if first {
-                    local_row = e.runlength as u64;
-                    first = false;
-                } else {
-                    local_row += e.runlength as u64;
-                }
-                if e.value == 0.0 {
-                    continue; // pad entry: only advances the counter
-                }
-                let row = (local_row as usize) * rle.splits + split;
-                let (ky, c) = (row / ci, row % ci);
-                out.data[((ky * kw + e.x as usize) * ci + c) * co + oc] = e.value;
-            }
+        for nz in rle.nonzeros(oc) {
+            let (ky, c) = (nz.row / ci, nz.row % ci);
+            out.data[((ky * kw + nz.x) * ci + c) * co + oc] = nz.value;
         }
     }
     out
@@ -242,6 +276,43 @@ mod tests {
                     "mismatch kh={kh} kw={kw} ci={ci} co={co} splits={splits} sp={sp:.2}"
                 ))
             }
+        });
+    }
+
+    #[test]
+    fn nonzeros_iterator_yields_every_weight_once() {
+        Cases::new(24).seed(0xDEC0).run(|rng, size| {
+            let kh = 1 + size % 4;
+            let kw = 1 + (size * 3) % 4;
+            let ci = 1 + size % 7;
+            let co = 1 + (size * 5) % 5;
+            let w = random_sparse(rng, &[kh, kw, ci, co], rng.f64() * 0.95);
+            let splits = 1 + rng.below(kh * ci);
+            let rle = encode_conv(&w, splits);
+            for oc in 0..co {
+                let mut seen = 0usize;
+                for nz in rle.nonzeros(oc) {
+                    let (ky, c) = (nz.row / ci, nz.row % ci);
+                    let want = w.data[((ky * kw + nz.x) * ci + c) * co + oc];
+                    if nz.value != want {
+                        return Err(format!(
+                            "oc={oc} row={} x={} decoded {} != stored {want}",
+                            nz.row, nz.x, nz.value
+                        ));
+                    }
+                    seen += 1;
+                }
+                let expect = (0..kh * kw * ci)
+                    .filter(|i| {
+                        let (k, c) = (i / ci, i % ci);
+                        w.data[(k * ci + c) * co + oc] != 0.0
+                    })
+                    .count();
+                if seen != expect {
+                    return Err(format!("oc={oc}: {seen} nonzeros != {expect}"));
+                }
+            }
+            Ok(())
         });
     }
 

@@ -79,6 +79,47 @@ pub fn assert_close(actual: &[f32], expect: &[f32], atol: f32, rtol: f32) -> Res
     Ok(())
 }
 
+/// Monotone integer index of a float: consecutive representable floats
+/// map to consecutive integers (±0.0 both map to 0), so ULP distance is
+/// plain integer subtraction.
+fn ulp_index(x: f32) -> i64 {
+    let b = x.to_bits() as i32;
+    if b >= 0 {
+        b as i64
+    } else {
+        -((b & 0x7FFF_FFFF) as i64)
+    }
+}
+
+/// Assert two f32 slices are elementwise within `ulps` units in the
+/// last place. Much tighter than [`assert_close`]: it tolerates only
+/// rounding-level drift (e.g. a kernel that reorders a handful of FP
+/// additions), never algorithmic error. NaNs match NaNs; ±0.0 match.
+pub fn assert_ulp_close(actual: &[f32], expect: &[f32], ulps: u32) -> Result<(), String> {
+    if actual.len() != expect.len() {
+        return Err(format!(
+            "length mismatch: {} vs {}",
+            actual.len(),
+            expect.len()
+        ));
+    }
+    for (i, (&a, &e)) in actual.iter().zip(expect).enumerate() {
+        if a == e || (a.is_nan() && e.is_nan()) {
+            continue;
+        }
+        if a.is_nan() != e.is_nan() {
+            return Err(format!("mismatch at [{i}]: actual={a} expect={e}"));
+        }
+        let d = (ulp_index(a) - ulp_index(e)).unsigned_abs();
+        if d > ulps as u64 {
+            return Err(format!(
+                "mismatch at [{i}]: actual={a} expect={e} ({d} ulps > {ulps})"
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +156,23 @@ mod tests {
         assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
         assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
         assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+
+    #[test]
+    fn ulp_close_behaviour() {
+        // exact, signed zeros and NaNs
+        assert!(assert_ulp_close(&[1.5, -0.0, f32::NAN], &[1.5, 0.0, f32::NAN], 0).is_ok());
+        // one representable step away passes at 1 ulp, fails at 0
+        let next = f32::from_bits(1.0f32.to_bits() + 1);
+        assert!(assert_ulp_close(&[next], &[1.0], 1).is_ok());
+        assert!(assert_ulp_close(&[next], &[1.0], 0).is_err());
+        // across zero: -eps vs +eps is two indices apart
+        let eps = f32::from_bits(1);
+        assert!(assert_ulp_close(&[-eps], &[eps], 2).is_ok());
+        assert!(assert_ulp_close(&[-eps], &[eps], 1).is_err());
+        // genuinely different values fail
+        assert!(assert_ulp_close(&[1.0], &[1.1], 64).is_err());
+        assert!(assert_ulp_close(&[1.0], &[1.0, 2.0], 4).is_err());
     }
 
     #[test]

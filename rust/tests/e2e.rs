@@ -74,8 +74,9 @@ fn batch8_model_matches_batch1() {
 #[test]
 fn serve_demo_end_to_end() {
     let Some(dir) = artifacts_dir() else { return };
-    // threads = 2 exercises the pipelined batch path end to end
-    let mut report = serve_demo(&dir, 24, 4, 2).unwrap();
+    // threads = 2 exercises the pipelined batch path end to end;
+    // team = 2 additionally splits the dominant stage's conv rows
+    let mut report = serve_demo(&dir, 24, 4, 2, 2).unwrap();
     assert_eq!(report.requests, 24);
     assert!(report.batches >= 24 / 4);
     let (agree, total) = report.interp_agreement.unwrap();

@@ -7,11 +7,18 @@
 //! counts it must match the *sequential plan bit for bit* (same kernels
 //! in the same order), and match the interpreter to the same tolerance.
 //!
-//! Batched plans (ISSUE 3) are held to the bitwise bar too: a batch-B
-//! plan — one im2col'd GEMM / one RLE weight-stream walk feeding all B
-//! images — must equal B sequential batch-1 runs exactly, across batch
-//! sizes, sparsity levels, plan options, and through the multi-stage
-//! pipeline (where each in-flight item is a whole batched group).
+//! Batched plans (ISSUE 3) and worker teams (ISSUE 4) split into two
+//! bars, documented per test:
+//!
+//! * **bitwise** wherever per-element accumulation order is provably
+//!   unchanged: the sparse kernels (one accumulator per output channel,
+//!   walk order fixed at plan build — batch-, tile- and team-invariant),
+//!   the pipeline (same kernels, same order) and the intra-stage worker
+//!   team (disjoint output rows, same order per row);
+//! * **ULP-bounded** on dense-conv/matmul paths compared across batch
+//!   sizes: the register-tiled microkernel's per-element order is
+//!   batch-invariant *today*, but the contract we pin is a tight ULP
+//!   bound, leaving the microkernel free to retile its accumulation.
 
 use hpipe::exec::{ExecutionPlan, PipelinePlan, PlanOptions};
 use hpipe::graph::{Graph, Op, Padding, Tensor};
@@ -19,9 +26,14 @@ use hpipe::interp;
 use hpipe::nets::{tiny_cnn, NetBuilder, NetConfig};
 use hpipe::sparsity::prune_graph;
 use hpipe::transform::optimize;
-use hpipe::util::prop::{assert_close, Cases};
+use hpipe::util::prop::{assert_close, assert_ulp_close, Cases};
 use hpipe::util::Rng;
 use std::collections::BTreeMap;
+
+/// ULP budget for dense microkernel paths compared across batch sizes.
+/// Accumulation order is batch-invariant today (so observed drift is 0),
+/// but the pinned contract is rounding-level closeness, not bit equality.
+const DENSE_ULPS: u32 = 8;
 
 /// Randomized small CNN: conv+bias+relu stages with random widths,
 /// strides and optional pools, then GAP -> FC -> softmax.
@@ -265,13 +277,20 @@ fn batch_feeds(images: &[BTreeMap<String, Tensor>]) -> BTreeMap<String, Tensor> 
     batched
 }
 
-/// Tentpole acceptance (ISSUE 3): a batch-B plan must equal B sequential
-/// batch-1 runs of the same plan options *bit for bit* — the batched
-/// kernels change the amortization (shared weight tiles, one RLE stream
-/// walk), never the per-image accumulation order — across
+/// Tentpole acceptance (ISSUE 3 + 4): a batch-B plan must equal B
+/// sequential batch-1 runs of the same plan options — across
 /// B ∈ {1, 3, 8} × sparsity {0.0, 0.5, 0.9} on randomized CNNs.
+///
+/// Which bar applies is documented by construction (ISSUE 4 satellite):
+/// when every conv/matmul takes the sparse kernel
+/// (`sparse_threshold == 0.0`) the comparison is **bitwise** — sparse
+/// per-channel accumulators walk a plan-time-fixed entry order that
+/// batching cannot perturb. Plans with dense-conv paths are held to a
+/// [`DENSE_ULPS`] **ULP bound** instead: the register-tiled microkernel
+/// owns its accumulation layout, and rounding-level closeness (not bit
+/// equality) is the cross-batch contract.
 #[test]
-fn prop_batched_plan_matches_sequential_bitwise() {
+fn prop_batched_plan_matches_sequential() {
     let mut case = 0u64;
     for &sparsity in &[0.0f64, 0.5, 0.9] {
         for &batch in &[1usize, 3, 8] {
@@ -280,6 +299,7 @@ fn prop_batched_plan_matches_sequential_bitwise() {
             let mut g = random_cnn(&mut rng, case as usize % 3);
             prune_graph(&mut g, sparsity);
             let opts = random_options(&mut rng);
+            let all_sparse = opts.sparse_threshold == 0.0;
             let plan1 = ExecutionPlan::build_with(&g, &opts).unwrap();
             let planb = ExecutionPlan::build_with(&g, &opts.with_batch(batch)).unwrap();
             assert_eq!(planb.batch(), batch);
@@ -291,11 +311,22 @@ fn prop_batched_plan_matches_sequential_bitwise() {
                 assert_eq!(out.shape[0], batch * want[0][oi].shape[0]);
                 let per = out.data.len() / batch;
                 for (b, w) in want.iter().enumerate() {
-                    assert_eq!(
-                        &out.data[b * per..(b + 1) * per],
-                        &w[oi].data[..],
-                        "sparsity {sparsity} batch {batch} output {oi} image {b}"
-                    );
+                    let (a, e) = (&out.data[b * per..(b + 1) * per], &w[oi].data[..]);
+                    if all_sparse {
+                        assert_eq!(
+                            a, e,
+                            "sparsity {sparsity} batch {batch} output {oi} image {b}"
+                        );
+                    } else {
+                        assert_ulp_close(a, e, DENSE_ULPS)
+                            .map_err(|err| {
+                                format!(
+                                    "sparsity {sparsity} batch {batch} output {oi} \
+                                     image {b}: {err}"
+                                )
+                            })
+                            .unwrap();
+                    }
                 }
             }
         }
@@ -303,9 +334,12 @@ fn prop_batched_plan_matches_sequential_bitwise() {
 }
 
 /// Batched ResNet bottleneck blocks: residual Adds, folded batch norms,
-/// standalone Pads and projection shortcuts must all batch bitwise.
+/// standalone Pads and projection shortcuts. Default options mix dense
+/// and sparse convs, so the cross-batch bar is the dense ULP bound (the
+/// comparison was bitwise under the PR 3 axpy kernels; the register-
+/// tiled microkernel owns its accumulation layout — see module docs).
 #[test]
-fn prop_batched_resnet_block_matches_sequential_bitwise() {
+fn prop_batched_resnet_block_matches_sequential_within_ulps() {
     for (case, &batch) in [2usize, 4].iter().enumerate() {
         let mut rng = Rng::new(0xB10C + case as u64);
         let mut g = random_resnet_block(&mut rng);
@@ -319,11 +353,13 @@ fn prop_batched_resnet_block_matches_sequential_bitwise() {
             let per = out.data.len() / batch;
             for (b, m) in images.iter().enumerate() {
                 let want = plan1.run(m).unwrap();
-                assert_eq!(
+                assert_ulp_close(
                     &out.data[b * per..(b + 1) * per],
                     &want[oi].data[..],
-                    "batch {batch} output {oi} image {b}"
-                );
+                    DENSE_ULPS,
+                )
+                .map_err(|e| format!("batch {batch} output {oi} image {b}: {e}"))
+                .unwrap();
             }
         }
     }
@@ -390,10 +426,11 @@ fn batched_depthwise_matches_sequential_bitwise() {
 /// Batched groups through the multi-stage pipeline (ISSUE 3 satellite
 /// stress test): 16 groups of 3 images stream through a 4-stage
 /// pipeline built over a batch-3 plan — each boundary handoff carries a
-/// whole batched tensor set — and every image must match the
-/// sequential batch-1 plan bit for bit.
+/// whole batched tensor set — and every image must match the sequential
+/// batch-1 plan. Cross-batch comparison on a mixed dense/sparse graph,
+/// so the dense ULP bound applies (see module docs).
 #[test]
-fn batched_pipeline_stress_matches_sequential_bitwise() {
+fn batched_pipeline_stress_matches_sequential_within_ulps() {
     let mut g = tiny_cnn(NetConfig::test_scale());
     prune_graph(&mut g, 0.7);
     let seq = ExecutionPlan::build(&g).unwrap();
@@ -419,7 +456,9 @@ fn batched_pipeline_stress_matches_sequential_bitwise() {
         let want = seq.run(&feeds).unwrap();
         for (oi, w) in want.iter().enumerate() {
             let po = w.data.len();
-            assert_eq!(&outs[oi][i * po..(i + 1) * po], &w.data[..], "image {i} output {oi}");
+            assert_ulp_close(&outs[oi][i * po..(i + 1) * po], &w.data[..], DENSE_ULPS)
+                .map_err(|e| format!("image {i} output {oi}: {e}"))
+                .unwrap();
         }
     }
 }
@@ -436,6 +475,108 @@ fn pipeline_run_batch_rejects_partial_groups() {
     let per: usize = in_shape.iter().product();
     assert!(pipe.run_batch(&vec![0.0; 6 * per], 6).is_err());
     assert!(pipe.run_batch(&vec![0.0; 4 * per], 0).is_err());
+}
+
+/// The prepacked kernels (ISSUE 4) vs the PR 3 baseline kernels: packed
+/// sparse entries are k-sorted while the baseline walks stream order, so
+/// this comparison is FP-tolerance (reordered sums), not bitwise — but
+/// both must match on every randomized graph × sparsity × plan option.
+#[test]
+fn prop_packed_plan_matches_unpacked_baseline() {
+    Cases::new(18).seed(0xE4).run(|rng, size| {
+        let mut g = random_cnn(rng, size);
+        let sparsity = rng.f64() * 0.9;
+        prune_graph(&mut g, sparsity);
+        let opts = random_options(rng);
+        let baseline_opts = PlanOptions { packed: false, ..opts };
+        let packed = ExecutionPlan::build_with(&g, &opts).map_err(|e| e.to_string())?;
+        let baseline =
+            ExecutionPlan::build_with(&g, &baseline_opts).map_err(|e| e.to_string())?;
+        let feeds = g.random_feeds(rng);
+        let got = packed.run(&feeds).map_err(|e| e.to_string())?;
+        let want = baseline.run(&feeds).map_err(|e| e.to_string())?;
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            if a.shape != b.shape {
+                return Err(format!("output {i} shape {:?} vs {:?}", a.shape, b.shape));
+            }
+            assert_close(&a.data, &b.data, 1e-5, 1e-4)
+                .map_err(|e| format!("sparsity {sparsity:.2} output {i}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 4 tentpole: intra-stage worker teams split conv/matmul output
+/// rows across scoped threads with per-element accumulation order
+/// unchanged, so pipelined-with-team execution must match the
+/// sequential plan **bit for bit** across stage counts, team sizes and
+/// sparsity levels (bitwise bar — see module docs).
+#[test]
+fn team_pipeline_stress_matches_sequential_bitwise() {
+    for &(stages, team, sparsity) in
+        &[(1usize, 3usize, 0.0f64), (2, 2, 0.5), (4, 2, 0.9), (4, 4, 0.7)]
+    {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, sparsity);
+        let seq = ExecutionPlan::build(&g).unwrap();
+        let pipe =
+            PipelinePlan::from_plan_team(ExecutionPlan::build(&g).unwrap(), stages, team);
+        assert_eq!(pipe.team(), team);
+        assert!(!pipe.team_steps().is_empty(), "no steps marked for the team");
+        let mut rng = Rng::new(0x7E44 ^ (stages as u64) ^ ((team as u64) << 8));
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..12).map(|_| g.random_feeds(&mut rng)).collect();
+        let got = pipe.run_stream(&images).unwrap();
+        for (i, fm) in images.iter().enumerate() {
+            let want = seq.run(fm).unwrap();
+            for (a, b) in got[i].iter().zip(&want) {
+                assert_eq!(a.shape, b.shape);
+                assert_eq!(
+                    a.data, b.data,
+                    "stages={stages} team={team} sparsity={sparsity} image={i}"
+                );
+            }
+        }
+    }
+}
+
+/// All three axes composed: a batch-2 plan, 3 pipeline stages and a
+/// 2-thread worker team on the dominant stage. Identical plan on both
+/// sides (team changes nothing per element), so the bar is bitwise.
+#[test]
+fn batched_team_pipeline_matches_sequential_bitwise() {
+    let mut g = tiny_cnn(NetConfig::test_scale());
+    prune_graph(&mut g, 0.7);
+    let b = 2usize;
+    let seq = ExecutionPlan::build_batched(&g, b).unwrap();
+    let pipe = PipelinePlan::from_plan_team(ExecutionPlan::build_batched(&g, b).unwrap(), 3, 2);
+    let in_shape = match &g.get("input").unwrap().op {
+        Op::Placeholder { shape } => shape.clone(),
+        _ => unreachable!(),
+    };
+    let per: usize = in_shape.iter().product();
+    let mut bshape = in_shape.clone();
+    bshape[0] = b;
+    let (groups, n_images) = (4usize, 4 * b);
+    let mut rng = Rng::new(0xB7EA);
+    let input: Vec<f32> = (0..n_images * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let outs = pipe.run_batch(&input, n_images).unwrap();
+    for gi in 0..groups {
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            Tensor::from_vec(&bshape, input[gi * b * per..(gi + 1) * b * per].to_vec()),
+        );
+        let want = seq.run(&feeds).unwrap();
+        for (oi, w) in want.iter().enumerate() {
+            let po = w.data.len();
+            assert_eq!(
+                &outs[oi][gi * po..(gi + 1) * po],
+                &w.data[..],
+                "group {gi} output {oi}"
+            );
+        }
+    }
 }
 
 /// Sparsity extremes: fully dense weights through the sparse kernel and
