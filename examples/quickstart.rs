@@ -96,5 +96,26 @@ fn main() -> hpipe::util::error::Result<()> {
         batched_plan.batch(),
         bout[0].shape
     );
+
+    // 8. profile-guided autotuning: measure what every step *actually*
+    //    costs (median-of-K wall times), re-cut the pipeline stages from
+    //    the measurements, and size the worker team from measured stage
+    //    imbalance + core count — the profile-guided Algorithm 1 (also:
+    //    `hpipe tune --net tinycnn` / `hpipe serve --autotune`)
+    let plan = hpipe::exec::ExecutionPlan::build(&graph)?;
+    let (profile, cuts) = hpipe::exec::tune::tune_plan(&plan, &hpipe::exec::TuneOptions::default());
+    println!(
+        "autotuned from measured step costs: {} stages (bottleneck {:.3} ms), team {}",
+        cuts.stages,
+        cuts.bottleneck_ns as f64 / 1e6,
+        cuts.team
+    );
+    let tuned =
+        hpipe::exec::PipelinePlan::from_profile(plan, &profile, cuts.stages, cuts.team);
+    let touts = tuned.run_stream(&[feeds.clone()])?;
+    println!(
+        "tuned pipeline classified the image: class {} (identical math, measured cuts)",
+        hpipe::interp::argmax(&touts[0][0])[0]
+    );
     Ok(())
 }

@@ -14,17 +14,22 @@
 //! the coordinator all agree. A third argument > 1 streams each batch
 //! through that many layer-pipeline stage threads in batched groups; a
 //! fourth argument > 1 splits the dominant stage's conv rows across an
-//! intra-stage worker team (the software `n_channel_splits` knob).
+//! intra-stage worker team (the software `n_channel_splits` knob); a
+//! fifth argument `autotune` replaces both knobs with profile-guided
+//! calibration (measured stage cuts + measured team size).
 
-use hpipe::coordinator::serve_demo;
+use hpipe::coordinator::{serve_demo, ServeConfig};
 use std::path::PathBuf;
 
 fn main() -> hpipe::util::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
-    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
-    let threads: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1);
-    let team: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let cfg = ServeConfig {
+        requests: args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128),
+        max_batch: args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8),
+        threads: args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1),
+        team: args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1),
+        autotune: args.get(5).map(|s| s == "autotune").unwrap_or(false),
+    };
     let artifacts = PathBuf::from(
         std::env::var("HPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
@@ -35,11 +40,15 @@ fn main() -> hpipe::util::error::Result<()> {
         );
     }
     println!(
-        "serving {requests} requests (max batch {batch}, {threads} pipeline threads, \
-         team {team}) from {}",
+        "serving {} requests (max batch {}, {} pipeline threads, team {}, autotune {}) from {}",
+        cfg.requests,
+        cfg.max_batch,
+        cfg.threads,
+        cfg.team,
+        cfg.autotune,
         artifacts.display()
     );
-    let mut report = serve_demo(&artifacts, requests, batch, threads, team)?;
+    let mut report = serve_demo(&artifacts, &cfg)?;
     report.print();
     let (agree, total) = report.interp_agreement.unwrap_or((0, 0));
     hpipe::ensure!(

@@ -1,11 +1,15 @@
 //! End-to-end serving benchmark: the L3 hot path (queue -> batcher ->
-//! compiled executor -> respond) plus executor micro-benchmarks.
+//! compiled executor -> respond) plus executor micro-benchmarks, with a
+//! tuned-vs-static serving comparison (the autotuned row calibrates
+//! stage cuts + team from measured step costs at model load) and a
+//! machine-readable `BENCH_serve.json` report written next to
+//! `BENCH_exec.json`.
 //!
 //! Uses the trained artifacts when `make artifacts` has run; otherwise
 //! synthesizes an equivalent artifact directory (He-init TinyCNN
 //! graphdef + manifest) so the benchmark always runs.
 
-use hpipe::coordinator::serve_demo;
+use hpipe::coordinator::{serve_demo, ServeConfig};
 use hpipe::graph::graphdef;
 use hpipe::nets::{tiny_cnn, NetConfig};
 use hpipe::runtime::Runtime;
@@ -78,17 +82,36 @@ fn main() {
 
     // whole serving path: queue -> batcher -> execute -> respond
     // (threads > 1 streams each batch through the layer pipeline;
-    // team > 1 splits the dominant stage's convs across a worker team)
-    for (requests, batch, threads, team) in [
-        (64usize, 1usize, 1usize, 1usize),
-        (64, 8, 1, 1),
-        (64, 8, 4, 1),
-        (64, 8, 2, 2),
-    ] {
-        let mut report = serve_demo(&dir, requests, batch, threads, team).unwrap();
+    // team > 1 splits the dominant stage's convs across a worker team;
+    // the final row autotunes — measured cuts + measured team — for the
+    // tuned-vs-static comparison)
+    let configs: [(&str, ServeConfig); 5] = [
+        ("sequential", ServeConfig { requests: 64, max_batch: 1, ..Default::default() }),
+        ("batched", ServeConfig { requests: 64, max_batch: 8, ..Default::default() }),
+        (
+            "static_pipe4",
+            ServeConfig { requests: 64, max_batch: 8, threads: 4, ..Default::default() },
+        ),
+        (
+            "static_pipe2_team2",
+            ServeConfig { requests: 64, max_batch: 8, threads: 2, team: 2, ..Default::default() },
+        ),
+        (
+            "autotuned",
+            ServeConfig { requests: 64, max_batch: 8, autotune: true, ..Default::default() },
+        ),
+    ];
+    let mut serve_json = Json::obj();
+    for (name, cfg) in configs {
+        let mut report = serve_demo(&dir, &cfg).unwrap();
         println!(
-            "\nserve_demo requests={requests} max_batch={batch} threads={threads} team={team}:"
+            "\nserve_demo [{name}] requests={} max_batch={} threads={} team={} autotune={}:",
+            cfg.requests, cfg.max_batch, cfg.threads, cfg.team, cfg.autotune
         );
         report.print();
+        serve_json.set(name, report.to_json());
     }
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serve.json");
+    std::fs::write(&out, serve_json.pretty()).expect("writing BENCH_serve.json");
+    println!("\nwrote {}", out.display());
 }

@@ -1,5 +1,8 @@
-//! Serving metrics: latency percentiles + throughput accounting.
+//! Serving metrics: latency percentiles + throughput accounting, with a
+//! machine-readable JSON form and per-stage pipeline occupancy.
 
+use crate::exec::StageMetrics;
+use crate::util::Json;
 use std::time::Duration;
 
 /// Latency recorder with percentile queries (exact, sorted on demand —
@@ -31,15 +34,24 @@ impl LatencyStats {
         }
     }
 
-    /// Percentile in [0, 100].
+    /// Percentile in [0, 100], standard nearest-rank convention: the
+    /// value at rank `⌈p/100 · n⌉` (1-based), so p50 over an even count
+    /// is the lower-middle sample and p100 is the maximum. (`p = 0` has
+    /// no defined nearest rank; it is clamped to rank 1, the minimum.)
     pub fn percentile(&mut self, p: f64) -> Duration {
         assert!((0.0..=100.0).contains(&p));
         if self.samples_us.is_empty() {
             return Duration::ZERO;
         }
         self.ensure_sorted();
-        let idx = ((p / 100.0) * (self.samples_us.len() - 1) as f64).round() as usize;
-        Duration::from_micros(self.samples_us[idx])
+        let n = self.samples_us.len();
+        // The epsilon absorbs f64 artifacts where (p/100)·n lands a hair
+        // above the exact integer rank (e.g. 0.07 · 100 = 7.0000…01,
+        // which must rank 7, not 8); it is far larger than the true
+        // representation error for any realistic n, and far smaller
+        // than any intentional fractional rank.
+        let rank = ((p / 100.0) * n as f64 - 1e-9).ceil() as usize;
+        Duration::from_micros(self.samples_us[rank.clamp(1, n) - 1])
     }
 
     pub fn mean(&self) -> Duration {
@@ -52,7 +64,7 @@ impl LatencyStats {
 }
 
 /// Whole-run serving report.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ServeReport {
     pub requests: usize,
     pub batches: usize,
@@ -63,11 +75,55 @@ pub struct ServeReport {
     /// Classification agreement with the reference interpreter, if the
     /// cross-check was run: (matches, total).
     pub interp_agreement: Option<(usize, usize)>,
+    /// Per-stage busy / stall / items counters of the primary serving
+    /// model's pipeline (empty when it ran purely sequentially).
+    pub stages: Vec<StageMetrics>,
 }
 
 impl ServeReport {
     pub fn throughput(&self) -> f64 {
         self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Machine-readable form (written next to `BENCH_exec.json` by the
+    /// e2e bench and by `hpipe serve --json`).
+    pub fn to_json(&mut self) -> Json {
+        let us = |d: Duration| Json::from(d.as_micros() as f64);
+        let mut latency = Json::obj();
+        latency
+            .set("p50_us", us(self.latency.percentile(50.0)))
+            .set("p95_us", us(self.latency.percentile(95.0)))
+            .set("p99_us", us(self.latency.percentile(99.0)))
+            .set("mean_us", us(self.latency.mean()))
+            .set("samples", Json::from(self.latency.len()));
+        let mut stages = Json::Arr(vec![]);
+        for (j, s) in self.stages.iter().enumerate() {
+            stages.push(Json::from_pairs(vec![
+                ("stage", Json::from(j)),
+                ("busy_ns", Json::from(s.busy_ns as f64)),
+                ("stall_ns", Json::from(s.stall_ns as f64)),
+                ("items", Json::from(s.items as f64)),
+                ("occupancy", Json::from(s.occupancy())),
+            ]));
+        }
+        let mut root = Json::obj();
+        root.set("requests", Json::from(self.requests))
+            .set("batches", Json::from(self.batches))
+            .set("wall_us", us(self.wall))
+            .set("throughput_rps", Json::from(self.throughput()))
+            .set("mean_batch", Json::from(self.mean_batch))
+            .set("latency", latency)
+            .set("stages", stages);
+        if let Some((ok, total)) = self.interp_agreement {
+            root.set(
+                "interp_agreement",
+                Json::from_pairs(vec![
+                    ("matches", Json::from(ok)),
+                    ("total", Json::from(total)),
+                ]),
+            );
+        }
+        root
     }
 
     pub fn print(&mut self) {
@@ -86,6 +142,14 @@ impl ServeReport {
             self.latency.percentile(99.0),
             self.latency.mean()
         );
+        if !self.stages.is_empty() {
+            let occ: Vec<String> = self
+                .stages
+                .iter()
+                .map(|s| format!("{:.0}%", s.occupancy() * 100.0))
+                .collect();
+            println!("pipeline stage occupancy: [{}]", occ.join(" "));
+        }
         if let Some((ok, total)) = self.interp_agreement {
             println!("interp cross-check: {ok}/{total} argmax agreement");
         }
@@ -108,11 +172,78 @@ mod tests {
         assert_eq!(s.mean(), Duration::from_micros(5));
     }
 
+    /// Pin the nearest-rank convention: rank ⌈p/100 · n⌉, 1-based.
+    #[test]
+    fn percentile_uses_ceil_rank() {
+        // even count: p50 is the LOWER middle sample (rank 5 of 10),
+        // where the old `.round()` indexing picked the upper one
+        let mut even = LatencyStats::default();
+        for us in 1..=10u64 {
+            even.record(Duration::from_micros(us));
+        }
+        assert_eq!(even.percentile(50.0), Duration::from_micros(5));
+        assert_eq!(even.percentile(90.0), Duration::from_micros(9));
+        assert_eq!(even.percentile(91.0), Duration::from_micros(10));
+        assert_eq!(even.percentile(10.0), Duration::from_micros(1));
+        assert_eq!(even.percentile(10.1), Duration::from_micros(2));
+        // f64 artifacts must not bump the rank: over 100 samples,
+        // 0.07 · 100 computes as 7.0000…01 but p7 is still rank 7
+        let mut hundred = LatencyStats::default();
+        for us in 1..=100u64 {
+            hundred.record(Duration::from_micros(us));
+        }
+        assert_eq!(hundred.percentile(7.0), Duration::from_micros(7));
+        assert_eq!(hundred.percentile(55.0), Duration::from_micros(55));
+        assert_eq!(hundred.percentile(7.5), Duration::from_micros(8));
+        // odd count: p50 is the exact middle
+        let mut odd = LatencyStats::default();
+        for us in 1..=5u64 {
+            odd.record(Duration::from_micros(us));
+        }
+        assert_eq!(odd.percentile(50.0), Duration::from_micros(3));
+        // single sample: every percentile is that sample
+        let mut one = LatencyStats::default();
+        one.record(Duration::from_micros(42));
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(one.percentile(p), Duration::from_micros(42));
+        }
+    }
+
     #[test]
     fn empty_stats_are_zero() {
         let mut s = LatencyStats::default();
         assert_eq!(s.percentile(99.0), Duration::ZERO);
         assert_eq!(s.mean(), Duration::ZERO);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn report_json_is_machine_readable() {
+        let mut r = ServeReport {
+            requests: 6,
+            batches: 2,
+            wall: Duration::from_millis(3),
+            mean_batch: 3.0,
+            interp_agreement: Some((6, 6)),
+            stages: vec![
+                StageMetrics { busy_ns: 900, stall_ns: 100, items: 6 },
+                StageMetrics { busy_ns: 500, stall_ns: 500, items: 6 },
+            ],
+            ..Default::default()
+        };
+        for us in [10u64, 20, 30, 40, 50, 60] {
+            r.latency.record(Duration::from_micros(us));
+        }
+        let parsed = Json::parse(&r.to_json().pretty()).unwrap();
+        assert_eq!(parsed.get("requests").as_usize(), Some(6));
+        assert_eq!(parsed.get("latency").get("p50_us").as_f64(), Some(30.0));
+        let stages = parsed.get("stages").as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].get("occupancy").as_f64(), Some(0.9));
+        assert_eq!(
+            parsed.get("interp_agreement").get("matches").as_usize(),
+            Some(6)
+        );
+        assert!(parsed.get("throughput_rps").as_f64().unwrap() > 0.0);
     }
 }

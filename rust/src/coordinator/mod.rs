@@ -15,6 +15,7 @@
 pub mod batcher;
 pub mod metrics;
 
+use crate::exec::TuneOptions;
 use crate::graph::graphdef;
 use crate::interp;
 use crate::runtime::Runtime;
@@ -82,6 +83,11 @@ impl Coordinator {
                 .context("no batch-1 model loaded")?;
             m.input_shape.iter().product::<usize>() / m.input_shape[0]
         };
+        // zero the primary model's cumulative pipeline counters so the
+        // report's occupancy covers this run only
+        if let Some(m) = self.runtime.best_batch_model(self.policy.max_batch) {
+            m.pipeline().reset_stage_metrics();
+        }
         let mut latency = LatencyStats::default();
         let mut requests = 0usize;
         let mut batches = 0usize;
@@ -141,7 +147,35 @@ impl Coordinator {
             latency,
             mean_batch: occupancy as f64 / batches.max(1) as f64,
             interp_agreement: None,
+            // per-stage busy/stall counters of the primary serving
+            // model's pipeline; empty when it serves sequentially (the
+            // counters would be all-zero noise, not a stalled pipeline)
+            stages: self
+                .runtime
+                .best_batch_model(self.policy.max_batch)
+                .filter(|m| m.serves_pipelined())
+                .map(|m| m.pipeline().stage_metrics())
+                .unwrap_or_default(),
         })
+    }
+}
+
+/// Configuration for [`serve_demo`]. `threads` / `team` are the static
+/// pipeline knobs; `autotune` replaces both with the profile-guided
+/// calibrator (measured cuts, measured team, per-group-size
+/// repartitioning) during model load.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub requests: usize,
+    pub max_batch: usize,
+    pub threads: usize,
+    pub team: usize,
+    pub autotune: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { requests: 64, max_batch: 8, threads: 1, team: 1, autotune: false }
     }
 }
 
@@ -150,29 +184,37 @@ impl Coordinator {
 ///    (`threads > 1` partitions them into that many pipeline stages for
 ///    batch requests — the throughput-oriented serving mode — and
 ///    `team > 1` splits the dominant stage's conv rows across an
-///    intra-stage worker team),
-/// 2. spawn a client thread that submits `n_requests` synthetic images,
+///    intra-stage worker team; `autotune` instead calibrates each model
+///    at load: warmup images run through the sequential plan, measured
+///    step costs cut the stages and size the team),
+/// 2. spawn a client thread that submits `cfg.requests` synthetic images,
 /// 3. serve them through the batcher + compiled executor,
 /// 4. cross-check classifications against the Rust reference
 ///    interpreter running the same graphdef.
-pub fn serve_demo(
-    artifacts_dir: &Path,
-    n_requests: usize,
-    max_batch: usize,
-    threads: usize,
-    team: usize,
-) -> Result<ServeReport> {
+pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
     let mut runtime = Runtime::cpu(artifacts_dir)?
-        .with_threads(threads)
-        .with_team(team);
+        .with_threads(cfg.threads)
+        .with_team(cfg.team);
+    if cfg.autotune {
+        runtime = runtime.with_autotune(TuneOptions::default());
+    }
     let loaded = runtime.load_manifest()?;
     println!(
-        "runtime: platform={} threads={} team={} loaded {:?}",
+        "runtime: platform={} threads={} team={} autotune={} loaded {:?}",
         runtime.platform(),
         runtime.threads,
         runtime.team,
+        cfg.autotune,
         loaded
     );
+    if cfg.autotune {
+        for name in &loaded {
+            if let Some(report) = runtime.model(name).and_then(|m| m.tune_report()) {
+                report.print();
+            }
+        }
+    }
+    let (n_requests, max_batch) = (cfg.requests, cfg.max_batch);
 
     let graph = graphdef::load(&runtime.artifacts_dir.join("tinycnn"))
         .context("loading tinycnn graphdef")?;

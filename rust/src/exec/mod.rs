@@ -76,13 +76,30 @@
 //! The single-image latency path stays on the sequential
 //! [`ExecutionPlan`]; the pipeline is engaged by `runtime::LoadedModel`
 //! for batch serving when configured with `threads > 1`.
+//!
+//! # Profile-guided autotuning
+//!
+//! The model-driven cuts above are a prediction; [`profile`] measures
+//! what each step actually costs (median-of-K wall times through the
+//! sequential plan) and [`tune`] re-runs the same bottleneck-partition
+//! DP over those measurements, sizes the stage count to the machine's
+//! core budget, and spends leftover cores on the measured-dominant
+//! stage's worker team ([`PipelinePlan::from_profile`]). Calibration is
+//! per plan — and therefore per group-batch size — so batched serving
+//! stops reusing the B=1 cuts. `runtime::LoadedModel::autotuned` is the
+//! calibrate-then-serve entry point; the static model-driven path stays
+//! the default.
 
 pub mod kernels;
 pub mod pipeline;
+pub mod profile;
 pub mod sparse;
+pub mod tune;
 
 pub use kernels::{Act, ConvGeom};
-pub use pipeline::PipelinePlan;
+pub use pipeline::{PipelinePlan, StageMetrics};
+pub use profile::{profile_plan, ProfileOptions, StepProfile};
+pub use tune::{choose_cuts, TuneEntry, TuneOptions, TuneReport, TunedCuts};
 
 use crate::graph::{Graph, GraphError, Op, Tensor};
 use crate::sparsity::rle::{encode_conv, encode_matmul, ConvRle};

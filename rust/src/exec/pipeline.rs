@@ -51,11 +51,15 @@
 //! produces bit-identical outputs because workers write disjoint row
 //! ranges with unchanged per-element accumulation order.
 
+use super::profile::StepProfile;
 use super::{ConvGeom, ExecContext, ExecutionPlan, PlanOptions, Src, Step, StepKind};
 use crate::arch::StageGeometry;
 use crate::compile::throughput::{stage_cycles, WeightSummary, LINE_OVERHEAD};
 use crate::graph::{Graph, GraphError, Op, Padding, Tensor};
+use crate::util::partition::{partition_min_bottleneck, range_costs};
+use crate::util::timer::ScopedNs;
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
 /// Boundary messages in flight per cut: double buffering, exactly like
@@ -155,49 +159,6 @@ impl ExecutionPlan {
     }
 }
 
-/// Contiguous partition of `costs` into `k` non-empty parts minimizing
-/// the bottleneck (largest part sum) — the classic linear-partition DP,
-/// the software analog of the paper's balance-to-the-slowest-stage
-/// allocation. Returns `k` half-open step ranges.
-fn partition_min_bottleneck(costs: &[u64], k: usize) -> Vec<(usize, usize)> {
-    let n = costs.len();
-    if n == 0 {
-        return vec![(0, 0)];
-    }
-    let k = k.clamp(1, n);
-    let mut prefix = vec![0u64; n + 1];
-    for (i, &c) in costs.iter().enumerate() {
-        prefix[i + 1] = prefix[i] + c;
-    }
-    // dp[j][i]: minimal bottleneck covering the first i steps with j
-    // parts; cut[j][i]: where part j starts in that optimum.
-    let mut dp = vec![vec![u64::MAX; n + 1]; k + 1];
-    let mut cut = vec![vec![0usize; n + 1]; k + 1];
-    dp[0][0] = 0;
-    for j in 1..=k {
-        for i in j..=n {
-            for t in (j - 1)..i {
-                if dp[j - 1][t] == u64::MAX {
-                    continue;
-                }
-                let cand = dp[j - 1][t].max(prefix[i] - prefix[t]);
-                if cand < dp[j][i] {
-                    dp[j][i] = cand;
-                    cut[j][i] = t;
-                }
-            }
-        }
-    }
-    let mut bounds = vec![0usize; k + 1];
-    bounds[k] = n;
-    let mut i = n;
-    for j in (1..=k).rev() {
-        i = cut[j][i];
-        bounds[j - 1] = i;
-    }
-    bounds.windows(2).map(|w| (w[0], w[1])).collect()
-}
-
 /// Read/write history of one arena slot across the plan's step sequence.
 /// Feeds count as writes at step −1; graph outputs as reads at step `n`.
 #[derive(Default)]
@@ -265,6 +226,43 @@ pub struct PipelinePlan {
     /// Plan-global indices of the steps executed with the worker team
     /// (the splittable steps of the bottleneck stage; empty if team==1).
     team_steps: Vec<usize>,
+    /// Per-stage busy / stall / items counters, accumulated across every
+    /// `run_*` call (see [`Self::stage_metrics`]).
+    counters: Vec<StageCounters>,
+}
+
+/// Cumulative per-stage activity counters. `busy` covers step execution,
+/// `stall` covers time blocked on channel receives (waiting for an
+/// upstream item or for a downstream stage to recycle a boundary
+/// buffer); copies and sends in between are uncounted noise.
+#[derive(Default)]
+struct StageCounters {
+    busy: AtomicU64,
+    stall: AtomicU64,
+    items: AtomicU64,
+}
+
+/// Snapshot of one stage's cumulative activity (see
+/// [`PipelinePlan::stage_metrics`]). Occupancy — busy over busy+stall —
+/// is the software twin of a hardware stage's duty cycle: a perfectly
+/// balanced pipeline keeps every stage near 1.0, and the tuner's cut
+/// quality shows up directly here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageMetrics {
+    pub busy_ns: u64,
+    pub stall_ns: u64,
+    pub items: u64,
+}
+
+impl StageMetrics {
+    /// Fraction of accounted time this stage spent executing steps.
+    pub fn occupancy(&self) -> f64 {
+        let total = self.busy_ns + self.stall_ns;
+        if total == 0 {
+            return 0.0;
+        }
+        self.busy_ns as f64 / total as f64
+    }
 }
 
 impl PipelinePlan {
@@ -312,12 +310,42 @@ impl PipelinePlan {
     /// sequential execution). `team == 1` is exactly PR 3 behavior.
     pub fn from_plan_team(plan: ExecutionPlan, stages: usize, team: usize) -> PipelinePlan {
         let costs = plan.step_costs();
-        let ranges = partition_min_bottleneck(&costs, stages.max(1));
+        PipelinePlan::from_costs(plan, &costs, stages, team)
+    }
+
+    /// Profile-guided construction: stage cuts come from *measured*
+    /// per-step wall times ([`StepProfile`], captured by
+    /// [`super::profile::profile_plan`]) instead of the compile-side
+    /// cycle model — the software form of re-running Algorithm 1 on
+    /// observed layer behavior. The dominant stage (and therefore the
+    /// worker team's target) is the stage that measured slowest, not the
+    /// one the model predicted. Panics if the profile was captured on a
+    /// plan with a different step count (profile / plan mismatch).
+    pub fn from_profile(
+        plan: ExecutionPlan,
+        profile: &StepProfile,
+        stages: usize,
+        team: usize,
+    ) -> PipelinePlan {
+        assert_eq!(
+            profile.costs_ns.len(),
+            plan.steps.len(),
+            "StepProfile has {} step costs but the plan has {} steps",
+            profile.costs_ns.len(),
+            plan.steps.len()
+        );
+        PipelinePlan::from_costs(plan, &profile.costs_ns, stages, team)
+    }
+
+    /// Shared core of the model-driven and profile-guided constructors:
+    /// cut the plan by an arbitrary per-step `u64` cost vector. The cost
+    /// source only moves the cuts and the team's target stage — per-item
+    /// results are bit-identical to the sequential plan for *any* cost
+    /// vector (`rust/tests/exec_equiv.rs` pins this invariance).
+    fn from_costs(plan: ExecutionPlan, costs: &[u64], stages: usize, team: usize) -> PipelinePlan {
+        let ranges = partition_min_bottleneck(costs, stages.max(1));
         let k = ranges.len();
-        let stage_costs: Vec<u64> = ranges
-            .iter()
-            .map(|&(a, b)| costs[a..b].iter().sum())
-            .collect();
+        let stage_costs = range_costs(costs, &ranges);
 
         let uses = slot_uses(&plan);
         let xfer: Vec<Vec<usize>> = (1..k)
@@ -432,6 +460,7 @@ impl PipelinePlan {
             }
         }
 
+        let counters = (0..k).map(|_| StageCounters::default()).collect();
         PipelinePlan {
             plan,
             ranges,
@@ -441,6 +470,7 @@ impl PipelinePlan {
             stage_scratch,
             team,
             team_steps,
+            counters,
         }
     }
 
@@ -468,9 +498,37 @@ impl PipelinePlan {
         &self.ranges
     }
 
-    /// Estimated per-stage cycle costs (the balanced partition sums).
+    /// Per-stage costs in the units the plan was cut with (the balanced
+    /// partition sums): modeled cycles for [`Self::from_plan_team`],
+    /// measured nanoseconds for [`Self::from_profile`].
     pub fn stage_costs(&self) -> &[u64] {
         &self.stage_costs
+    }
+
+    /// Cumulative per-stage busy / stall / items counters across every
+    /// `run_*` call since construction (or the last
+    /// [`Self::reset_stage_metrics`]). Stall time is time blocked on the
+    /// inter-stage channels; the busy:stall ratio is per-stage occupancy
+    /// — the signal the serve metrics surface and the tuner's cuts are
+    /// judged by.
+    pub fn stage_metrics(&self) -> Vec<StageMetrics> {
+        self.counters
+            .iter()
+            .map(|c| StageMetrics {
+                busy_ns: c.busy.load(Ordering::Relaxed),
+                stall_ns: c.stall.load(Ordering::Relaxed),
+                items: c.items.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Zero the cumulative stage counters (e.g. after warmup runs).
+    pub fn reset_stage_metrics(&self) {
+        for c in &self.counters {
+            c.busy.store(0, Ordering::Relaxed);
+            c.stall.store(0, Ordering::Relaxed);
+            c.items.store(0, Ordering::Relaxed);
+        }
     }
 
     /// Arena slots copied across the cut between stage `j` and `j + 1`.
@@ -592,41 +650,60 @@ impl PipelinePlan {
                 }
                 let inc = incoming.take();
                 scope.spawn(move || {
+                    let ctr = &self.counters[j];
                     let mut ctx = self.stage_context(j);
                     for img in 0..n_images {
                         if j == 0 {
                             feed(img, &mut ctx);
                         }
                         if let Some((rx, back)) = &inc {
-                            let msg = rx.recv().expect("upstream stage hung up");
+                            let msg = {
+                                let _t = ScopedNs::new(&ctr.stall);
+                                rx.recv().expect("upstream stage hung up")
+                            };
                             debug_assert_eq!(msg.img, img, "stage {j} images out of order");
                             self.copy_in(j, &msg, &mut ctx);
                             let _ = back.send(msg);
                         }
-                        self.run_range(j, &mut ctx);
-                        let mut msg = recycle_rx.recv().expect("downstream stage hung up");
+                        {
+                            let _t = ScopedNs::new(&ctr.busy);
+                            self.run_range(j, &mut ctx);
+                        }
+                        let mut msg = {
+                            let _t = ScopedNs::new(&ctr.stall);
+                            recycle_rx.recv().expect("downstream stage hung up")
+                        };
                         msg.img = img;
                         self.copy_out(j, &ctx, &mut msg);
                         data_tx.send(msg).expect("downstream stage hung up");
+                        ctr.items.fetch_add(1, Ordering::Relaxed);
                     }
                 });
                 incoming = Some((data_rx, recycle_tx));
             }
             let j = k - 1;
             let inc = incoming.take();
+            let ctr = &self.counters[j];
             let mut ctx = self.stage_context(j);
             for img in 0..n_images {
                 if j == 0 {
                     feed(img, &mut ctx);
                 }
                 if let Some((rx, back)) = &inc {
-                    let msg = rx.recv().expect("upstream stage hung up");
+                    let msg = {
+                        let _t = ScopedNs::new(&ctr.stall);
+                        rx.recv().expect("upstream stage hung up")
+                    };
                     debug_assert_eq!(msg.img, img, "final stage images out of order");
                     self.copy_in(j, &msg, &mut ctx);
                     let _ = back.send(msg);
                 }
-                self.run_range(j, &mut ctx);
+                {
+                    let _t = ScopedNs::new(&ctr.busy);
+                    self.run_range(j, &mut ctx);
+                }
                 collect(img, &ctx);
+                ctr.items.fetch_add(1, Ordering::Relaxed);
             }
         });
     }
@@ -706,21 +783,6 @@ mod tests {
     use crate::nets::{tiny_cnn, NetConfig};
     use crate::sparsity::prune_graph;
     use crate::util::Rng;
-
-    #[test]
-    fn partition_is_contiguous_and_balanced() {
-        let costs = [4u64, 4, 4, 4];
-        assert_eq!(partition_min_bottleneck(&costs, 2), vec![(0, 2), (2, 4)]);
-        assert_eq!(
-            partition_min_bottleneck(&costs, 4),
-            vec![(0, 1), (1, 2), (2, 3), (3, 4)]
-        );
-        // the dominant step gets a stage of its own
-        let skewed = [10u64, 1, 1, 1];
-        assert_eq!(partition_min_bottleneck(&skewed, 2), vec![(0, 1), (1, 4)]);
-        // more stages than steps clamps
-        assert_eq!(partition_min_bottleneck(&[3u64], 4), vec![(0, 1)]);
-    }
 
     #[test]
     fn more_stages_never_raise_the_bottleneck() {
@@ -840,6 +902,76 @@ mod tests {
         let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 2).unwrap();
         assert_eq!(pipe.team(), 1);
         assert!(pipe.team_steps().is_empty());
+    }
+
+    #[test]
+    fn from_profile_cuts_follow_measured_costs() {
+        // A synthetic profile that inverts the model's view: the LAST
+        // step is claimed to dominate. The measured cut must isolate it,
+        // and the team must target the measured-dominant stage.
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let n = plan.steps.len();
+        assert!(n >= 3);
+        let mut costs = vec![1u64; n];
+        costs[n - 1] = 1000;
+        let profile = StepProfile::synthetic(&plan, costs);
+        let pipe = PipelinePlan::from_profile(plan, &profile, 2, 2);
+        assert_eq!(pipe.stage_ranges(), &[(0, n - 1), (n - 1, n)]);
+        // the team targets the measured bottleneck (stage 1), so every
+        // team step lives in its range
+        for &s in pipe.team_steps() {
+            assert!(s >= n - 1, "team step {s} outside the measured-dominant stage");
+        }
+        // and a measured-cut pipeline still computes the right answer
+        let seq = ExecutionPlan::build(&g).unwrap();
+        let mut rng = Rng::new(0x9F0F);
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..3).map(|_| g.random_feeds(&mut rng)).collect();
+        let got = pipe.run_stream(&images).unwrap();
+        for (i, fm) in images.iter().enumerate() {
+            let want = seq.run(fm).unwrap();
+            for (a, b) in got[i].iter().zip(&want) {
+                assert_eq!(a.data, b.data, "image {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "step costs")]
+    fn from_profile_rejects_mismatched_profiles() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let short = StepProfile {
+            batch: 1,
+            runs: 1,
+            names: vec!["bogus".into()],
+            costs_ns: vec![1],
+        };
+        let _ = PipelinePlan::from_profile(plan, &short, 2, 1);
+    }
+
+    #[test]
+    fn stage_metrics_accumulate_and_reset() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 3).unwrap();
+        let mut rng = Rng::new(0x0CC);
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..5).map(|_| g.random_feeds(&mut rng)).collect();
+        pipe.run_stream(&images).unwrap();
+        let m = pipe.stage_metrics();
+        assert_eq!(m.len(), pipe.num_stages());
+        for (j, s) in m.iter().enumerate() {
+            assert_eq!(s.items, images.len() as u64, "stage {j}");
+            assert!(s.busy_ns > 0, "stage {j} recorded no busy time");
+            assert!((0.0..=1.0).contains(&s.occupancy()));
+        }
+        // stage 0 never stalls on an upstream; its only stall source is
+        // buffer recycling
+        pipe.reset_stage_metrics();
+        for s in pipe.stage_metrics() {
+            assert_eq!((s.busy_ns, s.stall_ns, s.items), (0, 0, 0));
+        }
     }
 
     #[test]

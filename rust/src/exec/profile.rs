@@ -1,0 +1,193 @@
+//! Instrumented execution: measure what each plan step *actually* costs.
+//!
+//! HPIPE's Algorithm 1 allocates multipliers from an analytic throughput
+//! model; the model is good enough to balance hardware stages, but our
+//! software analog inherits every mismatch between modeled cycles and
+//! real wall time — cache behavior, packing effects, allocator and
+//! threading noise the cycle model cannot see. This module is the
+//! measurement half of the profile-guided tuner (`super::tune`): run
+//! deterministic warmup images through the *sequential* plan, time every
+//! step with a monotonic scoped timer ([`crate::util::timer::ScopedNs`]),
+//! and keep the **median of K** timed passes per step so one descheduled
+//! run cannot skew a cut decision.
+//!
+//! A [`StepProfile`] is captured **per plan** — and a plan is compiled
+//! for one batch size — so profiling the batch-B plan is exactly the
+//! per-batch-size capture batched repartitioning needs: step costs do
+//! not scale uniformly with B (im2col amortization, packed-panel reuse
+//! and cache pressure all shift the balance), and the resulting cuts are
+//! genuinely different from the B=1 cuts the static path reuses.
+
+use super::ExecutionPlan;
+use crate::util::timer::ScopedNs;
+use crate::util::{Json, Rng};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Knobs for a profiling pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ProfileOptions {
+    /// Untimed executions before measurement (warms caches, faults in
+    /// the arena, settles the branch predictors).
+    pub warmup: usize,
+    /// Timed executions; each step keeps its median over these.
+    pub runs: usize,
+    /// Seed for the deterministic synthetic warmup images.
+    pub seed: u64,
+}
+
+impl Default for ProfileOptions {
+    fn default() -> Self {
+        ProfileOptions { warmup: 1, runs: 5, seed: 0x9F0F11E }
+    }
+}
+
+/// Measured per-step wall times for one plan at one batch size.
+#[derive(Clone, Debug)]
+pub struct StepProfile {
+    /// Batch dimension of the profiled plan (the group size its cuts
+    /// will serve).
+    pub batch: usize,
+    /// Timed runs each median was taken over.
+    pub runs: usize,
+    /// Step names, in plan order (diagnostics / report output).
+    pub names: Vec<String>,
+    /// Median wall time per step in nanoseconds (≥ 1, so a
+    /// sub-resolution step still counts as work for the partitioner).
+    pub costs_ns: Vec<u64>,
+}
+
+impl StepProfile {
+    /// Total measured plan time (sum of step medians).
+    pub fn total_ns(&self) -> u64 {
+        self.costs_ns.iter().sum()
+    }
+
+    /// A profile with hand-picked costs for `plan`'s steps — the tuner
+    /// tests drive known costs through the cut policy with this, and the
+    /// equivalence tests use it to prove results are cut-invariant.
+    pub fn synthetic(plan: &ExecutionPlan, costs_ns: Vec<u64>) -> StepProfile {
+        assert_eq!(costs_ns.len(), plan.steps.len(), "one cost per plan step");
+        StepProfile {
+            batch: plan.batch(),
+            runs: 0,
+            names: plan.step_names().iter().map(|s| s.to_string()).collect(),
+            costs_ns,
+        }
+    }
+
+    /// Machine-readable form (embedded in the `TuneReport` JSON).
+    pub fn to_json(&self) -> Json {
+        let mut steps = Json::Arr(vec![]);
+        for (name, &ns) in self.names.iter().zip(&self.costs_ns) {
+            steps.push(Json::from_pairs(vec![
+                ("name", Json::from(name.as_str())),
+                ("ns", Json::from(ns as f64)),
+            ]));
+        }
+        Json::from_pairs(vec![
+            ("batch", Json::from(self.batch)),
+            ("runs", Json::from(self.runs)),
+            ("total_ns", Json::from(self.total_ns() as f64)),
+            ("steps", steps),
+        ])
+    }
+}
+
+/// Run deterministic warmup images through `plan` sequentially and
+/// record per-step wall time: `opts.warmup` untimed passes, then
+/// `opts.runs` timed passes, median per step. The context is reused
+/// across passes, so measurement happens in the same allocation-free
+/// steady state serving runs in.
+pub fn profile_plan(plan: &ExecutionPlan, opts: &ProfileOptions) -> StepProfile {
+    let mut ctx = plan.new_context();
+    let mut rng = Rng::new(opts.seed);
+    for i in 0..plan.num_feeds() {
+        let len: usize = plan.feeds[i].2.iter().product();
+        let data: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        plan.write_feed(&mut ctx, i, &data).expect("synthetic feed sized to the plan");
+    }
+    for _ in 0..opts.warmup {
+        plan.execute_steps(&mut ctx);
+    }
+    let runs = opts.runs.max(1);
+    let mut samples: Vec<Vec<u64>> = vec![Vec::with_capacity(runs); plan.steps.len()];
+    let sink = AtomicU64::new(0);
+    for _ in 0..runs {
+        for (i, step) in plan.steps.iter().enumerate() {
+            sink.store(0, Ordering::Relaxed);
+            {
+                let _t = ScopedNs::new(&sink);
+                plan.exec_step(step, &mut ctx);
+            }
+            samples[i].push(sink.load(Ordering::Relaxed));
+        }
+    }
+    let costs_ns = samples
+        .into_iter()
+        .map(|mut s| {
+            s.sort_unstable();
+            s[s.len() / 2].max(1)
+        })
+        .collect();
+    StepProfile {
+        batch: plan.batch(),
+        runs,
+        names: plan.step_names().iter().map(|s| s.to_string()).collect(),
+        costs_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{tiny_cnn, NetConfig};
+    use crate::sparsity::prune_graph;
+
+    #[test]
+    fn profile_covers_every_step_with_positive_costs() {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.6);
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let opts = ProfileOptions { warmup: 1, runs: 3, ..Default::default() };
+        let prof = profile_plan(&plan, &opts);
+        assert_eq!(prof.costs_ns.len(), plan.steps.len());
+        assert_eq!(prof.names, plan.step_names());
+        assert_eq!(prof.batch, 1);
+        assert_eq!(prof.runs, 3);
+        assert!(prof.costs_ns.iter().all(|&c| c >= 1));
+        // convolutions must measure as the heavy steps: the largest
+        // measured step should dwarf the smallest (softmax / affine)
+        let (min, max) = (
+            *prof.costs_ns.iter().min().unwrap(),
+            *prof.costs_ns.iter().max().unwrap(),
+        );
+        assert!(max > min, "flat profile: {:?}", prof.costs_ns);
+    }
+
+    #[test]
+    fn batched_profile_records_its_batch() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build_batched(&g, 4).unwrap();
+        let opts = ProfileOptions { warmup: 0, runs: 1, ..Default::default() };
+        let prof = profile_plan(&plan, &opts);
+        assert_eq!(prof.batch, 4);
+    }
+
+    #[test]
+    fn profile_json_roundtrips() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let prof = StepProfile::synthetic(&plan, vec![7; plan.steps.len()]);
+        let j = prof.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("batch").as_usize(), Some(1));
+        assert_eq!(
+            parsed.get("steps").as_arr().unwrap().len(),
+            plan.steps.len()
+        );
+        assert_eq!(
+            parsed.get("total_ns").as_f64(),
+            Some(7.0 * plan.steps.len() as f64)
+        );
+    }
+}

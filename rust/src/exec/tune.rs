@@ -1,0 +1,428 @@
+//! Profile-guided autotuner: measured step costs drive stage cuts, team
+//! sizing and batch-aware repartitioning.
+//!
+//! This is the profile-guided variant of HPIPE's Algorithm 1. The paper
+//! loops "over the slowest operations and increment[s] n_channel_splits
+//! until we hit the DSP Target" — a model-driven allocation that wins
+//! because per-layer specialization matches resources to each layer's
+//! cost. The software pipeline inherited the *model-driven* half of that
+//! (cuts from `ExecutionPlan::step_costs`); this module closes the loop
+//! with the *measured* half:
+//!
+//! 1. **Re-cut from measurements** — the same minimum-bottleneck
+//!    partition DP ([`crate::util::partition`]) the static path uses,
+//!    run over a [`StepProfile`]'s median wall times instead of modeled
+//!    cycles ([`super::PipelinePlan::from_profile`]).
+//! 2. **Size the stage count to the machine** — candidate stage counts
+//!    are capped by the core budget (default:
+//!    `std::thread::available_parallelism`), and the smallest count
+//!    whose measured bottleneck reaches the plateau is chosen: deeper
+//!    cuts that cannot lower the bottleneck only add handoff copies.
+//! 3. **Spend leftover cores on the measured bottleneck** — when the
+//!    dominant stage still out-costs the runner-up by
+//!    [`TEAM_IMBALANCE`]×, the spare cores become its intra-stage worker
+//!    team (the paper's `n_channel_splits` loop, not just its move).
+//! 4. **Batch-aware cuts** — profiles are captured per plan, and a plan
+//!    is compiled per group-batch size, so every group size gets its own
+//!    cuts ([`crate::runtime::LoadedModel::autotuned`] caches one
+//!    [`TuneEntry`] per group instead of reusing the B=1 cuts).
+//!
+//! The policy core ([`choose_cuts`]) is pure and deterministic — known
+//! costs map to known cuts — so it is unit-testable without timers.
+
+use super::profile::{profile_plan, ProfileOptions, StepProfile};
+use super::ExecutionPlan;
+use crate::util::partition::{bottlenecks_up_to, partition_min_bottleneck, range_costs};
+use crate::util::Json;
+
+/// Dominant-stage cost must exceed the runner-up by this factor before
+/// spare cores are spent on an intra-stage team: below it, splitting the
+/// bottleneck's rows just shifts the bottleneck to the runner-up.
+pub const TEAM_IMBALANCE: f64 = 1.25;
+
+/// Plateau tolerance for the stage-count search (2%): the smallest stage
+/// count whose bottleneck is within this of the deepest candidate's wins
+/// — extra stages past the plateau cannot raise throughput but each one
+/// adds a boundary copy and a thread.
+const PLATEAU_DIV: u64 = 50;
+
+/// Scoped-thread spawn/join overhead a team worker must amortize
+/// (tens of µs on commodity cores, taken pessimistically). The team is
+/// capped at `heaviest measured step / TEAM_SPAWN_NS`: each worker's
+/// share of the step it splits must dwarf the cost of spawning it, or
+/// "more parallelism" measures slower than sequential — the exact
+/// mismatch a measurement-driven tuner exists to rule out.
+const TEAM_SPAWN_NS: u64 = 50_000;
+
+/// Core budget actually available to worker threads.
+pub fn detected_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Knobs for a calibration run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TuneOptions {
+    /// Core budget; 0 = detect via `available_parallelism`.
+    pub cores: usize,
+    /// Profiling pass configuration (warmup / median-of-K runs).
+    pub profile: ProfileOptions,
+}
+
+impl TuneOptions {
+    /// The effective core budget (detects when `cores == 0`).
+    pub fn budget(&self) -> usize {
+        if self.cores == 0 {
+            detected_cores()
+        } else {
+            self.cores
+        }
+    }
+}
+
+/// The tuner's decision for one measured cost vector: where to cut, how
+/// many stages, and how large a worker team the bottleneck stage gets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TunedCuts {
+    /// Half-open step ranges, one per stage.
+    pub ranges: Vec<(usize, usize)>,
+    /// Chosen stage count (`ranges.len()`).
+    pub stages: usize,
+    /// Intra-stage worker-team size for the measured-dominant stage.
+    pub team: usize,
+    /// Measured cost of each stage (sums over `ranges`).
+    pub stage_costs_ns: Vec<u64>,
+    /// The measured bottleneck (max of `stage_costs_ns`).
+    pub bottleneck_ns: u64,
+}
+
+/// Deterministic cut policy: measured per-step costs + a core budget →
+/// stage ranges, stage count and team size. See the module docs for the
+/// three rules; this function is pure so synthetic-profile tests can pin
+/// known costs → known cuts.
+pub fn choose_cuts(costs: &[u64], cores: usize) -> TunedCuts {
+    choose_cuts_capped(costs, cores, usize::MAX)
+}
+
+/// [`choose_cuts`] with an explicit stage cap. The serving path caps
+/// stages at the groups in flight per batch execution: a pipeline
+/// deeper than the items it is ever fed per call never fills, it only
+/// pays fill/drain and boundary copies. Cores freed by the cap flow
+/// into the team instead.
+pub fn choose_cuts_capped(costs: &[u64], cores: usize, max_stages: usize) -> TunedCuts {
+    let cores = cores.max(1);
+    let kmax = cores.min(costs.len()).min(max_stages).max(1);
+    // One DP fill yields the optimal bottleneck for every candidate
+    // stage count; the plateau scan is a table lookup.
+    let per_k = bottlenecks_up_to(costs, kmax);
+    let plateau = {
+        let b = *per_k.last().expect("bottlenecks_up_to is non-empty");
+        b + b / PLATEAU_DIV
+    };
+    let k = per_k
+        .iter()
+        .position(|&b| b <= plateau)
+        .map(|idx| idx + 1)
+        .unwrap_or(per_k.len());
+    let ranges = partition_min_bottleneck(costs, k);
+    let stages = ranges.len();
+    let stage_costs_ns = range_costs(costs, &ranges);
+    let bottleneck_ns = stage_costs_ns.iter().copied().max().unwrap_or(0);
+    // A team worker splits one step at a time, so the heaviest measured
+    // step bounds how many workers can amortize their spawn cost.
+    let work_cap = ((costs.iter().copied().max().unwrap_or(0) / TEAM_SPAWN_NS).min(1 << 16)
+        as usize)
+        .max(1);
+    let team = if stages == 1 {
+        // One stage: every splittable step belongs to the "dominant"
+        // stage, so the core budget becomes the team — as far as the
+        // measured step weights can keep that many workers fed.
+        cores.min(work_cap)
+    } else {
+        let runner_up = {
+            let mut sorted = stage_costs_ns.clone();
+            sorted.sort_unstable();
+            sorted[sorted.len() - 2]
+        };
+        let imbalance = bottleneck_ns as f64 / runner_up.max(1) as f64;
+        // Team threads run inside the bottleneck stage's thread, so the
+        // concurrency peak is (stages - 1) + team.
+        let spare = cores - stages + 1;
+        if imbalance >= TEAM_IMBALANCE {
+            spare.min(imbalance.ceil() as usize).min(work_cap).max(1)
+        } else {
+            1
+        }
+    };
+    TunedCuts { ranges, stages, team, stage_costs_ns, bottleneck_ns }
+}
+
+/// Profile one plan and choose its cuts — the per-group-size unit of
+/// calibration work (`runtime::LoadedModel::autotuned` caches one of
+/// these per distinct group-batch size).
+pub fn tune_plan(plan: &ExecutionPlan, opts: &TuneOptions) -> (StepProfile, TunedCuts) {
+    let profile = profile_plan(plan, &opts.profile);
+    let cuts = choose_cuts(&profile.costs_ns, opts.budget());
+    (profile, cuts)
+}
+
+/// One calibrated group-batch size: the measurements, the decision, and
+/// the cuts the cycle model would have picked at the same stage count
+/// (so reports show where measurement disagreed with the model).
+#[derive(Clone, Debug)]
+pub struct TuneEntry {
+    /// Group-batch size the profiled plan was compiled for.
+    pub group: usize,
+    pub profile: StepProfile,
+    pub cuts: TunedCuts,
+    /// `partition_min_bottleneck` over the *modeled* step costs at
+    /// `cuts.stages` — the static path's cut for comparison.
+    pub model_ranges: Vec<(usize, usize)>,
+}
+
+impl TuneEntry {
+    /// Build an entry for a plan: profile it, choose cuts, and record
+    /// the model's counterfactual cut at the same stage count.
+    pub fn calibrate(plan: &ExecutionPlan, opts: &TuneOptions) -> TuneEntry {
+        let (profile, cuts) = tune_plan(plan, opts);
+        let model_ranges = partition_min_bottleneck(&plan.step_costs(), cuts.stages);
+        TuneEntry { group: plan.batch(), profile, cuts, model_ranges }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ranges_json = |rs: &[(usize, usize)]| {
+            let mut arr = Json::Arr(vec![]);
+            for &(a, b) in rs {
+                arr.push(Json::from(vec![a, b]));
+            }
+            arr
+        };
+        Json::from_pairs(vec![
+            ("group", Json::from(self.group)),
+            ("stages", Json::from(self.cuts.stages)),
+            ("team", Json::from(self.cuts.team)),
+            ("bottleneck_ns", Json::from(self.cuts.bottleneck_ns as f64)),
+            (
+                "stage_ns",
+                Json::Arr(
+                    self.cuts.stage_costs_ns.iter().map(|&c| Json::from(c as f64)).collect(),
+                ),
+            ),
+            ("ranges", ranges_json(&self.cuts.ranges)),
+            ("model_ranges", ranges_json(&self.model_ranges)),
+            (
+                "matches_model_cuts",
+                Json::from(self.cuts.ranges == self.model_ranges),
+            ),
+            ("profile", self.profile.to_json()),
+        ])
+    }
+}
+
+/// Whole-model calibration report: every group-batch size profiled while
+/// tuning one model, plus the configuration that was chosen to serve.
+/// Exportable as JSON (`hpipe tune --out`, the bench artifacts) and
+/// printable as a summary table.
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    /// Model (or workload) name the calibration ran for.
+    pub model: String,
+    /// Core budget the choices were made against.
+    pub cores: usize,
+    /// Serving batch the model was loaded with.
+    pub batch: usize,
+    /// Group-batch size whose entry was chosen for serving.
+    pub chosen_group: usize,
+    /// One entry per distinct profiled group size, ascending.
+    pub entries: Vec<TuneEntry>,
+}
+
+impl TuneReport {
+    /// The entry calibrated at `group`, if that group size was profiled.
+    pub fn entry(&self, group: usize) -> Option<&TuneEntry> {
+        self.entries.iter().find(|e| e.group == group)
+    }
+
+    /// The entry serving traffic (the chosen group's calibration).
+    pub fn chosen(&self) -> Option<&TuneEntry> {
+        self.entry(self.chosen_group)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("model", Json::from(self.model.as_str())),
+            ("cores", Json::from(self.cores)),
+            ("batch", Json::from(self.batch)),
+            ("chosen_group", Json::from(self.chosen_group)),
+            (
+                "entries",
+                Json::Arr(self.entries.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable calibration summary.
+    pub fn print(&self) {
+        println!(
+            "tune report: model={} cores={} batch={} chosen_group={}",
+            self.model, self.cores, self.batch, self.chosen_group
+        );
+        for e in &self.entries {
+            let marker = if e.group == self.chosen_group { " <- serving" } else { "" };
+            println!(
+                "  group {:>3}: stages={} team={} bottleneck={:.3}ms stage_ms={:?} \
+                 model_cuts_agree={}{marker}",
+                e.group,
+                e.cuts.stages,
+                e.cuts.team,
+                e.cuts.bottleneck_ns as f64 / 1e6,
+                e.cuts
+                    .stage_costs_ns
+                    .iter()
+                    .map(|&c| (c as f64 / 1e4).round() / 100.0)
+                    .collect::<Vec<_>>(),
+                e.cuts.ranges == e.model_ranges,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{tiny_cnn, NetConfig};
+    use crate::sparsity::prune_graph;
+
+    /// A measured cost in the magnitude real conv steps profile at
+    /// (milliseconds-ish), so the spawn-amortization cap never binds in
+    /// tests that pin the stage/imbalance logic.
+    const MS: u64 = 1_000_000;
+
+    /// Known costs → known cuts: the deterministic-tuner contract.
+    #[test]
+    fn skewed_costs_isolate_the_bottleneck_and_team_it() {
+        let cuts = choose_cuts(&[10 * MS, MS, MS, MS], 4);
+        // two stages suffice (the bottleneck step caps every deeper cut)
+        assert_eq!(cuts.ranges, vec![(0, 1), (1, 4)]);
+        assert_eq!(cuts.stages, 2);
+        assert_eq!(cuts.stage_costs_ns, vec![10 * MS, 3 * MS]);
+        assert_eq!(cuts.bottleneck_ns, 10 * MS);
+        // 10 vs 3: imbalance 3.33 → spend the spare cores as a team of 3
+        assert_eq!(cuts.team, 3);
+    }
+
+    #[test]
+    fn balanced_costs_use_all_cores_as_stages_with_no_team() {
+        let cuts = choose_cuts(&[4 * MS, 4 * MS, 4 * MS, 4 * MS], 4);
+        assert_eq!(cuts.ranges, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert_eq!(cuts.team, 1, "balanced stages must not spawn a team");
+        // fewer cores clamp the stage count
+        let cuts2 = choose_cuts(&[4 * MS, 4 * MS, 4 * MS, 4 * MS], 2);
+        assert_eq!(cuts2.stages, 2);
+        assert_eq!(cuts2.bottleneck_ns, 8 * MS);
+        assert_eq!(cuts2.team, 1);
+    }
+
+    #[test]
+    fn single_step_gets_the_whole_budget_as_a_team() {
+        let cuts = choose_cuts(&[8 * MS], 4);
+        assert_eq!(cuts.ranges, vec![(0, 1)]);
+        assert_eq!(cuts.stages, 1);
+        assert_eq!(cuts.team, 4);
+    }
+
+    #[test]
+    fn one_core_means_sequential() {
+        let cuts = choose_cuts(&[5 * MS, 9 * MS, 2 * MS], 1);
+        assert_eq!(cuts.stages, 1);
+        assert_eq!(cuts.team, 1);
+    }
+
+    #[test]
+    fn team_is_capped_by_spare_cores() {
+        // bottleneck 100 vs runner-up 4 wants a huge team, but only
+        // cores - stages + 1 threads are spare
+        let cuts = choose_cuts(&[100 * MS, 2 * MS, 2 * MS], 3);
+        assert_eq!(cuts.stages, 2);
+        assert_eq!(cuts.team, 2);
+    }
+
+    #[test]
+    fn tiny_measured_steps_never_spawn_teams() {
+        // the heaviest step measures ~8µs: a worker's spawn would cost
+        // more than the work it takes on, so the budget stays unused
+        // rather than oversubscribed (the stages==1 branch included)
+        let cuts = choose_cuts(&[8_000], 16);
+        assert_eq!((cuts.stages, cuts.team), (1, 1));
+        // skewed multi-stage case: imbalance asks for 4 workers, but
+        // the 120µs bottleneck step only amortizes 2 spawns
+        let cuts = choose_cuts(&[120_000, 10_000, 10_000, 10_000], 8);
+        assert_eq!(cuts.stages, 2);
+        assert_eq!(cuts.team, 2, "team capped by spawn amortization");
+    }
+
+    #[test]
+    fn stage_cap_limits_depth_and_redirects_cores_to_the_team() {
+        let balanced = [4 * MS, 4 * MS, 4 * MS, 4 * MS];
+        // uncapped, 4 balanced steps on 4 cores become 4 stages...
+        assert_eq!(choose_cuts(&balanced, 4).stages, 4);
+        // ...but with only 2 items ever in flight, depth is capped and
+        // the imbalance check runs on the capped cut
+        let capped = choose_cuts_capped(&balanced, 4, 2);
+        assert_eq!(capped.stages, 2);
+        assert_eq!(capped.team, 1, "balanced capped stages need no team");
+        // a cap of 1 degenerates to the whole budget as a team
+        let solo = choose_cuts_capped(&balanced, 4, 1);
+        assert_eq!((solo.stages, solo.team), (1, 4));
+    }
+
+    #[test]
+    fn plateau_prefers_fewer_stages() {
+        // the second step dominates any cut; 2 stages already reach the
+        // floor, so 4 cores must not produce 4 stages of handoffs
+        let cuts = choose_cuts(&[MS, 40 * MS, MS, MS], 4);
+        assert_eq!(cuts.bottleneck_ns, 40 * MS);
+        assert!(cuts.stages <= 3, "stages {} past the plateau", cuts.stages);
+    }
+
+    #[test]
+    fn tune_plan_profiles_and_chooses_consistently() {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.6);
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let opts = TuneOptions {
+            cores: 4,
+            profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+        };
+        let (profile, cuts) = tune_plan(&plan, &opts);
+        assert_eq!(profile.costs_ns.len(), plan.steps.len());
+        assert!(cuts.stages >= 1 && cuts.stages <= 4);
+        assert_eq!(cuts.stages, cuts.ranges.len());
+        assert_eq!(choose_cuts(&profile.costs_ns, 4), cuts, "policy must be deterministic");
+    }
+
+    #[test]
+    fn tune_report_json_shape() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let opts = TuneOptions {
+            cores: 2,
+            profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+        };
+        let entry = TuneEntry::calibrate(&plan, &opts);
+        let report = TuneReport {
+            model: "tinycnn".into(),
+            cores: 2,
+            batch: 1,
+            chosen_group: 1,
+            entries: vec![entry],
+        };
+        assert!(report.chosen().is_some());
+        let parsed = Json::parse(&report.to_json().pretty()).unwrap();
+        assert_eq!(parsed.get("model").as_str(), Some("tinycnn"));
+        let entries = parsed.get("entries").as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("group").as_usize(), Some(1));
+        assert!(entries[0].get("profile").get("steps").as_arr().is_some());
+        assert!(entries[0].get("ranges").as_arr().is_some());
+    }
+}

@@ -5,7 +5,7 @@
 //!             [--out DIR] [--full-scale] [--per-layer]    compile a plan
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
 //!   serve     --model DIR [--requests N] [--batch N] [--threads N]
-//!             [--team N]                              exec serving demo
+//!             [--team N] [--autotune] [--json FILE]   exec serving demo
 //!                            (--batch N serves through *natively
 //!                            batched* plans — one weight-stream walk
 //!                            feeds the whole batch; threads > 1
@@ -13,11 +13,34 @@
 //!                            pipeline; team > 1 splits the dominant
 //!                            stage's conv rows across an intra-stage
 //!                            worker team — the software
-//!                            `n_channel_splits` knob)
+//!                            `n_channel_splits` knob. --autotune
+//!                            replaces both knobs with calibration:
+//!                            warmup images are profiled through the
+//!                            sequential plan and *measured* step costs
+//!                            cut the stages, size the team from stage
+//!                            imbalance + core count, and re-cut per
+//!                            group-batch size. --json dumps the
+//!                            machine-readable ServeReport.)
+//!   tune      --net <name> [--sparsity F] [--batch N] [--cores N]
+//!             [--runs K] [--out FILE]    profile-guided calibration:
+//!                            print (and optionally dump as JSON) the
+//!                            TuneReport — measured per-step costs,
+//!                            chosen stage cuts, team size and
+//!                            per-group-size repartitioning
 //!   accuracy  --net <name> [--bits N]          fixed-point vs f32 study
 //!
 //! `hpipe compile --net resnet50 --sparsity 0.85 --dsp-target 5000
 //!  --full-scale` reproduces the paper's main configuration.
+//!
+//! Sample `hpipe tune --net tinycnn --batch 8 --cores 4` output:
+//!
+//! ```text
+//! tune report: model=tinycnn cores=4 batch=8 chosen_group=4
+//!   group   4: stages=2 team=2 bottleneck=0.392ms stage_ms=[0.39, 0.31] \
+//!              model_cuts_agree=false <- serving
+//!   group   8: stages=2 team=2 bottleneck=0.781ms stage_ms=[0.78, 0.64] \
+//!              model_cuts_agree=false
+//! ```
 
 use hpipe::arch::device_by_name;
 use hpipe::compile::{codegen, compile, CompileOptions};
@@ -39,10 +62,11 @@ fn main() -> Result<()> {
         Some("compile") => cmd_compile(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("tune") => cmd_tune(&args),
         Some("accuracy") => cmd_accuracy(&args),
         _ => {
             eprintln!(
-                "usage: hpipe <compile|simulate|serve|accuracy> [--flags]\n\
+                "usage: hpipe <compile|simulate|serve|tune|accuracy> [--flags]\n\
                  see `rust/src/main.rs` docs for the flag list"
             );
             std::process::exit(2);
@@ -168,12 +192,55 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.str("model", "artifacts"));
-    let requests = args.usize("requests", 64);
-    let batch = args.usize("batch", 8);
-    let threads = args.usize("threads", 1);
-    let team = args.usize("team", 1);
-    let mut report = hpipe::coordinator::serve_demo(&dir, requests, batch, threads, team)?;
+    let cfg = hpipe::coordinator::ServeConfig {
+        requests: args.usize("requests", 64),
+        max_batch: args.usize("batch", 8),
+        threads: args.usize("threads", 1),
+        team: args.usize("team", 1),
+        autotune: args.bool("autotune"),
+    };
+    let mut report = hpipe::coordinator::serve_demo(&dir, &cfg)?;
     report.print();
+    if let Some(path) = args.opt("json") {
+        std::fs::write(path, report.to_json().pretty())
+            .with_context(|| format!("writing serve report to {path}"))?;
+        println!("wrote serve report to {path}");
+    }
+    Ok(())
+}
+
+/// Profile-guided calibration without serving: build the network, run
+/// the autotuner's measurement + cut policy, and print (or dump) the
+/// resulting `TuneReport`.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use hpipe::exec::{ProfileOptions, TuneOptions};
+    use hpipe::runtime::LoadedModel;
+    let net = args.str("net", "tinycnn");
+    let batch = args.usize("batch", 8);
+    let sparsity = args.f64("sparsity", 0.0);
+    let mut g = build_named(&net, NetConfig::test_scale())
+        .with_context(|| format!("unknown network '{net}'"))?;
+    if sparsity > 0.0 {
+        prune_graph(&mut g, sparsity);
+    }
+    let (g, _) = optimize(&g);
+    let opts = TuneOptions {
+        cores: args.usize("cores", 0),
+        profile: ProfileOptions {
+            runs: args.usize("runs", 5),
+            ..Default::default()
+        },
+    };
+    let t0 = std::time::Instant::now();
+    let model = LoadedModel::autotuned(&net, &g, batch, &opts)?;
+    let report = model.tune_report().expect("autotuned model carries a report");
+    println!("calibrated '{net}' (batch {batch}) in {:?}", t0.elapsed());
+    report.print();
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, report.to_json().pretty())
+            .with_context(|| format!("writing tune report to {path}"))?;
+        println!("wrote tune report to {path}");
+    }
     Ok(())
 }
 

@@ -25,7 +25,7 @@
 //! for single-image requests ([`LoadedModel::run_one`]: lowest latency,
 //! no batching or handoff cost).
 
-use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan};
+use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan, TuneEntry, TuneOptions, TuneReport};
 use crate::graph::{graphdef, Graph, Op, Tensor};
 use crate::sparsity::prune_tensor;
 use crate::util::error::{Context, Result};
@@ -62,6 +62,9 @@ pub struct LoadedModel {
     ctx: RefCell<Option<ExecContext>>,
     /// Context for the latency plan, allocated on first `run_one`.
     latency_ctx: RefCell<Option<ExecContext>>,
+    /// Calibration report when the model was loaded through
+    /// [`Self::autotuned`]; `None` on the static (model-driven) path.
+    tune: Option<TuneReport>,
 }
 
 /// Images per plan execution for a `batch`-image model served through
@@ -89,6 +92,42 @@ fn group_size(batch: usize, threads: usize) -> usize {
     largest(threads).or_else(|| largest(2)).unwrap_or(1)
 }
 
+/// The single batch-1 Placeholder every servable graph must have:
+/// returns its (name, per-image shape). Shared by the static and
+/// autotuned load paths so violations surface as errors either way.
+fn single_placeholder(graph: &Graph) -> Result<(String, Vec<usize>)> {
+    let placeholders: Vec<(String, Vec<usize>)> = graph
+        .nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            Op::Placeholder { shape } => Some((n.name.clone(), shape.clone())),
+            _ => None,
+        })
+        .collect();
+    crate::ensure!(
+        placeholders.len() == 1,
+        "graph must have exactly one Placeholder input, found {}",
+        placeholders.len()
+    );
+    let (input_name, per_image_shape) = placeholders.into_iter().next().unwrap();
+    crate::ensure!(
+        per_image_shape.first() == Some(&1),
+        "placeholder '{input_name}' must have batch dim 1, has shape {per_image_shape:?}"
+    );
+    Ok((input_name, per_image_shape))
+}
+
+/// Build a batch-`group` plan and run the serving-path sanity checks.
+fn checked_batched_plan(graph: &Graph, group: usize, input_name: &str) -> Result<ExecutionPlan> {
+    let plan = ExecutionPlan::build_batched(graph, group)?;
+    crate::ensure!(plan.num_outputs() >= 1, "graph has no outputs");
+    crate::ensure!(
+        plan.num_feeds() == 1 && plan.feed_name(0) == input_name,
+        "plan feed binding does not match placeholder '{input_name}'"
+    );
+    Ok(plan)
+}
+
 impl LoadedModel {
     /// Compile a graph into a runnable model with the default
     /// single-threaded (sequential) execution.
@@ -113,34 +152,12 @@ impl LoadedModel {
         threads: usize,
         team: usize,
     ) -> Result<LoadedModel> {
-        let placeholders: Vec<(String, Vec<usize>)> = graph
-            .nodes
-            .iter()
-            .filter_map(|n| match &n.op {
-                Op::Placeholder { shape } => Some((n.name.clone(), shape.clone())),
-                _ => None,
-            })
-            .collect();
-        crate::ensure!(
-            placeholders.len() == 1,
-            "graph must have exactly one Placeholder input, found {}",
-            placeholders.len()
-        );
-        let (input_name, per_image_shape) = placeholders.into_iter().next().unwrap();
-        crate::ensure!(
-            per_image_shape.first() == Some(&1),
-            "placeholder '{input_name}' must have batch dim 1, has shape {per_image_shape:?}"
-        );
+        let (input_name, per_image_shape) = single_placeholder(graph)?;
         crate::ensure!(batch >= 1, "batch must be >= 1");
         crate::ensure!(threads >= 1, "threads must be >= 1");
         crate::ensure!(team >= 1, "team must be >= 1");
         let group = group_size(batch, threads);
-        let plan = ExecutionPlan::build_batched(graph, group)?;
-        crate::ensure!(plan.num_outputs() >= 1, "graph has no outputs");
-        crate::ensure!(
-            plan.num_feeds() == 1 && plan.feed_name(0) == input_name,
-            "plan feed binding does not match placeholder '{input_name}'"
-        );
+        let plan = checked_batched_plan(graph, group, &input_name)?;
         // Deliberately eager: the latency plan must be ready the moment
         // a single-image request arrives, not pay a full compile on the
         // first one. It does duplicate weight consts + RLE streams with
@@ -164,7 +181,115 @@ impl LoadedModel {
             latency,
             ctx: RefCell::new(None),
             latency_ctx: RefCell::new(None),
+            tune: None,
         })
+    }
+
+    /// Calibrate-then-serve: compile, **profile**, and cut the model's
+    /// plans from measured step costs instead of the cycle model — the
+    /// profile-guided Algorithm 1 variant. No `threads` / `team` knobs:
+    /// the stage count comes from the measured bottleneck plateau under
+    /// the core budget, the team size from measured stage imbalance and
+    /// the cores left over, and the serving group size gets its *own*
+    /// profile and cuts (batch-aware repartitioning) — distinct group
+    /// sizes are calibrated once each and cached, never re-profiled.
+    /// The static model-driven path ([`Self::from_graph_with`]) remains
+    /// the default; this is opt-in (`Runtime::with_autotune`,
+    /// `hpipe serve --autotune`).
+    pub fn autotuned(
+        name: &str,
+        graph: &Graph,
+        batch: usize,
+        opts: &TuneOptions,
+    ) -> Result<LoadedModel> {
+        let (input_name, per_image_shape) = single_placeholder(graph)?;
+        crate::ensure!(batch >= 1, "batch must be >= 1");
+        let cores = opts.budget();
+        // Calibration cache: one (plan, entry) per distinct group-batch
+        // size. Pass 2 reuses pass 1's work whenever the group size
+        // doesn't change.
+        let mut cache: BTreeMap<usize, (ExecutionPlan, TuneEntry)> = BTreeMap::new();
+        let calibrate = |group: usize,
+                         cache: &mut BTreeMap<usize, (ExecutionPlan, TuneEntry)>|
+         -> Result<()> {
+            if let std::collections::btree_map::Entry::Vacant(slot) = cache.entry(group) {
+                let plan = checked_batched_plan(graph, group, &input_name)?;
+                let entry = TuneEntry::calibrate(&plan, opts);
+                slot.insert((plan, entry));
+            }
+            Ok(())
+        };
+        // Pass 1: the whole batch as one group — its measured costs pick
+        // the stage count, which in turn decides the serving group size
+        // (stages-in-flight vs weight amortization, as on the static
+        // path, but from a measured stage count).
+        calibrate(batch, &mut cache)?;
+        let stages_pass1 = cache[&batch].1.cuts.stages;
+        let group = group_size(batch, stages_pass1);
+        // Pass 2: the serving group's plan gets its own profile + cuts.
+        calibrate(group, &mut cache)?;
+        let chosen = cache[&group].1.clone();
+        // A serving call streams batch/group groups; a pipeline deeper
+        // than that never fills (pass 2's flatter per-group profile can
+        // ask for more stages than pass 1's group size admits). Cap the
+        // depth at groups-in-flight — the static path's `group_size`
+        // invariant — and let the freed cores flow into the team.
+        let groups_in_flight = (batch / group).max(1);
+        let cuts = if chosen.cuts.stages > groups_in_flight {
+            crate::exec::tune::choose_cuts_capped(
+                &chosen.profile.costs_ns,
+                cores,
+                groups_in_flight,
+            )
+        } else {
+            chosen.cuts.clone()
+        };
+        let mut entries: Vec<TuneEntry> = cache.values().map(|(_, e)| e.clone()).collect();
+        let (plan, _) = cache.remove(&group).expect("group was calibrated");
+        // the report records what actually serves: the capped cuts and
+        // the model's counterfactual at the same stage count
+        if let Some(e) = entries.iter_mut().find(|e| e.group == group) {
+            if e.cuts != cuts {
+                e.model_ranges = crate::util::partition::partition_min_bottleneck(
+                    &plan.step_costs(),
+                    cuts.stages,
+                );
+                e.cuts = cuts.clone();
+            }
+        }
+        let latency = if group > 1 {
+            Some(ExecutionPlan::build(graph)?)
+        } else {
+            None
+        };
+        let (stages, team) = (cuts.stages, cuts.team);
+        let pipeline = PipelinePlan::from_profile(plan, &chosen.profile, stages, team);
+        let mut input_shape = per_image_shape;
+        input_shape[0] = batch;
+        Ok(LoadedModel {
+            name: name.to_string(),
+            batch,
+            threads: stages,
+            team,
+            input_shape,
+            pipeline,
+            latency,
+            ctx: RefCell::new(None),
+            latency_ctx: RefCell::new(None),
+            tune: Some(TuneReport {
+                model: name.to_string(),
+                cores,
+                batch,
+                chosen_group: group,
+                entries,
+            }),
+        })
+    }
+
+    /// The calibration report, when this model was loaded through
+    /// [`Self::autotuned`].
+    pub fn tune_report(&self) -> Option<&TuneReport> {
+        self.tune.as_ref()
     }
 
     /// Plan composition counters (sparse vs dense kernels, fusions...).
@@ -180,6 +305,13 @@ impl LoadedModel {
     /// Images per native plan execution (the batched plan's batch dim).
     pub fn group(&self) -> usize {
         self.pipeline.plan().batch()
+    }
+
+    /// True when [`Self::run_all`] routes batches through the layer
+    /// pipeline (stage threads / worker team), so the pipeline's stage
+    /// counters actually accumulate; false for purely sequential models.
+    pub fn serves_pipelined(&self) -> bool {
+        (self.threads > 1 && self.batch > self.group()) || self.team > 1
     }
 
     /// Run one batch. `input` is row-major f32 of `input_shape` (with
@@ -214,7 +346,7 @@ impl LoadedModel {
         }
         let plan = self.pipeline.plan();
         let group = plan.batch();
-        if (self.threads > 1 && self.batch > group) || self.team > 1 {
+        if self.serves_pipelined() {
             // Throughput path: stream the batch through the layer
             // pipeline, several batched groups in flight across stage
             // threads (one boundary handoff per group, not per image).
@@ -281,6 +413,10 @@ pub struct Runtime {
     /// Intra-stage worker-team size for subsequently loaded models (see
     /// [`Runtime::with_team`]); 1 = no splitting.
     pub team: usize,
+    /// When set, subsequently loaded models calibrate through
+    /// [`LoadedModel::autotuned`] — measured cuts, measured team, per
+    /// group-size repartitioning — and `threads` / `team` are ignored.
+    pub autotune: Option<TuneOptions>,
     models: BTreeMap<String, LoadedModel>,
 }
 
@@ -292,6 +428,7 @@ impl Runtime {
             artifacts_dir: artifacts_dir.to_path_buf(),
             threads: 1,
             team: 1,
+            autotune: None,
             models: BTreeMap::new(),
         })
     }
@@ -310,14 +447,26 @@ impl Runtime {
         self
     }
 
+    /// Calibrate subsequently loaded models with the profile-guided
+    /// autotuner (overrides `threads` / `team` for those models).
+    pub fn with_autotune(mut self, opts: TuneOptions) -> Runtime {
+        self.autotune = Some(opts);
+        self
+    }
+
     pub fn platform(&self) -> String {
         "exec-cpu".to_string()
     }
 
-    /// Compile a graph into a named executable.
+    /// Compile a graph into a named executable (calibrating it first
+    /// when the runtime was configured with [`Runtime::with_autotune`]).
     pub fn load_graph(&mut self, name: &str, graph: &Graph, batch: usize) -> Result<()> {
-        let model = LoadedModel::from_graph_with(name, graph, batch, self.threads, self.team)
-            .with_context(|| format!("compiling model '{name}'"))?;
+        let model = match &self.autotune {
+            Some(opts) => LoadedModel::autotuned(name, graph, batch, opts)
+                .with_context(|| format!("calibrating model '{name}'"))?,
+            None => LoadedModel::from_graph_with(name, graph, batch, self.threads, self.team)
+                .with_context(|| format!("compiling model '{name}'"))?,
+        };
         self.models.insert(name.to_string(), model);
         Ok(())
     }
@@ -527,6 +676,69 @@ mod tests {
         let want = seq.run(&input).unwrap();
         assert_eq!(want, solo_team.run(&input).unwrap());
         assert_eq!(want, piped_team.run(&input).unwrap());
+    }
+
+    #[test]
+    fn autotuned_model_serves_measured_cuts() {
+        use crate::exec::ProfileOptions;
+        let g = tiny_cnn(NetConfig::test_scale());
+        let opts = TuneOptions {
+            cores: 4,
+            profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+        };
+        let tuned = LoadedModel::autotuned("tuned", &g, 8, &opts).unwrap();
+        let report = tuned.tune_report().unwrap();
+        assert_eq!(report.batch, 8);
+        assert_eq!(report.cores, 4);
+        let chosen = report.chosen().expect("chosen group calibrated");
+        // the serving pipeline runs the measured cuts and measured team
+        assert_eq!(tuned.pipeline().num_stages(), chosen.cuts.stages);
+        assert_eq!(tuned.pipeline().team(), chosen.cuts.team);
+        assert_eq!(tuned.group(), report.chosen_group);
+        // the chosen group's cuts were measured on ITS plan, not B=1's
+        assert_eq!(chosen.profile.batch, report.chosen_group);
+        assert_eq!(tuned.pipeline().stage_ranges(), &chosen.cuts.ranges[..]);
+        // cuts only move work between threads: results match the static
+        // model (cross-batch dense paths are ULP-level, use tolerance)
+        let seq = LoadedModel::from_graph("seq", &g, 8).unwrap();
+        let n: usize = seq.input_shape.iter().product();
+        let mut rng = Rng::new(77);
+        let input: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (a, b) = (seq.run(&input).unwrap(), tuned.run(&input).unwrap());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn autotuned_single_core_stays_sequential() {
+        use crate::exec::ProfileOptions;
+        let g = tiny_cnn(NetConfig::test_scale());
+        let opts = TuneOptions {
+            cores: 1,
+            profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+        };
+        let m = LoadedModel::autotuned("solo", &g, 4, &opts).unwrap();
+        assert_eq!(m.pipeline().num_stages(), 1);
+        assert_eq!(m.pipeline().team(), 1);
+        // one group, one calibration entry — nothing re-profiled
+        assert_eq!(m.tune_report().unwrap().entries.len(), 1);
+    }
+
+    #[test]
+    fn autotuning_runtime_loads_calibrated_models() {
+        use crate::exec::ProfileOptions;
+        let g = tiny_cnn(NetConfig::test_scale());
+        let opts = TuneOptions {
+            cores: 2,
+            profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+        };
+        let mut rt = Runtime::cpu(Path::new("/nonexistent")).unwrap().with_autotune(opts);
+        rt.load_graph("tinycnn_b4", &g, 4).unwrap();
+        let m = rt.model("tinycnn_b4").unwrap();
+        assert!(m.tune_report().is_some());
+        assert!(m.pipeline().num_stages() <= 2);
     }
 
     #[test]

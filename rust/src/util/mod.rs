@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod partition;
 pub mod prop;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,180 @@
+//! Shared minimum-bottleneck contiguous partitioner.
+//!
+//! The classic linear-partition DP: split a cost sequence into `k`
+//! contiguous, non-empty parts minimizing the largest part sum. This is
+//! the software analog of HPIPE's balance-to-the-slowest-stage resource
+//! allocation (Algorithm 1's objective), and it is deliberately
+//! cost-model-agnostic: `exec::pipeline` feeds it the compile-side cycle
+//! model's per-step estimates, while `exec::tune` feeds it *measured*
+//! per-step wall times — the profile-guided variant. Keeping one tested
+//! implementation here replaces the private copy that used to live in
+//! `exec::pipeline` next to the parallel bottleneck-chasing logic of
+//! `compile::balance` / `baselines::partitioning`.
+
+/// The DP tables: `dp[j][i]` is the minimal bottleneck covering the
+/// first `i` costs with `j` parts; `cut[j][i]` is where part `j` starts
+/// in that optimum. One fill serves both range reconstruction and the
+/// all-part-counts bottleneck query.
+#[allow(clippy::type_complexity)] // two parallel (k+1)×(n+1) tables
+fn dp_tables(costs: &[u64], k: usize) -> (Vec<Vec<u64>>, Vec<Vec<usize>>) {
+    let n = costs.len();
+    let prefix = prefix_sums(costs);
+    let mut dp = vec![vec![u64::MAX; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0;
+    for j in 1..=k {
+        for i in j..=n {
+            for t in (j - 1)..i {
+                if dp[j - 1][t] == u64::MAX {
+                    continue;
+                }
+                let cand = dp[j - 1][t].max(prefix[i] - prefix[t]);
+                if cand < dp[j][i] {
+                    dp[j][i] = cand;
+                    cut[j][i] = t;
+                }
+            }
+        }
+    }
+    (dp, cut)
+}
+
+/// Contiguous partition of `costs` into `k` non-empty parts minimizing
+/// the bottleneck (largest part sum). Returns `k` half-open index
+/// ranges; `k` is clamped to `[1, costs.len()]` (an empty cost list
+/// yields the single empty range).
+pub fn partition_min_bottleneck(costs: &[u64], k: usize) -> Vec<(usize, usize)> {
+    let n = costs.len();
+    if n == 0 {
+        return vec![(0, 0)];
+    }
+    let k = k.clamp(1, n);
+    let (_, cut) = dp_tables(costs, k);
+    let mut bounds = vec![0usize; k + 1];
+    bounds[k] = n;
+    let mut i = n;
+    for j in (1..=k).rev() {
+        i = cut[j][i];
+        bounds[j - 1] = i;
+    }
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+/// Optimal bottleneck for *every* part count in one DP fill:
+/// `result[j - 1]` is the minimal largest-part sum over `j` contiguous
+/// non-empty parts, for `j` in `1..=k` (clamped to `costs.len()`). The
+/// tuner's stage-count search reads this instead of re-running the DP
+/// per candidate. An empty cost list yields `vec![0]`.
+pub fn bottlenecks_up_to(costs: &[u64], k: usize) -> Vec<u64> {
+    let n = costs.len();
+    if n == 0 {
+        return vec![0];
+    }
+    let k = k.clamp(1, n);
+    let (dp, _) = dp_tables(costs, k);
+    (1..=k).map(|j| dp[j][n]).collect()
+}
+
+/// Sum of each range's costs (the per-part totals of a partition).
+pub fn range_costs(costs: &[u64], ranges: &[(usize, usize)]) -> Vec<u64> {
+    ranges
+        .iter()
+        .map(|&(a, b)| costs[a..b].iter().sum())
+        .collect()
+}
+
+/// The bottleneck (largest part sum) of a partition.
+pub fn bottleneck(costs: &[u64], ranges: &[(usize, usize)]) -> u64 {
+    range_costs(costs, ranges).into_iter().max().unwrap_or(0)
+}
+
+fn prefix_sums(costs: &[u64]) -> Vec<u64> {
+    let mut prefix = vec![0u64; costs.len() + 1];
+    for (i, &c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    prefix
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        let costs = [4u64, 4, 4, 4];
+        assert_eq!(partition_min_bottleneck(&costs, 2), vec![(0, 2), (2, 4)]);
+        assert_eq!(
+            partition_min_bottleneck(&costs, 4),
+            vec![(0, 1), (1, 2), (2, 3), (3, 4)]
+        );
+        // the dominant step gets a stage of its own
+        let skewed = [10u64, 1, 1, 1];
+        assert_eq!(partition_min_bottleneck(&skewed, 2), vec![(0, 1), (1, 4)]);
+        // more parts than steps clamps
+        assert_eq!(partition_min_bottleneck(&[3u64], 4), vec![(0, 1)]);
+        // empty input degenerates to one empty range
+        assert_eq!(partition_min_bottleneck(&[], 3), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn more_parts_never_raise_the_bottleneck() {
+        let costs = [7u64, 2, 9, 1, 4, 4, 3, 8];
+        let b =
+            |k: usize| -> u64 { bottleneck(&costs, &partition_min_bottleneck(&costs, k)) };
+        for k in 1..costs.len() {
+            assert!(b(k + 1) <= b(k), "k={k}: {} > {}", b(k + 1), b(k));
+        }
+        // with one part per step the bottleneck is the largest step
+        assert_eq!(b(costs.len()), 9);
+        assert_eq!(b(1), costs.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn partition_is_optimal_on_small_inputs() {
+        // brute-force all 2-part cuts and compare
+        let costs = [5u64, 3, 8, 2, 6];
+        let best_2 = (1..costs.len())
+            .map(|c| {
+                let left: u64 = costs[..c].iter().sum();
+                let right: u64 = costs[c..].iter().sum();
+                left.max(right)
+            })
+            .min()
+            .unwrap();
+        assert_eq!(
+            bottleneck(&costs, &partition_min_bottleneck(&costs, 2)),
+            best_2
+        );
+    }
+
+    #[test]
+    fn bottlenecks_up_to_matches_per_k_partitions() {
+        let costs = [7u64, 2, 9, 1, 4, 4, 3, 8];
+        let all = bottlenecks_up_to(&costs, costs.len());
+        assert_eq!(all.len(), costs.len());
+        for (j, &b) in all.iter().enumerate() {
+            let direct = bottleneck(&costs, &partition_min_bottleneck(&costs, j + 1));
+            assert_eq!(b, direct, "k={}", j + 1);
+        }
+        // clamped and empty edges
+        assert_eq!(bottlenecks_up_to(&[5], 4), vec![5]);
+        assert_eq!(bottlenecks_up_to(&[], 3), vec![0]);
+    }
+
+    #[test]
+    fn range_costs_sum_to_total() {
+        let costs = [1u64, 2, 3, 4, 5];
+        for k in 1..=5 {
+            let ranges = partition_min_bottleneck(&costs, k);
+            assert_eq!(range_costs(&costs, &ranges).iter().sum::<u64>(), 15);
+            assert_eq!(ranges.len(), k);
+            // contiguous cover
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, costs.len());
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! module: warm up, run timed iterations, report min/median/mean/p95 in a
 //! stable text format that the EXPERIMENTS.md tables are built from.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -61,6 +62,29 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     let t0 = Instant::now();
     let r = f();
     (r, t0.elapsed())
+}
+
+/// Scoped monotonic timer: accumulates the enclosing scope's elapsed
+/// nanoseconds into an atomic sink on drop. The atomic sink makes the
+/// same instrument usable from the profiler's single-threaded
+/// step-timing loop and from the pipeline's per-stage busy/stall
+/// counters, where several worker threads record concurrently.
+pub struct ScopedNs<'a> {
+    t0: Instant,
+    sink: &'a AtomicU64,
+}
+
+impl<'a> ScopedNs<'a> {
+    pub fn new(sink: &'a AtomicU64) -> ScopedNs<'a> {
+        ScopedNs { t0: Instant::now(), sink }
+    }
+}
+
+impl Drop for ScopedNs<'_> {
+    fn drop(&mut self) {
+        let ns = self.t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.sink.fetch_add(ns, Ordering::Relaxed);
+    }
 }
 
 /// Pretty table printer for bench/report binaries: fixed-width columns.
@@ -134,6 +158,23 @@ mod tests {
         assert!(s.min <= s.median);
         assert!(s.median <= s.p95);
         assert_eq!(s.iters, 16);
+    }
+
+    #[test]
+    fn scoped_ns_accumulates() {
+        let sink = AtomicU64::new(0);
+        for _ in 0..2 {
+            let _t = ScopedNs::new(&sink);
+            std::hint::black_box(17 * 3);
+        }
+        // two scopes, both recorded (monotonic => nonzero on any clock
+        // with ns resolution; at worst equal)
+        let after_two = sink.load(Ordering::Relaxed);
+        {
+            let _t = ScopedNs::new(&sink);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(sink.load(Ordering::Relaxed) >= after_two + 1_000_000);
     }
 
     #[test]

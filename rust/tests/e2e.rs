@@ -7,7 +7,7 @@
 //! checkout. (The executor itself is covered without artifacts by
 //! `exec_equiv.rs` and the in-crate unit tests.)
 
-use hpipe::coordinator::serve_demo;
+use hpipe::coordinator::{serve_demo, ServeConfig};
 use hpipe::graph::{graphdef, Op, Tensor};
 use hpipe::interp;
 use hpipe::runtime::Runtime;
@@ -76,12 +76,31 @@ fn serve_demo_end_to_end() {
     let Some(dir) = artifacts_dir() else { return };
     // threads = 2 exercises the pipelined batch path end to end;
     // team = 2 additionally splits the dominant stage's conv rows
-    let mut report = serve_demo(&dir, 24, 4, 2, 2).unwrap();
+    let cfg = ServeConfig { requests: 24, max_batch: 4, threads: 2, team: 2, autotune: false };
+    let mut report = serve_demo(&dir, &cfg).unwrap();
     assert_eq!(report.requests, 24);
     assert!(report.batches >= 24 / 4);
     let (agree, total) = report.interp_agreement.unwrap();
     assert_eq!(agree, total, "executor and interpreter must classify alike");
     assert!(report.latency.percentile(50.0).as_micros() > 0);
+    // the pipelined serving model surfaces per-stage occupancy counters
+    assert!(!report.stages.is_empty());
+    assert!(report.stages.iter().any(|s| s.items > 0));
+}
+
+#[test]
+fn serve_demo_autotuned_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    // calibrate-then-serve: measured cuts + measured team, and the
+    // classifications must still agree with the interpreter exactly
+    let cfg = ServeConfig { requests: 24, max_batch: 4, autotune: true, ..Default::default() };
+    let mut report = serve_demo(&dir, &cfg).unwrap();
+    assert_eq!(report.requests, 24);
+    let (agree, total) = report.interp_agreement.unwrap();
+    assert_eq!(agree, total, "autotuned executor must classify like the interpreter");
+    // machine-readable report parses back
+    let parsed = hpipe::util::Json::parse(&report.to_json().pretty()).unwrap();
+    assert_eq!(parsed.get("requests").as_usize(), Some(24));
 }
 
 #[test]

@@ -20,7 +20,10 @@
 //!   batch-invariant *today*, but the contract we pin is a tight ULP
 //!   bound, leaving the microkernel free to retile its accumulation.
 
-use hpipe::exec::{ExecutionPlan, PipelinePlan, PlanOptions};
+use hpipe::exec::tune::tune_plan;
+use hpipe::exec::{
+    ExecutionPlan, PipelinePlan, PlanOptions, ProfileOptions, StepProfile, TuneOptions,
+};
 use hpipe::graph::{Graph, Op, Padding, Tensor};
 use hpipe::interp;
 use hpipe::nets::{tiny_cnn, NetBuilder, NetConfig};
@@ -575,6 +578,97 @@ fn batched_team_pipeline_matches_sequential_bitwise() {
                 &w.data[..],
                 "group {gi} output {oi}"
             );
+        }
+    }
+}
+
+/// ISSUE 5 tentpole invariance: a stage cut is a *scheduling* decision,
+/// never a numerical one. Pipelines cut from **arbitrary** measured-cost
+/// profiles (random synthetic [`StepProfile`]s — the adversarial stand-in
+/// for whatever a real profiling pass measures) × team {1, 2, 4} × batch
+/// {1, 3, 8} × sparsity {0.0, 0.5, 0.9} must match the same-batch
+/// sequential plan **bit for bit**: identical kernels in identical
+/// per-element order on both sides, whatever the cuts.
+#[test]
+fn prop_tuned_cuts_match_sequential_bitwise() {
+    let mut case = 0u64;
+    for &sparsity in &[0.0f64, 0.5, 0.9] {
+        for &batch in &[1usize, 3, 8] {
+            for &team in &[1usize, 2, 4] {
+                case += 1;
+                let mut rng = Rng::new(0x7C4ED ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+                let mut g = tiny_cnn(NetConfig::test_scale());
+                prune_graph(&mut g, sparsity);
+                let seq = ExecutionPlan::build_batched(&g, batch).unwrap();
+                let plan = ExecutionPlan::build_batched(&g, batch).unwrap();
+                let n_steps = plan.step_names().len();
+                // arbitrary "measured" costs — any cut must be harmless
+                let costs: Vec<u64> =
+                    (0..n_steps).map(|_| 1 + rng.below(1_000) as u64).collect();
+                let profile = StepProfile::synthetic(&plan, costs);
+                let stages = 1 + rng.below(4);
+                let pipe = PipelinePlan::from_profile(plan, &profile, stages, team);
+                let in_shape = match &g.get("input").unwrap().op {
+                    Op::Placeholder { shape } => shape.clone(),
+                    _ => unreachable!(),
+                };
+                let per: usize = in_shape.iter().product();
+                let mut bshape = in_shape.clone();
+                bshape[0] = batch;
+                let (groups, n_images) = (3usize, 3 * batch);
+                let input: Vec<f32> =
+                    (0..n_images * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let outs = pipe.run_batch(&input, n_images).unwrap();
+                for gi in 0..groups {
+                    let mut feeds = BTreeMap::new();
+                    feeds.insert(
+                        "input".to_string(),
+                        Tensor::from_vec(
+                            &bshape,
+                            input[gi * batch * per..(gi + 1) * batch * per].to_vec(),
+                        ),
+                    );
+                    let want = seq.run(&feeds).unwrap();
+                    for (oi, w) in want.iter().enumerate() {
+                        let po = w.data.len();
+                        assert_eq!(
+                            &outs[oi][gi * po..(gi + 1) * po],
+                            &w.data[..],
+                            "sparsity={sparsity} batch={batch} team={team} \
+                             stages={stages} group={gi} output={oi}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The real tuner end to end (profile → choose → cut → serve): its
+/// chosen configuration is held to the same bitwise bar.
+#[test]
+fn tuner_chosen_cuts_execute_bitwise() {
+    let mut g = tiny_cnn(NetConfig::test_scale());
+    prune_graph(&mut g, 0.7);
+    let seq = ExecutionPlan::build(&g).unwrap();
+    let plan = ExecutionPlan::build(&g).unwrap();
+    let opts = TuneOptions {
+        cores: 4,
+        profile: ProfileOptions { warmup: 1, runs: 2, ..Default::default() },
+    };
+    let (profile, cuts) = tune_plan(&plan, &opts);
+    let pipe = PipelinePlan::from_profile(plan, &profile, cuts.stages, cuts.team);
+    assert_eq!(pipe.num_stages(), cuts.stages);
+    assert_eq!(pipe.team(), cuts.team);
+    let mut rng = Rng::new(0x7D3);
+    let images: Vec<BTreeMap<String, Tensor>> =
+        (0..8).map(|_| g.random_feeds(&mut rng)).collect();
+    let got = pipe.run_stream(&images).unwrap();
+    for (i, fm) in images.iter().enumerate() {
+        let want = seq.run(fm).unwrap();
+        for (a, b) in got[i].iter().zip(&want) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data, "stages={} team={} image={i}", cuts.stages, cuts.team);
         }
     }
 }
