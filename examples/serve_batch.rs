@@ -16,7 +16,10 @@
 //! fourth argument > 1 splits the dominant stage's conv rows across an
 //! intra-stage worker team (the software `n_channel_splits` knob); a
 //! fifth argument `autotune` replaces both knobs with profile-guided
-//! calibration (measured stage cuts + measured team size).
+//! calibration (measured stage cuts + measured team size); a sixth
+//! argument sets a per-request deadline in milliseconds (late batches
+//! are answered `Expired`, never run) and a seventh bounds the
+//! admission queue (see `ServeConfig::queue_cap`).
 
 use hpipe::coordinator::{serve_demo, ServeConfig};
 use std::path::PathBuf;
@@ -29,6 +32,9 @@ fn main() -> hpipe::util::error::Result<()> {
         threads: args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1),
         team: args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1),
         autotune: args.get(5).map(|s| s == "autotune").unwrap_or(false),
+        deadline_ms: args.get(6).and_then(|s| s.parse().ok()),
+        queue_cap: args.get(7).and_then(|s| s.parse().ok()).unwrap_or(0),
+        ..Default::default()
     };
     let artifacts = PathBuf::from(
         std::env::var("HPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),

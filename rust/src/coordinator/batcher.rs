@@ -26,15 +26,18 @@ impl Default for BatchPolicy {
 }
 
 /// Drain up to `max_batch` items from the channel, blocking for the
-/// first one and then waiting at most `max_wait` for more. Returns an
-/// empty vec when the channel has disconnected and is empty.
-pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Vec<T> {
+/// first one and then waiting at most `max_wait` for more. The second
+/// return is the hangup flag: `true` once every sender has dropped, so
+/// the serving loop can flush whatever partial batch formed mid-drain
+/// and then end cleanly — disconnect-mid-batch must lose nothing.
+pub fn drain_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> (Vec<T>, bool) {
     let mut batch = Vec::with_capacity(policy.max_batch);
     // block for the first element
     match rx.recv() {
         Ok(item) => batch.push(item),
-        Err(_) => return batch,
+        Err(_) => return (batch, true),
     }
+    crate::util::fault::point("batcher.drain", 0);
     let deadline = Instant::now() + policy.max_wait;
     while batch.len() < policy.max_batch {
         let now = Instant::now();
@@ -44,10 +47,16 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Vec<T> {
         match rx.recv_timeout(deadline - now) {
             Ok(item) => batch.push(item),
             Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Disconnected) => return (batch, true),
         }
     }
-    batch
+    (batch, false)
+}
+
+/// [`drain_batch`] without the hangup flag: an empty vec then means the
+/// channel has disconnected and drained dry.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Vec<T> {
+    drain_batch(rx, policy).0
 }
 
 #[cfg(test)]
@@ -123,5 +132,29 @@ mod tests {
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         );
         assert_eq!(b2, vec![99]);
+    }
+
+    /// Disconnect *mid-batch*: items were queued, then the sender hung
+    /// up. The partial batch must come back together with the hangup
+    /// flag in one call — dropping the items (or reporting the hangup
+    /// one `next_batch` later, after a pointless block on `recv`) would
+    /// either lose accepted requests or stall shutdown.
+    #[test]
+    fn disconnect_mid_batch_flushes_items_and_flags_hangup() {
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let (b, hangup) = drain_batch(
+            &rx,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) },
+        );
+        assert_eq!(b, vec![0, 1, 2]);
+        assert!(hangup, "sender is gone; the drain must say so");
+        // and a fully drained, disconnected channel reports the same
+        let (b2, hangup2) = drain_batch(&rx, BatchPolicy::default());
+        assert!(b2.is_empty());
+        assert!(hangup2);
     }
 }

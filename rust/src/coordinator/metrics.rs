@@ -78,6 +78,21 @@ pub struct ServeReport {
     /// Per-stage busy / stall / items counters of the primary serving
     /// model's pipeline (empty when it ran purely sequentially).
     pub stages: Vec<StageMetrics>,
+    /// Requests refused at admission because the bounded queue was full
+    /// (shed-on-full policy; 0 under the blocking policy).
+    pub shed: usize,
+    /// Requests dropped before execution because their deadline had
+    /// already passed when their batch formed.
+    pub expired: usize,
+    /// Requests refused with a typed error before execution (wrong
+    /// input length, non-finite values).
+    pub rejected: usize,
+    /// Stage faults observed across the run's models (isolated panics;
+    /// each failed pipelined attempt counts one).
+    pub faults: usize,
+    /// Models that ended the run demoted to their sequential batch-1
+    /// fallback after repeated stage faults.
+    pub degraded: usize,
 }
 
 impl ServeReport {
@@ -113,7 +128,12 @@ impl ServeReport {
             .set("throughput_rps", Json::from(self.throughput()))
             .set("mean_batch", Json::from(self.mean_batch))
             .set("latency", latency)
-            .set("stages", stages);
+            .set("stages", stages)
+            .set("shed", Json::from(self.shed))
+            .set("expired", Json::from(self.expired))
+            .set("rejected", Json::from(self.rejected))
+            .set("faults", Json::from(self.faults))
+            .set("degraded", Json::from(self.degraded));
         if let Some((ok, total)) = self.interp_agreement {
             root.set(
                 "interp_agreement",
@@ -149,6 +169,13 @@ impl ServeReport {
                 .map(|s| format!("{:.0}%", s.occupancy() * 100.0))
                 .collect();
             println!("pipeline stage occupancy: [{}]", occ.join(" "));
+        }
+        if self.shed + self.expired + self.rejected + self.faults + self.degraded > 0 {
+            println!(
+                "robustness: {} shed, {} expired, {} rejected, {} stage faults, \
+                 {} models degraded",
+                self.shed, self.expired, self.rejected, self.faults, self.degraded
+            );
         }
         if let Some((ok, total)) = self.interp_agreement {
             println!("interp cross-check: {ok}/{total} argmax agreement");
@@ -234,8 +261,16 @@ mod tests {
         for us in [10u64, 20, 30, 40, 50, 60] {
             r.latency.record(Duration::from_micros(us));
         }
+        r.shed = 1;
+        r.expired = 2;
+        r.faults = 3;
         let parsed = Json::parse(&r.to_json().pretty()).unwrap();
         assert_eq!(parsed.get("requests").as_usize(), Some(6));
+        assert_eq!(parsed.get("shed").as_usize(), Some(1));
+        assert_eq!(parsed.get("expired").as_usize(), Some(2));
+        assert_eq!(parsed.get("rejected").as_usize(), Some(0));
+        assert_eq!(parsed.get("faults").as_usize(), Some(3));
+        assert_eq!(parsed.get("degraded").as_usize(), Some(0));
         assert_eq!(parsed.get("latency").get("p50_us").as_f64(), Some(30.0));
         let stages = parsed.get("stages").as_arr().unwrap();
         assert_eq!(stages.len(), 2);

@@ -11,6 +11,16 @@
 //! `examples/serve_batch.rs` and the e2e bench; it also cross-validates
 //! the executor's results against the Rust reference interpreter (the
 //! correctness oracle) on the same graphdef.
+//!
+//! Failure semantics: every accepted request gets an answer — a
+//! [`ClassResult`] or a typed [`RequestError`] — never silence. Expired
+//! deadlines and malformed payloads are refused before execution, a
+//! bounded queue sheds or blocks at admission ([`submit`]), stage
+//! faults are isolated inside the runtime's degrade ladder
+//! (`LoadedModel::run_all`), and a panic anywhere else in batch
+//! execution is caught here and answered as `RequestError::Failed` for
+//! that batch only. Sender hangup — even mid-batch — flushes the
+//! partial batch and ends the loop with a final [`ServeReport`].
 
 pub mod batcher;
 pub mod metrics;
@@ -21,19 +31,56 @@ use crate::interp;
 use crate::runtime::Runtime;
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
-use batcher::{next_batch, BatchPolicy};
+use batcher::{drain_batch, BatchPolicy};
 use metrics::{LatencyStats, ServeReport};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
-use std::sync::mpsc::{channel, Sender};
-use std::time::Instant;
+use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender, TrySendError};
+use std::time::{Duration, Instant};
 
 /// One inference request.
 pub struct Request {
     pub id: u64,
     pub data: Vec<f32>,
     pub submitted: Instant,
-    pub reply: Sender<ClassResult>,
+    /// Drop-dead time: if the batch containing this request has not
+    /// started executing by then, the coordinator answers
+    /// `Err(RequestError::Expired)` instead of running it (late answers
+    /// are worthless to a deadline-bound client, and skipping them
+    /// sheds exactly the load that made them late).
+    pub deadline: Option<Instant>,
+    pub reply: Sender<Reply>,
 }
+
+/// What a client gets back on its reply channel: a classification, or
+/// a typed refusal. Accepted requests always get exactly one of these.
+pub type Reply = Result<ClassResult, RequestError>;
+
+/// Why a request was answered without a classification.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// The deadline passed before the request's batch reached
+    /// execution; the coordinator dropped it unrun.
+    Expired,
+    /// The bounded admission queue was full under the shed policy; the
+    /// request never entered the queue.
+    Shed,
+    /// Execution refused or failed the request (wrong payload length,
+    /// non-finite values, or an isolated execution fault).
+    Failed(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Expired => write!(f, "deadline expired before execution"),
+            RequestError::Shed => write!(f, "shed: request queue full"),
+            RequestError::Failed(msg) => write!(f, "request failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// One inference response.
 #[derive(Debug, Clone)]
@@ -44,13 +91,46 @@ pub struct ClassResult {
 }
 
 impl ClassResult {
+    /// Index of the largest probability, under IEEE total order: a NaN
+    /// in the output gives a deterministic (if meaningless) answer
+    /// instead of panicking the serving thread mid-reply.
     pub fn argmax(&self) -> usize {
         self.probs
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0)
+    }
+}
+
+/// Admission policy for the bounded request queue (see [`submit`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Block the submitter until the queue has room: lossless
+    /// backpressure, the client's own latency absorbs the overload.
+    Block,
+    /// Refuse immediately when the queue is full: the client gets
+    /// `Err(RequestError::Shed)` on the request's reply channel and the
+    /// request never enters the queue — bounded memory, bounded tail.
+    Shed,
+}
+
+/// Submit a request through a bounded queue under `policy`. Returns
+/// `true` when the request was enqueued; `false` when it was shed (the
+/// shed notice is delivered on the request's own reply channel) or the
+/// serving loop is already gone.
+pub fn submit(tx: &SyncSender<Request>, req: Request, policy: QueuePolicy) -> bool {
+    match policy {
+        QueuePolicy::Block => tx.send(req).is_ok(),
+        QueuePolicy::Shed => match tx.try_send(req) {
+            Ok(()) => true,
+            Err(TrySendError::Full(req)) => {
+                let _ = req.reply.send(Err(RequestError::Shed));
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        },
     }
 }
 
@@ -74,7 +154,11 @@ impl Coordinator {
         }
     }
 
-    /// Serve until the request channel disconnects. Returns the report.
+    /// Serve until the request channel disconnects — even mid-batch:
+    /// the partial batch that formed when the last sender hung up is
+    /// flushed before the loop ends, and the final [`ServeReport`] is
+    /// always produced. Every drained request is answered exactly once,
+    /// as a [`ClassResult`] or a typed [`RequestError`].
     pub fn run(&self, rx: std::sync::mpsc::Receiver<Request>) -> Result<ServeReport> {
         let per_image: usize = {
             let m = self
@@ -92,11 +176,42 @@ impl Coordinator {
         let mut requests = 0usize;
         let mut batches = 0usize;
         let mut occupancy = 0usize;
+        let mut expired = 0usize;
+        let mut rejected = 0usize;
         let t0 = Instant::now();
         loop {
-            let batch = next_batch(&rx, self.policy);
+            let (drained, disconnected) = drain_batch(&rx, self.policy);
+            requests += drained.len();
+            // admission control on the drained batch: expired deadlines
+            // and malformed payloads are answered with typed errors and
+            // never reach execution (a NaN must not poison the batch it
+            // would have shared a plan execution with)
+            let now = Instant::now();
+            let mut batch = Vec::with_capacity(drained.len());
+            for req in drained {
+                if req.deadline.is_some_and(|d| now >= d) {
+                    expired += 1;
+                    let _ = req.reply.send(Err(RequestError::Expired));
+                } else if req.data.len() != per_image {
+                    rejected += 1;
+                    let _ = req.reply.send(Err(RequestError::Failed(format!(
+                        "payload length {} != {per_image} elements",
+                        req.data.len()
+                    ))));
+                } else if let Some(pos) = req.data.iter().position(|v| !v.is_finite()) {
+                    rejected += 1;
+                    let _ = req.reply.send(Err(RequestError::Failed(format!(
+                        "non-finite input value at index {pos}"
+                    ))));
+                } else {
+                    batch.push(req);
+                }
+            }
             if batch.is_empty() {
-                break;
+                if disconnected {
+                    break;
+                }
+                continue;
             }
             let model = self
                 .runtime
@@ -111,34 +226,72 @@ impl Coordinator {
             for r in &batch {
                 flat.extend_from_slice(&r.data);
             }
-            let mut outputs: Vec<f32> = Vec::new();
-            let mut probs_per = 0usize;
+            // Safety net around execution: the runtime's degrade ladder
+            // already absorbs pipelined stage faults, so anything that
+            // still escapes (a panic on the sequential path, a typed
+            // error) fails only this batch — every request in it gets
+            // `Err(RequestError::Failed)` and serving continues.
             let full = model.batch * per_image;
-            for chunk in flat.chunks(full) {
-                let out = if chunk.len() == full {
-                    model.run(chunk)?
-                } else {
-                    let mut c = chunk.to_vec();
-                    c.resize(full, 0.0);
-                    model.run(&c)?
-                };
-                probs_per = out.len() / model.batch.max(1);
-                outputs.extend(out);
+            let exec = catch_unwind(AssertUnwindSafe(
+                || -> std::result::Result<(Vec<f32>, usize), crate::graph::GraphError> {
+                    let mut outputs: Vec<f32> = Vec::new();
+                    let mut probs_per = 0usize;
+                    for chunk in flat.chunks(full) {
+                        let out = if chunk.len() == full {
+                            model.run(chunk)?
+                        } else {
+                            let mut c = chunk.to_vec();
+                            c.resize(full, 0.0);
+                            model.run(&c)?
+                        };
+                        probs_per = out.len() / model.batch.max(1);
+                        outputs.extend(out);
+                    }
+                    Ok((outputs, probs_per))
+                },
+            ));
+            let outcome = match exec {
+                Ok(Ok(v)) => Ok(v),
+                Ok(Err(e)) => Err(e.to_string()),
+                Err(payload) => Err(crate::util::fault::panic_message(payload.as_ref())),
+            };
+            match outcome {
+                Ok((outputs, probs_per)) => {
+                    let now = Instant::now();
+                    for (i, req) in batch.iter().enumerate() {
+                        let lat = now - req.submitted;
+                        latency.record(lat);
+                        let probs = outputs[i * probs_per..(i + 1) * probs_per].to_vec();
+                        let _ = req.reply.send(Ok(ClassResult {
+                            id: req.id,
+                            probs,
+                            latency: lat,
+                        }));
+                    }
+                }
+                Err(msg) => {
+                    for req in &batch {
+                        let _ = req.reply.send(Err(RequestError::Failed(msg.clone())));
+                    }
+                }
             }
-            let now = Instant::now();
-            for (i, req) in batch.iter().enumerate() {
-                let lat = now - req.submitted;
-                latency.record(lat);
-                let probs = outputs[i * probs_per..(i + 1) * probs_per].to_vec();
-                let _ = req.reply.send(ClassResult {
-                    id: req.id,
-                    probs,
-                    latency: lat,
-                });
-            }
-            requests += batch.len();
             occupancy += batch.len();
             batches += 1;
+            if disconnected {
+                break;
+            }
+        }
+        // fold the models' fault accounting into the report: how many
+        // isolated stage faults the run absorbed, and whether any model
+        // ended it demoted to its sequential fallback
+        let mut faults = 0usize;
+        let mut degraded = 0usize;
+        for m in self.runtime.models() {
+            let fs = m.fault_stats();
+            faults += fs.faults as usize;
+            if fs.degraded {
+                degraded += 1;
+            }
         }
         Ok(ServeReport {
             requests,
@@ -156,6 +309,11 @@ impl Coordinator {
                 .filter(|m| m.serves_pipelined())
                 .map(|m| m.pipeline().stage_metrics())
                 .unwrap_or_default(),
+            shed: 0, // shedding happens at `submit`; the demo fills this in
+            expired,
+            rejected,
+            faults,
+            degraded,
         })
     }
 }
@@ -163,7 +321,9 @@ impl Coordinator {
 /// Configuration for [`serve_demo`]. `threads` / `team` are the static
 /// pipeline knobs; `autotune` replaces both with the profile-guided
 /// calibrator (measured cuts, measured team, per-group-size
-/// repartitioning) during model load.
+/// repartitioning) during model load. `deadline_ms` / `queue_cap` /
+/// `shed` are the robustness knobs: per-request deadlines, a bounded
+/// admission queue, and the shed-vs-block overload policy.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     pub requests: usize,
@@ -171,11 +331,31 @@ pub struct ServeConfig {
     pub threads: usize,
     pub team: usize,
     pub autotune: bool,
+    /// Per-request deadline in milliseconds from submission; requests
+    /// whose batch has not started executing by then are answered
+    /// `Err(RequestError::Expired)` instead of run. `None` = no
+    /// deadline.
+    pub deadline_ms: Option<u64>,
+    /// Admission-queue capacity (bounded `sync_channel`); 0 sizes the
+    /// queue to hold every demo request, i.e. no backpressure.
+    pub queue_cap: usize,
+    /// On a full queue, shed (refuse with `RequestError::Shed`) instead
+    /// of blocking the client thread.
+    pub shed: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { requests: 64, max_batch: 8, threads: 1, team: 1, autotune: false }
+        ServeConfig {
+            requests: 64,
+            max_batch: 8,
+            threads: 1,
+            team: 1,
+            autotune: false,
+            deadline_ms: None,
+            queue_cap: 0,
+            shed: false,
+        }
     }
 }
 
@@ -230,35 +410,53 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
     };
     let coordinator = Coordinator::new(runtime, policy);
 
-    // client thread
-    let (tx, rx) = channel::<Request>();
-    let (result_tx, result_rx) = channel::<ClassResult>();
+    // client thread, submitting through a bounded admission queue
+    let cap = if cfg.queue_cap > 0 { cfg.queue_cap } else { n_requests.max(1) };
+    let (tx, rx) = sync_channel::<Request>(cap);
+    let (result_tx, result_rx) = channel::<Reply>();
+    let qpolicy = if cfg.shed { QueuePolicy::Shed } else { QueuePolicy::Block };
+    let deadline_ms = cfg.deadline_ms;
     let mut rng = Rng::new(0xE2E);
     let inputs: Vec<Vec<f32>> = (0..n_requests)
         .map(|_| (0..per_image).map(|_| rng.normal_f32(0.0, 1.0)).collect())
         .collect();
     let inputs_for_client = inputs.clone();
     let client = std::thread::spawn(move || {
+        let mut shed = 0usize;
         for (i, data) in inputs_for_client.into_iter().enumerate() {
-            let _ = tx.send(Request {
+            let now = Instant::now();
+            let req = Request {
                 id: i as u64,
                 data,
-                submitted: Instant::now(),
+                submitted: now,
+                deadline: deadline_ms.map(|ms| now + Duration::from_millis(ms)),
                 reply: result_tx.clone(),
-            });
+            };
+            if !submit(&tx, req, qpolicy) {
+                shed += 1;
+            }
             // mild pacing: a burst every few requests exercises batching
             if i % 4 == 3 {
                 std::thread::sleep(std::time::Duration::from_micros(300));
             }
         }
+        shed
         // tx drops here -> coordinator drains and exits
     });
 
     let mut report = coordinator.run(rx)?;
-    client.join().ok();
+    report.shed = client.join().unwrap_or(0);
 
-    // collect results and cross-check against the reference interpreter
-    let mut results: Vec<ClassResult> = result_rx.try_iter().collect();
+    // collect the replies — every submitted request must have exactly
+    // one, a classification or a typed refusal — and cross-check the
+    // classifications against the reference interpreter
+    let replies: Vec<Reply> = result_rx.try_iter().collect();
+    crate::ensure!(
+        replies.len() == n_requests,
+        "lost responses: {} replies for {n_requests} requests",
+        replies.len()
+    );
+    let mut results: Vec<ClassResult> = replies.into_iter().filter_map(|r| r.ok()).collect();
     results.sort_by_key(|r| r.id);
     let mut agree = 0usize;
     let check = results.len().min(32); // interp is slow; spot-check 32
@@ -280,6 +478,34 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nets::{tiny_cnn, NetConfig};
+
+    fn mk(id: u64, data: Vec<f32>, deadline: Option<Instant>, reply: &Sender<Reply>) -> Request {
+        Request {
+            id,
+            data,
+            submitted: Instant::now(),
+            deadline,
+            reply: reply.clone(),
+        }
+    }
+
+    fn test_coordinator(max_wait_ms: u64) -> (Coordinator, usize) {
+        let mut runtime = Runtime::cpu(Path::new(".")).unwrap();
+        let g = tiny_cnn(NetConfig::test_scale());
+        runtime.load_graph("tinycnn_b1", &g, 1).unwrap();
+        let per = runtime
+            .model("tinycnn_b1")
+            .unwrap()
+            .input_shape
+            .iter()
+            .product();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(max_wait_ms),
+        };
+        (Coordinator::new(runtime, policy), per)
+    }
 
     #[test]
     fn class_result_argmax() {
@@ -289,5 +515,96 @@ mod tests {
             latency: std::time::Duration::ZERO,
         };
         assert_eq!(r.argmax(), 1);
+    }
+
+    #[test]
+    fn argmax_survives_nan_and_empty_probs() {
+        let nan = ClassResult {
+            id: 0,
+            probs: vec![0.1, f32::NAN, 0.2],
+            latency: std::time::Duration::ZERO,
+        };
+        let _ = nan.argmax(); // must not panic; the order is total
+        let empty = ClassResult {
+            id: 0,
+            probs: vec![],
+            latency: std::time::Duration::ZERO,
+        };
+        assert_eq!(empty.argmax(), 0);
+    }
+
+    #[test]
+    fn shed_policy_refuses_when_queue_full() {
+        let (tx, _rx) = sync_channel::<Request>(1);
+        let (rtx, rrx) = channel::<Reply>();
+        assert!(submit(&tx, mk(0, vec![], None, &rtx), QueuePolicy::Shed));
+        // queue full: the second submit is refused, and the refusal
+        // arrives on the request's own reply channel
+        assert!(!submit(&tx, mk(1, vec![], None, &rtx), QueuePolicy::Shed));
+        match rrx.try_recv().unwrap() {
+            Err(RequestError::Shed) => {}
+            other => panic!("expected shed notice, got {other:?}"),
+        }
+    }
+
+    /// Regression (alongside `batcher::partial_batch_flushes_on_quiet_
+    /// channel`): the sender hanging up while a batch is mid-formation
+    /// must flush that partial batch, answer every drained request, and
+    /// end the loop with a final report — not panic or hang.
+    #[test]
+    fn sender_hangup_mid_batch_flushes_and_reports() {
+        let (coordinator, per) = test_coordinator(200);
+        let (tx, rx) = sync_channel::<Request>(8);
+        let (rtx, rrx) = channel::<Reply>();
+        for id in 0..3 {
+            tx.send(mk(id, vec![0.5; per], None, &rtx)).unwrap();
+        }
+        // hangup while the batcher's straggler window is still open:
+        // drain_batch sees Disconnected mid-drain, not an empty batch
+        drop(tx);
+        drop(rtx);
+        let report = coordinator.run(rx).unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.batches, 1);
+        let replies: Vec<Reply> = rrx.try_iter().collect();
+        assert_eq!(replies.len(), 3, "hangup mid-batch must not lose answers");
+        assert!(replies.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn admission_control_answers_expired_and_malformed() {
+        let (coordinator, per) = test_coordinator(20);
+        let (tx, rx) = sync_channel::<Request>(8);
+        let (rtx, rrx) = channel::<Reply>();
+        // already expired when its batch forms
+        tx.send(mk(0, vec![0.5; per], Some(Instant::now()), &rtx))
+            .unwrap();
+        // wrong payload length
+        tx.send(mk(1, vec![0.5; per - 1], None, &rtx)).unwrap();
+        // non-finite value
+        let mut nan = vec![0.5; per];
+        nan[0] = f32::NAN;
+        tx.send(mk(2, nan, None, &rtx)).unwrap();
+        // a healthy request sharing the same drained batch still runs
+        tx.send(mk(3, vec![0.5; per], None, &rtx)).unwrap();
+        drop(tx);
+        drop(rtx);
+        let report = coordinator.run(rx).unwrap();
+        assert_eq!(report.requests, 4);
+        assert_eq!(report.expired, 1);
+        assert_eq!(report.rejected, 2);
+        let (mut ok, mut expired, mut failed) = (0, 0, 0);
+        for r in rrx.try_iter() {
+            match r {
+                Ok(res) => {
+                    assert_eq!(res.id, 3);
+                    ok += 1;
+                }
+                Err(RequestError::Expired) => expired += 1,
+                Err(RequestError::Failed(_)) => failed += 1,
+                Err(RequestError::Shed) => panic!("nothing was shed"),
+            }
+        }
+        assert_eq!((ok, expired, failed), (1, 1, 2));
     }
 }

@@ -399,6 +399,7 @@ pub fn gemm_packed_bias_act(
     act: Act,
     out: &mut [f32],
 ) {
+    crate::util::fault::point("kernel.gemm", 0);
     let (k, n) = (pb.k, pb.n);
     debug_assert!(a.len() >= m * k, "gemm_packed: A shorter than m*k");
     debug_assert!(out.len() >= m * n, "gemm_packed: out shorter than m*n");

@@ -97,7 +97,7 @@ pub mod sparse;
 pub mod tune;
 
 pub use kernels::{Act, ConvGeom};
-pub use pipeline::{PipelinePlan, StageMetrics};
+pub use pipeline::{PipelinePlan, StageFault, StageMetrics};
 pub use profile::{profile_plan, ProfileOptions, StepProfile};
 pub use tune::{choose_cuts, TuneEntry, TuneOptions, TuneReport, TunedCuts};
 

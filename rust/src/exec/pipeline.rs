@@ -59,8 +59,10 @@ use crate::graph::{Graph, GraphError, Op, Padding, Tensor};
 use crate::util::partition::{partition_min_bottleneck, range_costs};
 use crate::util::timer::ScopedNs;
 use std::collections::{BTreeMap, BTreeSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
 
 /// Boundary messages in flight per cut: double buffering, exactly like
 /// the two-deep stage-boundary line buffers the simulator models.
@@ -71,6 +73,42 @@ pub const PIPE_DEPTH: usize = 2;
 struct Msg {
     img: usize,
     bufs: Vec<Vec<f32>>,
+}
+
+/// A panic caught inside one stage worker, reported as data instead of
+/// unwinding across the thread scope: the stage that faulted, the item
+/// (plan execution) it was processing, and the rendered panic message.
+/// Converts into [`GraphError::StageFault`] at the `run_*` boundary.
+#[derive(Clone, Debug)]
+pub struct StageFault {
+    pub stage: usize,
+    pub item: usize,
+    pub msg: String,
+}
+
+impl From<StageFault> for GraphError {
+    fn from(f: StageFault) -> GraphError {
+        GraphError::StageFault { stage: f.stage, item: f.item, msg: f.msg }
+    }
+}
+
+/// First fault wins: once a stage faults, its dropped channels cascade
+/// clean shutdown through the neighbors, and any later fault is an echo
+/// of that cascade, not the cause.
+fn record_fault(
+    slot: &Mutex<Option<StageFault>>,
+    stage: usize,
+    item: usize,
+    payload: Box<dyn std::any::Any + Send>,
+) {
+    let mut guard = slot.lock().unwrap_or_else(|e| e.into_inner());
+    if guard.is_none() {
+        *guard = Some(StageFault {
+            stage,
+            item,
+            msg: crate::util::fault::panic_message(payload.as_ref()),
+        });
+    }
 }
 
 fn conv_geo(g: &ConvGeom) -> StageGeometry {
@@ -541,6 +579,10 @@ impl PipelinePlan {
     /// the feed map is validated like [`ExecutionPlan::run_with`] and
     /// the graph outputs are returned in order. Output `i` of item `k`
     /// is bit-identical to a sequential `plan.run(&images[k])`.
+    ///
+    /// If a stage worker panics, the whole stream returns
+    /// [`GraphError::StageFault`] (no partial results) and the plan
+    /// remains usable for subsequent runs — see [`Self::run_inner`].
     pub fn run_stream(
         &self,
         images: &[BTreeMap<String, Tensor>],
@@ -574,7 +616,7 @@ impl PipelinePlan {
                 .collect();
             results.push(outs);
         };
-        self.run_inner(images.len(), &feed, &mut collect);
+        self.run_inner(images.len(), &feed, &mut collect)?;
         Ok(results)
     }
 
@@ -585,7 +627,9 @@ impl PipelinePlan {
     /// per batch instead of per image — so `n_images` must be a multiple
     /// of [`ExecutionPlan::batch`]. Returns every graph output, each
     /// concatenated over all images (the pipelined counterpart of a
-    /// sequence of whole-batch plan executions).
+    /// sequence of whole-batch plan executions). A stage-worker panic
+    /// fails the whole call with [`GraphError::StageFault`], leaving the
+    /// plan reusable (the caller decides whether to retry or degrade).
     pub fn run_batch(&self, input: &[f32], n_images: usize) -> Result<Vec<Vec<f32>>, GraphError> {
         if self.plan.num_feeds() != 1 {
             return Err(GraphError::Invalid(
@@ -623,7 +667,7 @@ impl PipelinePlan {
                 out.extend_from_slice(data);
             }
         };
-        self.run_inner(groups, &feed, &mut collect);
+        self.run_inner(groups, &feed, &mut collect)?;
         Ok(outs)
     }
 
@@ -631,21 +675,36 @@ impl PipelinePlan {
     /// which runs on the calling thread (so `collect` needs no `Send`);
     /// images are handed between stages through bounded channels with
     /// [`PIPE_DEPTH`] recycled boundary messages per cut.
+    ///
+    /// # Fault isolation
+    ///
+    /// Each stage's step execution runs under `catch_unwind`. A panic
+    /// does not cross the thread scope: the faulted worker records a
+    /// [`StageFault`] (first fault wins) and returns, dropping its
+    /// channel endpoints — which unblocks and cleanly shuts down every
+    /// neighbor (a blocked `send`/`recv` on a dropped channel returns
+    /// `Err`, never wedges). All per-run state (stage contexts, boundary
+    /// messages) is scoped to this call, so the plan itself stays
+    /// reusable after a fault.
     fn run_inner<F>(
         &self,
         n_images: usize,
         feed: &F,
         collect: &mut dyn FnMut(usize, &ExecContext),
-    ) where
+    ) -> Result<(), StageFault>
+    where
         F: Fn(usize, &mut ExecContext) + Sync,
     {
         let k = self.ranges.len();
+        let fault_slot: Mutex<Option<StageFault>> = Mutex::new(None);
         std::thread::scope(|scope| {
+            let fault_slot = &fault_slot;
             let mut incoming: Option<(Receiver<Msg>, SyncSender<Msg>)> = None;
             for j in 0..k - 1 {
                 let (data_tx, data_rx) = sync_channel::<Msg>(PIPE_DEPTH);
                 let (recycle_tx, recycle_rx) = sync_channel::<Msg>(PIPE_DEPTH);
                 for _ in 0..PIPE_DEPTH {
+                    // cannot fail: recycle_rx is alive in this scope
                     recycle_tx.send(self.new_msg(j)).expect("seeding recycle channel");
                 }
                 let inc = incoming.take();
@@ -653,29 +712,46 @@ impl PipelinePlan {
                     let ctr = &self.counters[j];
                     let mut ctx = self.stage_context(j);
                     for img in 0..n_images {
-                        if j == 0 {
-                            feed(img, &mut ctx);
-                        }
                         if let Some((rx, back)) = &inc {
                             let msg = {
                                 let _t = ScopedNs::new(&ctr.stall);
-                                rx.recv().expect("upstream stage hung up")
+                                match rx.recv() {
+                                    Ok(m) => m,
+                                    // upstream aborted (its fault is
+                                    // already recorded): unwind quietly
+                                    Err(_) => return,
+                                }
                             };
                             debug_assert_eq!(msg.img, img, "stage {j} images out of order");
                             self.copy_in(j, &msg, &mut ctx);
                             let _ = back.send(msg);
                         }
-                        {
+                        let ran = {
                             let _t = ScopedNs::new(&ctr.busy);
-                            self.run_range(j, &mut ctx);
+                            catch_unwind(AssertUnwindSafe(|| {
+                                if j == 0 {
+                                    feed(img, &mut ctx);
+                                }
+                                crate::util::fault::point("pipeline.stage", j);
+                                self.run_range(j, &mut ctx);
+                            }))
+                        };
+                        if let Err(payload) = ran {
+                            record_fault(fault_slot, j, img, payload);
+                            return;
                         }
                         let mut msg = {
                             let _t = ScopedNs::new(&ctr.stall);
-                            recycle_rx.recv().expect("downstream stage hung up")
+                            match recycle_rx.recv() {
+                                Ok(m) => m,
+                                Err(_) => return, // downstream aborted
+                            }
                         };
                         msg.img = img;
                         self.copy_out(j, &ctx, &mut msg);
-                        data_tx.send(msg).expect("downstream stage hung up");
+                        if data_tx.send(msg).is_err() {
+                            return; // downstream aborted
+                        }
                         ctr.items.fetch_add(1, Ordering::Relaxed);
                     }
                 });
@@ -686,26 +762,43 @@ impl PipelinePlan {
             let ctr = &self.counters[j];
             let mut ctx = self.stage_context(j);
             for img in 0..n_images {
-                if j == 0 {
-                    feed(img, &mut ctx);
-                }
                 if let Some((rx, back)) = &inc {
                     let msg = {
                         let _t = ScopedNs::new(&ctr.stall);
-                        rx.recv().expect("upstream stage hung up")
+                        match rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => break, // upstream aborted
+                        }
                     };
                     debug_assert_eq!(msg.img, img, "final stage images out of order");
                     self.copy_in(j, &msg, &mut ctx);
                     let _ = back.send(msg);
                 }
-                {
+                let ran = {
                     let _t = ScopedNs::new(&ctr.busy);
-                    self.run_range(j, &mut ctx);
+                    catch_unwind(AssertUnwindSafe(|| {
+                        if j == 0 {
+                            feed(img, &mut ctx);
+                        }
+                        crate::util::fault::point("pipeline.stage", j);
+                        self.run_range(j, &mut ctx);
+                    }))
+                };
+                if let Err(payload) = ran {
+                    record_fault(fault_slot, j, img, payload);
+                    break;
                 }
                 collect(img, &ctx);
                 ctr.items.fetch_add(1, Ordering::Relaxed);
             }
+            // On early exit the final stage's channel endpoints (`inc`)
+            // drop as this closure returns — before the scope joins —
+            // unblocking any still-running upstream workers.
         });
+        match fault_slot.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            Some(f) => Err(f),
+            None => Ok(()),
+        }
     }
 
     /// A fresh boundary message for cut `j`, buffers pre-sized to the
@@ -972,6 +1065,17 @@ mod tests {
         for s in pipe.stage_metrics() {
             assert_eq!((s.busy_ns, s.stall_ns, s.items), (0, 0, 0));
         }
+    }
+
+    #[test]
+    fn stage_fault_converts_to_graph_error() {
+        let f = StageFault { stage: 1, item: 3, msg: "boom".into() };
+        let e: GraphError = f.into();
+        let s = e.to_string();
+        assert!(
+            s.contains("stage 1") && s.contains("item 3") && s.contains("boom"),
+            "{s}"
+        );
     }
 
     #[test]

@@ -190,6 +190,7 @@ pub fn sparse_conv_packed(
     patches_t: &mut [f32],
     out: &mut [f32],
 ) {
+    crate::util::fault::point("kernel.sparse_conv", 0);
     debug_assert_eq!(pr.co, g.co);
     debug_assert_eq!(pr.k, g.patch_len());
     let m = g.total_positions();
@@ -214,6 +215,7 @@ pub fn sparse_matmul_packed(
     act: Act,
     out: &mut [f32],
 ) {
+    crate::util::fault::point("kernel.sparse_matmul", 0);
     debug_assert_eq!(pr.co, co);
     debug_assert_eq!(pr.k, ci);
     for b in 0..pr.n_bundles() {

@@ -42,6 +42,14 @@ pub enum GraphError {
     Cycle(String),
     Shape(String, String),
     Invalid(String, String),
+    /// A pipeline stage worker panicked mid-run; the panic was caught
+    /// and isolated (`exec::pipeline`), the plan stays reusable, and the
+    /// run that carried `item` reports this instead of crashing.
+    StageFault {
+        stage: usize,
+        item: usize,
+        msg: String,
+    },
 }
 
 impl std::fmt::Display for GraphError {
@@ -54,6 +62,9 @@ impl std::fmt::Display for GraphError {
             GraphError::Cycle(n) => write!(f, "graph contains a cycle involving '{n}'"),
             GraphError::Shape(n, msg) => write!(f, "shape error at node '{n}': {msg}"),
             GraphError::Invalid(n, msg) => write!(f, "node '{n}': {msg}"),
+            GraphError::StageFault { stage, item, msg } => {
+                write!(f, "pipeline stage {stage} faulted on item {item}: {msg}")
+            }
         }
     }
 }

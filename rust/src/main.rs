@@ -5,7 +5,8 @@
 //!             [--out DIR] [--full-scale] [--per-layer]    compile a plan
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
 //!   serve     --model DIR [--requests N] [--batch N] [--threads N]
-//!             [--team N] [--autotune] [--json FILE]   exec serving demo
+//!             [--team N] [--autotune] [--deadline-ms N] [--queue-cap N]
+//!             [--shed] [--json FILE]                  exec serving demo
 //!                            (--batch N serves through *natively
 //!                            batched* plans — one weight-stream walk
 //!                            feeds the whole batch; threads > 1
@@ -19,8 +20,39 @@
 //!                            sequential plan and *measured* step costs
 //!                            cut the stages, size the team from stage
 //!                            imbalance + core count, and re-cut per
-//!                            group-batch size. --json dumps the
-//!                            machine-readable ServeReport.)
+//!                            group-batch size. --deadline-ms N gives
+//!                            every request a drop-dead time: requests
+//!                            whose batch has not started executing by
+//!                            then are answered `Expired`, never run.
+//!                            --queue-cap N bounds the admission queue;
+//!                            --shed refuses (`Shed`) on a full queue
+//!                            instead of blocking the client. --json
+//!                            dumps the machine-readable ServeReport,
+//!                            including shed / expired / rejected /
+//!                            faults / degraded counters.)
+//!
+//! ## Failure semantics (serve)
+//!
+//! Every accepted request is answered exactly once — a classification
+//! or a typed `RequestError` — and a fault never takes the server with
+//! it. The degrade ladder, rung by rung:
+//!
+//! 1. **Isolate**: a panic in a pipeline stage worker is caught inside
+//!    the stage (`exec::PipelinePlan`), reported as a typed
+//!    `GraphError::StageFault` for the affected batch, and the plan
+//!    stays reusable — channels are never poisoned.
+//! 2. **Retry**: the runtime retries the faulted batch once on the same
+//!    pipelined plan (a transient fault costs one retry, not the run).
+//! 3. **Fall back**: if the retry also faults, the model demotes itself
+//!    to its sequential batch-1 plan — bitwise-identical outputs to the
+//!    sequential oracle — and stays there (sticky, flagged in
+//!    `ServeReport.degraded` and per-model `fault_stats()`).
+//!
+//! Bad inputs (wrong length, non-finite values) and expired deadlines
+//! are refused with typed errors before execution; a panic anywhere
+//! else in batch execution fails only that batch. Sender hangup — even
+//! mid-batch — flushes the partial batch and still emits the final
+//! report.
 //!   tune      --net <name> [--sparsity F] [--batch N] [--cores N]
 //!             [--runs K] [--out FILE]    profile-guided calibration:
 //!                            print (and optionally dump as JSON) the
@@ -198,6 +230,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: args.usize("threads", 1),
         team: args.usize("team", 1),
         autotune: args.bool("autotune"),
+        deadline_ms: args.opt("deadline-ms").and_then(|s| s.parse().ok()),
+        queue_cap: args.usize("queue-cap", 0),
+        shed: args.bool("shed"),
     };
     let mut report = hpipe::coordinator::serve_demo(&dir, &cfg)?;
     report.print();

@@ -26,11 +26,11 @@
 //! no batching or handoff cost).
 
 use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan, TuneEntry, TuneOptions, TuneReport};
-use crate::graph::{graphdef, Graph, Op, Tensor};
+use crate::graph::{graphdef, Graph, GraphError, Op, Tensor};
 use crate::sparsity::prune_tensor;
 use crate::util::error::{Context, Result};
 use crate::util::{Json, Rng};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -65,6 +65,27 @@ pub struct LoadedModel {
     /// Calibration report when the model was loaded through
     /// [`Self::autotuned`]; `None` on the static (model-driven) path.
     tune: Option<TuneReport>,
+    /// Stage faults observed across this model's pipelined runs (each
+    /// failed `run_batch` attempt counts one).
+    faults: Cell<u64>,
+    /// Faulted runs that were retried (rung one of the degrade ladder).
+    retries: Cell<u64>,
+    /// Sticky degradation flag: once a retry also faults, every later
+    /// batch runs through the sequential batch-1 plan (rung two).
+    degraded: Cell<bool>,
+}
+
+/// Cumulative fault accounting for one model — the degrade ladder's
+/// observable state (see [`LoadedModel::run_all`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Stage faults observed (every failed pipelined attempt).
+    pub faults: u64,
+    /// Faulted runs that were retried once before giving up.
+    pub retries: u64,
+    /// True once the model fell back to sequential batch-1 execution;
+    /// sticky until the model is reloaded.
+    pub degraded: bool,
 }
 
 /// Images per plan execution for a `batch`-image model served through
@@ -182,6 +203,9 @@ impl LoadedModel {
             ctx: RefCell::new(None),
             latency_ctx: RefCell::new(None),
             tune: None,
+            faults: Cell::new(0),
+            retries: Cell::new(0),
+            degraded: Cell::new(false),
         })
     }
 
@@ -283,6 +307,9 @@ impl LoadedModel {
                 chosen_group: group,
                 entries,
             }),
+            faults: Cell::new(0),
+            retries: Cell::new(0),
+            degraded: Cell::new(false),
         })
     }
 
@@ -314,35 +341,80 @@ impl LoadedModel {
         (self.threads > 1 && self.batch > self.group()) || self.team > 1
     }
 
+    /// Cumulative fault accounting: stage faults seen, retries spent,
+    /// and whether the model has degraded to sequential execution.
+    pub fn fault_stats(&self) -> FaultStats {
+        FaultStats {
+            faults: self.faults.get(),
+            retries: self.retries.get(),
+            degraded: self.degraded.get(),
+        }
+    }
+
+    /// True once repeated stage faults demoted this model to its
+    /// sequential batch-1 plan (sticky until reload).
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.get()
+    }
+
+    /// Reject malformed inputs with typed errors before any execution:
+    /// a wrong-length or non-finite batch must surface as a refusable
+    /// request on the serving path, never as a panic or a NaN cascade
+    /// through every in-flight image sharing the batch.
+    fn check_input(&self, input: &[f32], expect: usize, shape: &[usize]) -> Result<(), GraphError> {
+        if input.len() != expect {
+            return Err(GraphError::Shape(
+                self.pipeline.plan().feed_name(0).to_string(),
+                format!(
+                    "input length {} != shape {:?} ({} elements)",
+                    input.len(),
+                    shape,
+                    expect
+                ),
+            ));
+        }
+        if let Some(pos) = input.iter().position(|v| !v.is_finite()) {
+            return Err(GraphError::Invalid(
+                self.pipeline.plan().feed_name(0).to_string(),
+                format!("non-finite input value at index {pos}"),
+            ));
+        }
+        Ok(())
+    }
+
     /// Run one batch. `input` is row-major f32 of `input_shape` (with
     /// the leading dim = batch). Returns the output tensor's data
     /// concatenated over the batch. Errors on multi-output graphs so a
     /// second head can never be dropped silently — use
     /// [`Self::run_all`] for those.
-    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>, GraphError> {
         let n_outs = self.pipeline.plan().num_outputs();
-        crate::ensure!(
-            n_outs == 1,
-            "model '{}' has {n_outs} outputs; run() would drop all but the first — \
-             use run_all()",
-            self.name
-        );
-        Ok(self.run_all(input)?.pop().unwrap())
+        if n_outs != 1 {
+            return Err(GraphError::Invalid(
+                self.name.clone(),
+                format!("{n_outs} outputs; run() would drop all but the first — use run_all()"),
+            ));
+        }
+        Ok(self.run_all(input)?.pop().expect("exactly one output"))
     }
 
     /// Run one batch and return *every* graph output, each concatenated
     /// over the batch. The whole batch is executed through the batched
     /// plan — sequentially in whole-group steps, or streamed through
     /// the layer pipeline when the model was loaded with `threads > 1`.
-    pub fn run_all(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+    ///
+    /// Failure semantics (the degrade ladder): a stage fault in the
+    /// pipelined path is retried once on the same (reusable)
+    /// [`PipelinePlan`]; if the retry also faults, the model demotes
+    /// itself — permanently, flagged via [`Self::fault_stats`] — to its
+    /// sequential batch-1 plan, which produces bitwise-identical
+    /// outputs to the sequential oracle. Malformed inputs return typed
+    /// [`GraphError`]s without executing anything.
+    pub fn run_all(&self, input: &[f32]) -> Result<Vec<Vec<f32>>, GraphError> {
         let expect: usize = self.input_shape.iter().product();
-        if input.len() != expect {
-            crate::bail!(
-                "input length {} != shape {:?} ({} elements)",
-                input.len(),
-                self.input_shape,
-                expect
-            );
+        self.check_input(input, expect, &self.input_shape)?;
+        if self.degraded.get() {
+            return self.run_sequential_b1(input);
         }
         let plan = self.pipeline.plan();
         let group = plan.batch();
@@ -352,7 +424,28 @@ impl LoadedModel {
             // threads (one boundary handoff per group, not per image).
             // A worker team (team > 1) also routes here — even a 1-stage
             // pipeline then splits its dominant convs across the team.
-            return Ok(self.pipeline.run_batch(input, self.batch)?);
+            let first = match self.pipeline.run_batch(input, self.batch) {
+                Ok(outs) => return Ok(outs),
+                Err(e) => e,
+            };
+            // Rung one: the plan is reusable after an isolated stage
+            // fault, so a transient panic costs one retry, not the run.
+            self.faults.set(self.faults.get() + 1);
+            self.retries.set(self.retries.get() + 1);
+            let second = match self.pipeline.run_batch(input, self.batch) {
+                Ok(outs) => return Ok(outs),
+                Err(e) => e,
+            };
+            // Rung two: repeated faults look deterministic — demote to
+            // the sequential batch-1 plan and stay there.
+            self.faults.set(self.faults.get() + 1);
+            self.degraded.set(true);
+            eprintln!(
+                "model '{}': degrading to sequential execution after repeated stage \
+                 faults ({first}; retry: {second})",
+                self.name
+            );
+            return self.run_sequential_b1(input);
         }
         // Sequential path: the plan executes whole groups natively
         // (with threads == 1 the group IS the batch — a single
@@ -381,17 +474,11 @@ impl LoadedModel {
     /// Single-image latency path: executes the batch-1 plan
     /// sequentially (no batching, no pipeline handoffs). `image` holds
     /// one image; returns every output for it.
-    pub fn run_one(&self, image: &[f32]) -> Result<Vec<Vec<f32>>> {
+    pub fn run_one(&self, image: &[f32]) -> Result<Vec<Vec<f32>>, GraphError> {
         let plan = self.latency.as_ref().unwrap_or_else(|| self.pipeline.plan());
         debug_assert_eq!(plan.batch(), 1, "latency plan must be batch-1");
         let per: usize = self.input_shape.iter().product::<usize>() / self.batch;
-        if image.len() != per {
-            crate::bail!(
-                "image length {} != {per} (one image of shape {:?})",
-                image.len(),
-                &self.input_shape[1..]
-            );
-        }
+        self.check_input(image, per, &self.input_shape[1..])?;
         let mut guard = self.latency_ctx.borrow_mut();
         let ctx = guard.get_or_insert_with(|| plan.new_context());
         plan.write_feed(ctx, 0, image)?;
@@ -399,6 +486,32 @@ impl LoadedModel {
         let mut outs = Vec::with_capacity(plan.num_outputs());
         for i in 0..plan.num_outputs() {
             outs.push(plan.output(ctx, i).0.to_vec());
+        }
+        Ok(outs)
+    }
+
+    /// Degraded fallback: the whole batch, one image at a time, through
+    /// the sequential batch-1 plan — the same plan and kernels the
+    /// interpreter-equivalence oracle checks, so degraded outputs are
+    /// bitwise-identical to sequential execution by construction. No
+    /// threads, no handoffs: slow, but it cannot stage-fault.
+    fn run_sequential_b1(&self, input: &[f32]) -> Result<Vec<Vec<f32>>, GraphError> {
+        let plan = self.latency.as_ref().unwrap_or_else(|| self.pipeline.plan());
+        debug_assert_eq!(plan.batch(), 1, "degraded path needs a batch-1 plan");
+        let per = input.len() / self.batch.max(1);
+        let mut guard = self.latency_ctx.borrow_mut();
+        let ctx = guard.get_or_insert_with(|| plan.new_context());
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); plan.num_outputs()];
+        for i in 0..self.batch {
+            plan.write_feed(ctx, 0, &input[i * per..(i + 1) * per])?;
+            plan.execute_steps(ctx);
+            for (o, out) in outs.iter_mut().enumerate() {
+                let (data, _) = plan.output(ctx, o);
+                if out.capacity() == 0 {
+                    out.reserve_exact(data.len() * self.batch);
+                }
+                out.extend_from_slice(data);
+            }
         }
         Ok(outs)
     }
@@ -529,6 +642,12 @@ impl Runtime {
         self.models.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Every loaded model, in name order — the coordinator walks this
+    /// to fold per-model [`FaultStats`] into its serve report.
+    pub fn models(&self) -> impl Iterator<Item = &LoadedModel> {
+        self.models.values()
+    }
+
     /// Pick the loaded tinycnn variant with the largest batch ≤ n.
     pub fn best_batch_model(&self, n: usize) -> Option<&LoadedModel> {
         self.models
@@ -643,6 +762,32 @@ mod tests {
         for (c, r) in outs[0].iter().zip(&outs[1]) {
             assert_eq!(c.max(0.0), *r);
         }
+    }
+
+    #[test]
+    fn invalid_inputs_yield_typed_errors() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let m = LoadedModel::from_graph("tinycnn_b1", &g, 1).unwrap();
+        let n: usize = m.input_shape.iter().product();
+        // wrong length: typed Shape error, nothing executed
+        assert!(matches!(
+            m.run(&vec![0.0; n - 1]),
+            Err(GraphError::Shape(_, _))
+        ));
+        assert!(matches!(
+            m.run_all(&vec![0.0; n + 1]),
+            Err(GraphError::Shape(_, _))
+        ));
+        // non-finite values: typed Invalid error naming the bad index
+        let mut bad = vec![0.0; n];
+        bad[3] = f32::NAN;
+        assert!(matches!(m.run(&bad), Err(GraphError::Invalid(_, _))));
+        bad[3] = f32::INFINITY;
+        assert!(matches!(m.run_all(&bad), Err(GraphError::Invalid(_, _))));
+        assert!(matches!(m.run_one(&bad), Err(GraphError::Invalid(_, _))));
+        // rejected requests are not faults and never degrade the model
+        assert_eq!(m.fault_stats(), FaultStats::default());
+        assert!(!m.is_degraded());
     }
 
     #[test]

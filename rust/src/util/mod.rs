@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod fault;
 pub mod json;
 pub mod partition;
 pub mod prop;

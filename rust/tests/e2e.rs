@@ -76,7 +76,13 @@ fn serve_demo_end_to_end() {
     let Some(dir) = artifacts_dir() else { return };
     // threads = 2 exercises the pipelined batch path end to end;
     // team = 2 additionally splits the dominant stage's conv rows
-    let cfg = ServeConfig { requests: 24, max_batch: 4, threads: 2, team: 2, autotune: false };
+    let cfg = ServeConfig {
+        requests: 24,
+        max_batch: 4,
+        threads: 2,
+        team: 2,
+        ..Default::default()
+    };
     let mut report = serve_demo(&dir, &cfg).unwrap();
     assert_eq!(report.requests, 24);
     assert!(report.batches >= 24 / 4);

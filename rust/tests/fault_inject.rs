@@ -1,0 +1,227 @@
+//! Fault-injection property tests (`--features fault-inject`).
+//!
+//! The robustness twin of `exec_equiv`: instead of proving the happy
+//! path bitwise-correct, these tests inject deterministic panics and
+//! latency into the serving hot paths (`util::fault`) and prove the
+//! recovery contract:
+//!
+//! * a panic in ANY pipeline stage, across team sizes and plan batches,
+//!   surfaces as a typed `GraphError::StageFault` for that run only —
+//!   the pipeline never wedges and the plan stays reusable;
+//! * repeated faults demote a `LoadedModel` to its sequential batch-1
+//!   fallback, whose outputs are bitwise-identical to the sequential
+//!   oracle;
+//! * end-to-end serving under injected faults completes with zero lost
+//!   responses and the fault counters recorded in the `ServeReport`
+//!   (the `chaos_` tests — CI runs them as the chaos smoke);
+//! * injected batcher latency plus tight deadlines expires every
+//!   request with a typed answer, never silence.
+//!
+//! Without the feature this file compiles to an empty test binary.
+
+#![cfg(feature = "fault-inject")]
+
+use hpipe::coordinator::{serve_demo, ServeConfig};
+use hpipe::exec::{ExecutionPlan, PipelinePlan};
+use hpipe::graph::{graphdef, GraphError, Op, Tensor};
+use hpipe::nets::{tiny_cnn, NetConfig};
+use hpipe::runtime::LoadedModel;
+use hpipe::util::fault;
+use hpipe::util::{Json, Rng};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+// The fault harness is process-global: every test that arms real sites
+// holds this gate for its whole body so concurrent test threads never
+// see each other's fault plans.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The TinyCNN placeholder's per-image shape (leading dim 1).
+fn input_shape(g: &hpipe::graph::Graph) -> Vec<usize> {
+    match &g.get("input").expect("tinycnn has an input").op {
+        Op::Placeholder { shape } => shape.clone(),
+        _ => panic!("tinycnn input is not a placeholder"),
+    }
+}
+
+fn det_input(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+/// Synthesize a serving artifact directory under `target/` (the
+/// `e2e_serving` bench pattern): He-init TinyCNN graphdef + manifest
+/// with batch-1 and batch-8 model entries.
+fn synth_artifacts(subdir: &str) -> PathBuf {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target").join(subdir);
+    let g = tiny_cnn(NetConfig::test_scale());
+    graphdef::save(&g, &dir.join("tinycnn")).expect("writing graphdef");
+    let mut models = Json::obj();
+    models
+        .set("1", Json::from("tinycnn.graphdef"))
+        .set("8", Json::from("tinycnn.graphdef"));
+    let mut root = Json::obj();
+    root.set("input_shape", Json::from(input_shape(&g)))
+        .set("models", models)
+        .set("kernels", Json::obj());
+    std::fs::write(dir.join("manifest.json"), root.pretty()).expect("writing manifest");
+    dir
+}
+
+/// Tentpole property: a panic injected into ANY stage, for every
+/// (team, plan-batch) combination, fails that run with a typed
+/// `StageFault` naming the stage — and the same `PipelinePlan` then
+/// serves a clean run bitwise-identical to the pre-fault baseline.
+#[test]
+fn stage_panic_never_wedges_any_configuration() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let g = tiny_cnn(NetConfig::test_scale());
+    let per: usize = input_shape(&g).iter().product();
+    let n_images = 8;
+    let input = det_input(n_images * per, 0xFA17);
+    for &team in &[1usize, 2, 4] {
+        for &group in &[1usize, 2] {
+            let plan = ExecutionPlan::build_batched(&g, group).unwrap();
+            let pipe = PipelinePlan::from_plan_team(plan, 3, team);
+            let clean = pipe.run_batch(&input, n_images).unwrap();
+            for stage in 0..pipe.num_stages() {
+                fault::arm(&format!("pipeline.stage#{stage}=1"));
+                match pipe.run_batch(&input, n_images) {
+                    Err(GraphError::StageFault { stage: s, msg, .. }) => {
+                        assert_eq!(s, stage, "fault must name the faulting stage");
+                        assert!(msg.contains("injected fault"), "unexpected fault: {msg}");
+                    }
+                    other => panic!(
+                        "team {team} group {group} stage {stage}: expected StageFault, \
+                         got {:?}",
+                        other.map(|o| o.len())
+                    ),
+                }
+                fault::disarm();
+                let again = pipe.run_batch(&input, n_images).unwrap();
+                assert_eq!(again, clean, "plan must stay reusable after an isolated fault");
+            }
+        }
+    }
+}
+
+/// The degrade ladder end to end: one transient fault is absorbed by
+/// the retry; a persistent fault demotes the model to its sequential
+/// batch-1 plan, sticky, with outputs bitwise-identical to the
+/// per-image sequential oracle.
+#[test]
+fn repeated_faults_degrade_to_bitwise_sequential_fallback() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let g = tiny_cnn(NetConfig::test_scale());
+    let m = LoadedModel::from_graph_with("tinycnn_b8", &g, 8, 2, 1).unwrap();
+    assert!(m.serves_pipelined());
+    let shape = input_shape(&g);
+    let per: usize = shape.iter().product();
+    let input = det_input(8 * per, 0xDE6);
+    let clean = m.run_all(&input).unwrap();
+
+    // rung one: a single-shot fault costs one retry, not the run
+    fault::arm("pipeline.stage#0=1");
+    let retried = m.run_all(&input).unwrap();
+    fault::disarm();
+    assert_eq!(retried, clean);
+    let fs = m.fault_stats();
+    assert_eq!(fs.faults, 1);
+    assert_eq!(fs.retries, 1);
+    assert!(!fs.degraded, "one absorbed fault must not degrade the model");
+
+    // rung two: a persistent fault defeats the retry -> sequential
+    fault::arm("pipeline.stage#0=1+");
+    let degraded = m.run_all(&input).unwrap();
+    fault::disarm();
+    assert!(m.is_degraded());
+    assert!(m.fault_stats().faults >= 3);
+
+    // degraded outputs == the per-image sequential oracle, bitwise
+    let oracle = ExecutionPlan::build(&g).unwrap();
+    let mut want: Vec<f32> = Vec::new();
+    for i in 0..8 {
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "input".to_string(),
+            Tensor::from_vec(&shape, input[i * per..(i + 1) * per].to_vec()),
+        );
+        let outs = oracle.run(&feeds).unwrap();
+        want.extend_from_slice(&outs[0].data);
+    }
+    assert_eq!(degraded.len(), 1);
+    assert_eq!(degraded[0], want, "degraded outputs must be bitwise-sequential");
+
+    // sticky: the demoted model never touches the faulting pipeline again
+    fault::arm("pipeline.stage#0=1+");
+    let after = m.run_all(&input).unwrap();
+    assert_eq!(fault::fired(), 0, "degraded model must bypass the pipeline sites");
+    fault::disarm();
+    assert_eq!(after, degraded);
+}
+
+/// Chaos smoke (CI runs the `chaos_` tests as a dedicated step): serve
+/// end-to-end with stage 0 persistently panicking. Serving must
+/// complete, answer every request, record the faults, and end with the
+/// pipelined model degraded — zero lost responses.
+#[test]
+fn chaos_serve_completes_with_faults_recorded() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let dir = synth_artifacts("chaos_artifacts");
+    fault::arm("pipeline.stage#0=1+");
+    // team = 2 makes every loaded model (batch-1 included) serve
+    // through the pipeline, so the armed stage site fires no matter how
+    // the dynamic batches happen to form.
+    let cfg = ServeConfig {
+        requests: 32,
+        max_batch: 8,
+        threads: 2,
+        team: 2,
+        ..Default::default()
+    };
+    let result = serve_demo(&dir, &cfg);
+    fault::disarm();
+    let mut report = result.expect("serving must survive injected stage faults");
+    assert_eq!(report.requests, 32, "every request must be answered");
+    assert!(report.faults >= 1, "injected stage faults must be recorded");
+    assert!(report.degraded >= 1, "the pipelined model must have degraded");
+    // degraded classifications still agree with the interpreter
+    let (agree, total) = report.interp_agreement.unwrap();
+    assert_eq!(agree, total);
+    // and the counters survive the JSON round-trip
+    let parsed = Json::parse(&report.to_json().pretty()).unwrap();
+    assert!(parsed.get("faults").as_usize().unwrap() >= 1);
+    assert!(parsed.get("degraded").as_usize().unwrap() >= 1);
+}
+
+/// Injected batcher latency + tight deadlines: every request expires
+/// before execution and is answered with the typed `Expired` refusal —
+/// counted in the report, none lost, clean shutdown.
+#[test]
+fn chaos_drain_latency_expires_deadlined_requests() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let dir = synth_artifacts("chaos_artifacts_expiry");
+    fault::arm("batcher.drain=1+:sleep25");
+    let cfg = ServeConfig {
+        requests: 8,
+        max_batch: 8,
+        deadline_ms: Some(5),
+        ..Default::default()
+    };
+    let result = serve_demo(&dir, &cfg);
+    fault::disarm();
+    let mut report = result.expect("expiry must not kill the server");
+    assert_eq!(report.requests, 8, "expired requests are answered, not lost");
+    assert_eq!(report.expired, 8, "every deadline-bound request must expire");
+    let parsed = Json::parse(&report.to_json().pretty()).unwrap();
+    assert_eq!(parsed.get("expired").as_usize(), Some(8));
+}
