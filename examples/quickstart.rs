@@ -58,7 +58,12 @@ fn main() -> hpipe::util::error::Result<()> {
     );
 
     // 6. actually execute it: compile a software execution plan (sparse
-    //    RLE kernels + fused conv chains) and classify one image
+    //    RLE kernels + fused conv chains) and classify one image. The
+    //    kernels dispatch to the widest SIMD tier this CPU supports
+    //    (exec::isa; override with HPIPE_ISA=scalar|sse4.1|avx2|fma|
+    //    neon|native) — every tier computes the same answer, the scalar
+    //    tier is the always-available baseline
+    println!("kernel isa: {}", hpipe::exec::isa::describe());
     let exec_plan = hpipe::exec::ExecutionPlan::build(&graph)?;
     let mut rng = hpipe::util::Rng::new(42);
     let mut feeds = std::collections::BTreeMap::new();

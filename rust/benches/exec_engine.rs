@@ -20,13 +20,19 @@
 //! count) meets or beats the static pipelined@4+team2 configuration
 //! (ISSUE 5 — also dumps the calibration as `TUNE_report.json`).
 //!
+//! A simd section forces the kernel dispatch tier (`exec::isa`) to
+//! scalar and back to the widest detected tier over the same packed
+//! plans, on both the dense and sparse paths (ISSUE 7); the JSON records
+//! the active tier so the perf trajectory is comparable across runners.
+//!
 //! `BENCH_SMOKE=1` caps iterations/images for CI and turns the
-//! pipelined-vs-sequential, batched-vs-loop, packed-vs-PR3 and
-//! tuned-vs-static comparisons into hard gates (nonzero exit on
-//! regression).
+//! pipelined-vs-sequential, batched-vs-loop, packed-vs-PR3,
+//! tuned-vs-static and simd-vs-scalar comparisons into hard gates
+//! (nonzero exit on regression).
 
 use hpipe::exec::{
-    ExecutionPlan, PipelinePlan, PlanOptions, ProfileOptions, TuneEntry, TuneOptions, TuneReport,
+    isa, ExecutionPlan, PipelinePlan, PlanOptions, ProfileOptions, TuneEntry, TuneOptions,
+    TuneReport,
 };
 use hpipe::graph::{Graph, Op, Padding, Tensor};
 use hpipe::interp;
@@ -461,6 +467,83 @@ fn main() {
     std::fs::write(&tune_out, tune_report.to_json().pretty()).expect("writing TUNE_report.json");
     println!("  wrote {}", tune_out.display());
 
+    // ---- explicit SIMD tiers vs forced-scalar packed kernels (ISSUE 7) ----
+    // Single-threaded here, so forcing the process-global tier is safe;
+    // the same packed plans run under the widest detected tier and under
+    // the scalar baseline. If the runner has no vector tier at all the
+    // comparison is skipped with an explicit line — never silently.
+    let widest = *isa::available().last().expect("scalar tier is always available");
+    let prior_tier = isa::active().tier();
+    let simd_skipped = widest.tier() == isa::Tier::Scalar;
+    println!(
+        "\n=== simd kernels: widest tier `{}` vs forced scalar, {CHAIN_LAYERS}x conv \
+         chain, dense and sparse plans ===",
+        widest.name()
+    );
+    let dense_opts = PlanOptions::dense_only();
+    let sparse_opts = PlanOptions::sparse_always();
+    let measure_tier = |tier: isa::Tier, opts: &PlanOptions| -> f64 {
+        isa::force(tier).expect("tier came from isa::available()");
+        measure_seq_with(opts)
+    };
+    let (mut scalar_dense, mut simd_dense) = (0.0f64, 0.0f64);
+    let (mut scalar_sparse, mut simd_sparse) = (0.0f64, 0.0f64);
+    let mut simd_gate_retried = false;
+    let (simd_dense_wins, simd_sparse_wins);
+    if simd_skipped {
+        println!("  SKIPPED: widest available tier is scalar (no SIMD on this CPU)");
+        simd_dense_wins = true;
+        simd_sparse_wins = true;
+    } else {
+        scalar_dense = measure_tier(isa::Tier::Scalar, &dense_opts);
+        simd_dense = measure_tier(widest.tier(), &dense_opts);
+        scalar_sparse = measure_tier(isa::Tier::Scalar, &sparse_opts);
+        simd_sparse = measure_tier(widest.tier(), &sparse_opts);
+        println!(
+            "  dense:  {} {simd_dense:.1} vs scalar {scalar_dense:.1} img/s ({:.2}x)",
+            widest.name(),
+            simd_dense / scalar_dense
+        );
+        println!(
+            "  sparse: {} {simd_sparse:.1} vs scalar {scalar_sparse:.1} img/s ({:.2}x)",
+            widest.name(),
+            simd_sparse / scalar_sparse
+        );
+        // Same retry policy as the other gates: one full re-measure of
+        // every side before a verdict.
+        if smoke && (simd_dense < scalar_dense || simd_sparse < scalar_sparse) {
+            println!("  simd gate missed on first attempt; re-measuring all sides");
+            simd_gate_retried = true;
+            scalar_dense = measure_tier(isa::Tier::Scalar, &dense_opts);
+            simd_dense = measure_tier(widest.tier(), &dense_opts);
+            scalar_sparse = measure_tier(isa::Tier::Scalar, &sparse_opts);
+            simd_sparse = measure_tier(widest.tier(), &sparse_opts);
+            println!(
+                "  retry: dense {simd_dense:.1} vs {scalar_dense:.1}; \
+                 sparse {simd_sparse:.1} vs {scalar_sparse:.1} img/s"
+            );
+        }
+        simd_dense_wins = simd_dense >= scalar_dense;
+        simd_sparse_wins = simd_sparse >= scalar_sparse;
+        isa::force(prior_tier).expect("restoring the startup tier");
+    }
+
+    let mut simd = Json::obj();
+    simd.set("images", Json::from(pipe_images))
+        .set("widest_tier", Json::from(widest.name()))
+        .set("skipped_no_simd", Json::from(simd_skipped))
+        .set("gate_retried", Json::from(simd_gate_retried))
+        .set("simd_beats_scalar_dense", Json::from(simd_dense_wins))
+        .set("simd_beats_scalar_sparse", Json::from(simd_sparse_wins));
+    if !simd_skipped {
+        simd.set("scalar_dense_img_s", Json::from(scalar_dense))
+            .set("simd_dense_img_s", Json::from(simd_dense))
+            .set("speedup_dense", Json::from(simd_dense / scalar_dense))
+            .set("scalar_sparse_img_s", Json::from(scalar_sparse))
+            .set("simd_sparse_img_s", Json::from(simd_sparse))
+            .set("speedup_sparse", Json::from(simd_sparse / scalar_sparse));
+    }
+
     let mut tuned = Json::obj();
     tuned
         .set("images", Json::from(pipe_images))
@@ -534,9 +617,14 @@ fn main() {
         .set("batched_8_beats_loop", Json::from(batched_wins))
         .set("packed_seq_beats_pr3", Json::from(packed_seq_wins))
         .set("packed_pipe_team_beats_pr3", Json::from(packed_pipe_wins))
-        .set("tuned_beats_static_pipe4_team2", Json::from(tuned_wins));
+        .set("tuned_beats_static_pipe4_team2", Json::from(tuned_wins))
+        .set("simd_beats_scalar_dense", Json::from(simd_dense_wins))
+        .set("simd_beats_scalar_sparse", Json::from(simd_sparse_wins));
     let mut root = Json::obj();
     root.set("bench", Json::from("exec_engine/resnet50_conv_layer"))
+        // the tier the non-forced sections ran under — perf numbers are
+        // only comparable across runs with the same tier
+        .set("isa", Json::from(isa::active().name()))
         .set(
             "layer",
             Json::from_pairs(vec![
@@ -554,6 +642,7 @@ fn main() {
         .set("batched", batched)
         .set("packed", packed)
         .set("tuned", tuned)
+        .set("simd", simd)
         .set("acceptance", acceptance);
 
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_exec.json");
@@ -562,7 +651,7 @@ fn main() {
         "\nwrote {} (sparse>=5x interp @0.8: {}, sparse beats dense @0.7: {}, \
          pipelined@4 beats sequential: {}, batched@8 beats loop: {}, \
          packed beats PR3 seq: {}, packed+team beats PR3 pipe: {}, \
-         tuned beats static@4+team2: {})",
+         tuned beats static@4+team2: {}, simd beats scalar dense/sparse: {}/{})",
         out.display(),
         sparse_5x_at_80,
         sparse_beats_dense_at_70,
@@ -570,7 +659,9 @@ fn main() {
         batched_wins,
         packed_seq_wins,
         packed_pipe_wins,
-        tuned_wins
+        tuned_wins,
+        simd_dense_wins,
+        simd_sparse_wins
     );
 
     let mut failed = false;
@@ -608,6 +699,24 @@ fn main() {
             "BENCH_SMOKE gate failed: autotuned ({tuned_img_s:.1} img/s) is slower than \
              the static pipelined@{PACKED_STAGES}+team{PACKED_TEAM} configuration \
              ({static_img_s:.1} img/s) on both attempts"
+        );
+        failed = true;
+    }
+    if smoke && !simd_dense_wins {
+        eprintln!(
+            "BENCH_SMOKE gate failed: simd dense tier `{}` ({simd_dense:.1} img/s) is \
+             slower than forced-scalar packed kernels ({scalar_dense:.1} img/s) on both \
+             attempts",
+            widest.name()
+        );
+        failed = true;
+    }
+    if smoke && !simd_sparse_wins {
+        eprintln!(
+            "BENCH_SMOKE gate failed: simd sparse tier `{}` ({simd_sparse:.1} img/s) is \
+             slower than forced-scalar packed kernels ({scalar_sparse:.1} img/s) on both \
+             attempts",
+            widest.name()
         );
         failed = true;
     }

@@ -93,6 +93,9 @@ pub struct ServeReport {
     /// Models that ended the run demoted to their sequential batch-1
     /// fallback after repeated stage faults.
     pub degraded: usize,
+    /// Active SIMD kernel dispatch tier (`exec::isa`), e.g. "fma" —
+    /// recorded so perf numbers are comparable across runners.
+    pub isa: String,
 }
 
 impl ServeReport {
@@ -133,7 +136,8 @@ impl ServeReport {
             .set("expired", Json::from(self.expired))
             .set("rejected", Json::from(self.rejected))
             .set("faults", Json::from(self.faults))
-            .set("degraded", Json::from(self.degraded));
+            .set("degraded", Json::from(self.degraded))
+            .set("isa", Json::from(self.isa.clone()));
         if let Some((ok, total)) = self.interp_agreement {
             root.set(
                 "interp_agreement",
@@ -176,6 +180,9 @@ impl ServeReport {
                  {} models degraded",
                 self.shed, self.expired, self.rejected, self.faults, self.degraded
             );
+        }
+        if !self.isa.is_empty() {
+            println!("kernel isa tier: {}", self.isa);
         }
         if let Some((ok, total)) = self.interp_agreement {
             println!("interp cross-check: {ok}/{total} argmax agreement");
@@ -264,7 +271,9 @@ mod tests {
         r.shed = 1;
         r.expired = 2;
         r.faults = 3;
+        r.isa = "avx2".into();
         let parsed = Json::parse(&r.to_json().pretty()).unwrap();
+        assert_eq!(parsed.get("isa").as_str(), Some("avx2"));
         assert_eq!(parsed.get("requests").as_usize(), Some(6));
         assert_eq!(parsed.get("shed").as_usize(), Some(1));
         assert_eq!(parsed.get("expired").as_usize(), Some(2));

@@ -314,6 +314,7 @@ impl Coordinator {
             rejected,
             faults,
             degraded,
+            isa: crate::exec::isa::active().name().to_string(),
         })
     }
 }
@@ -386,6 +387,10 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
         runtime.team,
         cfg.autotune,
         loaded
+    );
+    println!(
+        "kernel isa: {} (override with HPIPE_ISA=scalar|sse4.1|avx2|fma|neon|native)",
+        crate::exec::isa::describe()
     );
     if cfg.autotune {
         for name in &loaded {

@@ -1,0 +1,657 @@
+//! Runtime CPU-feature dispatch for the hot microkernels (ISSUE 7).
+//!
+//! HPIPE sizes each layer's hardware to the device's real multiplier
+//! budget; the software analog is running the packed microkernels at the
+//! CPU's actual lane width. This module detects the CPU's vector
+//! features **once**, selects the widest available microkernel set
+//! through a single kernel-table indirection ([`Isa`]), and lets tests,
+//! benches and CI force any tier via the `HPIPE_ISA` environment
+//! variable (`scalar|sse4.1|avx2|fma|neon|native`).
+//!
+//! # Kernel tiers and the scalar-baseline guarantee
+//!
+//! Every tier implements the same two primitives the packed kernels are
+//! built from:
+//!
+//! * **dense tile** — accumulate one [`MR`]×[`NR`] register tile over a
+//!   `kc`-deep packed A-panel × packed B-panel pair
+//!   ([`super::kernels::gemm_panels_bias_act`]);
+//! * **sparse axpy** — `acc[i] += v * p[i]` over one decoded weight's
+//!   position range ([`super::sparse::sparse_packed_rows`]).
+//!
+//! Tier 0 (`scalar`) is the always-available baseline: plain loops with
+//! one rounding per multiply and one per add, per element, in ascending
+//! `k` order. The non-fused vector tiers (`sse4.1`, `avx2`, and every
+//! sparse path including `fma`/`neon`) vectorize *across output
+//! elements* with separate multiply and add instructions, so each
+//! element's operation-and-rounding sequence is **unchanged** — those
+//! tiers are bit-identical to scalar, and the cross-tier tests
+//! (`rust/tests/isa_tiers.rs`) plus the `isa-matrix` CI job hold them to
+//! exact equality. Only the fused-multiply-add dense tiers (`fma`,
+//! `neon`) round once per FMA instead of twice; they report
+//! [`Isa::fused_dense`] and are held to a ≤ 8 ulp bound instead.
+//!
+//! # Safety audit (the checked-dispatch-only contract)
+//!
+//! All `#[target_feature]` functions in this module are **private** and
+//! `unsafe fn`; the only call path is through the safe [`Isa::dense_tile`]
+//! / [`Isa::sparse_axpy`] wrappers, which assert slice lengths before
+//! handing raw pointers down. Each per-tier [`Isa`] value is a `static`
+//! whose function pointers match its tier, and a tier is only ever
+//! selected ([`active`] / [`force`]) after its CPU features were verified
+//! by `std::arch` runtime detection — so a `#[target_feature]` body can
+//! never execute on a CPU lacking the feature. Safe code outside this
+//! module cannot reach the function pointers at all (the fields are
+//! private).
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use super::kernels::{MR, NR};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Dispatch tiers, narrowest to widest. `Sse41`/`Avx2`/`Fma` exist on
+/// x86_64, `Neon` on aarch64; [`supported`] is false for the rest, and
+/// [`Tier::Scalar`] is available everywhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Tier {
+    Scalar = 0,
+    Sse41 = 1,
+    Avx2 = 2,
+    Fma = 3,
+    Neon = 4,
+}
+
+impl Tier {
+    /// The `HPIPE_ISA` spelling of this tier.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Sse41 => "sse4.1",
+            Tier::Avx2 => "avx2",
+            Tier::Fma => "fma",
+            Tier::Neon => "neon",
+        }
+    }
+
+    fn from_u8(v: u8) -> Tier {
+        match v {
+            1 => Tier::Sse41,
+            2 => Tier::Avx2,
+            3 => Tier::Fma,
+            4 => Tier::Neon,
+            _ => Tier::Scalar,
+        }
+    }
+
+    /// Parse an `HPIPE_ISA` value. `Ok(None)` means "native" (pick the
+    /// widest supported tier); `Err(())` is an unrecognized spelling.
+    #[allow(clippy::result_unit_err)] // the one caller turns Err into a warning
+    pub fn parse(s: &str) -> Result<Option<Tier>, ()> {
+        match s {
+            "" | "native" => Ok(None),
+            "scalar" => Ok(Some(Tier::Scalar)),
+            "sse4.1" => Ok(Some(Tier::Sse41)),
+            "avx2" => Ok(Some(Tier::Avx2)),
+            "fma" => Ok(Some(Tier::Fma)),
+            "neon" => Ok(Some(Tier::Neon)),
+            _ => Err(()),
+        }
+    }
+}
+
+/// Dense-tile microkernel ABI: accumulate a `kc`-deep panel pair into an
+/// MR×NR accumulator tile. `a` points at `kc*MR` packed A values
+/// (`a[kk*MR + r]`), `b` at `kc*NR` packed B values (`b[kk*NR + j]`),
+/// `acc` at `MR*NR` row-major accumulators, pre-seeded by the caller.
+type DenseTileFn = unsafe fn(a: *const f32, b: *const f32, kc: usize, acc: *mut f32);
+
+/// Sparse-axpy ABI: `acc[i] += v * p[i]` for `i < len`.
+type SparseAxpyFn = unsafe fn(v: f32, p: *const f32, acc: *mut f32, len: usize);
+
+/// One dispatch tier's kernel table. The function-pointer fields are
+/// private: the only way to run them is through the length-checked safe
+/// methods below, and the only [`Isa`] values are the per-tier statics
+/// handed out by [`active`] / [`available`] after feature verification.
+pub struct Isa {
+    tier: Tier,
+    /// True when the dense tile uses fused multiply-add (one rounding
+    /// per FMA). Tests compare such tiers to scalar within ulps instead
+    /// of bitwise; sparse kernels never fuse, on any tier.
+    fused_dense: bool,
+    dense_tile: DenseTileFn,
+    sparse_axpy: SparseAxpyFn,
+}
+
+impl Isa {
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.tier.name()
+    }
+
+    pub fn fused_dense(&self) -> bool {
+        self.fused_dense
+    }
+
+    /// Accumulate one MR×NR register tile over a `kc`-deep packed
+    /// A-panel / B-panel pair. Checked entry point for the tier's
+    /// `#[target_feature]` microkernel.
+    #[inline]
+    pub fn dense_tile(&self, a: &[f32], b: &[f32], kc: usize, acc: &mut [f32; MR * NR]) {
+        assert!(a.len() >= kc * MR, "dense_tile: A panel shorter than kc*MR");
+        assert!(b.len() >= kc * NR, "dense_tile: B panel shorter than kc*NR");
+        // SAFETY: the pointers cover the asserted kc*MR / kc*NR / MR*NR
+        // element ranges the kernel reads/writes, and the target features
+        // the function was compiled for were runtime-verified before this
+        // tier could be selected (see module docs).
+        unsafe { (self.dense_tile)(a.as_ptr(), b.as_ptr(), kc, acc.as_mut_ptr()) }
+    }
+
+    /// `acc[i] += v * p[i]` over a decoded weight's position range.
+    /// Checked entry point for the tier's `#[target_feature]` axpy.
+    #[inline]
+    pub fn sparse_axpy(&self, v: f32, p: &[f32], acc: &mut [f32]) {
+        assert!(p.len() >= acc.len(), "sparse_axpy: positions shorter than accumulator");
+        // SAFETY: both pointers are valid for `acc.len()` reads (and
+        // writes, for `acc`) per the assert, and the tier's features were
+        // runtime-verified before selection (see module docs).
+        unsafe { (self.sparse_axpy)(v, p.as_ptr(), acc.as_mut_ptr(), acc.len()) }
+    }
+}
+
+/// Is `t` executable on this CPU?
+pub fn supported(t: Tier) -> bool {
+    match t {
+        Tier::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse41 => std::arch::is_x86_feature_detected!("sse4.1"),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Fma => {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        #[allow(unreachable_patterns)] // off-arch tiers fall through here
+        _ => false,
+    }
+}
+
+fn isa_for(t: Tier) -> &'static Isa {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse41 => &SSE41,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => &AVX2,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Fma => &FMA,
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => &NEON,
+        // Scalar, plus off-arch tiers (unreachable: selection is gated
+        // on `supported`, which rejects them).
+        _ => &SCALAR,
+    }
+}
+
+/// Widest tier this CPU supports (the "native" choice).
+fn widest() -> Tier {
+    for t in [Tier::Neon, Tier::Fma, Tier::Avx2, Tier::Sse41] {
+        if supported(t) {
+            return t;
+        }
+    }
+    Tier::Scalar
+}
+
+/// Every tier this CPU can execute, narrowest (scalar) first — each as
+/// its full kernel table, ready for cross-tier equivalence tests.
+pub fn available() -> Vec<&'static Isa> {
+    [Tier::Scalar, Tier::Sse41, Tier::Avx2, Tier::Fma, Tier::Neon]
+        .into_iter()
+        .filter(|&t| supported(t))
+        .map(isa_for)
+        .collect()
+}
+
+const UNINIT: u8 = u8::MAX;
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// Resolve the startup tier: `HPIPE_ISA` override if set, else the
+/// widest detected tier. A *valid but unsupported* request falls back to
+/// scalar — never silently to native — so a CI job forcing a tier the
+/// runner lacks produces an obviously-degraded run, not a fake pass.
+fn init_tier() -> Tier {
+    match std::env::var("HPIPE_ISA") {
+        Err(_) => widest(),
+        Ok(s) => match Tier::parse(&s) {
+            Ok(None) => widest(),
+            Ok(Some(t)) if supported(t) => t,
+            Ok(Some(t)) => {
+                eprintln!(
+                    "HPIPE_ISA={s}: tier `{}` is not supported on this CPU; \
+                     falling back to scalar",
+                    t.name()
+                );
+                Tier::Scalar
+            }
+            Err(()) => {
+                eprintln!(
+                    "HPIPE_ISA={s}: unknown tier (valid: \
+                     scalar|sse4.1|avx2|fma|neon|native); using native"
+                );
+                widest()
+            }
+        },
+    }
+}
+
+/// The active kernel table. Detection (plus the `HPIPE_ISA` override)
+/// runs once, on first use; the result is cached process-wide.
+pub fn active() -> &'static Isa {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    let t = if v == UNINIT {
+        let t = init_tier();
+        ACTIVE.store(t as u8, Ordering::Relaxed);
+        t
+    } else {
+        Tier::from_u8(v)
+    };
+    isa_for(t)
+}
+
+/// Force the active tier (benches and single-threaded harnesses only —
+/// the setting is process-global, so concurrent tests use the explicit
+/// `*_on` kernel variants instead). Errors if the CPU lacks the tier.
+pub fn force(t: Tier) -> Result<(), String> {
+    if !supported(t) {
+        return Err(format!("isa tier `{}` not supported on this CPU", t.name()));
+    }
+    ACTIVE.store(t as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// One-line summary for serve output: active tier + everything detected.
+pub fn describe() -> String {
+    let avail: Vec<&str> = available().iter().map(|i| i.name()).collect();
+    format!("{} (available: {})", active().name(), avail.join(" "))
+}
+
+// ---------------------------------------------------------------------
+// Tier 0: scalar — the always-available baseline.
+// ---------------------------------------------------------------------
+
+static SCALAR: Isa = Isa {
+    tier: Tier::Scalar,
+    fused_dense: false,
+    dense_tile: dense_tile_scalar,
+    sparse_axpy: sparse_axpy_scalar,
+};
+
+/// # Safety
+/// `a` must be valid for `kc*MR` reads, `b` for `kc*NR` reads, `acc` for
+/// `MR*NR` reads and writes. (No CPU-feature requirement.)
+unsafe fn dense_tile_scalar(a: *const f32, b: *const f32, kc: usize, acc: *mut f32) {
+    // SAFETY: all offsets stay inside the ranges the caller guarantees.
+    unsafe {
+        for kk in 0..kc {
+            for r in 0..MR {
+                let av = *a.add(kk * MR + r);
+                for j in 0..NR {
+                    let o = acc.add(r * NR + j);
+                    *o += av * *b.add(kk * NR + j);
+                }
+            }
+        }
+    }
+}
+
+/// # Safety
+/// `p` must be valid for `len` reads and `acc` for `len` reads and
+/// writes. (No CPU-feature requirement.)
+unsafe fn sparse_axpy_scalar(v: f32, p: *const f32, acc: *mut f32, len: usize) {
+    // SAFETY: all offsets are < len, inside the caller-guaranteed ranges.
+    unsafe {
+        for i in 0..len {
+            *acc.add(i) += v * *p.add(i);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64 tiers. The non-fused tiles issue separate vector multiply and
+// add instructions, so every output element keeps the scalar chain's
+// exact rounding sequence (bitwise-equal results); only the FMA dense
+// tile fuses. NR = 16 spans four __m128 or two __m256 lanes per row.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+static SSE41: Isa = Isa {
+    tier: Tier::Sse41,
+    fused_dense: false,
+    dense_tile: dense_tile_sse41,
+    sparse_axpy: sparse_axpy_sse41,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Isa = Isa {
+    tier: Tier::Avx2,
+    fused_dense: false,
+    dense_tile: dense_tile_avx2,
+    sparse_axpy: sparse_axpy_avx2,
+};
+
+/// The FMA tier fuses the *dense* tile only; its sparse axpy is the
+/// non-fused AVX2 one, keeping sparse results bitwise-equal to scalar on
+/// every tier (the equivalence suite's sparse bar is exact equality).
+#[cfg(target_arch = "x86_64")]
+static FMA: Isa = Isa {
+    tier: Tier::Fma,
+    fused_dense: true,
+    dense_tile: dense_tile_fma,
+    sparse_axpy: sparse_axpy_avx2,
+};
+
+/// # Safety
+/// Same pointer contract as [`dense_tile_scalar`]; the CPU must support
+/// SSE4.1 (guaranteed by dispatch — see module docs).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn dense_tile_sse41(a: *const f32, b: *const f32, kc: usize, acc: *mut f32) {
+    use core::arch::x86_64::*;
+    const L: usize = 4; // __m128 lanes per NR row
+    // SAFETY: all loads/stores stay inside the caller-guaranteed kc*MR /
+    // kc*NR / MR*NR ranges; unaligned load/store intrinsics are used.
+    unsafe {
+        let mut accv = [_mm_setzero_ps(); MR * L];
+        for (i, av) in accv.iter_mut().enumerate() {
+            *av = _mm_loadu_ps(acc.add(i * 4));
+        }
+        for kk in 0..kc {
+            let mut bv = [_mm_setzero_ps(); L];
+            for (j, b_j) in bv.iter_mut().enumerate() {
+                *b_j = _mm_loadu_ps(b.add(kk * NR + j * 4));
+            }
+            for r in 0..MR {
+                let av = _mm_set1_ps(*a.add(kk * MR + r));
+                for j in 0..L {
+                    let o = &mut accv[r * L + j];
+                    // separate mul + add: scalar rounding chain per lane
+                    *o = _mm_add_ps(*o, _mm_mul_ps(av, bv[j]));
+                }
+            }
+        }
+        for (i, av) in accv.iter().enumerate() {
+            _mm_storeu_ps(acc.add(i * 4), *av);
+        }
+    }
+}
+
+/// # Safety
+/// Same pointer contract as [`sparse_axpy_scalar`]; the CPU must support
+/// SSE4.1 (guaranteed by dispatch — see module docs).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn sparse_axpy_sse41(v: f32, p: *const f32, acc: *mut f32, len: usize) {
+    use core::arch::x86_64::*;
+    // SAFETY: vector body covers len/4*4 elements, scalar tail the rest;
+    // every offset is < len.
+    unsafe {
+        let vv = _mm_set1_ps(v);
+        let mut i = 0usize;
+        while i + 4 <= len {
+            let av = _mm_loadu_ps(acc.add(i));
+            let pv = _mm_loadu_ps(p.add(i));
+            _mm_storeu_ps(acc.add(i), _mm_add_ps(av, _mm_mul_ps(vv, pv)));
+            i += 4;
+        }
+        while i < len {
+            *acc.add(i) += v * *p.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Same pointer contract as [`dense_tile_scalar`]; the CPU must support
+/// AVX2 (guaranteed by dispatch — see module docs).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dense_tile_avx2(a: *const f32, b: *const f32, kc: usize, acc: *mut f32) {
+    use core::arch::x86_64::*;
+    const L: usize = 2; // __m256 lanes per NR row
+    // SAFETY: all loads/stores stay inside the caller-guaranteed ranges.
+    unsafe {
+        let mut accv = [_mm256_setzero_ps(); MR * L];
+        for (i, av) in accv.iter_mut().enumerate() {
+            *av = _mm256_loadu_ps(acc.add(i * 8));
+        }
+        for kk in 0..kc {
+            let b0 = _mm256_loadu_ps(b.add(kk * NR));
+            let b1 = _mm256_loadu_ps(b.add(kk * NR + 8));
+            for r in 0..MR {
+                let av = _mm256_set1_ps(*a.add(kk * MR + r));
+                let o0 = &mut accv[r * L];
+                // separate mul + add: scalar rounding chain per lane
+                *o0 = _mm256_add_ps(*o0, _mm256_mul_ps(av, b0));
+                let o1 = &mut accv[r * L + 1];
+                *o1 = _mm256_add_ps(*o1, _mm256_mul_ps(av, b1));
+            }
+        }
+        for (i, av) in accv.iter().enumerate() {
+            _mm256_storeu_ps(acc.add(i * 8), *av);
+        }
+    }
+}
+
+/// # Safety
+/// Same pointer contract as [`sparse_axpy_scalar`]; the CPU must support
+/// AVX2 (guaranteed by dispatch — see module docs).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sparse_axpy_avx2(v: f32, p: *const f32, acc: *mut f32, len: usize) {
+    use core::arch::x86_64::*;
+    // SAFETY: vector body covers len/8*8 elements, scalar tail the rest.
+    unsafe {
+        let vv = _mm256_set1_ps(v);
+        let mut i = 0usize;
+        while i + 8 <= len {
+            let av = _mm256_loadu_ps(acc.add(i));
+            let pv = _mm256_loadu_ps(p.add(i));
+            // no FMA here, on any tier: sparse results stay bitwise
+            _mm256_storeu_ps(acc.add(i), _mm256_add_ps(av, _mm256_mul_ps(vv, pv)));
+            i += 8;
+        }
+        while i < len {
+            *acc.add(i) += v * *p.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Same pointer contract as [`dense_tile_scalar`]; the CPU must support
+/// AVX2 and FMA (guaranteed by dispatch — see module docs).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dense_tile_fma(a: *const f32, b: *const f32, kc: usize, acc: *mut f32) {
+    use core::arch::x86_64::*;
+    const L: usize = 2;
+    // SAFETY: all loads/stores stay inside the caller-guaranteed ranges.
+    unsafe {
+        let mut accv = [_mm256_setzero_ps(); MR * L];
+        for (i, av) in accv.iter_mut().enumerate() {
+            *av = _mm256_loadu_ps(acc.add(i * 8));
+        }
+        for kk in 0..kc {
+            let b0 = _mm256_loadu_ps(b.add(kk * NR));
+            let b1 = _mm256_loadu_ps(b.add(kk * NR + 8));
+            for r in 0..MR {
+                let av = _mm256_set1_ps(*a.add(kk * MR + r));
+                // fused multiply-add: one rounding per step, so this
+                // tier reports fused_dense and is ulp- (not bit-)
+                // compared against scalar
+                accv[r * L] = _mm256_fmadd_ps(av, b0, accv[r * L]);
+                accv[r * L + 1] = _mm256_fmadd_ps(av, b1, accv[r * L + 1]);
+            }
+        }
+        for (i, av) in accv.iter().enumerate() {
+            _mm256_storeu_ps(acc.add(i * 8), *av);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64: NEON. Dense fuses (vfmaq); sparse stays mul+add for the
+// bitwise sparse guarantee.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Isa = Isa {
+    tier: Tier::Neon,
+    fused_dense: true,
+    dense_tile: dense_tile_neon,
+    sparse_axpy: sparse_axpy_neon,
+};
+
+/// # Safety
+/// Same pointer contract as [`dense_tile_scalar`]; the CPU must support
+/// NEON (guaranteed by dispatch — see module docs).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dense_tile_neon(a: *const f32, b: *const f32, kc: usize, acc: *mut f32) {
+    use core::arch::aarch64::*;
+    const L: usize = 4; // float32x4 lanes per NR row
+    // SAFETY: all loads/stores stay inside the caller-guaranteed ranges.
+    unsafe {
+        let mut accv = [vdupq_n_f32(0.0); MR * L];
+        for (i, av) in accv.iter_mut().enumerate() {
+            *av = vld1q_f32(acc.add(i * 4));
+        }
+        for kk in 0..kc {
+            let mut bv = [vdupq_n_f32(0.0); L];
+            for (j, b_j) in bv.iter_mut().enumerate() {
+                *b_j = vld1q_f32(b.add(kk * NR + j * 4));
+            }
+            for r in 0..MR {
+                let av = vdupq_n_f32(*a.add(kk * MR + r));
+                for j in 0..L {
+                    // fused multiply-add (fused_dense tier)
+                    accv[r * L + j] = vfmaq_f32(accv[r * L + j], av, bv[j]);
+                }
+            }
+        }
+        for (i, av) in accv.iter().enumerate() {
+            vst1q_f32(acc.add(i * 4), *av);
+        }
+    }
+}
+
+/// # Safety
+/// Same pointer contract as [`sparse_axpy_scalar`]; the CPU must support
+/// NEON (guaranteed by dispatch — see module docs).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sparse_axpy_neon(v: f32, p: *const f32, acc: *mut f32, len: usize) {
+    use core::arch::aarch64::*;
+    // SAFETY: vector body covers len/4*4 elements, scalar tail the rest.
+    unsafe {
+        let vv = vdupq_n_f32(v);
+        let mut i = 0usize;
+        while i + 4 <= len {
+            let av = vld1q_f32(acc.add(i));
+            let pv = vld1q_f32(p.add(i));
+            // separate mul + add: sparse results stay bitwise on NEON too
+            vst1q_f32(acc.add(i), vaddq_f32(av, vmulq_f32(vv, pv)));
+            i += 4;
+        }
+        while i < len {
+            *acc.add(i) += v * *p.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available_and_first() {
+        let tiers = available();
+        assert!(!tiers.is_empty());
+        assert_eq!(tiers[0].tier(), Tier::Scalar);
+        assert!(!tiers[0].fused_dense());
+        // ascending width, no duplicates
+        for w in tiers.windows(2) {
+            assert!(w[0].tier() < w[1].tier());
+        }
+    }
+
+    #[test]
+    fn parse_covers_every_documented_spelling() {
+        assert_eq!(Tier::parse(""), Ok(None));
+        assert_eq!(Tier::parse("native"), Ok(None));
+        assert_eq!(Tier::parse("scalar"), Ok(Some(Tier::Scalar)));
+        assert_eq!(Tier::parse("sse4.1"), Ok(Some(Tier::Sse41)));
+        assert_eq!(Tier::parse("avx2"), Ok(Some(Tier::Avx2)));
+        assert_eq!(Tier::parse("fma"), Ok(Some(Tier::Fma)));
+        assert_eq!(Tier::parse("neon"), Ok(Some(Tier::Neon)));
+        assert_eq!(Tier::parse("sse2"), Err(()));
+        assert_eq!(Tier::parse("AVX2"), Err(()));
+        // round-trip: every tier's name parses back to itself
+        for t in [Tier::Scalar, Tier::Sse41, Tier::Avx2, Tier::Fma, Tier::Neon] {
+            assert_eq!(Tier::parse(t.name()), Ok(Some(t)));
+        }
+    }
+
+    #[test]
+    fn active_tier_is_supported_and_describe_mentions_it() {
+        let isa = active();
+        assert!(supported(isa.tier()));
+        assert!(describe().contains(isa.name()));
+    }
+
+    #[test]
+    fn sparse_axpy_is_bitwise_scalar_on_every_tier() {
+        // quick smoke at the dispatch layer; the full cross-tier
+        // property suite lives in rust/tests/isa_tiers.rs
+        let p: Vec<f32> = (0..37).map(|i| (i as f32) * 0.37 - 5.0).collect();
+        let v = 1.7f32;
+        let mut want: Vec<f32> = (0..37).map(|i| (i as f32) * 0.11).collect();
+        let base = want.clone();
+        SCALAR.sparse_axpy(v, &p, &mut want);
+        for isa in available() {
+            let mut got = base.clone();
+            isa.sparse_axpy(v, &p, &mut got);
+            assert_eq!(got, want, "tier {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn dense_tile_tiers_match_scalar_within_contract() {
+        let kc = 19usize;
+        let a: Vec<f32> = (0..kc * MR).map(|i| ((i * 7 % 23) as f32) * 0.21 - 2.0).collect();
+        let b: Vec<f32> = (0..kc * NR).map(|i| ((i * 5 % 31) as f32) * 0.13 - 1.9).collect();
+        let seed: Vec<f32> = (0..MR * NR).map(|i| (i as f32) * 0.01).collect();
+        let mut want = [0.0f32; MR * NR];
+        want.copy_from_slice(&seed);
+        SCALAR.dense_tile(&a, &b, kc, &mut want);
+        for isa in available() {
+            let mut got = [0.0f32; MR * NR];
+            got.copy_from_slice(&seed);
+            isa.dense_tile(&a, &b, kc, &mut got);
+            if isa.fused_dense() {
+                crate::util::prop::assert_ulp_close(&got, &want, 8)
+                    .map_err(|e| format!("tier {}: {e}", isa.name()))
+                    .unwrap();
+            } else {
+                assert_eq!(got, want, "tier {}", isa.name());
+            }
+        }
+    }
+}

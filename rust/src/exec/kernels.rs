@@ -14,7 +14,7 @@
 //! GEMM, so each weight tile is read once per batch instead of once per
 //! image (the weight-reuse-across-batch the batched plans exist for).
 //!
-//! # Prepacked, register-tiled GEMM (ISSUE 4)
+//! # Prepacked, register-tiled GEMM (ISSUE 4) at lane width (ISSUE 7)
 //!
 //! HPIPE §V bakes each layer's weights into per-layer M20K memories laid
 //! out exactly as the layer's PEs consume them — the weight *layout* is
@@ -23,20 +23,28 @@
 //! dense conv / matmul's HWIO weight matrix is repacked into
 //! cache-blocked column panels ([`NR`]-wide, zero-padded at the tail,
 //! grouped under [`KC`]-row k-blocks) so the hot loop streams weights in
-//! exactly the order the microkernel consumes them. The microkernel
-//! itself ([`gemm_packed_bias_act`]) computes an [`MR`]×[`NR`] register
-//! tile: the accumulators live in locals across a whole k-block (the
-//! autovectorizer keeps them in SIMD registers), each packed panel row
-//! is read once and feeds `MR` output rows, and `out` is touched once
-//! per k-block instead of once per multiply — the PR 3 axpy kernel
-//! ([`gemm_bias_act`], kept as the benchmark baseline) re-read and
-//! re-wrote the output row on every k step.
+//! exactly the order the microkernel consumes them. ISSUE 7 added the
+//! missing half: the activation stream is packed the same way, at run
+//! time — im2col emits straight into [`MR`]-row **A-panels**
+//! ([`im2col_a`]; [`pack_a`] for matmul rows), k-major within a panel,
+//! zero-padded at the M tail, so the microkernel's A reads are
+//! contiguous broadcasts instead of strided gathers and the M-tail edge
+//! case disappears from the hot loop (pad rows multiply packed zeros and
+//! are simply not written back).
+//!
+//! The tile loop ([`gemm_panels_bias_act`]) walks both packed streams
+//! and hands each `kc`-deep MR×NR tile to the active ISA dispatch table
+//! (`exec::isa`): explicit SIMD microkernels selected once per process
+//! by runtime CPU-feature detection, with the scalar tier as the
+//! always-available baseline (the same role [`gemm_bias_act`], the PR 3
+//! axpy kernel kept as benchmark baseline, plays for packing itself).
 //!
 //! Per-element accumulation order is *unchanged* (ascending k, one
 //! accumulator chain per output element, bias-seeded, activation on the
-//! final writeback), in both the MR-tile fast path and the masked edge
-//! path for M tails — so plan outputs stay batch-invariant and the
-//! equivalence suite can keep tight (ULP-level) bounds on dense paths.
+//! final writeback) on every non-fused tier — so plan outputs stay
+//! batch-invariant and bitwise tier-independent; the FMA dense tiers
+//! round once per fused step and are held to ≤ 8 ulp of scalar instead
+//! (see `exec::isa` for the full tier contract).
 
 use crate::graph::{Padding, Tensor};
 
@@ -317,82 +325,96 @@ pub fn pack_b(b: &[f32], k: usize, n: usize) -> PackedB {
     PackedB { k, n, panels, data }
 }
 
-/// One MR×NR register tile (rows `i..i+mr`, panel columns `n0..n0+nw`)
-/// over one k-block of a packed panel. `first`/`last` mark the k-block's
-/// position: the first block seeds accumulators from the bias, later
-/// blocks resume from `out`, and only the last applies the activation.
-/// Both the full-MR fast path and the `mr < MR` edge path accumulate
-/// each output element over ascending k with a single accumulator chain,
-/// so tile placement never changes a result bit.
-#[allow(clippy::too_many_arguments)] // internal microkernel ABI
-#[inline]
-fn microtile(
-    a: &[f32],
-    k: usize,
-    k0: usize,
-    kc: usize,
-    panel: &[f32],
-    i: usize,
-    mr: usize,
-    n: usize,
-    n0: usize,
-    nw: usize,
-    first: bool,
-    last: bool,
-    bias: Option<&[f32]>,
-    act: Act,
-    out: &mut [f32],
-) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
-        if first {
-            if let Some(bv) = bias {
-                accr[..nw].copy_from_slice(&bv[n0..n0 + nw]);
-            }
-        } else {
-            accr[..nw].copy_from_slice(&out[(i + r) * n + n0..][..nw]);
-        }
-    }
-    if mr == MR {
-        // Fast path: MR×NR accumulators stay in registers for the whole
-        // k-block; each packed panel row is read once and feeds MR rows.
-        for kk in 0..kc {
-            let brow = &panel[kk * NR..][..NR];
-            for (r, accr) in acc.iter_mut().enumerate() {
-                let av = a[(i + r) * k + k0 + kk];
-                for (acc_v, &b_v) in accr.iter_mut().zip(brow) {
-                    *acc_v += av * b_v;
-                }
-            }
-        }
-    } else {
-        // Masked edge path (M tail): one row of NR accumulators at a
-        // time, identical per-element accumulation order.
-        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
-            let arow = &a[(i + r) * k + k0..][..kc];
-            for (kk, &av) in arow.iter().enumerate() {
-                let brow = &panel[kk * NR..][..NR];
-                for (acc_v, &b_v) in accr.iter_mut().zip(brow) {
-                    *acc_v += av * b_v;
-                }
-            }
-        }
-    }
-    for (r, accr) in acc.iter().enumerate().take(mr) {
-        let orow = &mut out[(i + r) * n + n0..][..nw];
-        for (o, &v) in orow.iter_mut().zip(&accr[..nw]) {
-            *o = if last { act.apply(v) } else { v };
+/// Scratch elements needed to hold `m` rows × `k` cols of A packed into
+/// MR-row panels (the M tail is zero-padded to a full panel).
+pub fn packed_a_len(m: usize, k: usize) -> usize {
+    m.div_ceil(MR) * MR * k
+}
+
+/// Pack a row-major [m, k] matrix into [`MR`]-row A-panels: panel `p`
+/// holds rows `p·MR .. p·MR+MR` k-major, `ap[p·MR·k + kk·MR + r] =
+/// a[(p·MR + r)·k + kk]`, tail rows zero-padded. This is the runtime
+/// mirror of [`pack_b`]: the microkernel reads `MR` A values per k step
+/// as one contiguous load instead of `MR` strided row walks. Pad rows
+/// contribute only `0·b` products to lanes that are never written back.
+pub fn pack_a(a: &[f32], m: usize, k: usize, ap: &mut [f32]) {
+    assert!(a.len() >= m * k, "pack_a: matrix shorter than m*k");
+    let ap = &mut ap[..packed_a_len(m, k)];
+    ap.fill(0.0);
+    for (row, src) in a.chunks_exact(k).enumerate().take(m) {
+        let (panel, r) = (row / MR, row % MR);
+        let dst = &mut ap[panel * MR * k..][..MR * k];
+        for (kk, &v) in src.iter().enumerate() {
+            dst[kk * MR + r] = v;
         }
     }
 }
 
-/// Register-tiled GEMM over a prepacked B: out[M, N] = a[M, K] · pb,
-/// bias-seeded and with `act` fused into the final writeback. `a` is
-/// row-major (an im2col patch matrix or activation rows); rows are
-/// independent, so callers may hand disjoint row ranges of `a`/`out` to
-/// a worker team (see `ExecutionPlan` intra-stage splitting).
-pub fn gemm_packed_bias_act(
-    a: &[f32],
+/// im2col straight into [`MR`]-row A-panels: bitwise-identical data to
+/// [`im2col`] followed by [`pack_a`], without materializing the
+/// row-major intermediate. Output position `row = img·M + oy·wo + ox`
+/// lands in panel `row / MR`, lane `row % MR`; padding taps and the
+/// M-tail pad rows stay zero from the initial fill.
+pub fn im2col_a(x: &[f32], g: &ConvGeom, ap: &mut [f32]) {
+    let k = g.patch_len();
+    let m = g.out_positions();
+    ap[..packed_a_len(g.total_positions(), k)].fill(0.0);
+    let (sh, sw) = g.stride;
+    let (pt, _, pl, _) = g.pad;
+    for img in 0..g.n {
+        let xi = &x[img * g.h * g.w * g.ci..][..g.h * g.w * g.ci];
+        for oy in 0..g.ho {
+            for ky in 0..g.kh {
+                let iy = (oy * sh + ky) as isize - pt as isize;
+                if !(0..g.h as isize).contains(&iy) {
+                    continue;
+                }
+                let iy = iy as usize;
+                for ox in 0..g.wo {
+                    let row = img * m + oy * g.wo + ox;
+                    let dst = &mut ap[(row / MR) * MR * k..][..MR * k];
+                    let r = row % MR;
+                    for kx in 0..g.kw {
+                        let ix = (ox * sw + kx) as isize - pl as isize;
+                        if !(0..g.w as isize).contains(&ix) {
+                            continue;
+                        }
+                        let src = &xi[(iy * g.w + ix as usize) * g.ci..][..g.ci];
+                        let kbase = (ky * g.kw + kx) * g.ci;
+                        for (ic, &v) in src.iter().enumerate() {
+                            dst[(kbase + ic) * MR + r] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Register-tiled GEMM over prepacked operands: out[M, N] = ap · pb,
+/// bias-seeded and with `act` fused into the final writeback. `ap` is an
+/// MR-row A-panel pack of the activation rows ([`pack_a`]/[`im2col_a`]);
+/// the MR×NR tiles go through the active `exec::isa` kernel table.
+/// A-panels are independent, so callers may hand MR-aligned disjoint row
+/// ranges of `ap`/`out` to a worker team (see `ExecutionPlan`
+/// intra-stage splitting).
+pub fn gemm_panels_bias_act(
+    ap: &[f32],
+    pb: &PackedB,
+    m: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    gemm_panels_bias_act_on(super::isa::active(), ap, pb, m, bias, act, out);
+}
+
+/// [`gemm_panels_bias_act`] pinned to an explicit dispatch tier — the
+/// entry point cross-tier equivalence tests use, since the active tier
+/// is process-global and test binaries are multi-threaded.
+pub fn gemm_panels_bias_act_on(
+    isa: &super::isa::Isa,
+    ap: &[f32],
     pb: &PackedB,
     m: usize,
     bias: Option<&[f32]>,
@@ -401,8 +423,9 @@ pub fn gemm_packed_bias_act(
 ) {
     crate::util::fault::point("kernel.gemm", 0);
     let (k, n) = (pb.k, pb.n);
-    debug_assert!(a.len() >= m * k, "gemm_packed: A shorter than m*k");
-    debug_assert!(out.len() >= m * n, "gemm_packed: out shorter than m*n");
+    debug_assert!(ap.len() >= packed_a_len(m, k), "gemm_panels: A pack too short");
+    debug_assert!(out.len() >= m * n, "gemm_panels: out shorter than m*n");
+    let a_panels = m.div_ceil(MR);
     let mut k0 = 0usize;
     let mut block = 0usize; // start of this k-block's panels in pb.data
     while k0 < k {
@@ -410,14 +433,34 @@ pub fn gemm_packed_bias_act(
         let kc = k1 - k0;
         let (first, last) = (k0 == 0, k1 == k);
         for p in 0..pb.panels {
-            let panel = &pb.data[block + p * kc * NR..][..kc * NR];
+            let bpanel = &pb.data[block + p * kc * NR..][..kc * NR];
             let n0 = p * NR;
             let nw = (n - n0).min(NR);
-            let mut i = 0usize;
-            while i < m {
+            for ai in 0..a_panels {
+                let i = ai * MR;
                 let mr = (m - i).min(MR);
-                microtile(a, k, k0, kc, panel, i, mr, n, n0, nw, first, last, bias, act, out);
-                i += mr;
+                let apanel = &ap[ai * MR * k + k0 * MR..][..kc * MR];
+                // Seed the tile: first k-block from the bias, later
+                // blocks resume from `out`. Pad rows (r >= mr) and pad
+                // lanes (j >= nw) stay zero — their products are zero
+                // and they are never written back.
+                let mut acc = [0.0f32; MR * NR];
+                for (r, accr) in acc.chunks_exact_mut(NR).enumerate().take(mr) {
+                    if first {
+                        if let Some(bv) = bias {
+                            accr[..nw].copy_from_slice(&bv[n0..n0 + nw]);
+                        }
+                    } else {
+                        accr[..nw].copy_from_slice(&out[(i + r) * n + n0..][..nw]);
+                    }
+                }
+                isa.dense_tile(apanel, bpanel, kc, &mut acc);
+                for (r, accr) in acc.chunks_exact(NR).enumerate().take(mr) {
+                    let orow = &mut out[(i + r) * n + n0..][..nw];
+                    for (o, &v) in orow.iter_mut().zip(&accr[..nw]) {
+                        *o = if last { act.apply(v) } else { v };
+                    }
+                }
             }
         }
         block += pb.panels * kc * NR;
@@ -426,9 +469,9 @@ pub fn gemm_packed_bias_act(
 }
 
 /// Dense Conv2D through the prepacked register-tiled GEMM: im2col all
-/// `g.n` images into `scratch`, then [`gemm_packed_bias_act`] against
-/// the plan-time packed weights. 1x1/stride-1/no-pad convs skip the
-/// im2col copy exactly like [`conv2d_dense`].
+/// `g.n` images straight into A-panels in `scratch` ([`im2col_a`]; the
+/// 1x1/stride-1/no-pad case is a plain [`pack_a`] of the input), then
+/// [`gemm_panels_bias_act`] against the plan-time packed weights.
 pub fn conv2d_dense_packed(
     x: &[f32],
     g: &ConvGeom,
@@ -442,11 +485,11 @@ pub fn conv2d_dense_packed(
     debug_assert_eq!(pb.k, g.patch_len());
     debug_assert_eq!(pb.n, g.co);
     if g.identity_patches() {
-        gemm_packed_bias_act(x, pb, m, bias, act, out);
+        pack_a(x, m, pb.k, scratch);
     } else {
-        im2col(x, g, scratch);
-        gemm_packed_bias_act(scratch, pb, m, bias, act, out);
+        im2col_a(x, g, scratch);
     }
+    gemm_panels_bias_act(scratch, pb, m, bias, act, out);
 }
 
 /// Dense Conv2D (+ fused bias / activation): im2col all `g.n` images
@@ -702,6 +745,7 @@ mod tests {
 
     #[test]
     fn packed_gemm_matches_naive_across_odd_shapes_and_sparsity() {
+        use crate::exec::isa;
         Cases::new(36).seed(0x9EAC).run(|rng, size| {
             // Odd shapes on purpose: M tails (m % MR != 0), N panel
             // tails (n % NR != 0) and k spanning multiple KC blocks.
@@ -716,34 +760,75 @@ mod tests {
             let act = *rng.choose(&[Act::None, Act::Relu, Act::Relu6]);
             let pb = pack_b(b.as_slice(), k, n);
             assert_eq!(pb.len(), n.div_ceil(NR) * NR * k);
-            let mut got = vec![0.0f32; m * n];
-            gemm_packed_bias_act(a.as_slice(), &pb, m, Some(&bias), act, &mut got);
+            let mut ap = vec![0.0f32; packed_a_len(m, k)];
+            pack_a(a.as_slice(), m, k, &mut ap);
             let want = naive_gemm(a.as_slice(), b.as_slice(), m, k, n, Some(&bias), act);
-            if got == want {
+            for tier in isa::available() {
+                let mut got = vec![0.0f32; m * n];
+                gemm_panels_bias_act_on(tier, &ap, &pb, m, Some(&bias), act, &mut got);
+                if tier.fused_dense() {
+                    // one rounding per fused step: ulp bar, not bitwise
+                    crate::util::prop::assert_ulp_close(&got, &want, 8).map_err(|e| {
+                        format!("m={m} k={k} n={n} tier={}: {e}", tier.name())
+                    })?;
+                } else if got != want {
+                    return Err(format!(
+                        "m={m} k={k} n={n} sparsity={sparsity} tier={}: mismatch",
+                        tier.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn im2col_a_matches_im2col_then_pack_a_bitwise() {
+        Cases::new(12).seed(0xA12C).run(|rng, size| {
+            let (h, w) = (3 + size % 5, 3 + (size * 2) % 5);
+            let ci = 1 + rng.below(5);
+            let co = 1 + rng.below(4);
+            let (kh, kw) = (1 + rng.below(3), 1 + rng.below(3));
+            let stride = 1 + rng.below(2);
+            let shape = [2usize, h, w, ci];
+            let x = Tensor::randn(&shape, rng, 1.0);
+            let pad = *rng.choose(&[Padding::Same, Padding::Valid]);
+            let g = ConvGeom::new(&shape, kh, kw, co, (stride, stride), pad);
+            let (mt, k) = (g.total_positions(), g.patch_len());
+            let mut direct = vec![f32::NAN; packed_a_len(mt, k)];
+            im2col_a(x.as_slice(), &g, &mut direct);
+            let mut rows = vec![f32::NAN; mt * k];
+            im2col(x.as_slice(), &g, &mut rows);
+            let mut staged = vec![f32::NAN; packed_a_len(mt, k)];
+            pack_a(&rows, mt, k, &mut staged);
+            if direct == staged {
                 Ok(())
             } else {
-                Err(format!("m={m} k={k} n={n} sparsity={sparsity}: mismatch"))
+                Err(format!("h={h} w={w} ci={ci} kh={kh} kw={kw} s={stride}"))
             }
         });
     }
 
     #[test]
     fn packed_gemm_row_ranges_compose() {
-        // The intra-stage worker team hands disjoint row ranges of the
-        // same packed GEMM to different threads; chunked execution must
-        // reproduce the single-call result bit for bit.
+        // The intra-stage worker team hands disjoint MR-aligned row
+        // ranges of the same packed GEMM to different threads; chunked
+        // execution must reproduce the single-call result bit for bit.
         let mut rng = Rng::new(0x7EA3);
         let (m, k, n) = (11usize, KC + 7, 21usize);
         let a = Tensor::randn(&[m, k], &mut rng, 1.0);
         let b = Tensor::randn(&[k, n], &mut rng, 1.0);
         let pb = pack_b(b.as_slice(), k, n);
+        let mut ap = vec![0.0f32; packed_a_len(m, k)];
+        pack_a(a.as_slice(), m, k, &mut ap);
         let mut full = vec![0.0f32; m * n];
-        gemm_packed_bias_act(a.as_slice(), &pb, m, None, Act::Relu, &mut full);
+        gemm_panels_bias_act(&ap, &pb, m, None, Act::Relu, &mut full);
         let mut parts = vec![0.0f32; m * n];
-        for (t, chunk) in parts.chunks_mut(4 * n).enumerate() {
-            let m0 = t * 4;
+        for (t, chunk) in parts.chunks_mut(MR * n).enumerate() {
+            let m0 = t * MR; // MR-aligned: sub-range starts on a panel
             let rows = chunk.len() / n;
-            gemm_packed_bias_act(&a.as_slice()[m0 * k..], &pb, rows, None, Act::Relu, chunk);
+            let asub = &ap[m0 * k..][..packed_a_len(rows, k)];
+            gemm_panels_bias_act(asub, &pb, rows, None, Act::Relu, chunk);
         }
         assert_eq!(full, parts);
     }

@@ -89,7 +89,25 @@
 //! stops reusing the B=1 cuts. `runtime::LoadedModel::autotuned` is the
 //! calibrate-then-serve entry point; the static model-driven path stays
 //! the default.
+//!
+//! # Kernel tiers (explicit SIMD dispatch)
+//!
+//! The packed microkernels run at the CPU's real lane width: [`isa`]
+//! detects vector features once per process (overridable with
+//! `HPIPE_ISA=scalar|sse4.1|avx2|fma|neon|native`) and routes the dense
+//! MR×NR tile and the sparse position-axis axpy through per-tier
+//! `#[target_feature]` implementations. Both operand streams are packed
+//! — weights at plan build time ([`kernels::PackedB`],
+//! [`sparse::PackedRle`]), activations at run time into MR-row A-panels
+//! ([`kernels::pack_a`] / [`kernels::im2col_a`]) or the K-major
+//! transpose ([`sparse::transpose_k_major`]) — so every tier streams
+//! contiguous memory. The scalar tier is the always-available baseline
+//! and the correctness anchor: sparse kernels and non-fused dense tiers
+//! are bit-identical to it on any CPU, fused dense tiers (FMA/NEON) stay
+//! within 8 ulp, and the CI isa-matrix job re-runs the whole suite under
+//! each forced tier to hold that contract.
 
+pub mod isa;
 pub mod kernels;
 pub mod pipeline;
 pub mod profile;
@@ -774,12 +792,28 @@ impl ExecutionPlan {
         let mut acc_len = 0usize;
         for s in &steps {
             match &s.kind {
-                StepKind::DenseConv { geom, .. } if !geom.identity_patches() => {
+                // Packed dense paths stage A into MR-row panels (the
+                // identity-patches case packs too — the pack IS the only
+                // copy); the unpacked baseline keeps row-major im2col.
+                StepKind::DenseConv { geom, packed: Some(_), .. } => {
+                    scratch_len = scratch_len
+                        .max(kernels::packed_a_len(geom.total_positions(), geom.patch_len()));
+                }
+                StepKind::DenseConv { geom, packed: None, .. }
+                    if !geom.identity_patches() =>
+                {
                     scratch_len = scratch_len.max(geom.patch_len() * geom.total_positions());
+                }
+                StepKind::DenseMatMul { n, k, packed: Some(_), .. } => {
+                    scratch_len = scratch_len.max(kernels::packed_a_len(*n, *k));
                 }
                 StepKind::SparseConv { geom, .. } => {
                     scratch_len = scratch_len.max(geom.patch_len() * geom.total_positions());
                     acc_len = acc_len.max(geom.total_positions());
+                }
+                // K-major transpose scratch for the position-axis kernel.
+                StepKind::SparseMatMul { n, k, packed: Some(_), .. } => {
+                    scratch_len = scratch_len.max(k * n);
                 }
                 _ => {}
             }
@@ -983,7 +1017,10 @@ impl ExecutionPlan {
                     );
                 }
                 StepKind::DenseMatMul { n, k, co, w, packed, bias: b, act } => match packed {
-                    Some(pb) => kernels::gemm_packed_bias_act(x, pb, *n, bias(b), *act, &mut out),
+                    Some(pb) => {
+                        kernels::pack_a(x, *n, pb.k, scratch);
+                        kernels::gemm_panels_bias_act(scratch, pb, *n, bias(b), *act, &mut out)
+                    }
                     None => kernels::gemm_bias_act(
                         x,
                         self.consts[*w].as_slice(),
@@ -996,9 +1033,17 @@ impl ExecutionPlan {
                     ),
                 },
                 StepKind::SparseMatMul { n, k, co, rle, packed, bias: b, act } => match packed {
-                    Some(pr) => {
-                        sparse::sparse_matmul_packed(x, *n, *k, *co, pr, bias(b), *act, &mut out)
-                    }
+                    Some(pr) => sparse::sparse_matmul_rows(
+                        x,
+                        *n,
+                        *k,
+                        *co,
+                        pr,
+                        bias(b),
+                        *act,
+                        scratch,
+                        &mut out,
+                    ),
                     None => sparse::sparse_matmul(x, *n, *k, *co, rle, bias(b), *act, &mut out),
                 },
                 StepKind::MaxPool { geom } => kernels::max_pool(x, geom, &mut out),
@@ -1052,13 +1097,12 @@ impl ExecutionPlan {
                 {
                     let x = resolve_src(&self.consts, slots, step.inputs[0]);
                     let m = geom.total_positions();
-                    let a: &[f32] = if geom.identity_patches() {
-                        x
+                    if geom.identity_patches() {
+                        kernels::pack_a(x, m, pb.k, scratch);
                     } else {
-                        kernels::im2col(x, geom, scratch);
-                        &scratch[..]
-                    };
-                    team_gemm_rows(a, pb, m, bias(b), *act, team, &mut out[..m * geom.co]);
+                        kernels::im2col_a(x, geom, scratch);
+                    }
+                    team_gemm_rows(&scratch[..], pb, m, bias(b), *act, team, &mut out[..m * geom.co]);
                 }
                 slots[step.out] = out;
             }
@@ -1082,24 +1126,26 @@ impl ExecutionPlan {
                 slots[step.out] = out;
             }
             StepKind::DenseMatMul { n, packed: Some(pb), bias: b, act, .. } => {
-                let ExecContext { slots, .. } = ctx;
+                let ExecContext { slots, scratch, .. } = ctx;
                 let mut out = std::mem::take(&mut slots[step.out]);
                 {
                     let x = resolve_src(&self.consts, slots, step.inputs[0]);
-                    team_gemm_rows(x, pb, *n, bias(b), *act, team, &mut out[..*n * pb.n]);
+                    kernels::pack_a(x, *n, pb.k, scratch);
+                    team_gemm_rows(&scratch[..], pb, *n, bias(b), *act, team, &mut out[..*n * pb.n]);
                 }
                 slots[step.out] = out;
             }
             StepKind::SparseMatMul { n, k, co, packed: Some(pr), bias: b, act, .. } => {
-                let ExecContext { slots, .. } = ctx;
+                let ExecContext { slots, scratch, .. } = ctx;
                 let mut out = std::mem::take(&mut slots[step.out]);
                 {
                     let x = resolve_src(&self.consts, slots, step.inputs[0]);
-                    team_sparse_matmul_rows(
-                        x,
+                    // Same K-major transpose + position-axis kernel as the
+                    // sparse conv team path — rows split across workers.
+                    sparse::transpose_k_major(x, *n, *k, scratch);
+                    team_sparse_rows(
+                        &scratch[..],
                         *n,
-                        *k,
-                        *co,
                         pr,
                         bias(b),
                         *act,
@@ -1120,11 +1166,13 @@ impl ExecutionPlan {
 }
 
 /// Split a packed GEMM's output rows into `team` contiguous chunks, one
-/// scoped worker thread per chunk. Rows are independent in
-/// [`kernels::gemm_packed_bias_act`], so workers share `a` / `pb`
+/// scoped worker thread per chunk. `ap` is the MR-row A-panel pack of
+/// the whole row range; chunks are MR-aligned so every worker's range
+/// starts on a panel boundary, and A-panels are independent in
+/// [`kernels::gemm_panels_bias_act`], so workers share `ap` / `pb`
 /// read-only and write disjoint `out` slices.
 fn team_gemm_rows(
-    a: &[f32],
+    ap: &[f32],
     pb: &kernels::PackedB,
     rows_total: usize,
     bias: Option<&[f32]>,
@@ -1132,15 +1180,16 @@ fn team_gemm_rows(
     team: usize,
     out: &mut [f32],
 ) {
+    use kernels::MR;
     let (k, co) = (pb.k, pb.n);
-    let rows_per = rows_total.div_ceil(team);
+    let rows_per = rows_total.div_ceil(team).div_ceil(MR) * MR;
     std::thread::scope(|scope| {
         for (t, orows) in out[..rows_total * co].chunks_mut(rows_per * co).enumerate() {
-            let m0 = t * rows_per;
+            let m0 = t * rows_per; // multiple of MR: a panel boundary
             let rows = orows.len() / co;
-            let asub = &a[m0 * k..][..rows * k];
+            let asub = &ap[m0 * k..][..kernels::packed_a_len(rows, k)];
             scope.spawn(move || {
-                kernels::gemm_packed_bias_act(asub, pb, rows, bias, act, orows);
+                kernels::gemm_panels_bias_act(asub, pb, rows, bias, act, orows);
             });
         }
     });
@@ -1165,32 +1214,6 @@ fn team_sparse_rows(
             let rows = orows.len() / co;
             scope.spawn(move || {
                 sparse::sparse_packed_rows(patches_t, m, m0, m0 + rows, pr, bias, act, orows);
-            });
-        }
-    });
-}
-
-/// Split a packed sparse matmul's rows across `team` scoped workers.
-#[allow(clippy::too_many_arguments)] // internal team ABI: dims + epilogue
-fn team_sparse_matmul_rows(
-    x: &[f32],
-    n: usize,
-    ci: usize,
-    co: usize,
-    pr: &sparse::PackedRle,
-    bias: Option<&[f32]>,
-    act: Act,
-    team: usize,
-    out: &mut [f32],
-) {
-    let rows_per = n.div_ceil(team);
-    std::thread::scope(|scope| {
-        for (t, orows) in out[..n * co].chunks_mut(rows_per * co).enumerate() {
-            let m0 = t * rows_per;
-            let rows = orows.len() / co;
-            let xsub = &x[m0 * ci..][..rows * ci];
-            scope.spawn(move || {
-                sparse::sparse_matmul_packed(xsub, rows, ci, co, pr, bias, act, orows);
             });
         }
     });

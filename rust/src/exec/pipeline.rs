@@ -49,7 +49,11 @@
 //! wall time instead of its step count. `team == 1` (the default) is
 //! exactly the PR 3 single-thread-per-stage behavior; any team size
 //! produces bit-identical outputs because workers write disjoint row
-//! ranges with unchanged per-element accumulation order.
+//! ranges with unchanged per-element accumulation order — dense team
+//! splits land on MR-panel boundaries of the packed A stream, and the
+//! `exec::isa` dispatch tiers preserve that order too (sparse kernels on
+//! every tier, dense on every non-fused tier), so team × pipeline × SIMD
+//! tier all compose without moving a result bit.
 
 use super::profile::StepProfile;
 use super::{ConvGeom, ExecContext, ExecutionPlan, PlanOptions, Src, Step, StepKind};

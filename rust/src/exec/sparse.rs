@@ -41,6 +41,11 @@
 //! — fixed at plan build, independent of batch, tile placement or team
 //! split — so sparse results are *bit-identical* across batch sizes,
 //! pipelines and worker teams (the equivalence suite relies on this).
+//! The inner axpy goes through the `exec::isa` dispatch table (ISSUE 7),
+//! and every tier's sparse axpy — including the FMA and NEON tables —
+//! uses separate vector multiply and add instructions, so each output
+//! element keeps the scalar rounding chain and the bit-identity extends
+//! across *dispatch tiers* too: sparse results never depend on the CPU.
 //!
 //! The PR 3 stream-walking kernels ([`sparse_conv`], [`sparse_matmul`])
 //! are kept as the benchmark baseline behind
@@ -140,6 +145,34 @@ pub fn sparse_packed_rows(
     act: Act,
     out_rows: &mut [f32],
 ) {
+    sparse_packed_rows_on(
+        super::isa::active(),
+        patches_t,
+        m_total,
+        m0,
+        m1,
+        pr,
+        bias,
+        act,
+        out_rows,
+    );
+}
+
+/// [`sparse_packed_rows`] pinned to an explicit dispatch tier — the
+/// entry point cross-tier equivalence tests use, since the active tier
+/// is process-global and test binaries are multi-threaded.
+#[allow(clippy::too_many_arguments)] // kernel ABI: geometry + range + fused epilogue
+pub fn sparse_packed_rows_on(
+    isa: &super::isa::Isa,
+    patches_t: &[f32],
+    m_total: usize,
+    m0: usize,
+    m1: usize,
+    pr: &PackedRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    out_rows: &mut [f32],
+) {
     let co = pr.co;
     debug_assert!(m1 <= m_total);
     debug_assert!(out_rows.len() >= (m1 - m0) * co);
@@ -163,9 +196,8 @@ pub fn sparse_packed_rows(
             for ((&k, &lane), &v) in walk {
                 let prow = &patches_t[k as usize * m_total + t0..][..tw];
                 let accl = &mut acc[lane as usize][..tw];
-                for (a, &p) in accl.iter_mut().zip(prow) {
-                    *a += v * p;
-                }
+                // non-fused on every tier: bitwise across CPUs
+                isa.sparse_axpy(v, prow, accl);
             }
             // Scatter the tile's lanes back to row-major NHWC.
             for (lane, accl) in acc.iter().enumerate().take(ocs) {
@@ -198,12 +230,54 @@ pub fn sparse_conv_packed(
     sparse_packed_rows(patches_t, m, 0, m, pr, bias, act, out);
 }
 
+/// Transpose a row-major [n, ci] activation into the K-major [ci, n]
+/// scratch layout [`sparse_packed_rows`] axpys over: `xt[k·n + i] =
+/// x[i·ci + k]`. The matmul analog of [`im2col_t`], so sparse matmuls
+/// ride the same vectorized position-axis kernel as sparse convs.
+pub fn transpose_k_major(x: &[f32], n: usize, ci: usize, xt: &mut [f32]) {
+    debug_assert!(x.len() >= n * ci);
+    let xt = &mut xt[..ci * n];
+    for (i, xrow) in x.chunks_exact(ci).enumerate().take(n) {
+        for (k, &v) in xrow.iter().enumerate() {
+            xt[k * n + i] = v;
+        }
+    }
+}
+
+/// Sparse MatMul through the position-axis tile kernel: transpose the
+/// [n, ci] activation K-major into `xt`, then one [`sparse_packed_rows`]
+/// pass over all `n` rows — vector lanes run across the batch's rows,
+/// exactly like the conv path. Per-(row, channel) accumulation order is
+/// the bundle entry order either way, so this is bit-identical to
+/// [`sparse_matmul_packed`] (the row-major baseline, kept for callers
+/// without transpose scratch) on every dispatch tier.
+#[allow(clippy::too_many_arguments)] // kernel ABI: dims + scratch + fused epilogue
+pub fn sparse_matmul_rows(
+    x: &[f32],
+    n: usize,
+    ci: usize,
+    co: usize,
+    pr: &PackedRle,
+    bias: Option<&[f32]>,
+    act: Act,
+    xt: &mut [f32],
+    out: &mut [f32],
+) {
+    crate::util::fault::point("kernel.sparse_matmul", 0);
+    debug_assert_eq!(pr.co, co);
+    debug_assert_eq!(pr.k, ci);
+    transpose_k_major(x, n, ci, xt);
+    sparse_packed_rows(xt, n, 0, n, pr, bias, act, out);
+}
+
 /// Sparse MatMul from pre-decoded streams (+ fused bias / activation)
 /// over `n` rows of `x` ([n, ci] row-major). The [`OCB`] lanes of each
 /// bundle are the multi-accumulators: one pass over a row's entries
 /// feeds up to OCB output channels while the row stays in L1. Callers
 /// may hand disjoint row ranges (`x` / `out` sub-slices) to a worker
-/// team — rows are independent.
+/// team — rows are independent. The hot path now prefers
+/// [`sparse_matmul_rows`] (vector lanes across rows); this row-major
+/// walk survives as the transpose-free baseline and oracle.
 #[allow(clippy::too_many_arguments)] // kernel ABI: dims + fused epilogue
 pub fn sparse_matmul_packed(
     x: &[f32],
@@ -468,6 +542,32 @@ mod tests {
                 m0 += rows;
             }
             assert_eq!(full, parts, "split={split}");
+        }
+    }
+
+    #[test]
+    fn matmul_rows_matches_row_major_baseline_bitwise() {
+        // The transposed position-axis path and the row-major walk visit
+        // each (row, channel)'s bundle entries in the same order, so they
+        // must agree bit for bit — on every dispatch tier (sparse axpys
+        // never fuse). Odd co (not a multiple of OCB) and n straddling an
+        // MT tile boundary on purpose.
+        use crate::exec::isa;
+        let mut rng = Rng::new(0x3A77);
+        let (n, ci, co) = (MT + 9, 33usize, 11usize);
+        let mut w = Tensor::randn(&[ci, co], &mut rng, 1.0);
+        prune_tensor(&mut w, 0.8);
+        let pr = pack_rle(&encode_matmul(&w, 2));
+        let x = Tensor::randn(&[n, ci], &mut rng, 1.0);
+        let bias: Vec<f32> = (0..co).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let mut want = vec![0.0f32; n * co];
+        sparse_matmul_packed(x.as_slice(), n, ci, co, &pr, Some(&bias), Act::Relu, &mut want);
+        let mut xt = vec![0.0f32; ci * n];
+        for tier in isa::available() {
+            transpose_k_major(x.as_slice(), n, ci, &mut xt);
+            let mut got = vec![0.0f32; n * co];
+            sparse_packed_rows_on(tier, &xt, n, 0, n, &pr, Some(&bias), Act::Relu, &mut got);
+            assert_eq!(got, want, "tier {}", tier.name());
         }
     }
 }

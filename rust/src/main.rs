@@ -31,6 +31,20 @@
 //!                            including shed / expired / rejected /
 //!                            faults / degraded counters.)
 //!
+//! ## Environment variables
+//!
+//! `HPIPE_ISA=scalar|sse4.1|avx2|fma|neon|native` pins the SIMD kernel
+//! dispatch tier (`exec::isa`) for the whole process. Unset or `native`
+//! picks the widest tier the CPU supports; a recognised but unsupported
+//! tier warns and falls back to `scalar` (never silently to native); an
+//! unrecognised value warns, lists the valid spellings and uses native.
+//! All tiers compute the same results — sparse kernels and non-fused
+//! dense tiers bitwise, FMA/NEON dense within a few ulp — so the knob
+//! exists for benchmarking and for CI's per-tier test matrix, not for
+//! accuracy. `serve` prints the detected features and active tier, and
+//! records the tier in the ServeReport (`--json`) so throughput numbers
+//! stay comparable across machines.
+//!
 //! ## Failure semantics (serve)
 //!
 //! Every accepted request is answered exactly once — a classification

@@ -568,7 +568,10 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        "exec-cpu".to_string()
+        // e.g. "exec-cpu/fma": the active SIMD dispatch tier is part of
+        // the platform identity (it changes dense result bits within the
+        // documented ulp bound, so reports should record it).
+        format!("exec-cpu/{}", crate::exec::isa::active().name())
     }
 
     /// Compile a graph into a named executable (calibrating it first

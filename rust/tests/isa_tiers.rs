@@ -1,0 +1,181 @@
+//! Cross-tier kernel equivalence (ISSUE 7): every SIMD dispatch tier the
+//! host CPU supports must compute the same answer as the scalar tier-0
+//! baseline — bitwise for the sparse kernels and the non-fused dense
+//! tiers, within 8 ulp for fused (FMA/NEON) dense tiers.
+//!
+//! These tests pin the kernel *edge tails* — M % MR, N % NR and K % KC
+//! remainders, odd sparsity patterns, co not a multiple of OCB, position
+//! counts straddling MT tiles — on every available tier via the
+//! explicit `*_on` kernel entry points (the active tier is
+//! process-global and the test binary is multi-threaded, so tests never
+//! call `isa::force`). The CI `isa-matrix` job complements this from the
+//! outside: it re-runs the whole suite under each `HPIPE_ISA`-forced
+//! tier, and [`hpipe_isa_env_override_is_honored`] proves the forcing
+//! actually took effect.
+
+use hpipe::exec::isa;
+use hpipe::exec::kernels::{
+    gemm_panels_bias_act_on, pack_a, pack_b, packed_a_len, Act, KC, MR, NR,
+};
+use hpipe::exec::sparse::{
+    pack_rle, sparse_matmul_packed, sparse_packed_rows_on, transpose_k_major, MT, OCB,
+};
+use hpipe::graph::Tensor;
+use hpipe::sparsity::prune_tensor;
+use hpipe::sparsity::rle::encode_matmul;
+use hpipe::util::prop::{assert_ulp_close, Cases};
+use hpipe::util::Rng;
+
+/// Dense GEMM across every tier, with shapes chosen to hit all the
+/// remainder paths: M % MR ∈ {0..MR-1} (pad rows in the last A-panel),
+/// N % NR ∈ {0..NR-1} (pad lanes in the last B-panel), K crossing 0, 1
+/// and 2 KC block boundaries, under several weight sparsities.
+#[test]
+fn dense_tiers_match_scalar_across_edge_tails() {
+    let tiers = isa::available();
+    assert_eq!(tiers[0].tier(), isa::Tier::Scalar);
+    Cases::new(40).seed(0x15A7).run(|rng, size| {
+        let m = 1 + (size * 3 + rng.below(4)) % (3 * MR + 2);
+        let n = 1 + (size * 5 + rng.below(8)) % (2 * NR + 3);
+        let k = 1 + rng.below(3) * KC + rng.below(17);
+        let sparsity = *rng.choose(&[0.0, 0.5, 0.9, 0.97]);
+        let a = Tensor::randn(&[m, k], rng, 1.0);
+        let mut b = Tensor::randn(&[k, n], rng, 1.0);
+        prune_tensor(&mut b, sparsity);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let act = *rng.choose(&[Act::None, Act::Relu, Act::Relu6]);
+        let pb = pack_b(b.as_slice(), k, n);
+        let mut ap = vec![0.0f32; packed_a_len(m, k)];
+        pack_a(a.as_slice(), m, k, &mut ap);
+        // scalar reference (tier 0) through the same panel walk
+        let mut want = vec![0.0f32; m * n];
+        gemm_panels_bias_act_on(tiers[0], &ap, &pb, m, Some(&bias), act, &mut want);
+        for tier in &tiers[1..] {
+            let mut got = vec![0.0f32; m * n];
+            gemm_panels_bias_act_on(tier, &ap, &pb, m, Some(&bias), act, &mut got);
+            if tier.fused_dense() {
+                assert_ulp_close(&got, &want, 8)
+                    .map_err(|e| format!("m={m} n={n} k={k} tier={}: {e}", tier.name()))?;
+            } else if got != want {
+                return Err(format!(
+                    "m={m} n={n} k={k} sp={sparsity} tier={}: not bitwise-equal to scalar",
+                    tier.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The sparse position-axis kernel must be *bitwise* scalar-equal on
+/// every tier (no sparse tier fuses), across odd sparsity patterns,
+/// bundle tails (co % OCB != 0) and position counts straddling MT tiles.
+#[test]
+fn sparse_tiers_are_bitwise_scalar_across_odd_patterns() {
+    let tiers = isa::available();
+    Cases::new(24).seed(0x5B1D).run(|rng, size| {
+        let m = 1 + (size * 31 + rng.below(9)) % (2 * MT + 5);
+        let ci = 1 + (size * 7 + rng.below(11)) % 53;
+        let co = 1 + (size * 3 + rng.below(5)) % (3 * OCB + 2);
+        let sparsity = *rng.choose(&[0.0, 0.5, 0.9, 0.97]);
+        let mut w = Tensor::randn(&[ci, co], rng, 1.0);
+        prune_tensor(&mut w, sparsity);
+        let pr = pack_rle(&encode_matmul(&w, 1 + rng.below(3)));
+        let bias: Vec<f32> = (0..co).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let act = *rng.choose(&[Act::None, Act::Relu]);
+        // synthetic K-major patch matrix covering all m positions
+        let patches: Vec<f32> = (0..ci * m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut want = vec![0.0f32; m * co];
+        sparse_packed_rows_on(tiers[0], &patches, m, 0, m, &pr, Some(&bias), act, &mut want);
+        for tier in &tiers[1..] {
+            let mut got = vec![0.0f32; m * co];
+            sparse_packed_rows_on(tier, &patches, m, 0, m, &pr, Some(&bias), act, &mut got);
+            if got != want {
+                return Err(format!(
+                    "m={m} ci={ci} co={co} sp={sparsity} tier={}: sparse not bitwise",
+                    tier.name()
+                ));
+            }
+        }
+        // split ranges (the worker-team path) stay bitwise per tier too
+        for tier in &tiers {
+            let mut parts = vec![0.0f32; m * co];
+            let mut m0 = 0usize;
+            let split = 1 + rng.below(MT + 3);
+            for chunk in parts.chunks_mut(split * co) {
+                let rows = chunk.len() / co;
+                sparse_packed_rows_on(
+                    tier,
+                    &patches,
+                    m,
+                    m0,
+                    m0 + rows,
+                    &pr,
+                    Some(&bias),
+                    act,
+                    chunk,
+                );
+                m0 += rows;
+            }
+            if parts != want {
+                return Err(format!(
+                    "m={m} co={co} split={split} tier={}: team split not bitwise",
+                    tier.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The transposed position-axis matmul path must agree bitwise with the
+/// row-major baseline walk on every tier: both visit each (row, channel)
+/// pair's bundle entries in the same plan-time order.
+#[test]
+fn transposed_matmul_path_matches_row_major_on_every_tier() {
+    let mut rng = Rng::new(0x7125);
+    let (n, ci, co) = (MT + 21, 40usize, 2 * OCB + 3);
+    let mut w = Tensor::randn(&[ci, co], &mut rng, 1.0);
+    prune_tensor(&mut w, 0.8);
+    let pr = pack_rle(&encode_matmul(&w, 2));
+    let x = Tensor::randn(&[n, ci], &mut rng, 1.0);
+    let bias: Vec<f32> = (0..co).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let mut want = vec![0.0f32; n * co];
+    sparse_matmul_packed(x.as_slice(), n, ci, co, &pr, Some(&bias), Act::Relu6, &mut want);
+    let mut xt = vec![0.0f32; ci * n];
+    transpose_k_major(x.as_slice(), n, ci, &mut xt);
+    for tier in isa::available() {
+        let mut got = vec![0.0f32; n * co];
+        sparse_packed_rows_on(tier, &xt, n, 0, n, &pr, Some(&bias), Act::Relu6, &mut got);
+        assert_eq!(got, want, "tier {}", tier.name());
+    }
+}
+
+/// When the CI isa-matrix job exports `HPIPE_ISA=<tier>`, the process
+/// must actually run that tier — a forced tier silently falling back to
+/// native would make the whole matrix vacuous. Unset/`native` must
+/// resolve to a supported tier.
+#[test]
+fn hpipe_isa_env_override_is_honored() {
+    let active = isa::active();
+    assert!(isa::supported(active.tier()), "active tier must be executable");
+    match std::env::var("HPIPE_ISA") {
+        Ok(v) if !v.is_empty() && v != "native" => {
+            if let Ok(Some(requested)) = isa::Tier::parse(&v) {
+                if isa::supported(requested) {
+                    assert_eq!(
+                        active.tier(),
+                        requested,
+                        "HPIPE_ISA={v} was set and supported but the active tier is {}",
+                        active.name()
+                    );
+                } else {
+                    // valid-but-unsupported requests degrade to scalar,
+                    // never silently to native
+                    assert_eq!(active.tier(), isa::Tier::Scalar);
+                }
+            }
+        }
+        _ => {} // native selection covered by the supported() assert
+    }
+}
