@@ -122,5 +122,32 @@ fn main() -> hpipe::util::error::Result<()> {
         "tuned pipeline classified the image: class {} (identical math, measured cuts)",
         hpipe::interp::argmax(&touts[0][0])[0]
     );
+
+    // 9. serving never wastes a ragged tail: a plan *family* of smaller
+    //    batch variants lets a drained tail of k < B images run on the
+    //    smallest variant that fits instead of zero-padding to B —
+    //    bitwise-identical answers, strictly less compute. The runtime
+    //    wires this up per model (`Runtime::with_plan_family`,
+    //    `hpipe serve --plan-family`); here is the invariant at plan
+    //    level: one image padded onto the batch-2 variant reproduces
+    //    the batch-1 answer bit for bit.
+    let variant = hpipe::exec::ExecutionPlan::build_batched(&graph, 2)?;
+    let one = &feeds["input"];
+    let padded = hpipe::graph::Tensor::pad_batch(&one.data, one.data.len(), 2);
+    let mut tail_feeds = std::collections::BTreeMap::new();
+    tail_feeds.insert(
+        "input".to_string(),
+        hpipe::graph::Tensor::from_vec(&[2, 16, 16, 3], padded),
+    );
+    let tail_out = variant.run(&tail_feeds)?;
+    let per = tail_out[0].data.len() / 2;
+    assert_eq!(
+        &tail_out[0].data[..per],
+        &probs[0].data[..],
+        "tail via the batch-2 variant must be bitwise the batch-1 answer"
+    );
+    println!(
+        "ragged tail: 1 image on the batch-2 variant matches the batch-1 plan bit for bit"
+    );
     Ok(())
 }

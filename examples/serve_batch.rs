@@ -19,7 +19,12 @@
 //! calibration (measured stage cuts + measured team size); a sixth
 //! argument sets a per-request deadline in milliseconds (late batches
 //! are answered `Expired`, never run) and a seventh bounds the
-//! admission queue (see `ServeConfig::queue_cap`).
+//! admission queue (see `ServeConfig::queue_cap`). An eighth argument
+//! `no-overlap` disables the drain/execute overlap — the feeder thread
+//! that accumulates batch i+1 while batch i executes, on by default —
+//! and a ninth sets the ragged-tail plan family (`none` pads tails to
+//! the full batch; a CSV like `2,4` sets explicit variant batch sizes;
+//! unset uses the default {B/4, B/2} family).
 
 use hpipe::coordinator::{serve_demo, ServeConfig};
 use std::path::PathBuf;
@@ -34,6 +39,14 @@ fn main() -> hpipe::util::error::Result<()> {
         autotune: args.get(5).map(|s| s == "autotune").unwrap_or(false),
         deadline_ms: args.get(6).and_then(|s| s.parse().ok()),
         queue_cap: args.get(7).and_then(|s| s.parse().ok()).unwrap_or(0),
+        overlap: args.get(8).map(|s| s != "no-overlap").unwrap_or(true),
+        plan_family: args.get(9).map(|s| {
+            if s == "none" {
+                Vec::new()
+            } else {
+                s.split(',').filter_map(|t| t.trim().parse().ok()).collect()
+            }
+        }),
         ..Default::default()
     };
     let artifacts = PathBuf::from(
@@ -46,12 +59,14 @@ fn main() -> hpipe::util::error::Result<()> {
         );
     }
     println!(
-        "serving {} requests (max batch {}, {} pipeline threads, team {}, autotune {}) from {}",
+        "serving {} requests (max batch {}, {} pipeline threads, team {}, autotune {}, \
+         overlap {}) from {}",
         cfg.requests,
         cfg.max_batch,
         cfg.threads,
         cfg.team,
         cfg.autotune,
+        cfg.overlap,
         artifacts.display()
     );
     let mut report = serve_demo(&artifacts, &cfg)?;

@@ -9,13 +9,16 @@
 //! synthesizes an equivalent artifact directory (He-init TinyCNN
 //! graphdef + manifest) so the benchmark always runs.
 
-use hpipe::coordinator::{serve_demo, ServeConfig};
+use hpipe::coordinator::batcher::BatchPolicy;
+use hpipe::coordinator::metrics::ServeReport;
+use hpipe::coordinator::{serve_demo, submit, Coordinator, QueuePolicy, Reply, Request, ServeConfig};
 use hpipe::graph::graphdef;
 use hpipe::nets::{tiny_cnn, NetConfig};
 use hpipe::runtime::Runtime;
 use hpipe::util::timer::bench;
 use hpipe::util::Json;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 /// Return an artifacts dir, synthesizing one under target/ if needed.
 fn artifacts_dir() -> PathBuf {
@@ -111,7 +114,165 @@ fn main() {
         report.print();
         serve_json.set(name, report.to_json());
     }
+
+    // ---- sustained throughput: live request mix ---------------------
+    // The serve_demo rows above submit as fast as the queue accepts —
+    // a bench-loop number. This section drives a *live* mix (Poisson-ish
+    // arrivals, periodic lulls that leave ragged tails, a deadline on
+    // every third request) and measures steady-state goodput, where the
+    // drain/execute overlap and the plan family actually earn their keep.
+    println!("\n=== sustained throughput (live arrivals, ragged tails, mixed deadlines) ===");
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // Not a multiple of max_batch, so the request count alone guarantees
+    // at least one ragged tail per run.
+    let n_live = if smoke { 97 } else { 209 };
+
+    // overlap gate: identical arrival schedule, feeder thread on vs off
+    let mut overlap_on = sustained_serve(&dir, true, true, n_live, 0x51);
+    let mut overlap_off = sustained_serve(&dir, false, true, n_live, 0x51);
+    let mut overlap_retried = false;
+    if smoke && goodput(&overlap_on) < goodput(&overlap_off) {
+        println!("overlap gate missed on first measurement; re-measuring once");
+        overlap_retried = true;
+        overlap_on = sustained_serve(&dir, true, true, n_live, 0x52);
+        overlap_off = sustained_serve(&dir, false, true, n_live, 0x52);
+    }
+    // family gate: ragged tails through batch variants vs padded to B
+    let mut family_on = sustained_serve(&dir, true, true, n_live, 0x53);
+    let mut family_off = sustained_serve(&dir, true, false, n_live, 0x53);
+    let mut family_retried = false;
+    if smoke && (goodput(&family_on) < goodput(&family_off) || family_on.tail_batches == 0) {
+        println!("family gate missed on first measurement; re-measuring once");
+        family_retried = true;
+        family_on = sustained_serve(&dir, true, true, n_live, 0x54);
+        family_off = sustained_serve(&dir, true, false, n_live, 0x54);
+    }
+    println!(
+        "overlap on  : {:>7.0} img/s sustained, inter-batch idle {:?}",
+        goodput(&overlap_on),
+        Duration::from_nanos(overlap_on.pipeline_idle_ns)
+    );
+    println!(
+        "overlap off : {:>7.0} img/s sustained, inter-batch idle {:?}",
+        goodput(&overlap_off),
+        Duration::from_nanos(overlap_off.pipeline_idle_ns)
+    );
+    println!(
+        "plan family : {:>7.0} img/s sustained, {} tail batches, {} padded images",
+        goodput(&family_on),
+        family_on.tail_batches,
+        family_on.padded_images
+    );
+    println!(
+        "padded tails: {:>7.0} img/s sustained, {} tail batches, {} padded images",
+        goodput(&family_off),
+        family_off.tail_batches,
+        family_off.padded_images
+    );
+    let record = |r: &mut ServeReport| {
+        let mut j = r.to_json();
+        j.set("goodput_img_s", Json::from(goodput(r)));
+        j
+    };
+    let mut sustained = Json::obj();
+    sustained
+        .set("requests", Json::from(n_live))
+        .set("overlap", record(&mut overlap_on))
+        .set("drain_then_run", record(&mut overlap_off))
+        .set("family", record(&mut family_on))
+        .set("padded", record(&mut family_off))
+        .set("overlap_gate_retried", Json::from(overlap_retried))
+        .set("family_gate_retried", Json::from(family_retried));
+    serve_json.set("sustained", sustained);
+
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serve.json");
     std::fs::write(&out, serve_json.pretty()).expect("writing BENCH_serve.json");
     println!("\nwrote {}", out.display());
+
+    // hard gates, enforced after the JSON is on disk so a failure still
+    // leaves the report behind for the CI artifact
+    if smoke {
+        assert!(
+            goodput(&overlap_on) >= goodput(&overlap_off),
+            "BENCH_SMOKE gate: drain/execute overlap ({:.0} img/s) must sustain at least \
+             the drain-then-run baseline ({:.0} img/s)",
+            goodput(&overlap_on),
+            goodput(&overlap_off)
+        );
+        assert!(
+            goodput(&family_on) >= goodput(&family_off),
+            "BENCH_SMOKE gate: plan-family tail routing ({:.0} img/s) must sustain at \
+             least the padded-to-batch baseline ({:.0} img/s)",
+            goodput(&family_on),
+            goodput(&family_off)
+        );
+        assert!(
+            family_on.tail_batches > 0,
+            "BENCH_SMOKE gate: the live mix must exercise ragged tails"
+        );
+        println!("BENCH_SMOKE sustained gates passed");
+    }
+}
+
+/// Sustained goodput: requests actually served (not expired at their
+/// deadline, not rejected as malformed) per second of serving wall time.
+fn goodput(r: &ServeReport) -> f64 {
+    (r.requests - r.expired - r.rejected) as f64 / r.wall.as_secs_f64().max(1e-9)
+}
+
+/// One sustained-serving run. A client thread generates the live mix —
+/// exponential (Poisson-ish) inter-arrivals from the deterministic
+/// [`hpipe::util::Rng`], a lull every 13th request longer than the
+/// batcher's straggler window (the queue runs dry, so the next batch is
+/// a ragged tail), and a 25 ms deadline on every third request — while
+/// the coordinator serves continuously. The same seed replays the same
+/// schedule, so each gate compares its two configs on identical work.
+fn sustained_serve(
+    dir: &Path,
+    overlap: bool,
+    family: bool,
+    n_requests: usize,
+    seed: u64,
+) -> ServeReport {
+    let mut runtime = Runtime::cpu(dir).unwrap().with_threads(2);
+    if !family {
+        runtime = runtime.with_plan_family(&[]);
+    }
+    runtime.load_manifest().unwrap();
+    let per: usize = runtime
+        .model("tinycnn_b1")
+        .expect("tinycnn_b1 in manifest")
+        .input_shape
+        .iter()
+        .product();
+    let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+    let mut coordinator = Coordinator::new(runtime, policy);
+    coordinator.overlap = overlap;
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(n_requests.max(1));
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Reply>();
+    let client = std::thread::spawn(move || {
+        let mut rng = hpipe::util::Rng::new(seed);
+        for i in 0..n_requests {
+            let data: Vec<f32> = (0..per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let now = Instant::now();
+            let req = Request {
+                id: i as u64,
+                data,
+                submitted: now,
+                deadline: (i % 3 == 0).then(|| now + Duration::from_millis(25)),
+                reply: reply_tx.clone(),
+            };
+            assert!(submit(&tx, req, QueuePolicy::Block), "blocking submit");
+            let gap_us = -40.0 * (1.0 - rng.f64()).ln();
+            std::thread::sleep(Duration::from_micros(gap_us as u64));
+            if i % 13 == 12 {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+    });
+    let report = coordinator.run(rx).expect("sustained serve");
+    client.join().unwrap();
+    let answered = reply_rx.try_iter().count();
+    assert_eq!(answered, n_requests, "every live request is answered exactly once");
+    report
 }

@@ -5,8 +5,15 @@
 //! coordinator still batches *transfers* when multiple requests are
 //! queued, like the PCIe DMA engine would: take what's waiting, up to
 //! `max_batch`, waiting at most `max_wait` for stragglers.
+//!
+//! [`feed_batches`] is the feeder half of the coordinator's
+//! drain/execute overlap: it runs `drain_batch` + payload screening +
+//! concatenation on its own thread and hands finished
+//! [`PreparedBatch`]es to the execution side through a bounded channel,
+//! so batch i+1 accumulates while batch i is inside the pipeline.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use super::{Request, RequestError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -57,6 +64,99 @@ pub fn drain_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> (Vec<T>, bool) {
 /// channel has disconnected and drained dry.
 pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Vec<T> {
     drain_batch(rx, policy).0
+}
+
+/// Feed-channel depth for the drain/execute overlap: one batch in
+/// flight inside the pipeline, one prepared and waiting. Deeper buffers
+/// only add queueing latency — the pipeline can't run more than one
+/// batch at a time anyway — while 2 is exactly what keeps stage workers
+/// going straight from one batch's last image to the next's first.
+pub const FEED_DEPTH: usize = 2;
+
+/// A drained, screened, concatenated batch ready for execution: the
+/// surviving requests plus their payloads already flattened into the
+/// plan-feed layout (the concatenation cost paid on the feeder thread,
+/// off the execution critical path). Deadlines are deliberately *not*
+/// screened here — "expired" means "has not started executing by the
+/// deadline", so only the execution side can decide it.
+pub struct PreparedBatch {
+    pub reqs: Vec<Request>,
+    pub flat: Vec<f32>,
+}
+
+/// What the feeder saw over its whole run, folded into the serve report
+/// when the feeder thread joins.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FeedStats {
+    /// Requests drained off the admission queue.
+    pub drained: usize,
+    /// Malformed payloads answered `Failed` without reaching execution.
+    pub rejected: usize,
+}
+
+/// Screen one payload: `Some(reason)` when it must be refused before
+/// execution (a NaN must not poison the batch it would have shared a
+/// plan execution with). Shared by the feeder and the non-overlapped
+/// serving loop so both paths refuse identically.
+pub fn malformed(data: &[f32], per_image: usize) -> Option<String> {
+    if data.len() != per_image {
+        return Some(format!(
+            "payload length {} != {per_image} elements",
+            data.len()
+        ));
+    }
+    if let Some(pos) = data.iter().position(|v| !v.is_finite()) {
+        return Some(format!("non-finite input value at index {pos}"));
+    }
+    None
+}
+
+/// The feeder loop: drain, screen, concatenate, hand off — until the
+/// request channel hangs up (the final partial batch is still handed
+/// off first, so disconnect-mid-batch loses nothing). Runs on its own
+/// thread; the bounded `out` channel is the backpressure that stops it
+/// racing ahead of execution by more than [`FEED_DEPTH`] batches. If
+/// the execution side is gone, surviving requests are answered `Failed`
+/// rather than dropped silently.
+pub fn feed_batches(
+    rx: &Receiver<Request>,
+    out: &SyncSender<PreparedBatch>,
+    policy: BatchPolicy,
+    per_image: usize,
+) -> FeedStats {
+    let mut stats = FeedStats::default();
+    loop {
+        let (drained, disconnected) = drain_batch(rx, policy);
+        stats.drained += drained.len();
+        let mut reqs = Vec::with_capacity(drained.len());
+        let mut flat = Vec::with_capacity(drained.len() * per_image);
+        for req in drained {
+            match malformed(&req.data, per_image) {
+                Some(msg) => {
+                    stats.rejected += 1;
+                    let _ = req.reply.send(Err(RequestError::Failed(msg)));
+                }
+                None => {
+                    flat.extend_from_slice(&req.data);
+                    reqs.push(req);
+                }
+            }
+        }
+        if !reqs.is_empty() {
+            if let Err(dead) = out.send(PreparedBatch { reqs, flat }) {
+                for req in dead.0.reqs {
+                    let _ = req
+                        .reply
+                        .send(Err(RequestError::Failed("serving loop gone".into())));
+                }
+                break;
+            }
+        }
+        if disconnected {
+            break;
+        }
+    }
+    stats
 }
 
 #[cfg(test)]
@@ -132,6 +232,74 @@ mod tests {
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         );
         assert_eq!(b2, vec![99]);
+    }
+
+    fn mk(id: u64, data: Vec<f32>, reply: &std::sync::mpsc::Sender<super::super::Reply>) -> Request {
+        Request {
+            id,
+            data,
+            submitted: Instant::now(),
+            deadline: None,
+            reply: reply.clone(),
+        }
+    }
+
+    /// The feeder drains + screens + concatenates on its own thread and
+    /// still flushes the final partial batch on hangup — the overlap
+    /// half of disconnect-mid-batch-loses-nothing.
+    #[test]
+    fn feeder_screens_concatenates_and_flushes_on_hangup() {
+        use std::sync::mpsc::{channel, sync_channel};
+        let (tx, rx) = channel::<Request>();
+        let (rtx, rrx) = channel();
+        let (ftx, frx) = sync_channel::<PreparedBatch>(FEED_DEPTH);
+        let per = 4;
+        tx.send(mk(0, vec![1.0; per], &rtx)).unwrap();
+        tx.send(mk(1, vec![9.0; per - 1], &rtx)).unwrap(); // wrong length
+        tx.send(mk(2, vec![2.0; per], &rtx)).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let stats = std::thread::spawn(move || feed_batches(&rx, &ftx, policy, per))
+            .join()
+            .unwrap();
+        assert_eq!(stats.drained, 3);
+        assert_eq!(stats.rejected, 1);
+        let batches: Vec<PreparedBatch> = frx.iter().collect();
+        let total: usize = batches.iter().map(|b| b.reqs.len()).sum();
+        assert_eq!(total, 2, "both well-formed requests were handed off");
+        for b in &batches {
+            assert_eq!(b.flat.len(), b.reqs.len() * per, "flat matches the batch");
+        }
+        // the malformed one was answered, not silently dropped
+        let failed: Vec<_> = rrx.try_iter().collect();
+        assert_eq!(failed.len(), 1);
+        assert!(matches!(failed[0], Err(RequestError::Failed(_))));
+    }
+
+    /// Executor-side hangup: the feeder must answer (not drop) requests
+    /// it can no longer hand off, then stop.
+    #[test]
+    fn feeder_answers_requests_when_executor_is_gone() {
+        use std::sync::mpsc::{channel, sync_channel};
+        let (tx, rx) = channel::<Request>();
+        let (rtx, rrx) = channel();
+        let (ftx, frx) = sync_channel::<PreparedBatch>(FEED_DEPTH);
+        drop(frx); // execution side already gone
+        tx.send(mk(0, vec![1.0; 4], &rtx)).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        feed_batches(&rx, &ftx, policy, 4);
+        let replies: Vec<_> = rrx.try_iter().collect();
+        assert_eq!(replies.len(), 1);
+        assert!(matches!(replies[0], Err(RequestError::Failed(_))));
+    }
+
+    #[test]
+    fn malformed_screens_length_and_finiteness() {
+        assert!(malformed(&[1.0, 2.0], 2).is_none());
+        assert!(malformed(&[1.0], 2).unwrap().contains("length"));
+        assert!(malformed(&[1.0, f32::NAN], 2).unwrap().contains("non-finite"));
+        assert!(malformed(&[f32::INFINITY, 0.0], 2).unwrap().contains("index 0"));
     }
 
     /// Disconnect *mid-batch*: items were queued, then the sender hung

@@ -78,6 +78,19 @@ pub struct ServeReport {
     /// Per-stage busy / stall / items counters of the primary serving
     /// model's pipeline (empty when it ran purely sequentially).
     pub stages: Vec<StageMetrics>,
+    /// Time the primary model's pipeline sat *empty between runs* —
+    /// from a group's last stage-exit to the next group's first
+    /// stage-entry. The stage busy/stall counters can't see this (they
+    /// only tick while a run is in flight); this is the inter-batch
+    /// stall the drain/execute overlap exists to collapse.
+    pub pipeline_idle_ns: u64,
+    /// Executed batches that were ragged tails (k < the primary model's
+    /// batch) served through a batched plan — a family variant, or the
+    /// padded-to-batch fallback when no family is loaded.
+    pub tail_batches: u64,
+    /// Zero images padded onto those tail batches: the wasted compute
+    /// the plan family shrinks (compare against a family-disabled run).
+    pub padded_images: u64,
     /// Requests refused at admission because the bounded queue was full
     /// (shed-on-full policy; 0 under the blocking policy).
     pub shed: usize,
@@ -132,6 +145,9 @@ impl ServeReport {
             .set("mean_batch", Json::from(self.mean_batch))
             .set("latency", latency)
             .set("stages", stages)
+            .set("pipeline_idle_ns", Json::from(self.pipeline_idle_ns as f64))
+            .set("tail_batches", Json::from(self.tail_batches as f64))
+            .set("padded_images", Json::from(self.padded_images as f64))
             .set("shed", Json::from(self.shed))
             .set("expired", Json::from(self.expired))
             .set("rejected", Json::from(self.rejected))
@@ -172,7 +188,17 @@ impl ServeReport {
                 .iter()
                 .map(|s| format!("{:.0}%", s.occupancy() * 100.0))
                 .collect();
-            println!("pipeline stage occupancy: [{}]", occ.join(" "));
+            println!(
+                "pipeline stage occupancy: [{}]  inter-batch idle {:?}",
+                occ.join(" "),
+                Duration::from_nanos(self.pipeline_idle_ns)
+            );
+        }
+        if self.tail_batches > 0 {
+            println!(
+                "ragged tails: {} tail batches, {} padded images",
+                self.tail_batches, self.padded_images
+            );
         }
         if self.shed + self.expired + self.rejected + self.faults + self.degraded > 0 {
             println!(
@@ -272,7 +298,13 @@ mod tests {
         r.expired = 2;
         r.faults = 3;
         r.isa = "avx2".into();
+        r.pipeline_idle_ns = 1_234_567;
+        r.tail_batches = 4;
+        r.padded_images = 9;
         let parsed = Json::parse(&r.to_json().pretty()).unwrap();
+        assert_eq!(parsed.get("pipeline_idle_ns").as_f64(), Some(1_234_567.0));
+        assert_eq!(parsed.get("tail_batches").as_f64(), Some(4.0));
+        assert_eq!(parsed.get("padded_images").as_f64(), Some(9.0));
         assert_eq!(parsed.get("isa").as_str(), Some("avx2"));
         assert_eq!(parsed.get("requests").as_usize(), Some(6));
         assert_eq!(parsed.get("shed").as_usize(), Some(1));

@@ -31,7 +31,7 @@ use crate::interp;
 use crate::runtime::Runtime;
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
-use batcher::{drain_batch, BatchPolicy};
+use batcher::{drain_batch, feed_batches, malformed, BatchPolicy, PreparedBatch, FEED_DEPTH};
 use metrics::{LatencyStats, ServeReport};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
@@ -137,12 +137,29 @@ pub fn submit(tx: &SyncSender<Request>, req: Request, policy: QueuePolicy) -> bo
 /// The serving loop: owns the runtime and runs on the thread that
 /// created it; clients talk to it through channels. Models loaded with
 /// `threads > 1` fan each drained batch out across their layer-pipeline
-/// stage threads internally (`exec::PipelinePlan`), so the coordinator
-/// itself stays single-threaded while batch execution is not.
+/// stage threads internally (`exec::PipelinePlan`). With `overlap` on
+/// (the default) a feeder thread accumulates batch i+1 — drain, screen,
+/// concatenate — while batch i executes, so stage workers go straight
+/// from one batch's last image to the next batch's first instead of
+/// idling through the drain window.
 pub struct Coordinator {
     pub runtime: Runtime,
     pub policy: BatchPolicy,
     pub classes: usize,
+    /// Drain/execute overlap. `false` restores the sequential
+    /// drain-then-run loop (the escape hatch, `serve --no-overlap`).
+    pub overlap: bool,
+}
+
+/// Per-run serving counters, threaded through both loop shapes.
+#[derive(Default)]
+struct ServeState {
+    latency: LatencyStats,
+    requests: usize,
+    batches: usize,
+    occupancy: usize,
+    expired: usize,
+    rejected: usize,
 }
 
 impl Coordinator {
@@ -151,6 +168,7 @@ impl Coordinator {
             runtime,
             policy,
             classes: 10,
+            overlap: true,
         }
     }
 
@@ -167,155 +185,235 @@ impl Coordinator {
                 .context("no batch-1 model loaded")?;
             m.input_shape.iter().product::<usize>() / m.input_shape[0]
         };
-        // zero the primary model's cumulative pipeline counters so the
-        // report's occupancy covers this run only
+        // zero the primary model's cumulative pipeline counters (and
+        // the shared inter-run idle tracker) so the report's occupancy
+        // covers this run only
         if let Some(m) = self.runtime.best_batch_model(self.policy.max_batch) {
             m.pipeline().reset_stage_metrics();
         }
-        let mut latency = LatencyStats::default();
-        let mut requests = 0usize;
-        let mut batches = 0usize;
-        let mut occupancy = 0usize;
-        let mut expired = 0usize;
-        let mut rejected = 0usize;
+        let mut state = ServeState::default();
         let t0 = Instant::now();
-        loop {
-            let (drained, disconnected) = drain_batch(&rx, self.policy);
-            requests += drained.len();
-            // admission control on the drained batch: expired deadlines
-            // and malformed payloads are answered with typed errors and
-            // never reach execution (a NaN must not poison the batch it
-            // would have shared a plan execution with)
-            let now = Instant::now();
-            let mut batch = Vec::with_capacity(drained.len());
-            for req in drained {
-                if req.deadline.is_some_and(|d| now >= d) {
-                    expired += 1;
-                    let _ = req.reply.send(Err(RequestError::Expired));
-                } else if req.data.len() != per_image {
-                    rejected += 1;
-                    let _ = req.reply.send(Err(RequestError::Failed(format!(
-                        "payload length {} != {per_image} elements",
-                        req.data.len()
-                    ))));
-                } else if let Some(pos) = req.data.iter().position(|v| !v.is_finite()) {
-                    rejected += 1;
-                    let _ = req.reply.send(Err(RequestError::Failed(format!(
-                        "non-finite input value at index {pos}"
-                    ))));
-                } else {
-                    batch.push(req);
-                }
-            }
-            if batch.is_empty() {
-                if disconnected {
-                    break;
-                }
-                continue;
-            }
-            let model = self
-                .runtime
-                .best_batch_model(batch.len())
-                .context("no model loaded")?;
-            // concatenate request payloads; the executable may be smaller
-            // than the drained batch — chunk, and each full chunk is one
-            // whole-batch plan execution straight off the request block
-            // (only a short tail chunk pays a copy, zero-padded up to
-            // the plan's batch)
-            let mut flat = Vec::with_capacity(batch.len() * per_image);
-            for r in &batch {
-                flat.extend_from_slice(&r.data);
-            }
-            // Safety net around execution: the runtime's degrade ladder
-            // already absorbs pipelined stage faults, so anything that
-            // still escapes (a panic on the sequential path, a typed
-            // error) fails only this batch — every request in it gets
-            // `Err(RequestError::Failed)` and serving continues.
-            let full = model.batch * per_image;
-            let exec = catch_unwind(AssertUnwindSafe(
-                || -> std::result::Result<(Vec<f32>, usize), crate::graph::GraphError> {
-                    let mut outputs: Vec<f32> = Vec::new();
-                    let mut probs_per = 0usize;
-                    for chunk in flat.chunks(full) {
-                        let out = if chunk.len() == full {
-                            model.run(chunk)?
-                        } else {
-                            let mut c = chunk.to_vec();
-                            c.resize(full, 0.0);
-                            model.run(&c)?
-                        };
-                        probs_per = out.len() / model.batch.max(1);
-                        outputs.extend(out);
-                    }
-                    Ok((outputs, probs_per))
-                },
-            ));
-            let outcome = match exec {
-                Ok(Ok(v)) => Ok(v),
-                Ok(Err(e)) => Err(e.to_string()),
-                Err(payload) => Err(crate::util::fault::panic_message(payload.as_ref())),
-            };
-            match outcome {
-                Ok((outputs, probs_per)) => {
-                    let now = Instant::now();
-                    for (i, req) in batch.iter().enumerate() {
-                        let lat = now - req.submitted;
-                        latency.record(lat);
-                        let probs = outputs[i * probs_per..(i + 1) * probs_per].to_vec();
-                        let _ = req.reply.send(Ok(ClassResult {
-                            id: req.id,
-                            probs,
-                            latency: lat,
-                        }));
-                    }
-                }
-                Err(msg) => {
-                    for req in &batch {
-                        let _ = req.reply.send(Err(RequestError::Failed(msg.clone())));
-                    }
-                }
-            }
-            occupancy += batch.len();
-            batches += 1;
-            if disconnected {
-                break;
-            }
+        if self.overlap {
+            self.run_overlapped(rx, per_image, &mut state)?;
+        } else {
+            self.run_drain_then_run(rx, per_image, &mut state)?;
         }
-        // fold the models' fault accounting into the report: how many
-        // isolated stage faults the run absorbed, and whether any model
-        // ended it demoted to its sequential fallback
+        // fold the models' fault + ragged-tail accounting into the
+        // report: how many isolated stage faults the run absorbed,
+        // whether any model ended it demoted to its sequential
+        // fallback, and how much tail padding the plan family avoided
         let mut faults = 0usize;
         let mut degraded = 0usize;
+        let mut tail_batches = 0u64;
+        let mut padded_images = 0u64;
         for m in self.runtime.models() {
             let fs = m.fault_stats();
             faults += fs.faults as usize;
             if fs.degraded {
                 degraded += 1;
             }
+            let ts = m.tail_stats();
+            tail_batches += ts.tail_runs;
+            padded_images += ts.padded_images;
         }
+        let primary = self.runtime.best_batch_model(self.policy.max_batch);
         Ok(ServeReport {
-            requests,
-            batches,
+            requests: state.requests,
+            batches: state.batches,
             wall: t0.elapsed(),
-            latency,
-            mean_batch: occupancy as f64 / batches.max(1) as f64,
+            latency: state.latency,
+            mean_batch: state.occupancy as f64 / state.batches.max(1) as f64,
             interp_agreement: None,
             // per-stage busy/stall counters of the primary serving
             // model's pipeline; empty when it serves sequentially (the
             // counters would be all-zero noise, not a stalled pipeline)
-            stages: self
-                .runtime
-                .best_batch_model(self.policy.max_batch)
+            stages: primary
                 .filter(|m| m.serves_pipelined())
                 .map(|m| m.pipeline().stage_metrics())
                 .unwrap_or_default(),
+            pipeline_idle_ns: primary
+                .map(|m| m.pipeline().pipeline_idle_ns())
+                .unwrap_or(0),
+            tail_batches,
+            padded_images,
             shed: 0, // shedding happens at `submit`; the demo fills this in
-            expired,
-            rejected,
+            expired: state.expired,
+            rejected: state.rejected,
             faults,
             degraded,
             isa: crate::exec::isa::active().name().to_string(),
         })
+    }
+
+    /// Overlapped serving (the default): a feeder thread drains,
+    /// screens and concatenates batch i+1 while this thread executes
+    /// batch i, the two joined by a [`FEED_DEPTH`]-bounded channel.
+    /// Hangup still flushes everything: the feeder hands off its final
+    /// partial batch, its channel closes, the executor drains what's
+    /// buffered, and the feeder's drain/reject counts fold in at join.
+    fn run_overlapped(
+        &self,
+        rx: std::sync::mpsc::Receiver<Request>,
+        per_image: usize,
+        state: &mut ServeState,
+    ) -> Result<()> {
+        let policy = self.policy;
+        let (feed_tx, feed_rx) = sync_channel::<PreparedBatch>(FEED_DEPTH);
+        std::thread::scope(|s| {
+            let feeder = s.spawn(move || feed_batches(&rx, &feed_tx, policy, per_image));
+            let mut exec_result = Ok(());
+            for prepared in feed_rx {
+                if let Err(e) =
+                    self.execute_and_reply(prepared.reqs, prepared.flat, per_image, state)
+                {
+                    exec_result = Err(e);
+                    break;
+                }
+            }
+            // on an executor error the for-loop drops `feed_rx`, the
+            // feeder's next send fails, it answers those requests and
+            // returns — the join cannot deadlock
+            let stats = feeder.join().unwrap_or_default();
+            state.requests += stats.drained;
+            state.rejected += stats.rejected;
+            exec_result
+        })
+    }
+
+    /// The pre-overlap serving loop (`overlap = false`): drain a batch,
+    /// run it to completion, drain the next. Kept as the escape hatch
+    /// and as the baseline the sustained-throughput gate measures
+    /// overlap against.
+    fn run_drain_then_run(
+        &self,
+        rx: std::sync::mpsc::Receiver<Request>,
+        per_image: usize,
+        state: &mut ServeState,
+    ) -> Result<()> {
+        loop {
+            let (drained, disconnected) = drain_batch(&rx, self.policy);
+            state.requests += drained.len();
+            let mut reqs = Vec::with_capacity(drained.len());
+            let mut flat = Vec::with_capacity(drained.len() * per_image);
+            for req in drained {
+                match malformed(&req.data, per_image) {
+                    Some(msg) => {
+                        state.rejected += 1;
+                        let _ = req.reply.send(Err(RequestError::Failed(msg)));
+                    }
+                    None => {
+                        flat.extend_from_slice(&req.data);
+                        reqs.push(req);
+                    }
+                }
+            }
+            self.execute_and_reply(reqs, flat, per_image, state)?;
+            if disconnected {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one screened batch and answer every request in it.
+    /// Deadlines are judged *here* — "expired" means the batch had not
+    /// started executing by the deadline, so the check belongs at the
+    /// last moment before execution, on both loop shapes (on the
+    /// overlapped path a batch may also age in the feed channel). Full
+    /// `model.batch`-sized chunks run straight off the prepared block;
+    /// a ragged tail of k images routes through the plan family
+    /// ([`crate::runtime::LoadedModel::run_tail`]: latency plan at k=1,
+    /// smallest fitting variant otherwise, padded-to-batch only when
+    /// the family is disabled).
+    fn execute_and_reply(
+        &self,
+        reqs: Vec<Request>,
+        flat: Vec<f32>,
+        per_image: usize,
+        state: &mut ServeState,
+    ) -> Result<()> {
+        let now = Instant::now();
+        let (batch, flat) = if reqs.iter().any(|r| r.deadline.is_some_and(|d| now >= d)) {
+            let mut kept = Vec::with_capacity(reqs.len());
+            let mut rebuilt = Vec::with_capacity(flat.len());
+            for req in reqs {
+                if req.deadline.is_some_and(|d| now >= d) {
+                    state.expired += 1;
+                    let _ = req.reply.send(Err(RequestError::Expired));
+                } else {
+                    rebuilt.extend_from_slice(&req.data);
+                    kept.push(req);
+                }
+            }
+            (kept, rebuilt)
+        } else {
+            (reqs, flat)
+        };
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let model = self
+            .runtime
+            .best_batch_model(self.policy.max_batch)
+            .context("no model loaded")?;
+        // Safety net around execution: the runtime's degrade ladder
+        // already absorbs pipelined stage faults, so anything that
+        // still escapes (a panic on the sequential path, a typed
+        // error) fails only this batch — every request in it gets
+        // `Err(RequestError::Failed)` and serving continues.
+        let full = model.batch * per_image;
+        let exec = catch_unwind(AssertUnwindSafe(
+            || -> std::result::Result<(Vec<f32>, usize), crate::graph::GraphError> {
+                let mut outputs: Vec<f32> = Vec::new();
+                let mut probs_per = 0usize;
+                for chunk in flat.chunks(full) {
+                    let images = chunk.len() / per_image;
+                    let out = if chunk.len() == full {
+                        model.run(chunk)?
+                    } else {
+                        let mut outs = model.run_tail(chunk, images)?;
+                        if outs.len() != 1 {
+                            return Err(crate::graph::GraphError::Invalid(
+                                model.name.clone(),
+                                format!("{} outputs; serving needs exactly one", outs.len()),
+                            ));
+                        }
+                        outs.pop().expect("exactly one output")
+                    };
+                    probs_per = out.len() / images.max(1);
+                    outputs.extend(out);
+                }
+                Ok((outputs, probs_per))
+            },
+        ));
+        let outcome = match exec {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(payload) => Err(crate::util::fault::panic_message(payload.as_ref())),
+        };
+        match outcome {
+            Ok((outputs, probs_per)) => {
+                let now = Instant::now();
+                for (i, req) in batch.iter().enumerate() {
+                    let lat = now - req.submitted;
+                    state.latency.record(lat);
+                    let probs = outputs[i * probs_per..(i + 1) * probs_per].to_vec();
+                    let _ = req.reply.send(Ok(ClassResult {
+                        id: req.id,
+                        probs,
+                        latency: lat,
+                    }));
+                }
+            }
+            Err(msg) => {
+                for req in &batch {
+                    let _ = req.reply.send(Err(RequestError::Failed(msg.clone())));
+                }
+            }
+        }
+        state.occupancy += batch.len();
+        state.batches += 1;
+        Ok(())
     }
 }
 
@@ -324,8 +422,10 @@ impl Coordinator {
 /// calibrator (measured cuts, measured team, per-group-size
 /// repartitioning) during model load. `deadline_ms` / `queue_cap` /
 /// `shed` are the robustness knobs: per-request deadlines, a bounded
-/// admission queue, and the shed-vs-block overload policy.
-#[derive(Clone, Copy, Debug)]
+/// admission queue, and the shed-vs-block overload policy. `overlap` /
+/// `plan_family` are the always-fed knobs: drain/execute overlap and
+/// ragged-tail batch variants.
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub requests: usize,
     pub max_batch: usize,
@@ -343,6 +443,14 @@ pub struct ServeConfig {
     /// On a full queue, shed (refuse with `RequestError::Shed`) instead
     /// of blocking the client thread.
     pub shed: bool,
+    /// Drain/execute overlap (default on): a feeder thread accumulates
+    /// the next batch while the current one executes. `false` = the
+    /// sequential drain-then-run loop (`serve --no-overlap`).
+    pub overlap: bool,
+    /// Ragged-tail plan family sizes: `None` = the default family
+    /// ({B/4, B/2}); `Some(vec![])` disables tail variants (tails pad
+    /// to the full batch); explicit sizes are used as given.
+    pub plan_family: Option<Vec<usize>>,
 }
 
 impl Default for ServeConfig {
@@ -356,6 +464,8 @@ impl Default for ServeConfig {
             deadline_ms: None,
             queue_cap: 0,
             shed: false,
+            overlap: true,
+            plan_family: None,
         }
     }
 }
@@ -379,15 +489,26 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
     if cfg.autotune {
         runtime = runtime.with_autotune(TuneOptions::default());
     }
+    if let Some(sizes) = &cfg.plan_family {
+        runtime = runtime.with_plan_family(sizes);
+    }
     let loaded = runtime.load_manifest()?;
     println!(
-        "runtime: platform={} threads={} team={} autotune={} loaded {:?}",
+        "runtime: platform={} threads={} team={} autotune={} overlap={} loaded {:?}",
         runtime.platform(),
         runtime.threads,
         runtime.team,
         cfg.autotune,
+        cfg.overlap,
         loaded
     );
+    if let Some(m) = runtime.best_batch_model(cfg.max_batch) {
+        println!(
+            "plan family: batch={} tail variants {:?}",
+            m.batch,
+            m.variant_batches()
+        );
+    }
     println!(
         "kernel isa: {} (override with HPIPE_ISA=scalar|sse4.1|avx2|fma|neon|native)",
         crate::exec::isa::describe()
@@ -413,7 +534,8 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
         max_batch,
         ..Default::default()
     };
-    let coordinator = Coordinator::new(runtime, policy);
+    let mut coordinator = Coordinator::new(runtime, policy);
+    coordinator.overlap = cfg.overlap;
 
     // client thread, submitting through a bounded admission queue
     let cap = if cfg.queue_cap > 0 { cfg.queue_cap } else { n_requests.max(1) };
@@ -573,6 +695,90 @@ mod tests {
         assert_eq!(report.batches, 1);
         let replies: Vec<Reply> = rrx.try_iter().collect();
         assert_eq!(replies.len(), 3, "hangup mid-batch must not lose answers");
+        assert!(replies.iter().all(|r| r.is_ok()));
+    }
+
+    /// The `--no-overlap` escape hatch: the sequential drain-then-run
+    /// loop must keep the exact answer-every-request semantics.
+    #[test]
+    fn drain_then_run_escape_hatch_still_serves() {
+        let (mut coordinator, per) = test_coordinator(200);
+        coordinator.overlap = false;
+        let (tx, rx) = sync_channel::<Request>(8);
+        let (rtx, rrx) = channel::<Reply>();
+        for id in 0..3 {
+            tx.send(mk(id, vec![0.5; per], None, &rtx)).unwrap();
+        }
+        drop(tx);
+        drop(rtx);
+        let report = coordinator.run(rx).unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.batches, 1);
+        let replies: Vec<Reply> = rrx.try_iter().collect();
+        assert_eq!(replies.len(), 3);
+        assert!(replies.iter().all(|r| r.is_ok()));
+    }
+
+    /// Overlapped and non-overlapped serving must classify a ragged
+    /// mix identically (bitwise: same plans, same kernels per image).
+    #[test]
+    fn overlap_and_drain_then_run_agree_bitwise() {
+        let run_with = |overlap: bool| -> Vec<ClassResult> {
+            let (mut coordinator, per) = test_coordinator(200);
+            coordinator.overlap = overlap;
+            let (tx, rx) = sync_channel::<Request>(8);
+            let (rtx, rrx) = channel::<Reply>();
+            for id in 0..5u64 {
+                let v = (id as f32 + 1.0) * 0.1;
+                tx.send(mk(id, vec![v; per], None, &rtx)).unwrap();
+            }
+            drop(tx);
+            drop(rtx);
+            coordinator.run(rx).unwrap();
+            let mut out: Vec<ClassResult> =
+                rrx.try_iter().map(|r| r.expect("all healthy")).collect();
+            out.sort_by_key(|r| r.id);
+            out
+        };
+        let (a, b) = (run_with(true), run_with(false));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.probs, y.probs, "request {}", x.id);
+        }
+    }
+
+    /// A drained tail of k < B requests routes through the plan family
+    /// (smallest variant ≥ k), visible in the report's tail counters.
+    #[test]
+    fn ragged_tail_is_family_routed_not_padded_to_batch() {
+        let mut runtime = Runtime::cpu(Path::new(".")).unwrap();
+        let g = tiny_cnn(NetConfig::test_scale());
+        runtime.load_graph("tinycnn_b8", &g, 8).unwrap(); // family {2, 4}
+        let per = runtime
+            .model("tinycnn_b8")
+            .unwrap()
+            .input_shape
+            .iter()
+            .product::<usize>()
+            / 8;
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(100) };
+        let coordinator = Coordinator::new(runtime, policy);
+        let (tx, rx) = sync_channel::<Request>(8);
+        let (rtx, rrx) = channel::<Reply>();
+        for id in 0..3 {
+            tx.send(mk(id, vec![0.5; per], None, &rtx)).unwrap();
+        }
+        drop(tx);
+        drop(rtx);
+        let report = coordinator.run(rx).unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.batches, 1);
+        // k=3 rode the batch-4 variant: one tail run, one padded image
+        assert_eq!(report.tail_batches, 1);
+        assert_eq!(report.padded_images, 1);
+        let replies: Vec<Reply> = rrx.try_iter().collect();
+        assert_eq!(replies.len(), 3);
         assert!(replies.iter().all(|r| r.is_ok()));
     }
 

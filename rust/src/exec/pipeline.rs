@@ -61,12 +61,12 @@ use crate::arch::StageGeometry;
 use crate::compile::throughput::{stage_cycles, WeightSummary, LINE_OVERHEAD};
 use crate::graph::{Graph, GraphError, Op, Padding, Tensor};
 use crate::util::partition::{partition_min_bottleneck, range_costs};
-use crate::util::timer::ScopedNs;
+use crate::util::timer::{epoch_ns, ScopedNs};
 use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Boundary messages in flight per cut: double buffering, exactly like
 /// the two-deep stage-boundary line buffers the simulator models.
@@ -271,6 +271,24 @@ pub struct PipelinePlan {
     /// Per-stage busy / stall / items counters, accumulated across every
     /// `run_*` call (see [`Self::stage_metrics`]).
     counters: Vec<StageCounters>,
+    /// Inter-run idle accounting: time between one `run_*` call's last
+    /// stage-exit and the next call's first stage-entry. Shareable
+    /// across a model's plan family ([`Self::share_idle_tracker`]) so a
+    /// tail routed through a smaller variant keeps the fabric "fed".
+    idle: Arc<IdleTracker>,
+}
+
+/// Gap accounting between pipeline runs. The per-stage busy/stall
+/// counters only see time *inside* a `run_*` call; the serving-level
+/// stall — the pipeline sitting empty between one batch's last
+/// stage-exit and the next batch's first stage-entry — lives here.
+/// Timestamps are [`epoch_ns`] values (`Instant`s cannot live in
+/// atomics); `last_exit_ns == 0` means no run has completed yet, so the
+/// window before the first batch is never charged as idle.
+#[derive(Default)]
+struct IdleTracker {
+    last_exit_ns: AtomicU64,
+    idle_ns: AtomicU64,
 }
 
 /// Cumulative per-stage activity counters. `busy` covers step execution,
@@ -513,6 +531,7 @@ impl PipelinePlan {
             team,
             team_steps,
             counters,
+            idle: Arc::new(IdleTracker::default()),
         }
     }
 
@@ -565,12 +584,36 @@ impl PipelinePlan {
     }
 
     /// Zero the cumulative stage counters (e.g. after warmup runs).
+    /// Also clears the inter-run idle tracker, so a serve window's
+    /// [`Self::pipeline_idle_ns`] covers only the gaps inside it.
     pub fn reset_stage_metrics(&self) {
         for c in &self.counters {
             c.busy.store(0, Ordering::Relaxed);
             c.stall.store(0, Ordering::Relaxed);
             c.items.store(0, Ordering::Relaxed);
         }
+        self.idle.idle_ns.store(0, Ordering::Relaxed);
+        self.idle.last_exit_ns.store(0, Ordering::Relaxed);
+    }
+
+    /// Cumulative time the pipeline sat empty *between* `run_*` calls:
+    /// the gap from one call's last stage-exit to the next call's first
+    /// stage-entry, summed since construction or the last
+    /// [`Self::reset_stage_metrics`]. The drain/execute-overlap signal:
+    /// a coordinator that pre-drains the next batch while this one
+    /// executes collapses this toward zero, a drain-then-run loop pays
+    /// the full batcher wait here. Plans sharing a tracker
+    /// ([`Self::share_idle_tracker`]) report one fabric-wide number.
+    pub fn pipeline_idle_ns(&self) -> u64 {
+        self.idle.idle_ns.load(Ordering::Relaxed)
+    }
+
+    /// Share `other`'s idle tracker: runs through either plan extend the
+    /// same between-runs timeline. Used by the runtime's plan family so
+    /// a ragged tail served by a smaller batch variant counts as keeping
+    /// the fabric fed rather than as main-pipeline idle time.
+    pub fn share_idle_tracker(&mut self, other: &PipelinePlan) {
+        self.idle = Arc::clone(&other.idle);
     }
 
     /// Arena slots copied across the cut between stage `j` and `j + 1`.
@@ -700,6 +743,14 @@ impl PipelinePlan {
         F: Fn(usize, &mut ExecContext) + Sync,
     {
         let k = self.ranges.len();
+        // Inter-run idle: the gap since the previous run's exit (on this
+        // plan or any plan sharing the tracker) is the time the fabric
+        // sat unfed. First entry after construction/reset charges none.
+        let entry = epoch_ns();
+        let last_exit = self.idle.last_exit_ns.load(Ordering::Relaxed);
+        if last_exit != 0 && entry > last_exit {
+            self.idle.idle_ns.fetch_add(entry - last_exit, Ordering::Relaxed);
+        }
         let fault_slot: Mutex<Option<StageFault>> = Mutex::new(None);
         std::thread::scope(|scope| {
             let fault_slot = &fault_slot;
@@ -799,6 +850,7 @@ impl PipelinePlan {
             // drop as this closure returns — before the scope joins —
             // unblocking any still-running upstream workers.
         });
+        self.idle.last_exit_ns.store(epoch_ns(), Ordering::Relaxed);
         match fault_slot.into_inner().unwrap_or_else(|e| e.into_inner()) {
             Some(f) => Err(f),
             None => Ok(()),
@@ -1069,6 +1121,37 @@ mod tests {
         for s in pipe.stage_metrics() {
             assert_eq!((s.busy_ns, s.stall_ns, s.items), (0, 0, 0));
         }
+    }
+
+    #[test]
+    fn inter_run_idle_accumulates_shares_and_resets() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 2).unwrap();
+        let mut rng = Rng::new(0x1D1E);
+        let images: Vec<BTreeMap<String, Tensor>> =
+            (0..2).map(|_| g.random_feeds(&mut rng)).collect();
+        // the window before the first run is never charged as idle
+        pipe.run_stream(&images).unwrap();
+        assert_eq!(pipe.pipeline_idle_ns(), 0, "first run must not charge startup");
+        // a deliberate gap between runs is charged
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        pipe.run_stream(&images).unwrap();
+        let idle = pipe.pipeline_idle_ns();
+        assert!(idle >= 3_000_000, "a 3ms gap must be visible, got {idle}ns");
+        // a plan sharing the tracker extends the same timeline: its run
+        // immediately after ours adds (at most) a tiny gap, and both
+        // plans report the one fabric-wide number
+        let mut variant = PipelinePlan::build(&g, &PlanOptions::default(), 1).unwrap();
+        variant.share_idle_tracker(&pipe);
+        variant.run_stream(&images).unwrap();
+        assert_eq!(variant.pipeline_idle_ns(), pipe.pipeline_idle_ns());
+        // reset zeroes the shared tracker and re-arms the no-prior-run
+        // sentinel, so the next run starts a fresh window
+        pipe.reset_stage_metrics();
+        assert_eq!(variant.pipeline_idle_ns(), 0);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        pipe.run_stream(&images).unwrap();
+        assert_eq!(pipe.pipeline_idle_ns(), 0, "post-reset first run charges nothing");
     }
 
     #[test]

@@ -165,6 +165,33 @@ pub fn tune_plan(plan: &ExecutionPlan, opts: &TuneOptions) -> (StepProfile, Tune
     (profile, cuts)
 }
 
+/// Rescale measured per-step costs from one plan batch to another. Every
+/// step's work is linear in the batch dim (a batch-B conv walks B images'
+/// patches; element-wise steps stream B times the elements), so a
+/// profile captured at `from_batch` predicts a `to_batch` variant by
+/// scaling — the calibration-reuse half of the plan family: variants are
+/// *sized* from the one profile the model already paid for instead of
+/// re-profiling each batch size. Costs round up and never collapse to 0.
+pub fn scale_costs(costs_ns: &[u64], from_batch: usize, to_batch: usize) -> Vec<u64> {
+    let (from, to) = (from_batch.max(1) as u128, to_batch.max(1) as u128);
+    costs_ns
+        .iter()
+        .map(|&c| (((c as u128 * to) + from - 1) / from).min(u64::MAX as u128) as u64)
+        .map(|c| c.max(1))
+        .collect()
+}
+
+/// Team size for one ragged-tail plan-family variant, reusing an
+/// already-captured profile. A tail run is a single group in flight —
+/// there is never a second item to overlap with — so pipeline stages
+/// cannot help and the whole core budget flows into the intra-stage
+/// team ([`choose_cuts_capped`] at `max_stages == 1`), as far as the
+/// scaled step weights can amortize the worker spawns.
+pub fn variant_team(profile: &StepProfile, variant_batch: usize, cores: usize) -> usize {
+    let scaled = scale_costs(&profile.costs_ns, profile.batch, variant_batch);
+    choose_cuts_capped(&scaled, cores, 1).team
+}
+
 /// One calibrated group-batch size: the measurements, the decision, and
 /// the cuts the cycle model would have picked at the same stage count
 /// (so reports show where measurement disagreed with the model).
@@ -382,6 +409,39 @@ mod tests {
         let cuts = choose_cuts(&[MS, 40 * MS, MS, MS], 4);
         assert_eq!(cuts.bottleneck_ns, 40 * MS);
         assert!(cuts.stages <= 3, "stages {} past the plateau", cuts.stages);
+    }
+
+    #[test]
+    fn scale_costs_is_linear_ceiling_and_never_zero() {
+        // scaling 8 -> 2 quarters the work, rounding up
+        assert_eq!(scale_costs(&[8 * MS, 4 * MS, 3], 8, 2), vec![2 * MS, MS, 1]);
+        // upscaling multiplies
+        assert_eq!(scale_costs(&[MS, 2 * MS], 2, 8), vec![4 * MS, 8 * MS]);
+        // identity batch is a no-op (modulo the >= 1 floor)
+        assert_eq!(scale_costs(&[5, 7], 4, 4), vec![5, 7]);
+        // a measured 0 still carries unit weight so the partition DP
+        // never sees an all-zero interval
+        assert_eq!(scale_costs(&[0], 1, 1), vec![1]);
+    }
+
+    #[test]
+    fn variant_team_spends_the_budget_like_a_one_stage_cut() {
+        use crate::exec::StepProfile;
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let n = plan.steps.len();
+        // heavyweight steps: a tail variant is one group in flight, so
+        // the budget becomes a team exactly as a max_stages=1 cut would
+        let profile = StepProfile::synthetic(&plan, vec![8 * MS; n]);
+        let scaled = scale_costs(&profile.costs_ns, profile.batch, 2);
+        assert_eq!(
+            variant_team(&profile, 2, 4),
+            choose_cuts_capped(&scaled, 4, 1).team
+        );
+        assert!(variant_team(&profile, 2, 4) > 1, "ms-scale steps amortize a team");
+        // featherweight steps never spawn a team, tail or not
+        let tiny = StepProfile::synthetic(&plan, vec![100; n]);
+        assert_eq!(variant_team(&tiny, 4, 16), 1);
     }
 
     #[test]

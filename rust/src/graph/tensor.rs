@@ -131,6 +131,29 @@ impl Tensor {
         Tensor::from_vec(&shape, data)
     }
 
+    /// Zero-pad a flat row-major block of images up to `batch` images:
+    /// the feed builder for running a ragged tail of `k < batch` images
+    /// through a batch-`batch` plan (`input.len()` must be a multiple of
+    /// `per_image` and at most `batch · per_image`). The flat-block
+    /// companion of [`Self::concat_batch`], shared by the serving path's
+    /// pad fallback and the equivalence tests so "padded baseline" means
+    /// one thing everywhere. Padding with zeros is sound because batched
+    /// kernels never mix accumulation across images — the real images'
+    /// outputs are bitwise those of the unpadded batch.
+    pub fn pad_batch(input: &[f32], per_image: usize, batch: usize) -> Vec<f32> {
+        assert!(per_image > 0, "pad_batch needs a positive image size");
+        assert_eq!(input.len() % per_image, 0, "pad_batch input is not whole images");
+        assert!(
+            input.len() <= batch * per_image,
+            "pad_batch cannot shrink {} elements into batch {batch}",
+            input.len()
+        );
+        let mut padded = Vec::with_capacity(batch * per_image);
+        padded.extend_from_slice(input);
+        padded.resize(batch * per_image, 0.0);
+        padded
+    }
+
     /// Reshape without moving data (element count must match).
     pub fn reshape(&self, shape: &[usize]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
@@ -298,6 +321,23 @@ mod tests {
         let a = Tensor::zeros(&[1, 2, 2]);
         let b = Tensor::zeros(&[1, 2, 3]);
         let _ = Tensor::concat_batch(&[&a, &b]);
+    }
+
+    #[test]
+    fn pad_batch_zero_fills_to_the_plan_batch() {
+        let two_images = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let padded = Tensor::pad_batch(&two_images, 3, 4);
+        assert_eq!(padded.len(), 12);
+        assert_eq!(&padded[..6], &two_images[..]);
+        assert!(padded[6..].iter().all(|&v| v == 0.0));
+        // already-full input passes through unchanged
+        assert_eq!(Tensor::pad_batch(&two_images, 3, 2), two_images);
+    }
+
+    #[test]
+    #[should_panic(expected = "not whole images")]
+    fn pad_batch_rejects_partial_images() {
+        let _ = Tensor::pad_batch(&[1.0, 2.0], 3, 4);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
 //!   serve     --model DIR [--requests N] [--batch N] [--threads N]
 //!             [--team N] [--autotune] [--deadline-ms N] [--queue-cap N]
-//!             [--shed] [--json FILE]                  exec serving demo
+//!             [--shed] [--no-overlap] [--plan-family none|CSV]
+//!             [--json FILE]                          exec serving demo
 //!                            (--batch N serves through *natively
 //!                            batched* plans — one weight-stream walk
 //!                            feeds the whole batch; threads > 1
@@ -26,10 +27,45 @@
 //!                            then are answered `Expired`, never run.
 //!                            --queue-cap N bounds the admission queue;
 //!                            --shed refuses (`Shed`) on a full queue
-//!                            instead of blocking the client. --json
+//!                            instead of blocking the client.
+//!                            Drain/execute overlap is ON by default: a
+//!                            feeder thread accumulates batch i+1 while
+//!                            batch i executes, so pipeline stages go
+//!                            straight from one batch's last image to
+//!                            the next batch's first; --no-overlap
+//!                            restores the sequential drain-then-run
+//!                            loop. --plan-family controls ragged-tail
+//!                            routing: a drained tail of k < batch
+//!                            requests runs on the smallest batch
+//!                            variant that fits (k=1 takes the
+//!                            latency plan) instead of being
+//!                            zero-padded to the full batch — same
+//!                            bits, strictly less compute. Default
+//!                            family is {B/4, B/2}; `--plan-family
+//!                            2,4` picks explicit sizes and
+//!                            `--plan-family none` disables variants
+//!                            (tails pad to the batch again). --json
 //!                            dumps the machine-readable ServeReport,
 //!                            including shed / expired / rejected /
-//!                            faults / degraded counters.)
+//!                            faults / degraded counters, the
+//!                            inter-batch `pipeline_idle_ns`, and the
+//!                            tail_batches / padded_images tail
+//!                            accounting.)
+//!
+//! ## Sustained vs bench-loop throughput
+//!
+//! The `exec_engine` bench reports *bench-loop* img/s: back-to-back
+//! plan executions with the next batch always materialized in memory —
+//! an upper bound that hides every serving-side gap. `serve` (and the
+//! sustained section of the `e2e_serving` bench) reports *sustained*
+//! img/s: a live request mix with arrival jitter, ragged tails and
+//! deadlines, where the pipeline only stays busy if draining the next
+//! batch overlaps executing the current one. The gap between the two
+//! is measured by `pipeline_idle_ns` — time from one batch's last
+//! stage-exit to the next batch's first stage-entry — which the
+//! overlap path exists to collapse; the sustained gate in
+//! `benches/e2e_serving.rs` holds overlap ≥ drain-then-run and
+//! family-routed tails ≥ padded tails under `BENCH_SMOKE=1`.
 //!
 //! ## Environment variables
 //!
@@ -238,6 +274,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.str("model", "artifacts"));
+    // --plan-family none|CSV: absent = default family ({B/4, B/2}),
+    // "none" = tails pad to the full batch, CSV = explicit sizes
+    let plan_family = match args.opt("plan-family") {
+        None => None,
+        Some("none") => Some(Vec::new()),
+        Some(csv) => {
+            let sizes: Vec<usize> = csv
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .with_context(|| format!("--plan-family size '{s}'"))
+                })
+                .collect::<Result<_>>()?;
+            Some(sizes)
+        }
+    };
     let cfg = hpipe::coordinator::ServeConfig {
         requests: args.usize("requests", 64),
         max_batch: args.usize("batch", 8),
@@ -247,6 +301,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadline_ms: args.opt("deadline-ms").and_then(|s| s.parse().ok()),
         queue_cap: args.usize("queue-cap", 0),
         shed: args.bool("shed"),
+        overlap: !args.bool("no-overlap"),
+        plan_family,
     };
     let mut report = hpipe::coordinator::serve_demo(&dir, &cfg)?;
     report.print();

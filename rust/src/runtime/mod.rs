@@ -24,6 +24,13 @@
 //! boundary tensors at every cut — while a batch-1 latency plan is kept
 //! for single-image requests ([`LoadedModel::run_one`]: lowest latency,
 //! no batching or handoff cost).
+//!
+//! Between those extremes sits the **ragged-tail plan family**
+//! ([`LoadedModel::run_tail`]): a few smaller batch variants of the
+//! same graph (default {B/4, B/2}) so a drained tail of k < B requests
+//! executes on the smallest plan that fits instead of being zero-padded
+//! to B — bitwise-identical outputs, strictly less compute, which
+//! matters most exactly where sparsity makes per-image work cheap.
 
 use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan, TuneEntry, TuneOptions, TuneReport};
 use crate::graph::{graphdef, Graph, GraphError, Op, Tensor};
@@ -31,7 +38,7 @@ use crate::sparsity::prune_tensor;
 use crate::util::error::{Context, Result};
 use crate::util::{Json, Rng};
 use std::cell::{Cell, RefCell};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
 /// A compiled executable plus its I/O metadata.
@@ -73,6 +80,26 @@ pub struct LoadedModel {
     /// Sticky degradation flag: once a retry also faults, every later
     /// batch runs through the sequential batch-1 plan (rung two).
     degraded: Cell<bool>,
+    /// Ragged-tail plan family: 1-stage pipelines over smaller batched
+    /// plans, ascending by batch. A drained tail of k < `batch` images
+    /// routes to the smallest variant that fits instead of zero-padding
+    /// to the full batch ([`Self::run_tail`]). Empty = pad to `batch`.
+    variants: Vec<PipelinePlan>,
+    /// Tail executions that took a batched tail path (family variant or
+    /// pad-to-batch fallback; the k=1 latency path doesn't count).
+    tail_runs: Cell<u64>,
+    /// Zero images padded onto those tail executions — the wasted
+    /// compute the plan family exists to shrink.
+    padded_images: Cell<u64>,
+}
+
+/// Ragged-tail accounting for one model (see [`LoadedModel::run_tail`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TailStats {
+    /// Tail executions served through a batched (variant or padded) plan.
+    pub tail_runs: u64,
+    /// Zero images padded onto those executions.
+    pub padded_images: u64,
 }
 
 /// Cumulative fault accounting for one model — the degrade ladder's
@@ -206,6 +233,9 @@ impl LoadedModel {
             faults: Cell::new(0),
             retries: Cell::new(0),
             degraded: Cell::new(false),
+            variants: Vec::new(),
+            tail_runs: Cell::new(0),
+            padded_images: Cell::new(0),
         })
     }
 
@@ -310,7 +340,42 @@ impl LoadedModel {
             faults: Cell::new(0),
             retries: Cell::new(0),
             degraded: Cell::new(false),
+            variants: Vec::new(),
+            tail_runs: Cell::new(0),
+            padded_images: Cell::new(0),
         })
+    }
+
+    /// Grow the ragged-tail plan family: one 1-stage batched plan per
+    /// size in `sizes` (filtered to `2..batch` and deduplicated — k=1 is
+    /// the latency plan's job and k=batch the primary plan's). Autotuned
+    /// models reuse the chosen group's measured step costs to size each
+    /// variant's worker team (linear cost rescaling, no re-profiling);
+    /// static models inherit the configured team. Every variant shares
+    /// the primary pipeline's inter-run idle tracker, so a tail run
+    /// closes the idle window like any other group.
+    pub fn add_plan_family(&mut self, graph: &Graph, sizes: &[usize]) -> Result<()> {
+        let (input_name, _) = single_placeholder(graph)?;
+        let kept: BTreeSet<usize> = sizes
+            .iter()
+            .copied()
+            .filter(|&s| s > 1 && s < self.batch)
+            .collect();
+        for v in kept {
+            let plan = checked_batched_plan(graph, v, &input_name)
+                .with_context(|| format!("building batch-{v} tail variant"))?;
+            let team = match &self.tune {
+                Some(report) => {
+                    let chosen = report.chosen().expect("autotuned model has a chosen entry");
+                    crate::exec::tune::variant_team(&chosen.profile, v, report.cores)
+                }
+                None => self.team,
+            };
+            let mut variant = PipelinePlan::from_plan_team(plan, 1, team);
+            variant.share_idle_tracker(&self.pipeline);
+            self.variants.push(variant);
+        }
+        Ok(())
     }
 
     /// The calibration report, when this model was loaded through
@@ -414,7 +479,7 @@ impl LoadedModel {
         let expect: usize = self.input_shape.iter().product();
         self.check_input(input, expect, &self.input_shape)?;
         if self.degraded.get() {
-            return self.run_sequential_b1(input);
+            return self.run_sequential(input, self.batch);
         }
         let plan = self.pipeline.plan();
         let group = plan.batch();
@@ -424,28 +489,10 @@ impl LoadedModel {
             // threads (one boundary handoff per group, not per image).
             // A worker team (team > 1) also routes here — even a 1-stage
             // pipeline then splits its dominant convs across the team.
-            let first = match self.pipeline.run_batch(input, self.batch) {
-                Ok(outs) => return Ok(outs),
-                Err(e) => e,
+            return match self.run_with_ladder(&self.pipeline, input, self.batch) {
+                Some(outs) => Ok(outs),
+                None => self.run_sequential(input, self.batch),
             };
-            // Rung one: the plan is reusable after an isolated stage
-            // fault, so a transient panic costs one retry, not the run.
-            self.faults.set(self.faults.get() + 1);
-            self.retries.set(self.retries.get() + 1);
-            let second = match self.pipeline.run_batch(input, self.batch) {
-                Ok(outs) => return Ok(outs),
-                Err(e) => e,
-            };
-            // Rung two: repeated faults look deterministic — demote to
-            // the sequential batch-1 plan and stay there.
-            self.faults.set(self.faults.get() + 1);
-            self.degraded.set(true);
-            eprintln!(
-                "model '{}': degrading to sequential execution after repeated stage \
-                 faults ({first}; retry: {second})",
-                self.name
-            );
-            return self.run_sequential_b1(input);
         }
         // Sequential path: the plan executes whole groups natively
         // (with threads == 1 the group IS the batch — a single
@@ -471,6 +518,115 @@ impl LoadedModel {
         Ok(outs)
     }
 
+    /// One pipelined execution attempt with the retry-once → degrade
+    /// ladder (shared by the primary batch path and the tail variants,
+    /// so a faulting variant demotes the whole model, not just tails).
+    /// `None` means both attempts faulted and the model is now degraded
+    /// — the caller must take the sequential fallback.
+    fn run_with_ladder(
+        &self,
+        pipe: &PipelinePlan,
+        input: &[f32],
+        n_images: usize,
+    ) -> Option<Vec<Vec<f32>>> {
+        let first = match pipe.run_batch(input, n_images) {
+            Ok(outs) => return Some(outs),
+            Err(e) => e,
+        };
+        // Rung one: the plan is reusable after an isolated stage fault,
+        // so a transient panic costs one retry, not the run.
+        self.faults.set(self.faults.get() + 1);
+        self.retries.set(self.retries.get() + 1);
+        let second = match pipe.run_batch(input, n_images) {
+            Ok(outs) => return Some(outs),
+            Err(e) => e,
+        };
+        // Rung two: repeated faults look deterministic — demote to the
+        // sequential batch-1 plan and stay there.
+        self.faults.set(self.faults.get() + 1);
+        self.degraded.set(true);
+        eprintln!(
+            "model '{}': degrading to sequential execution after repeated stage \
+             faults ({first}; retry: {second})",
+            self.name
+        );
+        None
+    }
+
+    /// Run a ragged tail of `k < batch` images, sized to the request
+    /// stream instead of padding the stream to the plan: k=1 takes the
+    /// latency plan, 1 < k < batch routes to the smallest plan-family
+    /// variant that fits (zero-padded only up to the variant's batch),
+    /// and only a model with no family pads all the way to `batch`.
+    /// Outputs are truncated to the k real images and are bitwise those
+    /// of the padded-to-batch baseline's first k images — batched
+    /// kernels never mix accumulation across images, so the pad rows
+    /// cannot perturb real ones. `k == batch` is just [`Self::run_all`].
+    pub fn run_tail(&self, input: &[f32], k: usize) -> Result<Vec<Vec<f32>>, GraphError> {
+        if k == 0 || k > self.batch {
+            return Err(GraphError::Invalid(
+                self.name.clone(),
+                format!("tail of {k} images outside 1..={}", self.batch),
+            ));
+        }
+        if k == self.batch {
+            return self.run_all(input);
+        }
+        let per: usize = self.input_shape.iter().product::<usize>() / self.batch;
+        let mut shape = self.input_shape.clone();
+        shape[0] = k;
+        self.check_input(input, k * per, &shape)?;
+        if self.degraded.get() {
+            return self.run_sequential(input, k);
+        }
+        if k == 1 {
+            return self.run_one(input);
+        }
+        if let Some(variant) = self.variants.iter().find(|v| v.plan().batch() >= k) {
+            let vb = variant.plan().batch();
+            self.tail_runs.set(self.tail_runs.get() + 1);
+            self.padded_images
+                .set(self.padded_images.get() + (vb - k) as u64);
+            let padded = Tensor::pad_batch(input, per, vb);
+            let mut outs = match self.run_with_ladder(variant, &padded, vb) {
+                Some(outs) => outs,
+                None => return self.run_sequential(input, k),
+            };
+            for out in &mut outs {
+                let probs = out.len() / vb;
+                out.truncate(k * probs);
+            }
+            return Ok(outs);
+        }
+        // No family: the padded-to-batch baseline.
+        self.tail_runs.set(self.tail_runs.get() + 1);
+        self.padded_images
+            .set(self.padded_images.get() + (self.batch - k) as u64);
+        let padded = Tensor::pad_batch(input, per, self.batch);
+        let mut outs = self.run_all(&padded)?;
+        for out in &mut outs {
+            let probs = out.len() / self.batch;
+            out.truncate(k * probs);
+        }
+        Ok(outs)
+    }
+
+    /// Batch sizes of the ragged-tail plan family, ascending. Empty
+    /// means tails pad to the full batch (family disabled or the batch
+    /// admits no interior sizes).
+    pub fn variant_batches(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.plan().batch()).collect()
+    }
+
+    /// Cumulative ragged-tail accounting (tail executions and padded
+    /// images) for this model.
+    pub fn tail_stats(&self) -> TailStats {
+        TailStats {
+            tail_runs: self.tail_runs.get(),
+            padded_images: self.padded_images.get(),
+        }
+    }
+
     /// Single-image latency path: executes the batch-1 plan
     /// sequentially (no batching, no pipeline handoffs). `image` holds
     /// one image; returns every output for it.
@@ -490,25 +646,26 @@ impl LoadedModel {
         Ok(outs)
     }
 
-    /// Degraded fallback: the whole batch, one image at a time, through
-    /// the sequential batch-1 plan — the same plan and kernels the
-    /// interpreter-equivalence oracle checks, so degraded outputs are
-    /// bitwise-identical to sequential execution by construction. No
-    /// threads, no handoffs: slow, but it cannot stage-fault.
-    fn run_sequential_b1(&self, input: &[f32]) -> Result<Vec<Vec<f32>>, GraphError> {
+    /// Degraded fallback: `n_images` images (the whole batch, or a
+    /// ragged tail of it), one at a time, through the sequential batch-1
+    /// plan — the same plan and kernels the interpreter-equivalence
+    /// oracle checks, so degraded outputs are bitwise-identical to
+    /// sequential execution by construction. No threads, no handoffs:
+    /// slow, but it cannot stage-fault.
+    fn run_sequential(&self, input: &[f32], n_images: usize) -> Result<Vec<Vec<f32>>, GraphError> {
         let plan = self.latency.as_ref().unwrap_or_else(|| self.pipeline.plan());
         debug_assert_eq!(plan.batch(), 1, "degraded path needs a batch-1 plan");
-        let per = input.len() / self.batch.max(1);
+        let per = input.len() / n_images.max(1);
         let mut guard = self.latency_ctx.borrow_mut();
         let ctx = guard.get_or_insert_with(|| plan.new_context());
         let mut outs: Vec<Vec<f32>> = vec![Vec::new(); plan.num_outputs()];
-        for i in 0..self.batch {
+        for i in 0..n_images {
             plan.write_feed(ctx, 0, &input[i * per..(i + 1) * per])?;
             plan.execute_steps(ctx);
             for (o, out) in outs.iter_mut().enumerate() {
                 let (data, _) = plan.output(ctx, o);
                 if out.capacity() == 0 {
-                    out.reserve_exact(data.len() * self.batch);
+                    out.reserve_exact(data.len() * n_images);
                 }
                 out.extend_from_slice(data);
             }
@@ -530,7 +687,25 @@ pub struct Runtime {
     /// [`LoadedModel::autotuned`] — measured cuts, measured team, per
     /// group-size repartitioning — and `threads` / `team` are ignored.
     pub autotune: Option<TuneOptions>,
+    /// Ragged-tail plan family for subsequently loaded models: `None`
+    /// picks the default family ({B/4, B/2} clipped to interior sizes),
+    /// `Some(&[])` disables tail variants (tails pad to the full
+    /// batch), and explicit sizes are used as given (clipped the same
+    /// way). See [`Runtime::with_plan_family`].
+    pub plan_family: Option<Vec<usize>>,
     models: BTreeMap<String, LoadedModel>,
+}
+
+/// Default ragged-tail plan family for a batch-`batch` model: {B/4,
+/// B/2}, filtered to interior sizes (k=1 is served by the latency plan
+/// and k=B by the primary plan, so only `2..batch` earns a variant).
+fn default_family(batch: usize) -> Vec<usize> {
+    let mut sizes: Vec<usize> = [batch / 4, batch / 2]
+        .into_iter()
+        .filter(|&s| s > 1 && s < batch)
+        .collect();
+    sizes.dedup();
+    sizes
 }
 
 impl Runtime {
@@ -542,6 +717,7 @@ impl Runtime {
             threads: 1,
             team: 1,
             autotune: None,
+            plan_family: None,
             models: BTreeMap::new(),
         })
     }
@@ -567,6 +743,15 @@ impl Runtime {
         self
     }
 
+    /// Set the ragged-tail plan family for subsequently loaded models.
+    /// An empty slice disables tail variants (tails pad to the full
+    /// batch — the pre-family behavior); without this call the default
+    /// family applies. Sizes outside `2..batch` are ignored per model.
+    pub fn with_plan_family(mut self, sizes: &[usize]) -> Runtime {
+        self.plan_family = Some(sizes.to_vec());
+        self
+    }
+
     pub fn platform(&self) -> String {
         // e.g. "exec-cpu/fma": the active SIMD dispatch tier is part of
         // the platform identity (it changes dense result bits within the
@@ -577,12 +762,19 @@ impl Runtime {
     /// Compile a graph into a named executable (calibrating it first
     /// when the runtime was configured with [`Runtime::with_autotune`]).
     pub fn load_graph(&mut self, name: &str, graph: &Graph, batch: usize) -> Result<()> {
-        let model = match &self.autotune {
+        let mut model = match &self.autotune {
             Some(opts) => LoadedModel::autotuned(name, graph, batch, opts)
                 .with_context(|| format!("calibrating model '{name}'"))?,
             None => LoadedModel::from_graph_with(name, graph, batch, self.threads, self.team)
                 .with_context(|| format!("compiling model '{name}'"))?,
         };
+        let sizes = match &self.plan_family {
+            Some(sizes) => sizes.clone(),
+            None => default_family(batch),
+        };
+        model
+            .add_plan_family(graph, &sizes)
+            .with_context(|| format!("building plan family for '{name}'"))?;
         self.models.insert(name.to_string(), model);
         Ok(())
     }
@@ -906,6 +1098,143 @@ mod tests {
         assert_eq!(rt.best_batch_model(3).unwrap().batch, 1);
         assert_eq!(rt.best_batch_model(8).unwrap().batch, 8);
         assert_eq!(rt.best_batch_model(100).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn ragged_tail_routes_to_smallest_variant_bitwise() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let mut m = LoadedModel::from_graph_with("tinycnn_b8", &g, 8, 2, 1).unwrap();
+        m.add_plan_family(&g, &default_family(8)).unwrap();
+        assert_eq!(m.variant_batches(), vec![2, 4]);
+        let per: usize = m.input_shape.iter().product::<usize>() / 8;
+        let mut rng = Rng::new(91);
+        let block: Vec<f32> = (0..8 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // padded-to-B baseline for the first k images
+        let full = m.run_all(&block).unwrap();
+        let probs = full[0].len() / 8;
+        for k in [2usize, 3, 4, 5, 7] {
+            let before = m.tail_stats();
+            let tail = m.run_tail(&block[..k * per], k).unwrap();
+            assert_eq!(tail.len(), full.len());
+            // bitwise: the tail variant runs the same kernel sequence
+            // per image, and pad rows never feed real accumulators
+            assert_eq!(tail[0], &full[0][..k * probs], "tail k={k}");
+            let after = m.tail_stats();
+            assert_eq!(after.tail_runs, before.tail_runs + 1);
+            let vb = *[2usize, 4, 8].iter().find(|&&v| v >= k).unwrap();
+            assert_eq!(after.padded_images, before.padded_images + (vb - k) as u64);
+        }
+    }
+
+    #[test]
+    fn tail_of_one_takes_the_latency_plan() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let mut m = LoadedModel::from_graph("tinycnn_b8", &g, 8).unwrap();
+        m.add_plan_family(&g, &default_family(8)).unwrap();
+        let per: usize = m.input_shape.iter().product::<usize>() / 8;
+        let mut rng = Rng::new(92);
+        let image: Vec<f32> = (0..per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let tail = m.run_tail(&image, 1).unwrap();
+        assert_eq!(tail, m.run_one(&image).unwrap());
+        // no batched tail execution, no padding — the latency plan ran
+        assert_eq!(m.tail_stats(), TailStats::default());
+    }
+
+    #[test]
+    fn tail_without_family_pads_to_full_batch() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let m = LoadedModel::from_graph("tinycnn_b8", &g, 8).unwrap(); // no family
+        assert!(m.variant_batches().is_empty());
+        let per: usize = m.input_shape.iter().product::<usize>() / 8;
+        let mut rng = Rng::new(93);
+        let block: Vec<f32> = (0..8 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let full = m.run_all(&block).unwrap();
+        let probs = full[0].len() / 8;
+        let tail = m.run_tail(&block[..3 * per], 3).unwrap();
+        assert_eq!(tail[0], &full[0][..3 * probs]);
+        assert_eq!(
+            m.tail_stats(),
+            TailStats { tail_runs: 1, padded_images: 5 }
+        );
+    }
+
+    #[test]
+    fn degraded_model_serves_tails_sequentially() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let mut m = LoadedModel::from_graph("tinycnn_b8", &g, 8).unwrap();
+        m.add_plan_family(&g, &[4]).unwrap();
+        m.degraded.set(true);
+        let per: usize = m.input_shape.iter().product::<usize>() / 8;
+        let mut rng = Rng::new(94);
+        let block: Vec<f32> = (0..3 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let tail = m.run_tail(&block, 3).unwrap();
+        // sequential fallback: per-image latency-plan outputs, bitwise
+        for i in 0..3 {
+            let one = m.run_one(&block[i * per..(i + 1) * per]).unwrap();
+            let probs = tail[0].len() / 3;
+            assert_eq!(one[0], &tail[0][i * probs..(i + 1) * probs]);
+        }
+        // degraded tails never touch the batched variants
+        assert_eq!(m.tail_stats(), TailStats::default());
+    }
+
+    #[test]
+    fn tail_rejects_malformed_requests() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let m = LoadedModel::from_graph("tinycnn_b4", &g, 4).unwrap();
+        let per: usize = m.input_shape.iter().product::<usize>() / 4;
+        assert!(matches!(
+            m.run_tail(&vec![0.0; per], 0),
+            Err(GraphError::Invalid(_, _))
+        ));
+        assert!(matches!(
+            m.run_tail(&vec![0.0; 5 * per], 5),
+            Err(GraphError::Invalid(_, _))
+        ));
+        assert!(matches!(
+            m.run_tail(&vec![0.0; per], 2),
+            Err(GraphError::Shape(_, _))
+        ));
+        let mut bad = vec![0.0; 2 * per];
+        bad[1] = f32::NAN;
+        assert!(matches!(m.run_tail(&bad, 2), Err(GraphError::Invalid(_, _))));
+        assert_eq!(m.tail_stats(), TailStats::default());
+    }
+
+    #[test]
+    fn runtime_plan_family_config_round_trips() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        // default: {B/4, B/2}
+        let mut rt = Runtime::cpu(Path::new("/nonexistent")).unwrap();
+        rt.load_graph("tinycnn_b8", &g, 8).unwrap();
+        assert_eq!(rt.model("tinycnn_b8").unwrap().variant_batches(), vec![2, 4]);
+        // explicit empty family disables tail variants
+        let mut rt = Runtime::cpu(Path::new("/nonexistent")).unwrap().with_plan_family(&[]);
+        rt.load_graph("tinycnn_b8", &g, 8).unwrap();
+        assert!(rt.model("tinycnn_b8").unwrap().variant_batches().is_empty());
+        // explicit sizes are clipped to interior values and deduped
+        let mut rt = Runtime::cpu(Path::new("/nonexistent"))
+            .unwrap()
+            .with_plan_family(&[1, 3, 3, 8, 9, 2]);
+        rt.load_graph("tinycnn_b8", &g, 8).unwrap();
+        assert_eq!(rt.model("tinycnn_b8").unwrap().variant_batches(), vec![2, 3]);
+    }
+
+    #[test]
+    fn autotuned_family_reuses_calibration() {
+        use crate::exec::ProfileOptions;
+        let g = tiny_cnn(NetConfig::test_scale());
+        let opts = TuneOptions {
+            cores: 4,
+            profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+        };
+        let mut rt = Runtime::cpu(Path::new("/nonexistent")).unwrap().with_autotune(opts);
+        rt.load_graph("tinycnn_b8", &g, 8).unwrap();
+        let m = rt.model("tinycnn_b8").unwrap();
+        assert_eq!(m.variant_batches(), vec![2, 4]);
+        // variant teams come from rescaling the chosen profile — no
+        // extra calibration entries beyond pass 1 + pass 2
+        assert!(m.tune_report().unwrap().entries.len() <= 2);
     }
 
     #[test]

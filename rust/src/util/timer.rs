@@ -64,6 +64,19 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (r, t0.elapsed())
 }
 
+/// Monotonic nanoseconds since a process-wide epoch (the first call).
+/// Instants cannot be stored in an `AtomicU64`, so cross-thread
+/// timestamp accounting — e.g. the pipeline's inter-run idle tracking,
+/// where one `run_*` call's exit time is read by the next call possibly
+/// on another thread — goes through this shared epoch instead. Never
+/// returns 0, so 0 stays usable as an "unset" sentinel.
+pub fn epoch_ns() -> u64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let ns = EPOCH.get_or_init(Instant::now).elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    ns.max(1)
+}
+
 /// Scoped monotonic timer: accumulates the enclosing scope's elapsed
 /// nanoseconds into an atomic sink on drop. The atomic sink makes the
 /// same instrument usable from the profiler's single-threaded

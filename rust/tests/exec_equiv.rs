@@ -673,6 +673,61 @@ fn tuner_chosen_cuts_execute_bitwise() {
     }
 }
 
+/// ISSUE 8 tentpole bar: ragged-tail routing must be *invisible* in the
+/// outputs. A drained tail of k < B images served through the smallest
+/// plan-family variant whose batch fits (zero-padded up to that
+/// variant, [`Tensor::pad_batch`]) must equal the padded-to-B
+/// baseline's first k images **bit for bit**, across k × sparsity
+/// {0.0, 0.5, 0.9}. Batched kernels never mix accumulation across
+/// images (the cross-batch invariance the batch tests above pin), so
+/// zero-pad rows cannot perturb the real images — which is exactly what
+/// lets `runtime::LoadedModel::run_tail` pick whichever variant fits
+/// without changing any answer.
+#[test]
+fn prop_ragged_tail_variant_matches_padded_baseline_bitwise() {
+    const B: usize = 8;
+    const FAMILY: [usize; 3] = [2, 4, B];
+    for &sparsity in &[0.0f64, 0.5, 0.9] {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, sparsity);
+        let in_shape = match &g.get("input").unwrap().op {
+            Op::Placeholder { shape } => shape.clone(),
+            _ => unreachable!(),
+        };
+        let per: usize = in_shape.iter().product();
+        let plans: BTreeMap<usize, ExecutionPlan> = FAMILY
+            .iter()
+            .map(|&vb| (vb, ExecutionPlan::build_batched(&g, vb).unwrap()))
+            .collect();
+        // run a k-image tail zero-padded up to the vb-batch plan
+        let run_padded = |vb: usize, tail: &[f32]| -> Vec<Vec<f32>> {
+            let padded = Tensor::pad_batch(tail, per, vb);
+            let mut bshape = in_shape.clone();
+            bshape[0] = vb;
+            let mut feeds = BTreeMap::new();
+            feeds.insert("input".to_string(), Tensor::from_vec(&bshape, padded));
+            plans[&vb].run(&feeds).unwrap().into_iter().map(|t| t.data).collect()
+        };
+        let mut rng = Rng::new(0x7A11 ^ (sparsity * 10.0) as u64);
+        for &k in &[1usize, 2, 3, 4, 5, 7] {
+            let tail: Vec<f32> = (0..k * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let vb = FAMILY.into_iter().find(|&v| v >= k).unwrap();
+            let via_variant = run_padded(vb, &tail);
+            let baseline = run_padded(B, &tail);
+            assert_eq!(via_variant.len(), baseline.len());
+            for (oi, (a, b)) in via_variant.iter().zip(&baseline).enumerate() {
+                let (pa, pb) = (a.len() / vb, b.len() / B);
+                assert_eq!(pa, pb, "per-image output size, output {oi}");
+                assert_eq!(
+                    &a[..k * pa],
+                    &b[..k * pb],
+                    "sparsity={sparsity} k={k} variant_batch={vb} output={oi}"
+                );
+            }
+        }
+    }
+}
+
 /// Sparsity extremes: fully dense weights through the sparse kernel and
 /// 90%-pruned weights through the dense kernel must both still match.
 #[test]

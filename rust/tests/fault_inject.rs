@@ -15,17 +15,22 @@
 //!   responses and the fault counters recorded in the `ServeReport`
 //!   (the `chaos_` tests — CI runs them as the chaos smoke);
 //! * injected batcher latency plus tight deadlines expires every
-//!   request with a typed answer, never silence.
+//!   request with a typed answer, never silence;
+//! * the drain/execute overlap (a feeder thread between batcher and
+//!   executor, on by default) must not wedge: stage faults plus a
+//!   client hangup mid-batch still flush every request and produce the
+//!   report.
 //!
 //! Without the feature this file compiles to an empty test binary.
 
 #![cfg(feature = "fault-inject")]
 
-use hpipe::coordinator::{serve_demo, ServeConfig};
+use hpipe::coordinator::batcher::BatchPolicy;
+use hpipe::coordinator::{serve_demo, Coordinator, Request, ServeConfig};
 use hpipe::exec::{ExecutionPlan, PipelinePlan};
 use hpipe::graph::{graphdef, GraphError, Op, Tensor};
 use hpipe::nets::{tiny_cnn, NetConfig};
-use hpipe::runtime::LoadedModel;
+use hpipe::runtime::{LoadedModel, Runtime};
 use hpipe::util::fault;
 use hpipe::util::{Json, Rng};
 use std::collections::BTreeMap;
@@ -200,6 +205,62 @@ fn chaos_serve_completes_with_faults_recorded() {
     let parsed = Json::parse(&report.to_json().pretty()).unwrap();
     assert!(parsed.get("faults").as_usize().unwrap() >= 1);
     assert!(parsed.get("degraded").as_usize().unwrap() >= 1);
+}
+
+/// Chaos for the always-fed loop (ISSUE 8): overlap on (the default),
+/// stage 0 persistently panicking, AND the client hanging up with a
+/// ragged 5-of-8 tail in flight. The feeder must hand off its final
+/// partial batch, the executor must absorb the faults through the
+/// degrade ladder, and the run must end with every request answered and
+/// a report produced — no feeder/executor deadlock, nothing lost.
+#[test]
+fn chaos_overlap_stage_faults_and_hangup_mid_batch_flush_cleanly() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let dir = synth_artifacts("chaos_artifacts_overlap");
+    let mut runtime = Runtime::cpu(&dir).unwrap().with_threads(2).with_team(2);
+    runtime.load_manifest().unwrap();
+    let per: usize = runtime
+        .model("tinycnn_b1")
+        .expect("manifest loads the batch-1 model")
+        .input_shape
+        .iter()
+        .product();
+    let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+    let coordinator = Coordinator::new(runtime, policy);
+    assert!(coordinator.overlap, "drain/execute overlap must be the default");
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(8);
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+    fault::arm("pipeline.stage#0=1+");
+    let server = std::thread::spawn(move || coordinator.run(rx));
+    for i in 0..5u64 {
+        let req = Request {
+            id: i,
+            data: det_input(per, 0xC4A05 + i),
+            submitted: std::time::Instant::now(),
+            deadline: None,
+            reply: reply_tx.clone(),
+        };
+        tx.send(req).expect("queue accepts the partial batch");
+    }
+    // hang up mid-batch: 5 < max_batch requests in flight, no flush
+    // signal other than the disconnect itself
+    drop(tx);
+    drop(reply_tx);
+    let report = server
+        .join()
+        .expect("serving thread must not panic")
+        .expect("overlap serving must survive injected stage faults");
+    fault::disarm();
+    let replies: Vec<_> = reply_rx.iter().collect();
+    assert_eq!(replies.len(), 5, "hangup mid-batch still answers every request");
+    assert!(
+        replies.iter().all(|r| r.is_ok()),
+        "the degrade ladder must serve the flushed tail"
+    );
+    assert_eq!(report.requests, 5);
+    assert!(report.faults >= 1, "injected stage faults must be recorded");
+    assert!(report.degraded >= 1, "the model must end demoted to sequential");
 }
 
 /// Injected batcher latency + tight deadlines: every request expires
