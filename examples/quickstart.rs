@@ -149,5 +149,34 @@ fn main() -> hpipe::util::error::Result<()> {
     println!(
         "ragged tail: 1 image on the batch-2 variant matches the batch-1 plan bit for bit"
     );
+
+    // 10. serving self-heals: every pipeline stage of a served model is
+    //     guarded by its own circuit breaker (HPIPE's per-layer-hardware
+    //     granularity). Two faults in one batch trip only the faulting
+    //     site — its pipe bypasses to the sequential plan, bitwise the
+    //     oracle — and after a cool-down ONE HalfOpen probe re-runs the
+    //     pipeline against the oracle, closing the site when the bits
+    //     match (failed probes double the cool-down; the probe batch is
+    //     always answered from the oracle, so recovery can never change
+    //     an answer). Knobs: `hpipe serve --recover-after-ms N
+    //     [--no-recover] [--fault-budget N]` / `Runtime::with_recovery`;
+    //     the serve report's models[] carries per-model {faults,
+    //     retries, trips, recoveries, degraded_now, time_degraded_ns}.
+    //     The state machine itself, in five lines:
+    use hpipe::util::breaker::{Breaker, BreakerConfig, BreakerState};
+    let site = Breaker::new(BreakerConfig::with_cooldown_ms(250));
+    site.record_failure(0); // a stage fault: retried, still Closed
+    site.record_failure(1); // the retry faults too: the site trips
+    assert_eq!(site.state(), BreakerState::Open);
+    assert!(!site.try_probe(100_000_000), "cool-down pending: stay on the bypass");
+    assert!(site.try_probe(251_000_000), "cool-down over: one probe granted");
+    site.record_success(); // probe matched the oracle bitwise
+    assert_eq!(site.state(), BreakerState::Closed);
+    println!(
+        "self-healing: tripped after 2 faults, probed after the 250 ms cool-down, \
+         recovered ({} trip, {} recovery)",
+        site.trips(),
+        site.recoveries()
+    );
     Ok(())
 }

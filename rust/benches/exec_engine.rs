@@ -25,10 +25,15 @@
 //! plans, on both the dense and sparse paths (ISSUE 7); the JSON records
 //! the active tier so the perf trajectory is comparable across runners.
 //!
+//! A persistent-pool section runs the same pipelined plan through
+//! long-lived pooled stage workers vs per-run scoped spawns (ISSUE 9):
+//! the serving runtime keeps one pool alive across batches, and this
+//! proves that never costs throughput.
+//!
 //! `BENCH_SMOKE=1` caps iterations/images for CI and turns the
 //! pipelined-vs-sequential, batched-vs-loop, packed-vs-PR3,
-//! tuned-vs-static and simd-vs-scalar comparisons into hard gates
-//! (nonzero exit on regression).
+//! tuned-vs-static, simd-vs-scalar and pooled-vs-scoped comparisons
+//! into hard gates (nonzero exit on regression).
 
 use hpipe::exec::{
     isa, ExecutionPlan, PipelinePlan, PlanOptions, ProfileOptions, TuneEntry, TuneOptions,
@@ -528,6 +533,59 @@ fn main() {
         isa::force(prior_tier).expect("restoring the startup tier");
     }
 
+    // ---- persistent stage workers vs per-run scoped spawns (ISSUE 9) ----
+    // Identical plan and stage count on both sides; the only difference
+    // is whether run_batch spawns-and-joins its stage workers per call
+    // or hands the batch to the long-lived pool serving continuously.
+    println!(
+        "\n=== persistent pool: pooled stage workers vs per-run scoped spawns, \
+         {CHAIN_LAYERS}x conv chain @4 stages, {pipe_images} images ==="
+    );
+    let scoped_pipe = PipelinePlan::from_plan(ExecutionPlan::build(&chain).unwrap(), 4);
+    let pooled_pipe = PipelinePlan::from_plan(ExecutionPlan::build(&chain).unwrap(), 4);
+    pooled_pipe.enable_persistent_pool();
+    let measure_scoped = || {
+        best_img_s(pipe_reps, pipe_images, || {
+            let out = scoped_pipe.run_batch(&flat, pipe_images).unwrap();
+            std::hint::black_box(out[0][0]);
+        })
+    };
+    let measure_pooled = || {
+        best_img_s(pipe_reps, pipe_images, || {
+            let out = pooled_pipe.run_batch(&flat, pipe_images).unwrap();
+            std::hint::black_box(out[0][0]);
+        })
+    };
+    let mut scoped_img_s = measure_scoped();
+    let mut pooled_img_s = measure_pooled();
+    println!(
+        "  pooled {pooled_img_s:.1} vs scoped {scoped_img_s:.1} img/s ({:.2}x)",
+        pooled_img_s / scoped_img_s
+    );
+    // Same retry policy as the other gates: one full re-measure of both
+    // sides before a verdict.
+    let mut pool_gate_retried = false;
+    if smoke && pooled_img_s < scoped_img_s {
+        println!("  pool gate missed on first attempt; re-measuring both sides");
+        pool_gate_retried = true;
+        scoped_img_s = measure_scoped();
+        pooled_img_s = measure_pooled();
+        println!("  retry: pooled {pooled_img_s:.1} vs scoped {scoped_img_s:.1} img/s");
+    }
+    let pooled_wins = pooled_img_s >= scoped_img_s;
+
+    let mut pool = Json::obj();
+    pool.set("images", Json::from(pipe_images))
+        .set("stages", Json::from(4usize))
+        .set("scoped_img_s", Json::from(scoped_img_s))
+        .set("pooled_img_s", Json::from(pooled_img_s))
+        .set(
+            "speedup_pooled_vs_scoped",
+            Json::from(pooled_img_s / scoped_img_s),
+        )
+        .set("gate_retried", Json::from(pool_gate_retried))
+        .set("pooled_beats_scoped", Json::from(pooled_wins));
+
     let mut simd = Json::obj();
     simd.set("images", Json::from(pipe_images))
         .set("widest_tier", Json::from(widest.name()))
@@ -619,7 +677,8 @@ fn main() {
         .set("packed_pipe_team_beats_pr3", Json::from(packed_pipe_wins))
         .set("tuned_beats_static_pipe4_team2", Json::from(tuned_wins))
         .set("simd_beats_scalar_dense", Json::from(simd_dense_wins))
-        .set("simd_beats_scalar_sparse", Json::from(simd_sparse_wins));
+        .set("simd_beats_scalar_sparse", Json::from(simd_sparse_wins))
+        .set("pooled_beats_scoped", Json::from(pooled_wins));
     let mut root = Json::obj();
     root.set("bench", Json::from("exec_engine/resnet50_conv_layer"))
         // the tier the non-forced sections ran under — perf numbers are
@@ -643,6 +702,7 @@ fn main() {
         .set("packed", packed)
         .set("tuned", tuned)
         .set("simd", simd)
+        .set("persistent_pool", pool)
         .set("acceptance", acceptance);
 
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_exec.json");
@@ -651,7 +711,8 @@ fn main() {
         "\nwrote {} (sparse>=5x interp @0.8: {}, sparse beats dense @0.7: {}, \
          pipelined@4 beats sequential: {}, batched@8 beats loop: {}, \
          packed beats PR3 seq: {}, packed+team beats PR3 pipe: {}, \
-         tuned beats static@4+team2: {}, simd beats scalar dense/sparse: {}/{})",
+         tuned beats static@4+team2: {}, simd beats scalar dense/sparse: {}/{}, \
+         pooled beats scoped: {})",
         out.display(),
         sparse_5x_at_80,
         sparse_beats_dense_at_70,
@@ -661,7 +722,8 @@ fn main() {
         packed_pipe_wins,
         tuned_wins,
         simd_dense_wins,
-        simd_sparse_wins
+        simd_sparse_wins,
+        pooled_wins
     );
 
     let mut failed = false;
@@ -717,6 +779,14 @@ fn main() {
              slower than forced-scalar packed kernels ({scalar_sparse:.1} img/s) on both \
              attempts",
             widest.name()
+        );
+        failed = true;
+    }
+    if smoke && !pooled_wins {
+        eprintln!(
+            "BENCH_SMOKE gate failed: persistent-pool pipelined ({pooled_img_s:.1} img/s) \
+             is slower than per-run scoped workers ({scoped_img_s:.1} img/s) on both \
+             attempts"
         );
         failed = true;
     }

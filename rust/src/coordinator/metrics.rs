@@ -63,6 +63,44 @@ impl LatencyStats {
     }
 }
 
+/// Per-model health in the serve report: the runtime's
+/// [`crate::runtime::FaultStats`] plus the fault-budget verdict.
+/// Faults are no longer only summed into a global count — "which model
+/// is sick, and did it heal?" is the question an operator asks.
+#[derive(Debug, Clone, Default)]
+pub struct ModelHealth {
+    pub name: String,
+    /// Stage faults (every failed pipelined attempt, probes included).
+    pub faults: u64,
+    /// Faulted runs retried before bypassing the pipe.
+    pub retries: u64,
+    /// Circuit-breaker trips: entries into the sequential bypass.
+    pub trips: u64,
+    /// Successful cool-down probes: sites that closed again.
+    pub recoveries: u64,
+    /// True when some site is still bypassed at report time.
+    pub degraded_now: bool,
+    /// Total time any site spent bypassed, in nanoseconds.
+    pub time_degraded_ns: u64,
+    /// True when `faults` exceeded the per-model `--fault-budget`.
+    pub over_budget: bool,
+}
+
+impl ModelHealth {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("model", Json::from(self.name.clone())),
+            ("faults", Json::from(self.faults as f64)),
+            ("retries", Json::from(self.retries as f64)),
+            ("trips", Json::from(self.trips as f64)),
+            ("recoveries", Json::from(self.recoveries as f64)),
+            ("degraded_now", Json::from(self.degraded_now)),
+            ("time_degraded_ns", Json::from(self.time_degraded_ns as f64)),
+            ("over_budget", Json::from(self.over_budget)),
+        ])
+    }
+}
+
 /// Whole-run serving report.
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
@@ -101,11 +139,18 @@ pub struct ServeReport {
     /// input length, non-finite values).
     pub rejected: usize,
     /// Stage faults observed across the run's models (isolated panics;
-    /// each failed pipelined attempt counts one).
+    /// each failed pipelined attempt counts one). Kept as a total for
+    /// report compatibility; `models` has the per-model breakdown.
     pub faults: usize,
-    /// Models that ended the run demoted to their sequential batch-1
-    /// fallback after repeated stage faults.
+    /// Models with any breaker site still open (sequential bypass) at
+    /// the end of the run — with recovery on, a model that tripped and
+    /// healed mid-run does NOT count here (see `models[].trips`).
     pub degraded: usize,
+    /// Breaker recoveries across the run's models: sites that tripped,
+    /// cooled down, probed bitwise-clean and closed again.
+    pub recoveries: u64,
+    /// Per-model fault/recovery health, in model-name order.
+    pub models: Vec<ModelHealth>,
     /// Active SIMD kernel dispatch tier (`exec::isa`), e.g. "fma" —
     /// recorded so perf numbers are comparable across runners.
     pub isa: String,
@@ -153,6 +198,11 @@ impl ServeReport {
             .set("rejected", Json::from(self.rejected))
             .set("faults", Json::from(self.faults))
             .set("degraded", Json::from(self.degraded))
+            .set("recoveries", Json::from(self.recoveries as f64))
+            .set(
+                "models",
+                Json::Arr(self.models.iter().map(ModelHealth::to_json).collect()),
+            )
             .set("isa", Json::from(self.isa.clone()));
         if let Some((ok, total)) = self.interp_agreement {
             root.set(
@@ -200,11 +250,31 @@ impl ServeReport {
                 self.tail_batches, self.padded_images
             );
         }
-        if self.shed + self.expired + self.rejected + self.faults + self.degraded > 0 {
+        if self.shed + self.expired + self.rejected + self.faults + self.degraded > 0
+            || self.recoveries > 0
+        {
             println!(
                 "robustness: {} shed, {} expired, {} rejected, {} stage faults, \
-                 {} models degraded",
-                self.shed, self.expired, self.rejected, self.faults, self.degraded
+                 {} recoveries, {} models degraded now",
+                self.shed, self.expired, self.rejected, self.faults, self.recoveries,
+                self.degraded
+            );
+        }
+        for h in &self.models {
+            if h.faults + h.trips + h.recoveries == 0 && !h.degraded_now {
+                continue;
+            }
+            println!(
+                "  model {}: {} faults, {} retries, {} trips, {} recoveries, \
+                 degraded_now={}, time degraded {:?}{}",
+                h.name,
+                h.faults,
+                h.retries,
+                h.trips,
+                h.recoveries,
+                h.degraded_now,
+                Duration::from_nanos(h.time_degraded_ns),
+                if h.over_budget { "  [OVER FAULT BUDGET]" } else { "" }
             );
         }
         if !self.isa.is_empty() {
@@ -297,6 +367,17 @@ mod tests {
         r.shed = 1;
         r.expired = 2;
         r.faults = 3;
+        r.recoveries = 2;
+        r.models = vec![ModelHealth {
+            name: "tinycnn_b8".into(),
+            faults: 3,
+            retries: 2,
+            trips: 1,
+            recoveries: 2,
+            degraded_now: false,
+            time_degraded_ns: 5_000,
+            over_budget: true,
+        }];
         r.isa = "avx2".into();
         r.pipeline_idle_ns = 1_234_567;
         r.tail_batches = 4;
@@ -312,6 +393,15 @@ mod tests {
         assert_eq!(parsed.get("rejected").as_usize(), Some(0));
         assert_eq!(parsed.get("faults").as_usize(), Some(3));
         assert_eq!(parsed.get("degraded").as_usize(), Some(0));
+        assert_eq!(parsed.get("recoveries").as_f64(), Some(2.0));
+        let models = parsed.get("models").as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("model").as_str(), Some("tinycnn_b8"));
+        assert_eq!(models[0].get("trips").as_f64(), Some(1.0));
+        assert_eq!(models[0].get("recoveries").as_f64(), Some(2.0));
+        assert_eq!(models[0].get("degraded_now").as_bool(), Some(false));
+        assert_eq!(models[0].get("time_degraded_ns").as_f64(), Some(5_000.0));
+        assert_eq!(models[0].get("over_budget").as_bool(), Some(true));
         assert_eq!(parsed.get("latency").get("p50_us").as_f64(), Some(30.0));
         let stages = parsed.get("stages").as_arr().unwrap();
         assert_eq!(stages.len(), 2);

@@ -16,11 +16,15 @@
 //! [`ClassResult`] or a typed [`RequestError`] — never silence. Expired
 //! deadlines and malformed payloads are refused before execution, a
 //! bounded queue sheds or blocks at admission ([`submit`]), stage
-//! faults are isolated inside the runtime's degrade ladder
-//! (`LoadedModel::run_all`), and a panic anywhere else in batch
-//! execution is caught here and answered as `RequestError::Failed` for
-//! that batch only. Sender hangup — even mid-batch — flushes the
-//! partial batch and ends the loop with a final [`ServeReport`].
+//! faults are isolated inside the runtime's *self-healing* ladder
+//! (`LoadedModel::run_all`: retry once, trip the faulting site's
+//! circuit breaker, bypass sequentially, probe after cool-down and
+//! close again), and a panic anywhere else in batch execution is
+//! caught here and answered as `RequestError::Failed` for that batch
+//! only. Sender hangup — even mid-batch — flushes the partial batch
+//! and ends the loop with a final [`ServeReport`], which carries
+//! per-model fault/recovery health and flags any model whose faults
+//! exceeded the configured budget.
 
 pub mod batcher;
 pub mod metrics;
@@ -29,10 +33,11 @@ use crate::exec::TuneOptions;
 use crate::graph::graphdef;
 use crate::interp;
 use crate::runtime::Runtime;
+use crate::util::breaker::BreakerConfig;
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 use batcher::{drain_batch, feed_batches, malformed, BatchPolicy, PreparedBatch, FEED_DEPTH};
-use metrics::{LatencyStats, ServeReport};
+use metrics::{LatencyStats, ModelHealth, ServeReport};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender, TrySendError};
@@ -149,6 +154,11 @@ pub struct Coordinator {
     /// Drain/execute overlap. `false` restores the sequential
     /// drain-then-run loop (the escape hatch, `serve --no-overlap`).
     pub overlap: bool,
+    /// Per-model fault budget (`--fault-budget`): a model whose
+    /// cumulative stage-fault count exceeds this gets a loud structured
+    /// `FAULT-BUDGET-EXCEEDED` warning on stderr and an `over_budget`
+    /// flag in the report. `None` = unlimited.
+    pub fault_budget: Option<u64>,
 }
 
 /// Per-run serving counters, threaded through both loop shapes.
@@ -169,6 +179,7 @@ impl Coordinator {
             policy,
             classes: 10,
             overlap: true,
+            fault_budget: None,
         }
     }
 
@@ -199,19 +210,39 @@ impl Coordinator {
             self.run_drain_then_run(rx, per_image, &mut state)?;
         }
         // fold the models' fault + ragged-tail accounting into the
-        // report: how many isolated stage faults the run absorbed,
-        // whether any model ended it demoted to its sequential
-        // fallback, and how much tail padding the plan family avoided
+        // report — per model, not only summed: which model faulted,
+        // whether its breakers tripped and healed, how long it spent
+        // bypassed, and whether it blew its fault budget
         let mut faults = 0usize;
         let mut degraded = 0usize;
+        let mut recoveries = 0u64;
         let mut tail_batches = 0u64;
         let mut padded_images = 0u64;
+        let mut models = Vec::new();
         for m in self.runtime.models() {
             let fs = m.fault_stats();
             faults += fs.faults as usize;
             if fs.degraded {
                 degraded += 1;
             }
+            recoveries += fs.recoveries;
+            let health = ModelHealth {
+                name: m.name.clone(),
+                faults: fs.faults,
+                retries: fs.retries,
+                trips: fs.trips,
+                recoveries: fs.recoveries,
+                degraded_now: fs.degraded,
+                time_degraded_ns: fs.time_degraded_ns,
+                over_budget: self.fault_budget.is_some_and(|b| fs.faults > b),
+            };
+            if health.over_budget {
+                // loud and structured: greppable in logs, parseable by
+                // whatever supervises the fleet
+                let line = health.to_json().to_string();
+                eprintln!("FAULT-BUDGET-EXCEEDED {line}");
+            }
+            models.push(health);
             let ts = m.tail_stats();
             tail_batches += ts.tail_runs;
             padded_images += ts.padded_images;
@@ -241,6 +272,8 @@ impl Coordinator {
             rejected: state.rejected,
             faults,
             degraded,
+            recoveries,
+            models,
             isa: crate::exec::isa::active().name().to_string(),
         })
     }
@@ -451,6 +484,17 @@ pub struct ServeConfig {
     /// ({B/4, B/2}); `Some(vec![])` disables tail variants (tails pad
     /// to the full batch); explicit sizes are used as given.
     pub plan_family: Option<Vec<usize>>,
+    /// Cool-down before a tripped breaker site may probe the pipelined
+    /// path again, in milliseconds (`--recover-after-ms`); `None` keeps
+    /// the default (50 ms). Repeated failed probes double it.
+    pub recover_after_ms: Option<u64>,
+    /// Disable auto-recovery (`--no-recover`): a tripped site stays on
+    /// the sequential bypass until reload — PR 6's sticky degrade.
+    pub no_recover: bool,
+    /// Per-model fault budget (`--fault-budget`): exceeds → loud
+    /// structured warning + `over_budget` in the report. `None` =
+    /// unlimited.
+    pub fault_budget: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -466,6 +510,9 @@ impl Default for ServeConfig {
             shed: false,
             overlap: true,
             plan_family: None,
+            recover_after_ms: None,
+            no_recover: false,
+            fault_budget: None,
         }
     }
 }
@@ -492,6 +539,12 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
     if let Some(sizes) = &cfg.plan_family {
         runtime = runtime.with_plan_family(sizes);
     }
+    let mut breaker_cfg = match cfg.recover_after_ms {
+        Some(ms) => BreakerConfig::with_cooldown_ms(ms),
+        None => BreakerConfig::default(),
+    };
+    breaker_cfg.recover = !cfg.no_recover;
+    runtime = runtime.with_recovery(breaker_cfg);
     let loaded = runtime.load_manifest()?;
     println!(
         "runtime: platform={} threads={} team={} autotune={} overlap={} loaded {:?}",
@@ -536,6 +589,7 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
     };
     let mut coordinator = Coordinator::new(runtime, policy);
     coordinator.overlap = cfg.overlap;
+    coordinator.fault_budget = cfg.fault_budget;
 
     // client thread, submitting through a bounded admission queue
     let cap = if cfg.queue_cap > 0 { cfg.queue_cap } else { n_requests.max(1) };

@@ -29,12 +29,24 @@
 //! [`PIPE_DEPTH`] boundary messages recycled through a return channel, so
 //! a fast producer stage blocks once both buffers are outstanding.
 //!
-//! Workers are scoped to each `run_*` call: a batch pays one thread
-//! spawn and one stage-context allocation per stage, amortized across
-//! its images. That keeps the pipeline free of `'static` plumbing and
-//! shutdown protocol; persistent stage workers that survive across
-//! batches (so the pipeline never drains between them) are the
-//! coordinator-level follow-on recorded in ROADMAP.md.
+//! # Worker lifetimes: scoped vs persistent
+//!
+//! By default workers are scoped to each `run_*` call: a batch pays one
+//! thread spawn and one stage-context allocation per stage, amortized
+//! across its images, and the pipeline needs no `'static` plumbing or
+//! shutdown protocol. [`PipelinePlan::enable_persistent_pool`] switches
+//! `run_batch` to **persistent stage workers**: one thread per stage
+//! spawned once, parked on a per-stage job channel between calls, with
+//! the stage context (warm buffers) and the inter-stage boundary
+//! channels surviving across batches — the per-run spawn cost
+//! disappears, which is what lets breaker/recovery probes stay cheap.
+//! Fault isolation changes shape but not contract: a scoped worker
+//! aborts a run by dropping its channels, a persistent worker instead
+//! records the fault and keeps forwarding *abort-flagged* boundary
+//! messages so every stage still processes exactly `n` items per job
+//! and the channels stay aligned for the next call (and a faulted
+//! worker rebuilds its context, so a retry sees pristine buffers).
+//! `run_stream` always uses scoped workers.
 //!
 //! # Intra-stage worker teams
 //!
@@ -64,18 +76,23 @@ use crate::util::partition::{partition_min_bottleneck, range_costs};
 use crate::util::timer::{epoch_ns, ScopedNs};
 use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 /// Boundary messages in flight per cut: double buffering, exactly like
 /// the two-deep stage-boundary line buffers the simulator models.
 pub const PIPE_DEPTH: usize = 2;
 
 /// One boundary handoff: the arena slots crossing a cut, copied out of
-/// the producer stage's context for one image.
+/// the producer stage's context for one image. `abort` is the
+/// persistent-pool fault protocol: a faulted stage keeps the item
+/// stream aligned by forwarding messages flagged abort (carrying no
+/// data) instead of dropping its channels.
 struct Msg {
     img: usize,
+    abort: bool,
     bufs: Vec<Vec<f32>>,
 }
 
@@ -250,6 +267,26 @@ fn slot_uses(plan: &ExecutionPlan) -> Vec<SlotUse> {
 /// A statically partitioned, multi-threaded pipeline over an
 /// [`ExecutionPlan`] (see the module docs for the execution model).
 pub struct PipelinePlan {
+    /// Everything immutable after construction, shared with persistent
+    /// pool workers (scoped workers borrow it; pool workers hold the
+    /// `Arc` so they can outlive a single `run_*` call).
+    shared: Arc<PipeShared>,
+    /// Inter-run idle accounting: time between one `run_*` call's last
+    /// stage-exit and the next call's first stage-entry. Shareable
+    /// across a model's plan family ([`Self::share_idle_tracker`]) so a
+    /// tail routed through a smaller variant keeps the fabric "fed".
+    idle: Arc<IdleTracker>,
+    /// Persistent stage workers ([`Self::enable_persistent_pool`]);
+    /// `None` = scoped workers per call. The mutex also serializes
+    /// pooled `run_batch` calls (one job in flight at a time).
+    pool: Mutex<Option<Pool>>,
+}
+
+/// The immutable cut of a [`PipelinePlan`]: the plan, its partition,
+/// and the per-stage activity counters (atomics, so "immutable" here
+/// means structurally). Shared by reference with scoped workers and by
+/// `Arc` with persistent pool workers.
+struct PipeShared {
     plan: ExecutionPlan,
     /// Half-open step ranges, one per stage, in plan order.
     ranges: Vec<(usize, usize)>,
@@ -269,13 +306,46 @@ pub struct PipelinePlan {
     /// (the splittable steps of the bottleneck stage; empty if team==1).
     team_steps: Vec<usize>,
     /// Per-stage busy / stall / items counters, accumulated across every
-    /// `run_*` call (see [`Self::stage_metrics`]).
+    /// `run_*` call (see [`PipelinePlan::stage_metrics`]).
     counters: Vec<StageCounters>,
-    /// Inter-run idle accounting: time between one `run_*` call's last
-    /// stage-exit and the next call's first stage-entry. Shareable
-    /// across a model's plan family ([`Self::share_idle_tracker`]) so a
-    /// tail routed through a smaller variant keeps the fabric "fed".
-    idle: Arc<IdleTracker>,
+}
+
+/// One pooled `run_batch` call, broadcast to every persistent stage
+/// worker. The input is `Arc`-shared (workers are `'static`, so they
+/// cannot borrow the caller's slice); the fault slot and abort flag are
+/// per-job so one call's fault never bleeds into the next.
+#[derive(Clone)]
+struct Job {
+    groups: usize,
+    per_group: usize,
+    input: Arc<Vec<f32>>,
+    fault: Arc<Mutex<Option<StageFault>>>,
+    abort: Arc<AtomicBool>,
+}
+
+/// Persistent stage workers: one thread per stage except the last
+/// (which stays on the calling thread, warm context included), parked
+/// on `job_txs` between calls. Dropping the pool closes the job
+/// channels, which is the worker shutdown signal.
+struct Pool {
+    job_txs: Vec<SyncSender<Job>>,
+    /// The caller-side endpoints of the final cut.
+    last_data_rx: Receiver<Msg>,
+    last_recycle_tx: SyncSender<Msg>,
+    /// The final stage's warm context (caller thread).
+    last_ctx: ExecContext,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // closing the job channels is the shutdown signal: workers park
+        // in `job_rx.recv()` between jobs and exit on disconnect
+        self.job_txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 /// Gap accounting between pipeline runs. The per-stage busy/stall
@@ -522,48 +592,51 @@ impl PipelinePlan {
 
         let counters = (0..k).map(|_| StageCounters::default()).collect();
         PipelinePlan {
-            plan,
-            ranges,
-            stage_costs,
-            xfer,
-            stage_slots,
-            stage_scratch,
-            team,
-            team_steps,
-            counters,
+            shared: Arc::new(PipeShared {
+                plan,
+                ranges,
+                stage_costs,
+                xfer,
+                stage_slots,
+                stage_scratch,
+                team,
+                team_steps,
+                counters,
+            }),
             idle: Arc::new(IdleTracker::default()),
+            pool: Mutex::new(None),
         }
     }
 
     /// The underlying sequential plan (single-image latency path).
     pub fn plan(&self) -> &ExecutionPlan {
-        &self.plan
+        &self.shared.plan
     }
 
     pub fn num_stages(&self) -> usize {
-        self.ranges.len()
+        self.shared.ranges.len()
     }
 
     /// Intra-stage worker-team size (1 = no splitting).
     pub fn team(&self) -> usize {
-        self.team
+        self.shared.team
     }
 
     /// Plan-global indices of the steps the worker team splits.
     pub fn team_steps(&self) -> &[usize] {
-        &self.team_steps
+        &self.shared.team_steps
     }
 
     /// Half-open step ranges, one per stage.
     pub fn stage_ranges(&self) -> &[(usize, usize)] {
-        &self.ranges
+        &self.shared.ranges
     }
 
     /// Per-stage costs in the units the plan was cut with (the balanced
     /// partition sums): modeled cycles for [`Self::from_plan_team`],
     /// measured nanoseconds for [`Self::from_profile`].
     pub fn stage_costs(&self) -> &[u64] {
-        &self.stage_costs
+        &self.shared.stage_costs
     }
 
     /// Cumulative per-stage busy / stall / items counters across every
@@ -573,7 +646,8 @@ impl PipelinePlan {
     /// — the signal the serve metrics surface and the tuner's cuts are
     /// judged by.
     pub fn stage_metrics(&self) -> Vec<StageMetrics> {
-        self.counters
+        self.shared
+            .counters
             .iter()
             .map(|c| StageMetrics {
                 busy_ns: c.busy.load(Ordering::Relaxed),
@@ -587,7 +661,7 @@ impl PipelinePlan {
     /// Also clears the inter-run idle tracker, so a serve window's
     /// [`Self::pipeline_idle_ns`] covers only the gaps inside it.
     pub fn reset_stage_metrics(&self) {
-        for c in &self.counters {
+        for c in &self.shared.counters {
             c.busy.store(0, Ordering::Relaxed);
             c.stall.store(0, Ordering::Relaxed);
             c.items.store(0, Ordering::Relaxed);
@@ -618,7 +692,62 @@ impl PipelinePlan {
 
     /// Arena slots copied across the cut between stage `j` and `j + 1`.
     pub fn boundary_slots(&self, j: usize) -> &[usize] {
-        &self.xfer[j]
+        &self.shared.xfer[j]
+    }
+
+    /// Spawn the persistent stage-worker pool: one named thread per
+    /// stage except the last, parked on a job channel between
+    /// [`Self::run_batch`] calls, with warm stage contexts and the
+    /// boundary channels surviving across batches. Idempotent; a no-op
+    /// for single-stage pipelines (there is nothing to keep warm — the
+    /// caller thread already does all the work). Scoped and pooled
+    /// execution are bit-identical; the pool exists so per-run spawn
+    /// cost disappears and recovery probes are cheap.
+    pub fn enable_persistent_pool(&self) {
+        let k = self.shared.ranges.len();
+        let mut guard = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        if k < 2 || guard.is_some() {
+            return;
+        }
+        let mut job_txs = Vec::with_capacity(k - 1);
+        let mut workers = Vec::with_capacity(k - 1);
+        let mut incoming: Option<(Receiver<Msg>, SyncSender<Msg>)> = None;
+        for j in 0..k - 1 {
+            let (data_tx, data_rx) = sync_channel::<Msg>(PIPE_DEPTH);
+            let (recycle_tx, recycle_rx) = sync_channel::<Msg>(PIPE_DEPTH);
+            for _ in 0..PIPE_DEPTH {
+                recycle_tx.send(self.shared.new_msg(j)).expect("seeding recycle channel");
+            }
+            let (job_tx, job_rx) = sync_channel::<Job>(1);
+            let inc = incoming.take();
+            let shared = Arc::clone(&self.shared);
+            let worker = std::thread::Builder::new()
+                .name(format!("hpipe-stage-{j}"))
+                .spawn(move || pool_worker(shared, j, job_rx, inc, data_tx, recycle_rx))
+                .expect("spawning persistent stage worker");
+            job_txs.push(job_tx);
+            workers.push(worker);
+            incoming = Some((data_rx, recycle_tx));
+        }
+        let (last_data_rx, last_recycle_tx) = incoming.expect("k >= 2 leaves a final cut");
+        *guard = Some(Pool {
+            job_txs,
+            last_data_rx,
+            last_recycle_tx,
+            last_ctx: self.shared.stage_context(k - 1),
+            workers,
+        });
+    }
+
+    /// Tear the persistent pool down (joins the workers); `run_batch`
+    /// reverts to scoped workers. Idempotent.
+    pub fn disable_persistent_pool(&self) {
+        *self.pool.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    /// True when a persistent stage-worker pool is live.
+    pub fn persistent_pool_active(&self) -> bool {
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).is_some()
     }
 
     /// Run a stream of plan executions through the pipeline (for a
@@ -634,8 +763,9 @@ impl PipelinePlan {
         &self,
         images: &[BTreeMap<String, Tensor>],
     ) -> Result<Vec<Vec<Tensor>>, GraphError> {
+        let plan = &self.shared.plan;
         for feeds in images {
-            for (name, _, shape) in &self.plan.feeds {
+            for (name, _, shape) in &plan.feeds {
                 let t = feeds.get(name).ok_or_else(|| {
                     GraphError::Invalid(name.clone(), "missing feed".into())
                 })?;
@@ -649,15 +779,15 @@ impl PipelinePlan {
         }
         let mut results: Vec<Vec<Tensor>> = Vec::with_capacity(images.len());
         let feed = |img: usize, ctx: &mut ExecContext| {
-            for (i, (name, _, _)) in self.plan.feeds.iter().enumerate() {
+            for (i, (name, _, _)) in plan.feeds.iter().enumerate() {
                 let t = &images[img][name];
-                self.plan.write_feed(ctx, i, &t.data).expect("feed validated");
+                plan.write_feed(ctx, i, &t.data).expect("feed validated");
             }
         };
         let mut collect = |_img: usize, ctx: &ExecContext| {
-            let outs = (0..self.plan.num_outputs())
+            let outs = (0..plan.num_outputs())
                 .map(|i| {
-                    let (data, shape) = self.plan.output(ctx, i);
+                    let (data, shape) = plan.output(ctx, i);
                     Tensor::from_vec(shape, data.to_vec())
                 })
                 .collect();
@@ -678,13 +808,14 @@ impl PipelinePlan {
     /// fails the whole call with [`GraphError::StageFault`], leaving the
     /// plan reusable (the caller decides whether to retry or degrade).
     pub fn run_batch(&self, input: &[f32], n_images: usize) -> Result<Vec<Vec<f32>>, GraphError> {
-        if self.plan.num_feeds() != 1 {
+        let plan = &self.shared.plan;
+        if plan.num_feeds() != 1 {
             return Err(GraphError::Invalid(
                 "<pipeline>".into(),
-                format!("run_batch needs exactly 1 feed, plan has {}", self.plan.num_feeds()),
+                format!("run_batch needs exactly 1 feed, plan has {}", plan.num_feeds()),
             ));
         }
-        let b = self.plan.batch();
+        let b = plan.batch();
         if n_images == 0 || n_images % b != 0 {
             return Err(GraphError::Invalid(
                 "<pipeline>".into(),
@@ -692,30 +823,116 @@ impl PipelinePlan {
             ));
         }
         let groups = n_images / b;
-        let per_group: usize = self.plan.feeds[0].2.iter().product();
+        let per_group: usize = plan.feeds[0].2.iter().product();
         if input.len() != per_group * groups {
             return Err(GraphError::Shape(
-                self.plan.feeds[0].0.clone(),
+                plan.feeds[0].0.clone(),
                 format!("input length {} != {groups} batches of {per_group}", input.len()),
             ));
         }
-        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); self.plan.num_outputs()];
-        let feed = |grp: usize, ctx: &mut ExecContext| {
-            self.plan
-                .write_feed(ctx, 0, &input[grp * per_group..(grp + 1) * per_group])
-                .expect("feed validated");
-        };
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); plan.num_outputs()];
         let mut collect = |_grp: usize, ctx: &ExecContext| {
             for (i, out) in outs.iter_mut().enumerate() {
-                let (data, _) = self.plan.output(ctx, i);
+                let (data, _) = plan.output(ctx, i);
                 if out.capacity() == 0 {
                     out.reserve_exact(data.len() * groups);
                 }
                 out.extend_from_slice(data);
             }
         };
-        self.run_inner(groups, &feed, &mut collect)?;
+        let mut guard = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pool) = guard.as_mut() {
+            self.run_pooled(pool, input, groups, per_group, &mut collect)?;
+        } else {
+            drop(guard);
+            let feed = |grp: usize, ctx: &mut ExecContext| {
+                plan.write_feed(ctx, 0, &input[grp * per_group..(grp + 1) * per_group])
+                    .expect("feed validated");
+            };
+            self.run_inner(groups, &feed, &mut collect)?;
+        }
         Ok(outs)
+    }
+
+    /// `run_batch` through the persistent pool: broadcast one [`Job`]
+    /// to every parked worker, then play the final stage on the calling
+    /// thread against the pool's warm context. The fault protocol keeps
+    /// all channels aligned (see the module docs), so after an `Err`
+    /// the pool is immediately reusable — a faulted stage rebuilds its
+    /// context before parking, which is what makes a bitwise retry or
+    /// recovery probe sound.
+    fn run_pooled(
+        &self,
+        pool: &mut Pool,
+        input: &[f32],
+        groups: usize,
+        per_group: usize,
+        collect: &mut dyn FnMut(usize, &ExecContext),
+    ) -> Result<(), StageFault> {
+        let sh = &self.shared;
+        let entry = epoch_ns();
+        let last_exit = self.idle.last_exit_ns.load(Ordering::Relaxed);
+        if last_exit != 0 && entry > last_exit {
+            self.idle.idle_ns.fetch_add(entry - last_exit, Ordering::Relaxed);
+        }
+        let fault: Arc<Mutex<Option<StageFault>>> = Arc::new(Mutex::new(None));
+        let job = Job {
+            groups,
+            per_group,
+            input: Arc::new(input.to_vec()),
+            fault: Arc::clone(&fault),
+            abort: Arc::new(AtomicBool::new(false)),
+        };
+        for tx in &pool.job_txs {
+            tx.send(job.clone()).expect("persistent stage worker is parked on its job channel");
+        }
+        let j = sh.ranges.len() - 1;
+        let ctr = &sh.counters[j];
+        let mut aborted = false;
+        for grp in 0..groups {
+            let msg = {
+                let _t = ScopedNs::new(&ctr.stall);
+                pool.last_data_rx.recv().expect("persistent stage worker alive")
+            };
+            debug_assert_eq!(msg.img, grp, "pooled final stage images out of order");
+            if msg.abort {
+                aborted = true;
+            } else if !aborted {
+                sh.copy_in(j, &msg, &mut pool.last_ctx);
+            }
+            let _ = pool.last_recycle_tx.send(msg);
+            if aborted {
+                continue;
+            }
+            let ran = {
+                let _t = ScopedNs::new(&ctr.busy);
+                catch_unwind(AssertUnwindSafe(|| {
+                    crate::util::fault::point("pipeline.stage", j);
+                    sh.run_range(j, &mut pool.last_ctx);
+                }))
+            };
+            match ran {
+                Ok(()) => {
+                    collect(grp, &pool.last_ctx);
+                    ctr.items.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(payload) => {
+                    record_fault(&fault, j, grp, payload);
+                    job.abort.store(true, Ordering::Release);
+                    aborted = true;
+                }
+            }
+        }
+        self.idle.last_exit_ns.store(epoch_ns(), Ordering::Relaxed);
+        let faulted = fault.lock().unwrap_or_else(|e| e.into_inner()).take();
+        match faulted {
+            Some(f) => {
+                // pristine buffers for the retry / probe that follows
+                pool.last_ctx = sh.stage_context(j);
+                Err(f)
+            }
+            None => Ok(()),
+        }
     }
 
     /// Core streaming loop. Spawns one worker per stage except the last,
@@ -742,7 +959,8 @@ impl PipelinePlan {
     where
         F: Fn(usize, &mut ExecContext) + Sync,
     {
-        let k = self.ranges.len();
+        let sh = &*self.shared;
+        let k = sh.ranges.len();
         // Inter-run idle: the gap since the previous run's exit (on this
         // plan or any plan sharing the tracker) is the time the fabric
         // sat unfed. First entry after construction/reset charges none.
@@ -760,12 +978,12 @@ impl PipelinePlan {
                 let (recycle_tx, recycle_rx) = sync_channel::<Msg>(PIPE_DEPTH);
                 for _ in 0..PIPE_DEPTH {
                     // cannot fail: recycle_rx is alive in this scope
-                    recycle_tx.send(self.new_msg(j)).expect("seeding recycle channel");
+                    recycle_tx.send(sh.new_msg(j)).expect("seeding recycle channel");
                 }
                 let inc = incoming.take();
                 scope.spawn(move || {
-                    let ctr = &self.counters[j];
-                    let mut ctx = self.stage_context(j);
+                    let ctr = &sh.counters[j];
+                    let mut ctx = sh.stage_context(j);
                     for img in 0..n_images {
                         if let Some((rx, back)) = &inc {
                             let msg = {
@@ -778,7 +996,7 @@ impl PipelinePlan {
                                 }
                             };
                             debug_assert_eq!(msg.img, img, "stage {j} images out of order");
-                            self.copy_in(j, &msg, &mut ctx);
+                            sh.copy_in(j, &msg, &mut ctx);
                             let _ = back.send(msg);
                         }
                         let ran = {
@@ -788,7 +1006,7 @@ impl PipelinePlan {
                                     feed(img, &mut ctx);
                                 }
                                 crate::util::fault::point("pipeline.stage", j);
-                                self.run_range(j, &mut ctx);
+                                sh.run_range(j, &mut ctx);
                             }))
                         };
                         if let Err(payload) = ran {
@@ -803,7 +1021,7 @@ impl PipelinePlan {
                             }
                         };
                         msg.img = img;
-                        self.copy_out(j, &ctx, &mut msg);
+                        sh.copy_out(j, &ctx, &mut msg);
                         if data_tx.send(msg).is_err() {
                             return; // downstream aborted
                         }
@@ -814,8 +1032,8 @@ impl PipelinePlan {
             }
             let j = k - 1;
             let inc = incoming.take();
-            let ctr = &self.counters[j];
-            let mut ctx = self.stage_context(j);
+            let ctr = &sh.counters[j];
+            let mut ctx = sh.stage_context(j);
             for img in 0..n_images {
                 if let Some((rx, back)) = &inc {
                     let msg = {
@@ -826,7 +1044,7 @@ impl PipelinePlan {
                         }
                     };
                     debug_assert_eq!(msg.img, img, "final stage images out of order");
-                    self.copy_in(j, &msg, &mut ctx);
+                    sh.copy_in(j, &msg, &mut ctx);
                     let _ = back.send(msg);
                 }
                 let ran = {
@@ -836,7 +1054,7 @@ impl PipelinePlan {
                             feed(img, &mut ctx);
                         }
                         crate::util::fault::point("pipeline.stage", j);
-                        self.run_range(j, &mut ctx);
+                        sh.run_range(j, &mut ctx);
                     }))
                 };
                 if let Err(payload) = ran {
@@ -856,12 +1074,105 @@ impl PipelinePlan {
             None => Ok(()),
         }
     }
+}
 
+/// Body of one persistent stage worker (stages `0..k-1`; the last stage
+/// runs on the calling thread). Parked on `job_rx` between jobs; exits
+/// when the pool drops the job channel. Within a job it is the scoped
+/// worker loop with one difference — faults do not tear channels down.
+/// The faulted (or abort-notified) worker forwards abort-flagged
+/// messages for the job's remaining items, so every stage handles
+/// exactly `job.groups` items and the recycle rings stay aligned for
+/// the next job; a faulted worker also rebuilds its warm context so a
+/// retry runs on pristine buffers.
+fn pool_worker(
+    shared: Arc<PipeShared>,
+    j: usize,
+    job_rx: Receiver<Job>,
+    inc: Option<(Receiver<Msg>, SyncSender<Msg>)>,
+    data_tx: SyncSender<Msg>,
+    recycle_rx: Receiver<Msg>,
+) {
+    let ctr = &shared.counters[j];
+    let mut ctx = shared.stage_context(j);
+    while let Ok(job) = job_rx.recv() {
+        let mut aborted = false;
+        for grp in 0..job.groups {
+            if let Some((rx, back)) = &inc {
+                let msg = {
+                    let _t = ScopedNs::new(&ctr.stall);
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => return, // pool torn down mid-job
+                    }
+                };
+                debug_assert_eq!(msg.img, grp, "pooled stage {j} images out of order");
+                if msg.abort {
+                    aborted = true;
+                } else if !aborted {
+                    shared.copy_in(j, &msg, &mut ctx);
+                }
+                let _ = back.send(msg);
+            }
+            if !aborted && job.abort.load(Ordering::Acquire) {
+                // another stage faulted: the job is already lost — skip
+                // the compute, keep forwarding aligned abort messages
+                aborted = true;
+            }
+            if !aborted {
+                let ran = {
+                    let _t = ScopedNs::new(&ctr.busy);
+                    catch_unwind(AssertUnwindSafe(|| {
+                        if j == 0 {
+                            let (a, b) = (grp * job.per_group, (grp + 1) * job.per_group);
+                            shared
+                                .plan
+                                .write_feed(&mut ctx, 0, &job.input[a..b])
+                                .expect("feed validated");
+                        }
+                        crate::util::fault::point("pipeline.stage", j);
+                        shared.run_range(j, &mut ctx);
+                    }))
+                };
+                if let Err(payload) = ran {
+                    record_fault(&job.fault, j, grp, payload);
+                    job.abort.store(true, Ordering::Release);
+                    aborted = true;
+                }
+            }
+            let mut msg = {
+                let _t = ScopedNs::new(&ctr.stall);
+                match recycle_rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return, // pool torn down mid-job
+                }
+            };
+            msg.img = grp;
+            msg.abort = aborted;
+            if !aborted {
+                shared.copy_out(j, &ctx, &mut msg);
+            }
+            if data_tx.send(msg).is_err() {
+                return; // pool torn down mid-job
+            }
+            if !aborted {
+                ctr.items.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if aborted {
+            // pristine buffers for the retry / probe that follows
+            ctx = shared.stage_context(j);
+        }
+    }
+}
+
+impl PipeShared {
     /// A fresh boundary message for cut `j`, buffers pre-sized to the
     /// crossing slots.
     fn new_msg(&self, j: usize) -> Msg {
         Msg {
             img: 0,
+            abort: false,
             bufs: self.xfer[j]
                 .iter()
                 .map(|&s| vec![0.0f32; self.plan.slot_lens[s]])
@@ -1155,6 +1466,45 @@ mod tests {
     }
 
     #[test]
+    fn persistent_pool_matches_scoped_workers_bitwise() {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.6);
+        let scoped = PipelinePlan::from_plan_team(ExecutionPlan::build(&g).unwrap(), 3, 2);
+        let pooled = PipelinePlan::from_plan_team(ExecutionPlan::build(&g).unwrap(), 3, 2);
+        pooled.enable_persistent_pool();
+        assert!(pooled.persistent_pool_active());
+        assert!(!scoped.persistent_pool_active());
+        let per: usize = pooled.plan().feeds[0].2.iter().product();
+        let mut rng = Rng::new(0x9001);
+        let input: Vec<f32> = (0..4 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want = scoped.run_batch(&input, 4).unwrap();
+        // repeated pooled runs: same threads, warm contexts, identical bits
+        for run in 0..3 {
+            let got = pooled.run_batch(&input, 4).unwrap();
+            assert_eq!(got, want, "pooled run {run} diverged from scoped workers");
+        }
+        pooled.disable_persistent_pool();
+        assert!(!pooled.persistent_pool_active());
+        // after teardown the scoped path serves the same bits
+        assert_eq!(pooled.run_batch(&input, 4).unwrap(), want);
+    }
+
+    #[test]
+    fn persistent_pool_is_idempotent_and_skips_single_stage() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let one = PipelinePlan::build(&g, &PlanOptions::default(), 1).unwrap();
+        one.enable_persistent_pool();
+        assert!(
+            !one.persistent_pool_active(),
+            "a single-stage pipeline has no workers to keep warm"
+        );
+        let multi = PipelinePlan::build(&g, &PlanOptions::default(), 2).unwrap();
+        multi.enable_persistent_pool();
+        multi.enable_persistent_pool(); // second call: no second pool
+        assert!(multi.persistent_pool_active());
+    }
+
+    #[test]
     fn stage_fault_converts_to_graph_error() {
         let f = StageFault { stage: 1, item: 3, msg: "boom".into() };
         let e: GraphError = f.into();
@@ -1171,7 +1521,7 @@ mod tests {
         let pipe = PipelinePlan::build(&g, &PlanOptions::default(), 3).unwrap();
         let total: usize = pipe.plan().slot_lens.iter().sum();
         for j in 0..pipe.num_stages() {
-            let ctx = pipe.stage_context(j);
+            let ctx = pipe.shared.stage_context(j);
             let held: usize = ctx.slots.iter().map(|s| s.len()).sum();
             assert!(held <= total);
             // every boundary slot the stage participates in is allocated

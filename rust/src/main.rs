@@ -7,6 +7,7 @@
 //!   serve     --model DIR [--requests N] [--batch N] [--threads N]
 //!             [--team N] [--autotune] [--deadline-ms N] [--queue-cap N]
 //!             [--shed] [--no-overlap] [--plan-family none|CSV]
+//!             [--recover-after-ms N] [--no-recover] [--fault-budget N]
 //!             [--json FILE]                          exec serving demo
 //!                            (--batch N serves through *natively
 //!                            batched* plans — one weight-stream walk
@@ -44,13 +45,25 @@
 //!                            family is {B/4, B/2}; `--plan-family
 //!                            2,4` picks explicit sizes and
 //!                            `--plan-family none` disables variants
-//!                            (tails pad to the batch again). --json
+//!                            (tails pad to the batch again).
+//!                            --recover-after-ms N sets the circuit
+//!                            breakers' cool-down before a tripped
+//!                            site probes the pipelined path again
+//!                            (default 50 ms; failed probes double
+//!                            it); --no-recover makes a trip sticky
+//!                            until reload. --fault-budget N flags any
+//!                            model whose cumulative stage faults
+//!                            exceed N with a structured
+//!                            FAULT-BUDGET-EXCEEDED warning. --json
 //!                            dumps the machine-readable ServeReport,
 //!                            including shed / expired / rejected /
-//!                            faults / degraded counters, the
-//!                            inter-batch `pipeline_idle_ns`, and the
-//!                            tail_batches / padded_images tail
-//!                            accounting.)
+//!                            faults / degraded / recoveries counters,
+//!                            a per-model `models[]` health array
+//!                            ({faults, retries, trips, recoveries,
+//!                            degraded_now, time_degraded_ns,
+//!                            over_budget}), the inter-batch
+//!                            `pipeline_idle_ns`, and the tail_batches
+//!                            / padded_images tail accounting.)
 //!
 //! ## Sustained vs bench-loop throughput
 //!
@@ -85,7 +98,7 @@
 //!
 //! Every accepted request is answered exactly once — a classification
 //! or a typed `RequestError` — and a fault never takes the server with
-//! it. The degrade ladder, rung by rung:
+//! it. The self-healing ladder, rung by rung:
 //!
 //! 1. **Isolate**: a panic in a pipeline stage worker is caught inside
 //!    the stage (`exec::PipelinePlan`), reported as a typed
@@ -93,16 +106,30 @@
 //!    stays reusable — channels are never poisoned.
 //! 2. **Retry**: the runtime retries the faulted batch once on the same
 //!    pipelined plan (a transient fault costs one retry, not the run).
-//! 3. **Fall back**: if the retry also faults, the model demotes itself
-//!    to its sequential batch-1 plan — bitwise-identical outputs to the
-//!    sequential oracle — and stays there (sticky, flagged in
-//!    `ServeReport.degraded` and per-model `fault_stats()`).
+//! 3. **Trip**: if the retry also faults, the *faulting site's* circuit
+//!    breaker opens (`util::breaker`, one per pipeline stage — HPIPE's
+//!    per-layer-hardware granularity). Only that pipe is bypassed:
+//!    batches run the sequential batch-1 plan, bitwise-identical to the
+//!    oracle, while the tail variants keep their own breakers and their
+//!    pipelined paths (and vice versa).
+//! 4. **Probe & recover**: after the cool-down (`--recover-after-ms`,
+//!    default 50 ms) the next batch runs *both* paths: the sequential
+//!    oracle answers the clients, and one HalfOpen probe runs the
+//!    pipelined plan against it. Bitwise match closes the breaker (the
+//!    model un-degrades, counted in `recoveries`); a faulting or
+//!    mismatching probe re-opens it with the cool-down doubled (capped
+//!    exponential back-off). The probe can never change an answer —
+//!    clients get oracle bits either way. `--no-recover` disables
+//!    probing entirely: a trip is sticky until reload (PR 6 behavior).
 //!
-//! Bad inputs (wrong length, non-finite values) and expired deadlines
-//! are refused with typed errors before execution; a panic anywhere
-//! else in batch execution fails only that batch. Sender hangup — even
-//! mid-batch — flushes the partial batch and still emits the final
-//! report.
+//! Per-model accounting — `{faults, retries, trips, recoveries,
+//! degraded_now, time_degraded_ns}` — lands in `ServeReport.models[]`;
+//! `--fault-budget N` adds a loud `FAULT-BUDGET-EXCEEDED` stderr line
+//! for any model over budget. Bad inputs (wrong length, non-finite
+//! values) and expired deadlines are refused with typed errors before
+//! execution; a panic anywhere else in batch execution fails only that
+//! batch. Sender hangup — even mid-batch — flushes the partial batch
+//! and still emits the final report.
 //!   tune      --net <name> [--sparsity F] [--batch N] [--cores N]
 //!             [--runs K] [--out FILE]    profile-guided calibration:
 //!                            print (and optionally dump as JSON) the
@@ -303,6 +330,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shed: args.bool("shed"),
         overlap: !args.bool("no-overlap"),
         plan_family,
+        recover_after_ms: args.opt("recover-after-ms").and_then(|s| s.parse().ok()),
+        no_recover: args.bool("no-recover"),
+        fault_budget: args.opt("fault-budget").and_then(|s| s.parse().ok()),
     };
     let mut report = hpipe::coordinator::serve_demo(&dir, &cfg)?;
     report.print();

@@ -35,11 +35,13 @@
 use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan, TuneEntry, TuneOptions, TuneReport};
 use crate::graph::{graphdef, Graph, GraphError, Op, Tensor};
 use crate::sparsity::prune_tensor;
+use crate::util::breaker::{Breaker, BreakerConfig};
 use crate::util::error::{Context, Result};
 use crate::util::{Json, Rng};
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A compiled executable plus its I/O metadata.
 pub struct LoadedModel {
@@ -73,24 +75,40 @@ pub struct LoadedModel {
     /// [`Self::autotuned`]; `None` on the static (model-driven) path.
     tune: Option<TuneReport>,
     /// Stage faults observed across this model's pipelined runs (each
-    /// failed `run_batch` attempt counts one).
-    faults: Cell<u64>,
-    /// Faulted runs that were retried (rung one of the degrade ladder).
-    retries: Cell<u64>,
-    /// Sticky degradation flag: once a retry also faults, every later
-    /// batch runs through the sequential batch-1 plan (rung two).
-    degraded: Cell<bool>,
+    /// failed `run_batch` attempt counts one). Atomic — the
+    /// coordinator's feeder thread reads fault state through `&self`.
+    faults: AtomicU64,
+    /// Faulted runs that were retried (rung one of the recovery ladder).
+    retries: AtomicU64,
+    /// Per-stage circuit breakers guarding the primary pipeline — one
+    /// per stage, the same site granularity `util::fault` injects at.
+    /// A tripped site bypasses *this pipe* (sequential fallback) until
+    /// its cool-down probe closes it again ([`Self::run_probe`]); the
+    /// tail variants keep their own banks and their pipelined paths.
+    breakers: Vec<Breaker>,
+    /// Breaker tunables (cool-down, back-off cap, `--no-recover`),
+    /// shared by the primary bank and every tail variant's.
+    breaker_cfg: BreakerConfig,
+    /// epoch-ns when the model last *entered* degraded (any breaker not
+    /// closed); 0 while fully healthy. Drives
+    /// [`FaultStats::time_degraded_ns`].
+    degraded_since_ns: AtomicU64,
+    /// Nanoseconds spent degraded across already-closed intervals.
+    time_degraded_ns: AtomicU64,
     /// Ragged-tail plan family: 1-stage pipelines over smaller batched
     /// plans, ascending by batch. A drained tail of k < `batch` images
     /// routes to the smallest variant that fits instead of zero-padding
     /// to the full batch ([`Self::run_tail`]). Empty = pad to `batch`.
     variants: Vec<PipelinePlan>,
+    /// Breaker bank per tail variant (parallel to `variants`): a
+    /// tripped primary never condemns the tails, and vice versa.
+    variant_breakers: Vec<Vec<Breaker>>,
     /// Tail executions that took a batched tail path (family variant or
     /// pad-to-batch fallback; the k=1 latency path doesn't count).
-    tail_runs: Cell<u64>,
+    tail_runs: AtomicU64,
     /// Zero images padded onto those tail executions — the wasted
     /// compute the plan family exists to shrink.
-    padded_images: Cell<u64>,
+    padded_images: AtomicU64,
 }
 
 /// Ragged-tail accounting for one model (see [`LoadedModel::run_tail`]).
@@ -102,17 +120,55 @@ pub struct TailStats {
     pub padded_images: u64,
 }
 
-/// Cumulative fault accounting for one model — the degrade ladder's
-/// observable state (see [`LoadedModel::run_all`]).
+/// Cumulative fault accounting for one model — the self-healing
+/// ladder's observable state (see [`LoadedModel::run_all`]). This is
+/// what the coordinator charges against a `--fault-budget`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FaultStats {
-    /// Stage faults observed (every failed pipelined attempt).
+    /// Stage faults observed (every failed pipelined attempt,
+    /// including failed cool-down probes).
     pub faults: u64,
-    /// Faulted runs that were retried once before giving up.
+    /// Faulted runs that were retried once before bypassing the pipe.
     pub retries: u64,
-    /// True once the model fell back to sequential batch-1 execution;
-    /// sticky until the model is reloaded.
+    /// Circuit-breaker trips across every site (primary stages + tail
+    /// variants): entries into the sequential bypass.
+    pub trips: u64,
+    /// Successful cool-down probes: sites that closed again.
+    pub recoveries: u64,
+    /// True while any site is open *right now* — no longer sticky; a
+    /// probe can clear it (`--no-recover` restores PR 6 stickiness).
     pub degraded: bool,
+    /// Total time any site spent bypassed, including the currently
+    /// open interval.
+    pub time_degraded_ns: u64,
+}
+
+/// Per-batch routing decision from one pipe's breaker bank.
+enum Route {
+    /// Every site closed: the guarded pipelined path.
+    Pipelined,
+    /// One open site's cool-down elapsed and this call won the CAS:
+    /// run HalfOpen, bitwise-gated against the sequential oracle.
+    Probe(usize),
+    /// At least one site open and no probe due: sequential bypass.
+    Sequential,
+}
+
+/// One breaker per pipeline stage — the per-site granularity of the
+/// self-healing ladder (site = stage index, matching the
+/// `pipeline.stage#idx` fault-injection key).
+fn breaker_bank(cfg: BreakerConfig, stages: usize) -> Vec<Breaker> {
+    (0..stages).map(|_| Breaker::new(cfg)).collect()
+}
+
+/// The breaker site a pipelined failure charges: the faulting stage
+/// for a [`GraphError::StageFault`], site 0 for anything else (clamped
+/// so a malformed stage index can never panic the ladder).
+fn fault_stage(err: &GraphError, stages: usize) -> usize {
+    match err {
+        GraphError::StageFault { stage, .. } => (*stage).min(stages.saturating_sub(1)),
+        _ => 0,
+    }
 }
 
 /// Images per plan execution for a `batch`-image model served through
@@ -217,6 +273,8 @@ impl LoadedModel {
             None
         };
         let pipeline = PipelinePlan::from_plan_team(plan, threads, team);
+        let breaker_cfg = BreakerConfig::default();
+        let breakers = breaker_bank(breaker_cfg, pipeline.num_stages());
         let mut input_shape = per_image_shape;
         input_shape[0] = batch;
         Ok(LoadedModel {
@@ -230,12 +288,16 @@ impl LoadedModel {
             ctx: RefCell::new(None),
             latency_ctx: RefCell::new(None),
             tune: None,
-            faults: Cell::new(0),
-            retries: Cell::new(0),
-            degraded: Cell::new(false),
+            faults: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            breakers,
+            breaker_cfg,
+            degraded_since_ns: AtomicU64::new(0),
+            time_degraded_ns: AtomicU64::new(0),
             variants: Vec::new(),
-            tail_runs: Cell::new(0),
-            padded_images: Cell::new(0),
+            variant_breakers: Vec::new(),
+            tail_runs: AtomicU64::new(0),
+            padded_images: AtomicU64::new(0),
         })
     }
 
@@ -318,6 +380,8 @@ impl LoadedModel {
         };
         let (stages, team) = (cuts.stages, cuts.team);
         let pipeline = PipelinePlan::from_profile(plan, &chosen.profile, stages, team);
+        let breaker_cfg = BreakerConfig::default();
+        let breakers = breaker_bank(breaker_cfg, pipeline.num_stages());
         let mut input_shape = per_image_shape;
         input_shape[0] = batch;
         Ok(LoadedModel {
@@ -337,12 +401,16 @@ impl LoadedModel {
                 chosen_group: group,
                 entries,
             }),
-            faults: Cell::new(0),
-            retries: Cell::new(0),
-            degraded: Cell::new(false),
+            faults: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            breakers,
+            breaker_cfg,
+            degraded_since_ns: AtomicU64::new(0),
+            time_degraded_ns: AtomicU64::new(0),
             variants: Vec::new(),
-            tail_runs: Cell::new(0),
-            padded_images: Cell::new(0),
+            variant_breakers: Vec::new(),
+            tail_runs: AtomicU64::new(0),
+            padded_images: AtomicU64::new(0),
         })
     }
 
@@ -373,9 +441,25 @@ impl LoadedModel {
             };
             let mut variant = PipelinePlan::from_plan_team(plan, 1, team);
             variant.share_idle_tracker(&self.pipeline);
+            self.variant_breakers
+                .push(breaker_bank(self.breaker_cfg, variant.num_stages()));
             self.variants.push(variant);
         }
         Ok(())
+    }
+
+    /// Re-key every breaker bank to `cfg` (cool-down, back-off cap,
+    /// recovery on/off). Serving knobs arrive through the [`Runtime`]
+    /// builders right after compilation, so rebuilding the (necessarily
+    /// still-untripped) banks in place loses no state.
+    pub fn set_breaker_config(&mut self, cfg: BreakerConfig) {
+        self.breaker_cfg = cfg;
+        self.breakers = breaker_bank(cfg, self.pipeline.num_stages());
+        self.variant_breakers = self
+            .variants
+            .iter()
+            .map(|v| breaker_bank(cfg, v.num_stages()))
+            .collect();
     }
 
     /// The calibration report, when this model was loaded through
@@ -407,19 +491,78 @@ impl LoadedModel {
     }
 
     /// Cumulative fault accounting: stage faults seen, retries spent,
-    /// and whether the model has degraded to sequential execution.
+    /// breaker trips and recoveries across every bank, and whether any
+    /// site is bypassed right now.
     pub fn fault_stats(&self) -> FaultStats {
+        let mut trips = 0;
+        let mut recoveries = 0;
+        let mut degraded = false;
+        for b in self.all_breakers() {
+            trips += b.trips();
+            recoveries += b.recoveries();
+            degraded |= !b.is_closed();
+        }
+        let mut time_degraded_ns = self.time_degraded_ns.load(Ordering::Relaxed);
+        let since = self.degraded_since_ns.load(Ordering::Relaxed);
+        if since != 0 {
+            time_degraded_ns = time_degraded_ns
+                .saturating_add(crate::util::timer::epoch_ns().saturating_sub(since));
+        }
         FaultStats {
-            faults: self.faults.get(),
-            retries: self.retries.get(),
-            degraded: self.degraded.get(),
+            faults: self.faults.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            trips,
+            recoveries,
+            degraded,
+            time_degraded_ns,
         }
     }
 
-    /// True once repeated stage faults demoted this model to its
-    /// sequential batch-1 plan (sticky until reload).
+    /// True while any site's breaker is not closed: some path of this
+    /// model is currently served by the sequential bypass. No longer
+    /// sticky — a cool-down probe can close the site again
+    /// (`--no-recover` restores stickiness).
     pub fn is_degraded(&self) -> bool {
-        self.degraded.get()
+        self.all_breakers().any(|b| !b.is_closed())
+    }
+
+    fn all_breakers(&self) -> impl Iterator<Item = &Breaker> + '_ {
+        self.breakers
+            .iter()
+            .chain(self.variant_breakers.iter().flatten())
+    }
+
+    /// The first trip while fully healthy starts the degrade clock.
+    fn note_trip(&self, now_ns: u64) {
+        if self.degraded_since_ns.load(Ordering::Relaxed) == 0 {
+            self.degraded_since_ns.store(now_ns.max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// A recovery that leaves every bank closed stops the degrade clock
+    /// and banks the interval.
+    fn note_recovery(&self, now_ns: u64) {
+        if self.all_breakers().all(|b| b.is_closed()) {
+            let since = self.degraded_since_ns.swap(0, Ordering::Relaxed);
+            if since != 0 {
+                self.time_degraded_ns
+                    .fetch_add(now_ns.saturating_sub(since), Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Route one batch by a pipe's breaker bank: pipelined while every
+    /// site is closed, a single cool-down probe when one is due,
+    /// sequential bypass otherwise.
+    fn route(&self, breakers: &[Breaker]) -> Route {
+        if breakers.iter().all(|b| b.is_closed()) {
+            return Route::Pipelined;
+        }
+        let now = crate::util::timer::epoch_ns();
+        match breakers.iter().position(|b| b.try_probe(now)) {
+            Some(site) => Route::Probe(site),
+            None => Route::Sequential,
+        }
     }
 
     /// Reject malformed inputs with typed errors before any execution:
@@ -468,19 +611,19 @@ impl LoadedModel {
     /// plan — sequentially in whole-group steps, or streamed through
     /// the layer pipeline when the model was loaded with `threads > 1`.
     ///
-    /// Failure semantics (the degrade ladder): a stage fault in the
-    /// pipelined path is retried once on the same (reusable)
-    /// [`PipelinePlan`]; if the retry also faults, the model demotes
-    /// itself — permanently, flagged via [`Self::fault_stats`] — to its
-    /// sequential batch-1 plan, which produces bitwise-identical
-    /// outputs to the sequential oracle. Malformed inputs return typed
-    /// [`GraphError`]s without executing anything.
+    /// Failure semantics (the self-healing ladder): a stage fault in
+    /// the pipelined path is retried once on the same (reusable)
+    /// [`PipelinePlan`]; if the retry also faults, the faulting stage's
+    /// circuit breaker trips and this pipe is bypassed — batches run
+    /// the sequential batch-1 plan, bitwise-identical to the oracle —
+    /// until the breaker's cool-down elapses, one probe batch
+    /// re-validates the pipelined path (HalfOpen, answered from the
+    /// oracle either way), and the site closes again.
+    /// [`Self::fault_stats`] exposes the whole history. Malformed
+    /// inputs return typed [`GraphError`]s without executing anything.
     pub fn run_all(&self, input: &[f32]) -> Result<Vec<Vec<f32>>, GraphError> {
         let expect: usize = self.input_shape.iter().product();
         self.check_input(input, expect, &self.input_shape)?;
-        if self.degraded.get() {
-            return self.run_sequential(input, self.batch);
-        }
         let plan = self.pipeline.plan();
         let group = plan.batch();
         if self.serves_pipelined() {
@@ -489,9 +632,17 @@ impl LoadedModel {
             // threads (one boundary handoff per group, not per image).
             // A worker team (team > 1) also routes here — even a 1-stage
             // pipeline then splits its dominant convs across the team.
-            return match self.run_with_ladder(&self.pipeline, input, self.batch) {
-                Some(outs) => Ok(outs),
-                None => self.run_sequential(input, self.batch),
+            return match self.route(&self.breakers) {
+                Route::Pipelined => {
+                    match self.run_with_ladder(&self.pipeline, &self.breakers, input, self.batch) {
+                        Some(outs) => Ok(outs),
+                        None => self.run_sequential(input, self.batch),
+                    }
+                }
+                Route::Probe(site) => {
+                    self.run_probe(&self.pipeline, &self.breakers[site], input, self.batch)
+                }
+                Route::Sequential => self.run_sequential(input, self.batch),
             };
         }
         // Sequential path: the plan executes whole groups natively
@@ -518,14 +669,16 @@ impl LoadedModel {
         Ok(outs)
     }
 
-    /// One pipelined execution attempt with the retry-once → degrade
-    /// ladder (shared by the primary batch path and the tail variants,
-    /// so a faulting variant demotes the whole model, not just tails).
-    /// `None` means both attempts faulted and the model is now degraded
-    /// — the caller must take the sequential fallback.
+    /// One pipelined execution attempt with the retry-once → trip
+    /// ladder (shared by the primary batch path and the tail variants;
+    /// each pipe charges its own breaker bank, so a faulting variant
+    /// bypasses only itself). `None` means both attempts faulted and
+    /// the faulting site's breaker is now open — the caller must take
+    /// the sequential fallback.
     fn run_with_ladder(
         &self,
         pipe: &PipelinePlan,
+        breakers: &[Breaker],
         input: &[f32],
         n_images: usize,
     ) -> Option<Vec<Vec<f32>>> {
@@ -535,22 +688,71 @@ impl LoadedModel {
         };
         // Rung one: the plan is reusable after an isolated stage fault,
         // so a transient panic costs one retry, not the run.
-        self.faults.set(self.faults.get() + 1);
-        self.retries.set(self.retries.get() + 1);
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        let site = fault_stage(&first, breakers.len());
+        breakers[site].record_failure(crate::util::timer::epoch_ns());
         let second = match pipe.run_batch(input, n_images) {
-            Ok(outs) => return Some(outs),
+            Ok(outs) => {
+                // The retry cleared it: a clean pass resets every
+                // site's consecutive-failure count.
+                for b in breakers {
+                    b.record_success();
+                }
+                return Some(outs);
+            }
             Err(e) => e,
         };
-        // Rung two: repeated faults look deterministic — demote to the
-        // sequential batch-1 plan and stay there.
-        self.faults.set(self.faults.get() + 1);
-        self.degraded.set(true);
+        // Rung two: two faults in one batch bypass this pipe — but only
+        // the faulting site's breaker trips, and only until its
+        // cool-down probe (PR 6 demoted the whole model, forever).
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        let now = crate::util::timer::epoch_ns();
+        let site = fault_stage(&second, breakers.len());
+        if !breakers[site].record_failure(now) {
+            // The retry faulted at a different site than the first
+            // attempt: one consecutive failure there is below the
+            // threshold, but the two-faults-in-one-batch contract still
+            // demotes the pipe.
+            breakers[site].force_trip(now);
+        }
+        self.note_trip(now);
         eprintln!(
-            "model '{}': degrading to sequential execution after repeated stage \
-             faults ({first}; retry: {second})",
+            "model '{}': bypassing the pipelined path at stage {site} after repeated \
+             stage faults ({first}; retry: {second})",
             self.name
         );
         None
+    }
+
+    /// HalfOpen cool-down probe: one batch through the pipelined plan,
+    /// *answered from the sequential oracle either way* — the probe can
+    /// never change what the caller receives, only whether the breaker
+    /// closes. A probe whose pipelined bits match the oracle closes the
+    /// site (a recovery); a faulting or mismatching probe re-opens it
+    /// with the cool-down doubled.
+    fn run_probe(
+        &self,
+        pipe: &PipelinePlan,
+        breaker: &Breaker,
+        input: &[f32],
+        n_images: usize,
+    ) -> Result<Vec<Vec<f32>>, GraphError> {
+        let oracle = self.run_sequential(input, n_images)?;
+        match pipe.run_batch(input, n_images) {
+            Ok(outs) if outs == oracle => {
+                if breaker.record_success() {
+                    self.note_recovery(crate::util::timer::epoch_ns());
+                }
+            }
+            probe => {
+                if probe.is_err() {
+                    self.faults.fetch_add(1, Ordering::Relaxed);
+                }
+                breaker.record_failure(crate::util::timer::epoch_ns());
+            }
+        }
+        Ok(oracle)
     }
 
     /// Run a ragged tail of `k < batch` images, sized to the request
@@ -576,21 +778,29 @@ impl LoadedModel {
         let mut shape = self.input_shape.clone();
         shape[0] = k;
         self.check_input(input, k * per, &shape)?;
-        if self.degraded.get() {
-            return self.run_sequential(input, k);
-        }
         if k == 1 {
             return self.run_one(input);
         }
-        if let Some(variant) = self.variants.iter().find(|v| v.plan().batch() >= k) {
+        if let Some(idx) = self.variants.iter().position(|v| v.plan().batch() >= k) {
+            let (variant, bank) = (&self.variants[idx], &self.variant_breakers[idx]);
             let vb = variant.plan().batch();
-            self.tail_runs.set(self.tail_runs.get() + 1);
+            let route = self.route(bank);
+            if matches!(route, Route::Sequential) {
+                // This variant is bypassed (its own breakers — a
+                // tripped primary never demotes the tails): per-image
+                // oracle, no padding, no batched-tail accounting.
+                return self.run_sequential(input, k);
+            }
+            self.tail_runs.fetch_add(1, Ordering::Relaxed);
             self.padded_images
-                .set(self.padded_images.get() + (vb - k) as u64);
+                .fetch_add((vb - k) as u64, Ordering::Relaxed);
             let padded = Tensor::pad_batch(input, per, vb);
-            let mut outs = match self.run_with_ladder(variant, &padded, vb) {
-                Some(outs) => outs,
-                None => return self.run_sequential(input, k),
+            let mut outs = match route {
+                Route::Probe(site) => self.run_probe(variant, &bank[site], &padded, vb)?,
+                _ => match self.run_with_ladder(variant, bank, &padded, vb) {
+                    Some(outs) => outs,
+                    None => return self.run_sequential(input, k),
+                },
             };
             for out in &mut outs {
                 let probs = out.len() / vb;
@@ -598,10 +808,11 @@ impl LoadedModel {
             }
             return Ok(outs);
         }
-        // No family: the padded-to-batch baseline.
-        self.tail_runs.set(self.tail_runs.get() + 1);
+        // No family: the padded-to-batch baseline (run_all routes it by
+        // the primary bank's breaker state like any other batch).
+        self.tail_runs.fetch_add(1, Ordering::Relaxed);
         self.padded_images
-            .set(self.padded_images.get() + (self.batch - k) as u64);
+            .fetch_add((self.batch - k) as u64, Ordering::Relaxed);
         let padded = Tensor::pad_batch(input, per, self.batch);
         let mut outs = self.run_all(&padded)?;
         for out in &mut outs {
@@ -622,8 +833,8 @@ impl LoadedModel {
     /// images) for this model.
     pub fn tail_stats(&self) -> TailStats {
         TailStats {
-            tail_runs: self.tail_runs.get(),
-            padded_images: self.padded_images.get(),
+            tail_runs: self.tail_runs.load(Ordering::Relaxed),
+            padded_images: self.padded_images.load(Ordering::Relaxed),
         }
     }
 
@@ -693,6 +904,11 @@ pub struct Runtime {
     /// batch), and explicit sizes are used as given (clipped the same
     /// way). See [`Runtime::with_plan_family`].
     pub plan_family: Option<Vec<usize>>,
+    /// Self-healing ladder tunables for subsequently loaded models:
+    /// cool-down before a tripped site probes (`--recover-after-ms`)
+    /// and whether recovery is enabled at all (`--no-recover`). See
+    /// [`Runtime::with_recovery`].
+    pub breaker_cfg: BreakerConfig,
     models: BTreeMap<String, LoadedModel>,
 }
 
@@ -718,6 +934,7 @@ impl Runtime {
             team: 1,
             autotune: None,
             plan_family: None,
+            breaker_cfg: BreakerConfig::default(),
             models: BTreeMap::new(),
         })
     }
@@ -752,6 +969,14 @@ impl Runtime {
         self
     }
 
+    /// Configure the self-healing ladder for subsequently loaded
+    /// models (cool-down, back-off cap, `recover: false` for PR 6's
+    /// sticky degrade).
+    pub fn with_recovery(mut self, cfg: BreakerConfig) -> Runtime {
+        self.breaker_cfg = cfg;
+        self
+    }
+
     pub fn platform(&self) -> String {
         // e.g. "exec-cpu/fma": the active SIMD dispatch tier is part of
         // the platform identity (it changes dense result bits within the
@@ -768,6 +993,9 @@ impl Runtime {
             None => LoadedModel::from_graph_with(name, graph, batch, self.threads, self.team)
                 .with_context(|| format!("compiling model '{name}'"))?,
         };
+        // Breaker config must land before the plan family so the
+        // variants' banks inherit it too.
+        model.set_breaker_config(self.breaker_cfg);
         let sizes = match &self.plan_family {
             Some(sizes) => sizes.clone(),
             None => default_family(batch),
@@ -775,6 +1003,12 @@ impl Runtime {
         model
             .add_plan_family(graph, &sizes)
             .with_context(|| format!("building plan family for '{name}'"))?;
+        // Serving models keep their stage workers parked between runs:
+        // warm per-stage contexts, no per-batch spawn cost (a no-op for
+        // single-stage pipelines).
+        if model.serves_pipelined() {
+            model.pipeline.enable_persistent_pool();
+        }
         self.models.insert(name.to_string(), model);
         Ok(())
     }
@@ -1159,11 +1393,14 @@ mod tests {
     }
 
     #[test]
-    fn degraded_model_serves_tails_sequentially() {
+    fn tripped_variant_serves_tails_sequentially_without_demoting_the_model() {
         let g = tiny_cnn(NetConfig::test_scale());
         let mut m = LoadedModel::from_graph("tinycnn_b8", &g, 8).unwrap();
+        // no-recover: the trip is sticky, so routing stays deterministic
+        m.set_breaker_config(BreakerConfig { recover: false, ..Default::default() });
         m.add_plan_family(&g, &[4]).unwrap();
-        m.degraded.set(true);
+        m.variant_breakers[0][0].force_trip(1);
+        assert!(m.is_degraded());
         let per: usize = m.input_shape.iter().product::<usize>() / 8;
         let mut rng = Rng::new(94);
         let block: Vec<f32> = (0..3 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -1174,8 +1411,41 @@ mod tests {
             let probs = tail[0].len() / 3;
             assert_eq!(one[0], &tail[0][i * probs..(i + 1) * probs]);
         }
-        // degraded tails never touch the batched variants
+        // bypassed tails never touch the batched variants
         assert_eq!(m.tail_stats(), TailStats::default());
+        // ...while the primary path is untouched by the variant's trip
+        let full: Vec<f32> = (0..8 * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        assert!(m.run_all(&full).is_ok());
+        let stats = m.fault_stats();
+        assert_eq!((stats.trips, stats.recoveries), (1, 0));
+        assert!(stats.degraded);
+    }
+
+    #[test]
+    fn tripped_primary_probes_after_cooldown_and_recovers() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let mut m = LoadedModel::from_graph_with("piped", &g, 4, 2, 1).unwrap();
+        // zero cool-down: the very next batch is allowed to probe
+        m.set_breaker_config(BreakerConfig::with_cooldown_ms(0));
+        assert!(m.serves_pipelined());
+        let n: usize = m.input_shape.iter().product();
+        let mut rng = Rng::new(95);
+        let input: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want = m.run_all(&input).unwrap();
+        let now = crate::util::timer::epoch_ns();
+        m.breakers[0].force_trip(now);
+        m.note_trip(now);
+        assert!(m.is_degraded());
+        // the probe runs HalfOpen, matches the oracle bitwise, and
+        // closes the site — the answer is the oracle's either way
+        assert_eq!(m.run_all(&input).unwrap(), want);
+        assert!(!m.is_degraded());
+        let stats = m.fault_stats();
+        assert_eq!((stats.trips, stats.recoveries), (1, 1));
+        assert!(stats.time_degraded_ns > 0, "degrade interval was clocked");
+        // healthy again: later batches take the pipelined path
+        assert_eq!(m.run_all(&input).unwrap(), want);
+        assert_eq!(m.fault_stats().faults, 0, "no faults in this scenario");
     }
 
     #[test]

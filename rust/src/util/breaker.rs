@@ -1,0 +1,306 @@
+//! Per-site circuit breakers for the self-healing serving ladder.
+//!
+//! A [`Breaker`] guards one fault *site* — the same granularity
+//! `util::fault` keys its injection points by: a (pipeline, stage
+//! index) pair in practice. HPIPE's premise is statically specialized
+//! per-layer hardware, so a fault is inherently localized to one stage;
+//! the breaker mirrors that granularity in software. One stage tripping
+//! must not condemn every plan the model owns.
+//!
+//! States (the classic three):
+//!
+//! ```text
+//! Closed ──(threshold consecutive failures / forced trip)──▶ Open
+//! Open ──(cool-down elapsed, try_probe wins)──▶ HalfOpen
+//! HalfOpen ──(probe success)──▶ Closed        [a recovery]
+//! HalfOpen ──(probe failure)──▶ Open          [cool-down doubles]
+//! ```
+//!
+//! Everything is atomics so the coordinator's feeder thread and the
+//! executor can read degrade/recovery state through a shared reference
+//! — no `&mut`, no locks on the hot path. Time is passed in as
+//! epoch-nanoseconds (`util::timer::epoch_ns`) rather than read
+//! internally, keeping trip/probe arithmetic deterministic in tests.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+
+/// Breaker state, stored as a `u8` atomic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests take the guarded (pipelined) path.
+    Closed,
+    /// Tripped: the guarded path is bypassed until cool-down elapses.
+    Open,
+    /// One probe is in flight through the guarded path.
+    HalfOpen,
+}
+
+const CLOSED: u8 = 0;
+const OPEN: u8 = 1;
+const HALF_OPEN: u8 = 2;
+
+fn decode(raw: u8) -> BreakerState {
+    match raw {
+        OPEN => BreakerState::Open,
+        HALF_OPEN => BreakerState::HalfOpen,
+        _ => BreakerState::Closed,
+    }
+}
+
+/// Tunables shared by every breaker of a model (immutable after build).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures at one site that trip it (the runtime's
+    /// retry-once ladder means 2 = "a fault and its failed retry").
+    pub threshold: u32,
+    /// Initial cool-down before a tripped site may probe, in ns
+    /// (`--recover-after-ms`).
+    pub cooldown_ns: u64,
+    /// Cap for the exponential back-off (each failed probe doubles the
+    /// cool-down up to this).
+    pub max_cooldown_ns: u64,
+    /// `false` (`--no-recover`) makes a trip permanent: [`Breaker::try_probe`]
+    /// never grants a probe and the site stays Open until reload —
+    /// PR 6's sticky degrade, as the escape hatch.
+    pub recover: bool,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            threshold: 2,
+            cooldown_ns: 50_000_000,           // 50 ms
+            max_cooldown_ns: 10_000_000_000,   // 10 s
+            recover: true,
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// Config with the cool-down set from milliseconds (the CLI knob).
+    pub fn with_cooldown_ms(ms: u64) -> Self {
+        BreakerConfig { cooldown_ns: ms.saturating_mul(1_000_000), ..Default::default() }
+    }
+}
+
+/// One site's breaker. All-atomic; share it behind `&`/`Arc` freely.
+#[derive(Debug)]
+pub struct Breaker {
+    state: AtomicU8,
+    consecutive: AtomicU32,
+    trips: AtomicU64,
+    recoveries: AtomicU64,
+    /// epoch-ns when the breaker last entered Open.
+    opened_at_ns: AtomicU64,
+    /// Current (backed-off) cool-down; resets to the base on recovery.
+    cooldown_ns: AtomicU64,
+    cfg: BreakerConfig,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Breaker {
+            state: AtomicU8::new(CLOSED),
+            consecutive: AtomicU32::new(0),
+            trips: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            opened_at_ns: AtomicU64::new(0),
+            cooldown_ns: AtomicU64::new(cfg.cooldown_ns),
+            cfg,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        decode(self.state.load(Ordering::Acquire))
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state() == BreakerState::Closed
+    }
+
+    /// Times this site has tripped (Closed/HalfOpen -> Open).
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Times a probe through this site succeeded (HalfOpen -> Closed).
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries.load(Ordering::Relaxed)
+    }
+
+    /// The currently scheduled cool-down (base × 2^failed-probes, capped).
+    pub fn current_cooldown_ns(&self) -> u64 {
+        self.cooldown_ns.load(Ordering::Relaxed)
+    }
+
+    /// Record a failure at this site. In Closed, counts toward the
+    /// consecutive-failure threshold and trips when reached; in
+    /// HalfOpen, the probe failed — re-open with the cool-down doubled.
+    /// Returns `true` if this call tripped the breaker (entered Open).
+    pub fn record_failure(&self, now_ns: u64) -> bool {
+        match self.state() {
+            BreakerState::Closed => {
+                let seen = self.consecutive.fetch_add(1, Ordering::AcqRel) + 1;
+                if seen >= self.cfg.threshold {
+                    self.open(now_ns);
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                let next = self
+                    .current_cooldown_ns()
+                    .saturating_mul(2)
+                    .min(self.cfg.max_cooldown_ns);
+                self.cooldown_ns.store(next, Ordering::Relaxed);
+                self.open(now_ns);
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Trip unconditionally (the runtime's ladder calls this when a
+    /// retry faults at a *different* site than the first attempt: the
+    /// retry site has only one consecutive failure, but the model-level
+    /// contract — two faults in one batch demote the pipe — still
+    /// holds). Returns `true` if the breaker was not already Open.
+    pub fn force_trip(&self, now_ns: u64) -> bool {
+        if self.state() == BreakerState::Open {
+            return false;
+        }
+        self.open(now_ns);
+        true
+    }
+
+    fn open(&self, now_ns: u64) {
+        self.opened_at_ns.store(now_ns, Ordering::Relaxed);
+        self.consecutive.store(0, Ordering::Relaxed);
+        self.trips.fetch_add(1, Ordering::Relaxed);
+        self.state.store(OPEN, Ordering::Release);
+    }
+
+    /// Record a success through the guarded path. In HalfOpen this is a
+    /// recovery: close, reset the consecutive count and the back-off.
+    /// Returns `true` when the call recovered the site.
+    pub fn record_success(&self) -> bool {
+        match self.state() {
+            BreakerState::HalfOpen => {
+                self.consecutive.store(0, Ordering::Relaxed);
+                self.cooldown_ns.store(self.cfg.cooldown_ns, Ordering::Relaxed);
+                self.recoveries.fetch_add(1, Ordering::Relaxed);
+                self.state.store(CLOSED, Ordering::Release);
+                true
+            }
+            BreakerState::Closed => {
+                self.consecutive.store(0, Ordering::Relaxed);
+                false
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Ask for a probe: if the breaker is Open, recovery is enabled and
+    /// the cool-down has elapsed, CAS to HalfOpen. Exactly one caller
+    /// wins; everyone else keeps the bypass path. The winner MUST
+    /// follow up with [`record_success`] or [`record_failure`].
+    pub fn try_probe(&self, now_ns: u64) -> bool {
+        if !self.cfg.recover || self.state() != BreakerState::Open {
+            return false;
+        }
+        let ready = now_ns.saturating_sub(self.opened_at_ns.load(Ordering::Relaxed))
+            >= self.current_cooldown_ns();
+        ready
+            && self
+                .state
+                .compare_exchange(OPEN, HALF_OPEN, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(cooldown_ns: u64) -> BreakerConfig {
+        BreakerConfig { cooldown_ns, max_cooldown_ns: cooldown_ns * 8, ..Default::default() }
+    }
+
+    #[test]
+    fn threshold_consecutive_failures_trip() {
+        let b = Breaker::new(cfg(100));
+        assert!(!b.record_failure(0), "first failure must not trip");
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.record_failure(10), "second consecutive failure trips");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_count() {
+        let b = Breaker::new(cfg(100));
+        b.record_failure(0);
+        assert!(!b.record_success(), "closed success is not a recovery");
+        assert!(!b.record_failure(10), "count restarted: one failure again");
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn probe_gates_on_cooldown_and_single_winner() {
+        let b = Breaker::new(cfg(100));
+        b.force_trip(1_000);
+        assert!(!b.try_probe(1_050), "cool-down not elapsed");
+        assert!(b.try_probe(1_100), "cool-down elapsed: probe granted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.try_probe(1_200), "only one probe may be in flight");
+    }
+
+    #[test]
+    fn probe_success_recovers_and_resets_backoff() {
+        let b = Breaker::new(cfg(100));
+        b.force_trip(0);
+        assert!(b.try_probe(100));
+        assert!(b.record_success(), "half-open success is a recovery");
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.recoveries(), 1);
+        assert_eq!(b.current_cooldown_ns(), 100, "back-off resets on recovery");
+    }
+
+    #[test]
+    fn failed_probes_back_off_exponentially_to_the_cap() {
+        let b = Breaker::new(cfg(100));
+        b.force_trip(0);
+        let mut now = 0u64;
+        let mut want = 100u64;
+        for _ in 0..5 {
+            now += b.current_cooldown_ns();
+            assert!(b.try_probe(now));
+            assert!(b.record_failure(now), "failed probe re-opens");
+            want = (want * 2).min(800);
+            assert_eq!(b.current_cooldown_ns(), want);
+        }
+        assert_eq!(b.current_cooldown_ns(), 800, "back-off capped at max");
+    }
+
+    #[test]
+    fn no_recover_makes_a_trip_permanent() {
+        let b = Breaker::new(BreakerConfig {
+            recover: false,
+            cooldown_ns: 1,
+            ..Default::default()
+        });
+        b.record_failure(0);
+        b.record_failure(0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.try_probe(u64::MAX), "--no-recover: probes never granted");
+    }
+
+    #[test]
+    fn force_trip_is_idempotent_while_open() {
+        let b = Breaker::new(cfg(100));
+        assert!(b.force_trip(0));
+        assert!(!b.force_trip(10), "already open: no second trip counted");
+        assert_eq!(b.trips(), 1);
+    }
+}

@@ -16,6 +16,10 @@
 //! site[#idx]=N[+][:ACTION]        fire on the Nth hit (N+ = Nth and
 //!                                 every later hit: a persistently
 //!                                 broken site)
+//! site[#idx]=N[:ACTION],heal      transient: fire on hits 1..=N, then
+//!                                 permanently heal — the deterministic
+//!                                 way to exercise trip -> cool-down ->
+//!                                 probe -> recovery paths
 //! site[#idx]=pP@SEED[:ACTION]     fire on each hit with probability P%
 //!                                 from a seeded, site-keyed hash —
 //!                                 deterministic per (seed, site, idx,
@@ -27,7 +31,9 @@
 //! instance (e.g. one pipeline stage), omitted = any. `ACTION` is
 //! `panic` (default — the injected fault is a worker panic) or
 //! `sleepMS` (inject latency; how deadline expiry is exercised).
-//! Hit counts are 1-based and tracked per (site, idx).
+//! Hit counts are 1-based and tracked per (site, idx). A bare `heal`
+//! segment modifies the clause before it (clauses are comma-separated,
+//! so `heal` cannot be mistaken for a site).
 
 /// Render a caught panic payload (the `Box<dyn Any>` from
 /// `catch_unwind`) as a human-readable message.
@@ -51,6 +57,9 @@ mod armed {
     enum Trigger {
         /// Fire on the `n`th hit; with `persistent`, on every hit ≥ n.
         Nth { n: u64, persistent: bool },
+        /// Transient (`...,heal`): fire on hits 1..=n, then never again
+        /// — a site that breaks, then permanently heals.
+        FirstN { n: u64 },
         /// Fire with `percent`% probability per hit, drawn from a
         /// seeded, site-keyed hash (deterministic, not random).
         Seeded { percent: u64, seed: u64 },
@@ -150,11 +159,24 @@ mod armed {
     /// Panics on a malformed plan — a typo in a chaos test must fail
     /// loudly, not silently inject nothing.
     pub fn arm(plan: &str) {
-        let clauses = plan
-            .split(',')
-            .filter(|c| !c.trim().is_empty())
-            .map(parse_clause)
-            .collect();
+        let mut clauses: Vec<Clause> = Vec::new();
+        for seg in plan.split(',').filter(|c| !c.trim().is_empty()) {
+            if seg.trim() == "heal" {
+                // `heal` is a modifier on the clause before it: turn its
+                // Nth trigger into a transient fire-then-heal trigger.
+                let Some(prev) = clauses.last_mut() else {
+                    panic!("fault plan '{plan}': 'heal' with no preceding clause");
+                };
+                prev.trigger = match prev.trigger {
+                    Trigger::Nth { n, .. } | Trigger::FirstN { n } => Trigger::FirstN { n },
+                    Trigger::Seeded { .. } => {
+                        panic!("fault plan '{plan}': 'heal' cannot follow a seeded clause")
+                    }
+                };
+            } else {
+                clauses.push(parse_clause(seg));
+            }
+        }
         *lock() = Some(State { clauses, ..Default::default() });
     }
 
@@ -183,6 +205,7 @@ mod armed {
                     && (c.idx.is_none() || c.idx == Some(idx))
                     && match c.trigger {
                         Trigger::Nth { n, persistent } => hit == n || (persistent && hit > n),
+                        Trigger::FirstN { n } => hit <= n,
                         Trigger::Seeded { percent, seed } => {
                             mix(seed, site, idx, hit) % 100 < percent
                         }
@@ -328,6 +351,43 @@ mod tests {
         // a different seed produces a different (but still valid) pattern
         let c = run(8);
         assert_ne!(a, c, "different seeds should differ (64 hits)");
+    }
+
+    #[test]
+    fn transient_clause_fires_first_n_then_heals_forever() {
+        let _g = gate();
+        silence_expected_panics();
+        arm("test.transient#2=3:panic,heal");
+        for hit in 1..=3 {
+            let r = catch_unwind(AssertUnwindSafe(|| point("test.transient", 2)));
+            assert!(r.is_err(), "transient clause must fire on hit {hit}");
+        }
+        for _ in 0..16 {
+            point("test.transient", 2); // healed: inert forever after
+        }
+        assert_eq!(fired(), 3, "transient clause fires exactly N times");
+        disarm();
+    }
+
+    #[test]
+    fn transient_heal_composes_with_other_clauses_in_one_plan() {
+        let _g = gate();
+        silence_expected_panics();
+        // a transient clause and a plain Nth clause side by side: the
+        // heal modifier binds to its own clause only
+        arm("test.mix#0=1,heal,test.mix#1=2");
+        assert!(catch_unwind(AssertUnwindSafe(|| point("test.mix", 0))).is_err());
+        point("test.mix", 0); // idx 0 healed after hit 1
+        point("test.mix", 1); // hit 1 of idx 1: no fire
+        assert!(catch_unwind(AssertUnwindSafe(|| point("test.mix", 1))).is_err());
+        assert_eq!(fired(), 2);
+        disarm();
+    }
+
+    #[test]
+    #[should_panic(expected = "'heal' with no preceding clause")]
+    fn dangling_heal_is_rejected() {
+        arm("heal");
     }
 
     #[test]

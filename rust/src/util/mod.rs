@@ -5,6 +5,7 @@
 //! access — no serde/rand/clap/criterion/anyhow — so the repository
 //! carries its own minimal implementations and builds dependency-free.
 
+pub mod breaker;
 pub mod cli;
 pub mod error;
 pub mod fault;

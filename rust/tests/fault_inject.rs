@@ -8,9 +8,14 @@
 //! * a panic in ANY pipeline stage, across team sizes and plan batches,
 //!   surfaces as a typed `GraphError::StageFault` for that run only —
 //!   the pipeline never wedges and the plan stays reusable;
-//! * repeated faults demote a `LoadedModel` to its sequential batch-1
-//!   fallback, whose outputs are bitwise-identical to the sequential
-//!   oracle;
+//! * repeated faults trip the faulting site's circuit breaker and the
+//!   model bypasses that pipe with outputs bitwise-identical to the
+//!   sequential oracle — sticky under `--no-recover`, and under the
+//!   default self-healing ladder a transient fault recovers: trip,
+//!   cool-down, HalfOpen probe answered from the oracle, un-degrade
+//!   (the `chaos_transient_*` / `chaos_persistent_*` matrix);
+//! * the persistent stage-worker pool survives a hundred faulty runs
+//!   without leaking a single OS thread;
 //! * end-to-end serving under injected faults completes with zero lost
 //!   responses and the fault counters recorded in the `ServeReport`
 //!   (the `chaos_` tests — CI runs them as the chaos smoke);
@@ -31,6 +36,7 @@ use hpipe::exec::{ExecutionPlan, PipelinePlan};
 use hpipe::graph::{graphdef, GraphError, Op, Tensor};
 use hpipe::nets::{tiny_cnn, NetConfig};
 use hpipe::runtime::{LoadedModel, Runtime};
+use hpipe::util::breaker::BreakerConfig;
 use hpipe::util::fault;
 use hpipe::util::{Json, Rng};
 use std::collections::BTreeMap;
@@ -116,16 +122,18 @@ fn stage_panic_never_wedges_any_configuration() {
     }
 }
 
-/// The degrade ladder end to end: one transient fault is absorbed by
-/// the retry; a persistent fault demotes the model to its sequential
-/// batch-1 plan, sticky, with outputs bitwise-identical to the
-/// per-image sequential oracle.
+/// The degrade ladder end to end under `--no-recover` (the sticky
+/// escape hatch): one transient fault is absorbed by the retry; a
+/// persistent fault trips the faulting site's breaker and the model
+/// bypasses the pipe — permanently, since probes are disabled — with
+/// outputs bitwise-identical to the per-image sequential oracle.
 #[test]
 fn repeated_faults_degrade_to_bitwise_sequential_fallback() {
     let _g = gate();
     fault::silence_expected_panics();
     let g = tiny_cnn(NetConfig::test_scale());
-    let m = LoadedModel::from_graph_with("tinycnn_b8", &g, 8, 2, 1).unwrap();
+    let mut m = LoadedModel::from_graph_with("tinycnn_b8", &g, 8, 2, 1).unwrap();
+    m.set_breaker_config(BreakerConfig { recover: false, ..Default::default() });
     assert!(m.serves_pipelined());
     let shape = input_shape(&g);
     let per: usize = shape.iter().product();
@@ -164,12 +172,148 @@ fn repeated_faults_degrade_to_bitwise_sequential_fallback() {
     assert_eq!(degraded.len(), 1);
     assert_eq!(degraded[0], want, "degraded outputs must be bitwise-sequential");
 
-    // sticky: the demoted model never touches the faulting pipeline again
+    // sticky under --no-recover: probes are never granted, so the
+    // demoted model never touches the faulting pipeline again
     fault::arm("pipeline.stage#0=1+");
     let after = m.run_all(&input).unwrap();
     assert_eq!(fault::fired(), 0, "degraded model must bypass the pipeline sites");
     fault::disarm();
     assert_eq!(after, degraded);
+    let fs = m.fault_stats();
+    assert_eq!((fs.trips, fs.recoveries), (1, 0), "no probe, no recovery");
+}
+
+/// The self-healing ladder, deterministic: a transient fault (two stage
+/// hits, then the site heals forever) trips the breaker, the batch is
+/// answered from the sequential oracle, and with a zero cool-down the
+/// very next batch is the HalfOpen probe — answered from the oracle,
+/// closing the site when the healed pipeline's bits match. The model
+/// un-degrades and finishes pipelined.
+#[test]
+fn chaos_transient_fault_trips_probes_and_recovers() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let g = tiny_cnn(NetConfig::test_scale());
+    let mut m = LoadedModel::from_graph_with("tinycnn_b8", &g, 8, 2, 1).unwrap();
+    m.set_breaker_config(BreakerConfig::with_cooldown_ms(0));
+    let per: usize = input_shape(&g).iter().product();
+    let input = det_input(8 * per, 0x5E1F);
+    let clean = m.run_all(&input).unwrap();
+
+    // two faults in one batch (attempt + retry) trip stage 0's breaker;
+    // the site then heals forever
+    fault::arm("pipeline.stage#0=2,heal");
+    let tripped = m.run_all(&input).unwrap();
+    assert_eq!(tripped, clean, "bypassed batch must be bitwise the oracle");
+    assert!(m.is_degraded(), "two faults in one batch must trip the site");
+    let fs = m.fault_stats();
+    assert_eq!((fs.faults, fs.retries, fs.trips, fs.recoveries), (2, 1, 1, 0));
+
+    // cool-down 0: the next batch is the probe — answered from the
+    // oracle while the healed pipeline re-validates bitwise
+    let probed = m.run_all(&input).unwrap();
+    assert_eq!(probed, clean, "probe batch is answered from the oracle");
+    let fs = m.fault_stats();
+    assert_eq!((fs.trips, fs.recoveries), (1, 1), "matching probe recovers");
+    assert!(!fs.degraded, "recovered model must report healthy");
+    assert!(fs.time_degraded_ns > 0, "the degraded interval is accounted");
+
+    // recovered: back on the pipelined path, bitwise as before the fault
+    let after = m.run_all(&input).unwrap();
+    fault::disarm();
+    assert_eq!(after, clean);
+    assert_eq!(m.fault_stats().faults, 2, "no new faults after recovery");
+}
+
+/// A persistent fault defeats recovery: every cool-down probe faults
+/// again, re-opening the breaker with the cool-down doubled (each
+/// failed probe is a fresh trip), the model stays degraded, and every
+/// answered batch remains bitwise the sequential oracle.
+#[test]
+fn chaos_persistent_fault_backs_off_and_stays_degraded() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let g = tiny_cnn(NetConfig::test_scale());
+    let mut m = LoadedModel::from_graph_with("tinycnn_b8", &g, 8, 2, 1).unwrap();
+    // 1 ns cool-down: every post-trip batch is granted a probe, so each
+    // run exercises the probe-failure -> back-off -> re-open edge
+    m.set_breaker_config(BreakerConfig { cooldown_ns: 1, ..Default::default() });
+    let per: usize = input_shape(&g).iter().product();
+    let input = det_input(8 * per, 0xBADD);
+    let clean = m.run_all(&input).unwrap();
+
+    fault::arm("pipeline.stage#0=1+");
+    for round in 0..4 {
+        let outs = m.run_all(&input).unwrap();
+        assert_eq!(outs, clean, "round {round}: outputs must stay bitwise-oracle");
+        assert!(m.is_degraded(), "round {round}: persistent fault keeps the site open");
+    }
+    fault::disarm();
+    let fs = m.fault_stats();
+    assert!(fs.trips >= 2, "failed probes must re-trip the site, got {}", fs.trips);
+    assert_eq!(fs.recoveries, 0, "a persistently faulting site must never recover");
+    assert!(fs.degraded, "the model must still be degraded");
+}
+
+/// Read this process's live OS-thread count (Linux procfs).
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|n| n.parse().ok())
+        })
+        .expect("/proc/self/status reports a Threads: line")
+}
+
+/// Persistent-pool stress: one pool of stage workers serves 100
+/// consecutive runs, several of which panic mid-stage, and the
+/// process-wide OS thread count must not grow — faulted workers rebuild
+/// state in place instead of leaking replacements run over run.
+#[test]
+#[cfg(target_os = "linux")]
+fn chaos_persistent_pool_survives_faulty_runs_without_leaking_threads() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let g = tiny_cnn(NetConfig::test_scale());
+    let plan = ExecutionPlan::build_batched(&g, 8).unwrap();
+    let pipe = PipelinePlan::from_plan_team(plan, 3, 1);
+    pipe.enable_persistent_pool();
+    assert!(pipe.persistent_pool_active());
+    let per: usize = input_shape(&g).iter().product();
+    let input = det_input(8 * per, 0x7EAD);
+    let clean = pipe.run_batch(&input, 8).unwrap();
+    let baseline = thread_count();
+
+    // the first stage-1 hits panic a pooled worker mid-run, then the
+    // site heals: a mix of faulty and clean runs through one pool
+    fault::arm("pipeline.stage#1=6,heal");
+    let mut faulted = 0usize;
+    for _ in 0..100 {
+        match pipe.run_batch(&input, 8) {
+            Ok(out) => assert_eq!(out, clean, "clean runs must stay bitwise-stable"),
+            Err(GraphError::StageFault { stage, .. }) => {
+                assert_eq!(stage, 1, "fault must name the armed stage");
+                faulted += 1;
+            }
+            Err(e) => panic!("unexpected non-stage error: {e:?}"),
+        }
+    }
+    fault::disarm();
+    assert!(faulted >= 1, "the armed site must have fired");
+    assert!(faulted <= 6, "a healed site must stop firing, got {faulted} faults");
+
+    let after = thread_count();
+    assert!(
+        after <= baseline + 2,
+        "persistent pool leaked threads: {baseline} -> {after}"
+    );
+    pipe.disable_persistent_pool();
+    assert!(!pipe.persistent_pool_active());
+    assert_eq!(pipe.run_batch(&input, 8).unwrap(), clean);
 }
 
 /// Chaos smoke (CI runs the `chaos_` tests as a dedicated step): serve
@@ -205,6 +349,61 @@ fn chaos_serve_completes_with_faults_recorded() {
     let parsed = Json::parse(&report.to_json().pretty()).unwrap();
     assert!(parsed.get("faults").as_usize().unwrap() >= 1);
     assert!(parsed.get("degraded").as_usize().unwrap() >= 1);
+}
+
+/// Chaos end-to-end recovery: serve with a *transient* stage fault (two
+/// hits — one batch's attempt and retry — then the site heals) and a
+/// zero cool-down. The serving model must trip, probe on its next
+/// batch, close the breaker, finish the run pipelined, and the report's
+/// per-model health must show `{trips >= 1, recoveries >= 1,
+/// degraded_now: false}` with every classification agreeing with the
+/// interpreter oracle — plus the fault-budget warning, since two faults
+/// exceed a budget of one.
+#[test]
+fn chaos_serve_transient_fault_recovers_with_health_report() {
+    let _g = gate();
+    fault::silence_expected_panics();
+    let dir = synth_artifacts("chaos_artifacts_recovery");
+    fault::arm("pipeline.stage#0=2,heal");
+    let cfg = ServeConfig {
+        requests: 32,
+        max_batch: 8,
+        threads: 2,
+        team: 2,
+        recover_after_ms: Some(0),
+        // tails pad to the full batch: every multi-image batch routes
+        // through the one primary pipe, so trip and probe are ordered
+        plan_family: Some(vec![]),
+        fault_budget: Some(1),
+        ..Default::default()
+    };
+    let result = serve_demo(&dir, &cfg);
+    fault::disarm();
+    let mut report = result.expect("recovery serving must complete");
+    assert_eq!(report.requests, 32, "every request must be answered");
+    assert!(report.faults >= 2, "the transient fault must be recorded");
+    assert!(report.recoveries >= 1, "the healed site must probe shut");
+    assert_eq!(report.degraded, 0, "no model may still be degraded at the end");
+    let sick: Vec<_> = report.models.iter().filter(|h| h.trips > 0).collect();
+    assert_eq!(sick.len(), 1, "exactly one model absorbed the transient fault");
+    let h = sick[0];
+    assert!(h.recoveries >= 1, "model '{}' must have recovered", h.name);
+    assert!(!h.degraded_now, "model '{}' must end healthy", h.name);
+    assert!(h.time_degraded_ns > 0, "the bypassed interval is accounted");
+    assert!(h.over_budget, "2 faults must exceed --fault-budget 1");
+    // recovered classifications still agree with the interpreter
+    let (agree, total) = report.interp_agreement.unwrap();
+    assert_eq!(agree, total);
+    // and the health survives the JSON round-trip
+    let parsed = Json::parse(&report.to_json().pretty()).unwrap();
+    assert!(parsed.get("recoveries").as_usize().unwrap() >= 1);
+    let models = parsed.get("models").as_arr().unwrap();
+    assert!(models.iter().any(|m| {
+        m.get("trips").as_usize().unwrap_or(0) >= 1
+            && m.get("recoveries").as_usize().unwrap_or(0) >= 1
+            && m.get("degraded_now").as_bool() == Some(false)
+            && m.get("over_budget").as_bool() == Some(true)
+    }));
 }
 
 /// Chaos for the always-fed loop (ISSUE 8): overlap on (the default),
