@@ -178,5 +178,51 @@ fn main() -> hpipe::util::error::Result<()> {
         site.trips(),
         site.recoveries()
     );
+
+    // 11. compile once, serve anywhere: a model's fully compiled serving
+    //     state — packed panels, pre-decoded RLE streams, pipeline cuts,
+    //     calibration — persists as a *plan artifact* (plan.json +
+    //     plan.bin), HPIPE's bitstream analog. The artifact is keyed by
+    //     a content hash of graph + options + config, any mismatch or
+    //     corruption is a typed rejection that falls back to a fresh
+    //     compile, and the restored model is bitwise the compiled one.
+    //     (CLI: `hpipe compile --plan-cache DIR` then
+    //     `hpipe serve --plan-cache DIR`.)
+    use hpipe::runtime::Runtime;
+    let cache = std::env::temp_dir().join("hpipe_quickstart_plan_cache");
+    let _ = std::fs::remove_dir_all(&cache);
+    let (mut first, mut second) = (
+        Runtime::cpu(&out)?.with_plan_cache(&cache),
+        Runtime::cpu(&out)?.with_plan_cache(&cache),
+    );
+    let (compiled_ok, compile_took) =
+        hpipe::util::timer::time_once(|| first.load_graph("tinycnn_b4", &graph, 4));
+    compiled_ok?;
+    let (restored_ok, restore_took) =
+        hpipe::util::timer::time_once(|| second.load_graph("tinycnn_b4", &graph, 4));
+    restored_ok?;
+    assert_eq!(
+        (second.cache_hits, second.cache_misses),
+        (1, 0),
+        "second cold start must restore from the artifact"
+    );
+    let (compiled, restored) = (
+        first.model("tinycnn_b4").unwrap(),
+        second.model("tinycnn_b4").unwrap(),
+    );
+    let image4: Vec<f32> = batched_feeds["input"].data.clone();
+    assert_eq!(
+        compiled.run_all(&image4)?,
+        restored.run_all(&image4)?,
+        "artifact restore must be bitwise the fresh compile"
+    );
+    let (shared, private) = restored.weight_bytes();
+    println!(
+        "plan artifact: compiled in {compile_took:?}, restored in {restore_took:?} \
+         ({} B shared weights held once across {} plans, {} B plan-private)",
+        shared,
+        2 + restored.variant_batches().len(),
+        private
+    );
     Ok(())
 }

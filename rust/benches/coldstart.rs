@@ -1,0 +1,234 @@
+//! Cold-start benchmark for the plan-artifact cache: how long from
+//! process start to "every model loaded and ready to serve", compiled
+//! fresh vs restored from on-disk artifacts.
+//!
+//! The fresh path runs the full load pipeline — graphdef decode, const
+//! fold, RLE encode, panel pack, and (because this bench loads with
+//! `--autotune` semantics) the profile-guided calibration passes. The
+//! cached path replays none of it: packed panels, pre-decoded streams,
+//! measured cuts and the calibration report all come off disk. Under
+//! `BENCH_SMOKE=1` the cached cold start is gated at >= 5x faster than
+//! the fresh one (re-measured once before failing, like the serving
+//! gates), after `BENCH_coldstart.json` is already on disk for the CI
+//! artifact.
+//!
+//! The bench also proves the failure contract on a corrupted *copy* of
+//! the cache: truncation and a bit flip must both surface as typed
+//! `GraphError::Artifact` rejections, and a runtime pointed at the
+//! corrupted cache must fall back to a fresh compile and come up
+//! serving anyway.
+
+use hpipe::artifact;
+use hpipe::exec::TuneOptions;
+use hpipe::graph::{graphdef, GraphError};
+use hpipe::nets::{tiny_cnn, NetConfig};
+use hpipe::runtime::Runtime;
+use hpipe::util::Json;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Return an artifacts dir, synthesizing one under target/ if needed.
+fn artifacts_dir() -> PathBuf {
+    let real = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if real.join("manifest.json").exists() {
+        return real;
+    }
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("coldstart_artifacts");
+    println!("artifacts/ missing — synthesizing He-init TinyCNN artifacts in target/");
+    let g = tiny_cnn(NetConfig::test_scale());
+    graphdef::save(&g, &dir.join("tinycnn")).expect("writing graphdef");
+    let mut models = Json::obj();
+    models
+        .set("1", Json::from("tinycnn.graphdef"))
+        .set("8", Json::from("tinycnn.graphdef"));
+    let mut kernels = Json::obj();
+    let mut k = Json::obj();
+    k.set("path", Json::from("builtin"))
+        .set("input_shape", Json::from(vec![1usize, 16, 16, 8]));
+    kernels.set("sparse_conv_demo", k);
+    let mut root = Json::obj();
+    root.set("input_shape", Json::from(vec![1usize, 16, 16, 3]))
+        .set("models", models)
+        .set("kernels", kernels);
+    std::fs::write(dir.join("manifest.json"), root.pretty()).expect("writing manifest");
+    dir
+}
+
+/// One cold start: construct the runtime (autotuned, plan-cached) and
+/// load every manifest model. Returns (wall, cache hits, cache misses).
+fn cold_start(dir: &Path, cache: &Path) -> (Duration, usize, usize) {
+    let t0 = Instant::now();
+    let mut rt = Runtime::cpu(dir)
+        .unwrap()
+        .with_autotune(TuneOptions::default())
+        .with_plan_cache(cache);
+    rt.load_manifest().expect("cold start must come up serving");
+    (t0.elapsed(), rt.cache_hits, rt.cache_misses)
+}
+
+fn median(mut v: Vec<u64>) -> u64 {
+    v.sort_unstable();
+    v[v.len() / 2]
+}
+
+/// Median fresh (cache cleared before every run) and cached (artifact
+/// present) cold-start times in nanoseconds.
+fn measure(dir: &Path, cache: &Path) -> (u64, u64) {
+    let mut fresh = Vec::new();
+    for _ in 0..3 {
+        let _ = fs::remove_dir_all(cache);
+        let (d, hits, misses) = cold_start(dir, cache);
+        assert!(hits == 0 && misses > 0, "cleared cache must miss");
+        fresh.push(d.as_nanos() as u64);
+    }
+    let mut cached = Vec::new();
+    for _ in 0..5 {
+        let (d, hits, misses) = cold_start(dir, cache);
+        assert!(
+            misses == 0 && hits > 0,
+            "warm cache must restore every model ({hits} hits, {misses} misses)"
+        );
+        cached.push(d.as_nanos() as u64);
+    }
+    (median(fresh), median(cached))
+}
+
+fn copy_tree(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for e in fs::read_dir(src).unwrap() {
+        let e = e.unwrap();
+        let to = dst.join(e.file_name());
+        if e.path().is_dir() {
+            copy_tree(&e.path(), &to);
+        } else {
+            fs::copy(e.path(), &to).unwrap();
+        }
+    }
+}
+
+/// Apply `damage` to every model's `plan.bin` under `cache`; returns
+/// how many binaries were damaged.
+fn corrupt_bins(cache: &Path, damage: impl Fn(&mut Vec<u8>)) -> usize {
+    let mut n = 0;
+    for e in fs::read_dir(cache).unwrap() {
+        let bin = e.unwrap().path().join("plan.bin");
+        if let Ok(mut bytes) = fs::read(&bin) {
+            if bytes.is_empty() {
+                continue;
+            }
+            damage(&mut bytes);
+            fs::write(&bin, &bytes).unwrap();
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Every artifact under `cache` must now be rejected with the *typed*
+/// error (`GraphError::Artifact`), loaded with its own recorded key.
+fn assert_typed_rejections(cache: &Path, what: &str) -> usize {
+    let mut n = 0;
+    for e in fs::read_dir(cache).unwrap() {
+        let dir = e.unwrap().path();
+        // only artifacts with a binary payload were damaged
+        match fs::read(dir.join("plan.bin")) {
+            Ok(b) if !b.is_empty() => {}
+            _ => continue,
+        }
+        let Ok(text) = fs::read_to_string(dir.join("plan.json")) else { continue };
+        let root = Json::parse(&text).unwrap();
+        let key = u64::from_str_radix(root.get("key").as_str().unwrap(), 16).unwrap();
+        let err = artifact::load(&dir, key).unwrap_err();
+        assert!(
+            matches!(err, GraphError::Artifact(_)),
+            "{what}: expected GraphError::Artifact for {}, got {err:?}",
+            dir.display()
+        );
+        n += 1;
+    }
+    n
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    let cache = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("coldstart_plan_cache");
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    println!("=== cold start: fresh compile vs plan-artifact restore ===");
+
+    let (mut fresh_ns, mut cached_ns) = measure(&dir, &cache);
+    let mut retried = false;
+    if smoke && fresh_ns < 5 * cached_ns {
+        println!("cold-start gate missed on first measurement; re-measuring once");
+        retried = true;
+        let (f, c) = measure(&dir, &cache);
+        fresh_ns = f;
+        cached_ns = c;
+    }
+    let speedup = fresh_ns as f64 / cached_ns.max(1) as f64;
+    println!(
+        "fresh compile : {:?} (fold + encode + pack + profile)",
+        Duration::from_nanos(fresh_ns)
+    );
+    println!("cached restore: {:?}", Duration::from_nanos(cached_ns));
+    println!("speedup       : {speedup:.1}x");
+
+    // ---- failure contract on a corrupted copy of the cache ----------
+    let corrupt = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("coldstart_plan_cache_corrupt");
+    let _ = fs::remove_dir_all(&corrupt);
+    copy_tree(&cache, &corrupt);
+    // truncation: drop the second half of every plan.bin
+    let truncated = corrupt_bins(&corrupt, |b| b.truncate(b.len() / 2));
+    assert!(truncated > 0, "the cache must hold binary payloads");
+    let truncate_typed = assert_typed_rejections(&corrupt, "truncate");
+    // ...and a runtime pointed at the damage still comes up, compiling
+    // fresh (which re-persists pristine artifacts into the copy)
+    let (_, hits, misses) = cold_start(&dir, &corrupt);
+    assert!(hits == 0 && misses > 0, "truncated cache must fall back to fresh compile");
+    // bit flip: one byte, deep in the re-saved pristine payload
+    let flipped = corrupt_bins(&corrupt, |b| {
+        let i = b.len() / 3;
+        b[i] ^= 0x10;
+    });
+    assert!(flipped > 0);
+    let bitflip_typed = assert_typed_rejections(&corrupt, "bit flip");
+    let (_, hits, misses) = cold_start(&dir, &corrupt);
+    assert!(hits == 0 && misses > 0, "bit-flipped cache must fall back to fresh compile");
+    let _ = fs::remove_dir_all(&corrupt);
+    println!(
+        "corruption: {truncate_typed} truncated + {bitflip_typed} bit-flipped artifacts \
+         rejected typed, runtime fell back to fresh compile both times"
+    );
+
+    // report first, gates after — a failed gate still leaves the JSON
+    // behind for the CI artifact
+    let mut root = Json::obj();
+    root.set("fresh_cold_start_ns", Json::from(fresh_ns as f64))
+        .set("cached_cold_start_ns", Json::from(cached_ns as f64))
+        .set("speedup", Json::from(speedup))
+        .set("required_speedup", Json::from(5.0))
+        .set("gate_retried", Json::from(retried))
+        .set("truncate_typed_rejections", Json::from(truncate_typed))
+        .set("bitflip_typed_rejections", Json::from(bitflip_typed))
+        .set("corrupt_fallback_served", Json::from(true));
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_coldstart.json");
+    fs::write(&out, root.pretty()).expect("writing BENCH_coldstart.json");
+    println!("wrote {}", out.display());
+
+    if smoke {
+        assert!(
+            fresh_ns >= 5 * cached_ns,
+            "BENCH_SMOKE gate: cached cold start ({:?}) must be >= 5x faster than a \
+             fresh compile ({:?}); measured {speedup:.1}x",
+            Duration::from_nanos(cached_ns),
+            Duration::from_nanos(fresh_ns)
+        );
+        println!("BENCH_SMOKE cold-start gate passed ({speedup:.1}x)");
+    }
+}

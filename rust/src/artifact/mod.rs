@@ -1,0 +1,746 @@
+//! Plan artifacts: compile once, serve anywhere.
+//!
+//! HPIPE's compiler emits a fully elaborated per-layer datapath — every
+//! weight already baked into its layer's M20K banks — and the bitstream
+//! is the reusable artifact: synthesis runs once, the board boots from
+//! the file. This module is the software analog. A [`ModelArtifact`]
+//! captures everything [`crate::runtime::LoadedModel`] computes at
+//! compile time that is expensive or measured:
+//!
+//! * the shared [`WeightStore`] — const tensors (including fold
+//!   results), dense packed panels ([`PackedB`]), RLE encodings
+//!   ([`ConvRle`]) and pre-decoded streams ([`PackedRle`]);
+//! * the pipeline shape of the primary plan and every plan-family
+//!   variant: stage count, team size, and the per-step costs the
+//!   partition DP consumed (static model costs or autotune-measured
+//!   medians — replaying them through the DP reproduces the exact cuts);
+//! * the autotuner's [`TuneReport`](crate::exec::TuneReport), so a
+//!   cache hit skips calibration profiling entirely.
+//!
+//! On disk an artifact is a directory holding `plan.json` (structure,
+//! offsets, hashes — same dependency-free [`Json`] idiom as
+//! `graph.json`) and `plan.bin` (one flat little-endian blob for all
+//! weight bytes, same pattern as `weights.bin`).
+//!
+//! **Invalidation.** `plan.json` records a [`cache_key`]: an FNV-1a 64
+//! hash over the graphdef bytes ([`graphdef::to_parts`]), the
+//! [`PlanOptions`] knobs, the serving configuration (batch, plan
+//! family, threads, team, autotune), and the crate version. The loader
+//! recomputes the key from the *request* and rejects on mismatch, so a
+//! changed graph, config, or crate silently falls back to a fresh
+//! compile — a stale artifact can never serve. `plan.bin` is guarded by
+//! its own content hash (`bin_hash`), which catches truncation and
+//! bit-flips before any weight byte is trusted; every decoded structure
+//! additionally passes through the validating `from_parts`
+//! constructors. The ISA tier is recorded for inspection only — SIMD
+//! dispatch re-runs on the loading machine, because an artifact
+//! compiled on an AVX2 box must serve correctly from a NEON one.
+//!
+//! **Failure contract.** Every load failure — missing file, bad JSON,
+//! wrong format, key mismatch, hash mismatch, out-of-range offset,
+//! invalid packed state — returns [`GraphError::Artifact`] and nothing
+//! else. Callers (the runtime's plan cache) treat that as "compile
+//! fresh"; a rejected artifact is never partially applied.
+
+use std::fs;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::exec::kernels::PackedB;
+use crate::exec::sparse::PackedRle;
+use crate::exec::{PlanOptions, TuneReport, WeightStore};
+use crate::graph::{graphdef, Graph, GraphError, Tensor};
+use crate::sparsity::rle::{ConvRle, SplitStream, WeightEntry};
+use crate::util::Json;
+
+/// Format tag every `plan.json` must lead with.
+pub const FORMAT: &str = "hpipe-plan-artifact-v1";
+
+fn bad(msg: impl Into<String>) -> GraphError {
+    GraphError::Artifact(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Content hashing
+// ---------------------------------------------------------------------------
+
+/// Incremental FNV-1a 64 — small, dependency-free, and stable across
+/// platforms; collision resistance is not a goal (artifacts are a local
+/// cache, not a trust boundary — `from_parts` validation is the guard).
+pub struct Fnv1a64(u64);
+
+impl Fnv1a64 {
+    pub fn new() -> Fnv1a64 {
+        Fnv1a64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Fnv1a64::new()
+    }
+}
+
+/// Hash one byte slice (used for `bin_hash`).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Everything besides the graph that shapes a compiled model — the
+/// non-graph half of the invalidation key.
+#[derive(Clone, Debug)]
+pub struct CacheSpec {
+    pub opts: PlanOptions,
+    /// Serving batch (the model's `batch`, not the group size — group
+    /// size is derived and changes with `threads`, which is hashed too).
+    pub batch: usize,
+    /// Requested plan-family tail sizes (order-insensitive: sorted and
+    /// deduplicated before hashing).
+    pub family: Vec<usize>,
+    pub threads: usize,
+    pub team: usize,
+    pub autotune: bool,
+    /// Effective autotune core budget (0 when autotune is off) — the
+    /// budget changes the chosen cuts, so it must invalidate too.
+    pub tune_cores: usize,
+}
+
+/// The artifact invalidation key: FNV-1a 64 over the graphdef bytes,
+/// every [`PlanOptions`] knob, the serving configuration, and the crate
+/// version. Two requests with equal keys compile to interchangeable
+/// plans; anything that could change the compiled state changes the key.
+pub fn cache_key(graph: &Graph, spec: &CacheSpec) -> u64 {
+    let (json, blob) = graphdef::to_parts(graph);
+    let mut h = Fnv1a64::new();
+    h.update(json.as_bytes());
+    h.update(&[0]);
+    h.update(&blob);
+    let mut family = spec.family.clone();
+    family.sort_unstable();
+    family.dedup();
+    // sparse_threshold hashes by bit pattern: -0.0 vs 0.0 or NaN payloads
+    // must not alias distinct configurations.
+    let tail = format!(
+        "|st={:016x}|fuse={}|splits={}|packed={}|batch={}|threads={}|team={}|autotune={}|cores={}|family={:?}|crate={}",
+        spec.opts.sparse_threshold.to_bits(),
+        spec.opts.fuse,
+        spec.opts.splits,
+        spec.opts.packed,
+        spec.batch,
+        spec.threads,
+        spec.team,
+        spec.autotune,
+        spec.tune_cores,
+        family,
+        env!("CARGO_PKG_VERSION"),
+    );
+    h.update(tail.as_bytes());
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian blob IO
+// ---------------------------------------------------------------------------
+
+struct BlobWriter {
+    buf: Vec<u8>,
+}
+
+impl BlobWriter {
+    fn new() -> BlobWriter {
+        BlobWriter { buf: Vec::new() }
+    }
+
+    fn offset(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct BlobReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    end: usize,
+}
+
+impl<'a> BlobReader<'a> {
+    /// A reader over `buf[offset..offset + len]`; rejects out-of-range
+    /// sections up front so a lying manifest can't walk off the blob.
+    fn section(buf: &'a [u8], offset: usize, len: usize) -> Result<BlobReader<'a>, GraphError> {
+        let end = offset
+            .checked_add(len)
+            .filter(|&e| e <= buf.len())
+            .ok_or_else(|| bad(format!("blob section {offset}+{len} exceeds {}", buf.len())))?;
+        Ok(BlobReader { buf, pos: offset, end })
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], GraphError> {
+        let next = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.end)
+            .ok_or_else(|| bad("blob section truncated"))?;
+        let s = &self.buf[self.pos..next];
+        self.pos = next;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, GraphError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, GraphError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, GraphError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, GraphError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, GraphError> {
+        let b = self.take(n.checked_mul(4).ok_or_else(|| bad("f32 count overflow"))?)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn done(&self) -> Result<(), GraphError> {
+        if self.pos != self.end {
+            return Err(bad(format!("blob section has {} trailing bytes", self.end - self.pos)));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact model
+// ---------------------------------------------------------------------------
+
+/// The restorable shape of one pipeline (primary plan or a plan-family
+/// variant): the batch its plan was compiled for, the stage/team split,
+/// and the per-step costs the partitioner consumed. Replaying
+/// `costs_ns` through
+/// [`PipelinePlan::from_static_costs`](crate::exec::PipelinePlan::from_static_costs)
+/// reproduces the exact cuts — measured autotune costs and modeled
+/// static costs restore through the same door.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PipelineSpec {
+    pub batch: usize,
+    pub stages: usize,
+    pub team: usize,
+    pub costs_ns: Vec<u64>,
+}
+
+impl PipelineSpec {
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("batch", Json::from(self.batch)),
+            ("stages", Json::from(self.stages)),
+            ("team", Json::from(self.team)),
+            (
+                "costs_ns",
+                Json::Arr(self.costs_ns.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<PipelineSpec, GraphError> {
+        let field = |k: &str| j.get(k).as_usize().ok_or_else(|| bad(format!("pipeline: bad {k}")));
+        let costs = j.get("costs_ns").as_arr().ok_or_else(|| bad("pipeline: missing costs_ns"))?;
+        let costs_ns = costs
+            .iter()
+            .map(|c| match c.as_f64() {
+                Some(ns) if ns.is_finite() && ns >= 0.0 => Ok(ns as u64),
+                _ => Err(bad("pipeline: cost out of range")),
+            })
+            .collect::<Result<Vec<u64>, GraphError>>()?;
+        let spec = PipelineSpec {
+            batch: field("batch")?,
+            stages: field("stages")?,
+            team: field("team")?,
+            costs_ns,
+        };
+        if spec.batch == 0 || spec.stages == 0 || spec.team == 0 {
+            return Err(bad("pipeline: zero batch/stages/team"));
+        }
+        if spec.stages > spec.costs_ns.len() {
+            return Err(bad("pipeline: more stages than steps"));
+        }
+        Ok(spec)
+    }
+}
+
+/// A fully compiled model, detached from any process: everything
+/// [`crate::runtime::LoadedModel::from_artifact`] needs to rebuild its
+/// plans without packing, encoding, folding, or profiling.
+pub struct ModelArtifact {
+    /// The [`cache_key`] this artifact was compiled under.
+    pub key: u64,
+    /// ISA tier active at compile time — informational only; load
+    /// re-dispatches on the local CPU.
+    pub isa: String,
+    pub batch: usize,
+    pub threads: usize,
+    pub team: usize,
+    /// Primary serving pipeline (its `batch` is the group size).
+    pub primary: PipelineSpec,
+    /// Ragged-tail plan-family variants, ascending batch.
+    pub variants: Vec<PipelineSpec>,
+    /// Whether the model carries a separate batch-1 latency plan.
+    pub has_latency: bool,
+    /// Autotune calibration report, if the model was autotuned.
+    pub tune: Option<TuneReport>,
+    /// The shared weight store backing every plan above.
+    pub store: WeightStore,
+}
+
+// ---------------------------------------------------------------------------
+// Save
+// ---------------------------------------------------------------------------
+
+/// Write `art` to `dir/plan.json` + `dir/plan.bin`. The store manifest
+/// and blob iterate `BTreeMap`s, so byte output is deterministic for a
+/// given artifact.
+pub fn save(dir: &Path, art: &ModelArtifact) -> Result<(), GraphError> {
+    let mut blob = BlobWriter::new();
+
+    let mut tensors = Json::Arr(vec![]);
+    for (key, t) in art.store.tensors() {
+        let offset = blob.offset();
+        for &x in &t.data {
+            blob.f32(x);
+        }
+        tensors.push(Json::from_pairs(vec![
+            ("key", Json::from(key)),
+            ("shape", Json::from(t.shape.clone())),
+            ("offset", Json::from(offset)),
+            ("len", Json::from(blob.offset() - offset)),
+        ]));
+    }
+
+    let mut packed_b = Json::Arr(vec![]);
+    for (key, p) in art.store.packed_bs() {
+        let offset = blob.offset();
+        for &x in p.data() {
+            blob.f32(x);
+        }
+        packed_b.push(Json::from_pairs(vec![
+            ("key", Json::from(key)),
+            ("k", Json::from(p.k)),
+            ("n", Json::from(p.n)),
+            ("offset", Json::from(offset)),
+            ("len", Json::from(blob.offset() - offset)),
+        ]));
+    }
+
+    let mut rle = Json::Arr(vec![]);
+    for (key, r) in art.store.rles() {
+        let offset = blob.offset();
+        for oc in &r.streams {
+            for s in oc {
+                blob.u32(s.entries.len() as u32);
+                blob.u32(s.nonzeros as u32);
+                for e in &s.entries {
+                    blob.u32(e.runlength);
+                    blob.u8(e.x);
+                    blob.f32(e.value);
+                }
+            }
+        }
+        rle.push(Json::from_pairs(vec![
+            ("key", Json::from(key)),
+            ("kh", Json::from(r.kh)),
+            ("kw", Json::from(r.kw)),
+            ("ci", Json::from(r.ci)),
+            ("co", Json::from(r.co)),
+            ("splits", Json::from(r.splits)),
+            ("offset", Json::from(offset)),
+            ("len", Json::from(blob.offset() - offset)),
+        ]));
+    }
+
+    let mut packed_rle = Json::Arr(vec![]);
+    for (key, p) in art.store.packed_rles() {
+        let offset = blob.offset();
+        for &s in p.starts() {
+            blob.u64(s as u64);
+        }
+        for &k in p.ks() {
+            blob.u32(k);
+        }
+        for &l in p.lanes() {
+            blob.u8(l);
+        }
+        for &v in p.vals() {
+            blob.f32(v);
+        }
+        packed_rle.push(Json::from_pairs(vec![
+            ("key", Json::from(key)),
+            ("co", Json::from(p.co)),
+            ("k", Json::from(p.k)),
+            ("nnz", Json::from(p.nonzeros())),
+            ("n_starts", Json::from(p.starts().len())),
+            ("offset", Json::from(offset)),
+            ("len", Json::from(blob.offset() - offset)),
+        ]));
+    }
+
+    let store = Json::from_pairs(vec![
+        ("tensors", tensors),
+        ("packed_b", packed_b),
+        ("rle", rle),
+        ("packed_rle", packed_rle),
+    ]);
+
+    let mut root = Json::obj();
+    root.set("format", Json::from(FORMAT))
+        .set("key", Json::from(format!("{:016x}", art.key).as_str()))
+        .set("bin_hash", Json::from(format!("{:016x}", fnv1a64(&blob.buf)).as_str()))
+        .set("isa", Json::from(art.isa.as_str()))
+        .set("batch", Json::from(art.batch))
+        .set("threads", Json::from(art.threads))
+        .set("team", Json::from(art.team))
+        .set("has_latency", Json::from(art.has_latency))
+        .set("primary", art.primary.to_json())
+        .set(
+            "variants",
+            Json::Arr(art.variants.iter().map(|v| v.to_json()).collect()),
+        )
+        .set("tune", art.tune.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null))
+        .set("store", store);
+
+    fs::create_dir_all(dir).map_err(|e| bad(format!("creating {}: {e}", dir.display())))?;
+    fs::write(dir.join("plan.json"), root.pretty())
+        .map_err(|e| bad(format!("writing plan.json: {e}")))?;
+    fs::write(dir.join("plan.bin"), &blob.buf)
+        .map_err(|e| bad(format!("writing plan.bin: {e}")))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Load
+// ---------------------------------------------------------------------------
+
+fn hex_u64(j: &Json, field: &str) -> Result<u64, GraphError> {
+    let s = j.get(field).as_str().ok_or_else(|| bad(format!("missing {field}")))?;
+    u64::from_str_radix(s, 16).map_err(|_| bad(format!("{field} is not a hex hash")))
+}
+
+fn entry_usize(e: &Json, field: &str) -> Result<usize, GraphError> {
+    e.get(field).as_usize().ok_or_else(|| bad(format!("store entry: bad {field}")))
+}
+
+fn entry_key(e: &Json) -> Result<&str, GraphError> {
+    e.get("key").as_str().ok_or_else(|| bad("store entry: missing key"))
+}
+
+/// Load and validate the artifact at `dir`, rejecting anything whose
+/// key differs from `expect_key` (the key recomputed from the *current*
+/// graph + config — the invalidation check). All failures are
+/// [`GraphError::Artifact`]; the caller falls back to a fresh compile.
+pub fn load(dir: &Path, expect_key: u64) -> Result<ModelArtifact, GraphError> {
+    let text = fs::read_to_string(dir.join("plan.json"))
+        .map_err(|e| bad(format!("reading {}: {e}", dir.join("plan.json").display())))?;
+    let root = Json::parse(&text).map_err(|e| bad(format!("plan.json: {e}")))?;
+    if root.get("format").as_str() != Some(FORMAT) {
+        return Err(bad("unrecognized plan artifact format"));
+    }
+    let key = hex_u64(&root, "key")?;
+    if key != expect_key {
+        return Err(bad(format!(
+            "stale artifact: key {key:016x} != expected {expect_key:016x} \
+             (graph, options, or crate version changed)"
+        )));
+    }
+    let bin_path = dir.join("plan.bin");
+    let blob: Vec<u8> = if bin_path.exists() {
+        fs::read(&bin_path).map_err(|e| bad(format!("reading plan.bin: {e}")))?
+    } else {
+        Vec::new()
+    };
+    let bin_hash = hex_u64(&root, "bin_hash")?;
+    let got = fnv1a64(&blob);
+    if got != bin_hash {
+        return Err(bad(format!(
+            "plan.bin content hash {got:016x} != recorded {bin_hash:016x} \
+             (truncated or corrupted)"
+        )));
+    }
+
+    let mut store = WeightStore::new();
+    let jstore = root.get("store");
+    let arr = |field: &str| -> Result<&[Json], GraphError> {
+        jstore.get(field).as_arr().ok_or_else(|| bad(format!("store: missing {field}")))
+    };
+
+    for e in arr("tensors")? {
+        let key = entry_key(e)?;
+        let shape = e.get("shape").usize_vec().ok_or_else(|| bad("tensor entry: bad shape"))?;
+        let n: usize = shape.iter().product();
+        let mut r = BlobReader::section(&blob, entry_usize(e, "offset")?, entry_usize(e, "len")?)?;
+        let data = r.f32_vec(n)?;
+        r.done()?;
+        store.insert_tensor(key, Tensor::from_vec(&shape, data));
+    }
+
+    for e in arr("packed_b")? {
+        let key = entry_key(e)?;
+        let (k, n) = (entry_usize(e, "k")?, entry_usize(e, "n")?);
+        let len = entry_usize(e, "len")?;
+        let mut r = BlobReader::section(&blob, entry_usize(e, "offset")?, len)?;
+        let data = r.f32_vec(len / 4)?;
+        r.done()?;
+        let p = PackedB::from_parts(k, n, data).map_err(|e| bad(format!("{key}: {e}")))?;
+        store.insert_packed_b(key, p);
+    }
+
+    for e in arr("rle")? {
+        let key = entry_key(e)?;
+        let (kh, kw) = (entry_usize(e, "kh")?, entry_usize(e, "kw")?);
+        let (ci, co) = (entry_usize(e, "ci")?, entry_usize(e, "co")?);
+        let splits = entry_usize(e, "splits")?;
+        if splits == 0 {
+            return Err(bad(format!("{key}: zero splits")));
+        }
+        let mut r = BlobReader::section(&blob, entry_usize(e, "offset")?, entry_usize(e, "len")?)?;
+        let mut streams = Vec::with_capacity(co);
+        for _ in 0..co {
+            let mut per_split = Vec::with_capacity(splits);
+            for _ in 0..splits {
+                let n_entries = r.u32()? as usize;
+                let nonzeros = r.u32()? as usize;
+                if nonzeros > n_entries {
+                    return Err(bad(format!("{key}: stream nonzeros exceed entries")));
+                }
+                let mut entries = Vec::with_capacity(n_entries);
+                for _ in 0..n_entries {
+                    let runlength = r.u32()?;
+                    let x = r.u8()?;
+                    let value = r.f32()?;
+                    if (x as usize) >= kw.max(1) {
+                        return Err(bad(format!("{key}: entry x out of kernel width")));
+                    }
+                    entries.push(WeightEntry { runlength, x, value });
+                }
+                per_split.push(SplitStream { entries, nonzeros });
+            }
+            streams.push(per_split);
+        }
+        r.done()?;
+        store.insert_rle(key, ConvRle { kh, kw, ci, co, splits, streams });
+    }
+
+    for e in arr("packed_rle")? {
+        let key = entry_key(e)?;
+        let (co, k) = (entry_usize(e, "co")?, entry_usize(e, "k")?);
+        let (nnz, n_starts) = (entry_usize(e, "nnz")?, entry_usize(e, "n_starts")?);
+        let mut r = BlobReader::section(&blob, entry_usize(e, "offset")?, entry_usize(e, "len")?)?;
+        let mut starts = Vec::with_capacity(n_starts);
+        for _ in 0..n_starts {
+            starts.push(r.u64()? as usize);
+        }
+        let mut ks = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            ks.push(r.u32()?);
+        }
+        let lanes = r.take(nnz)?.to_vec();
+        let mut vals = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            vals.push(r.f32()?);
+        }
+        r.done()?;
+        let p = PackedRle::from_parts(co, k, starts, ks, lanes, vals)
+            .map_err(|e| bad(format!("{key}: {e}")))?;
+        store.insert_packed_rle(key, p);
+    }
+
+    let primary = PipelineSpec::from_json(&root.get("primary"))?;
+    let variants = root
+        .get("variants")
+        .as_arr()
+        .ok_or_else(|| bad("missing variants"))?
+        .iter()
+        .map(PipelineSpec::from_json)
+        .collect::<Result<Vec<_>, GraphError>>()?;
+    let tune = match root.get("tune") {
+        Json::Null => None,
+        j => Some(TuneReport::from_json(j).map_err(bad)?),
+    };
+    let field = |k: &str| root.get(k).as_usize().ok_or_else(|| bad(format!("missing {k}")));
+
+    Ok(ModelArtifact {
+        key,
+        isa: root.get("isa").as_str().unwrap_or("unknown").to_string(),
+        batch: field("batch")?,
+        threads: field("threads")?,
+        team: field("team")?,
+        primary,
+        variants,
+        has_latency: root.get("has_latency").as_bool().unwrap_or(false),
+        tune,
+        store,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecutionPlan;
+    use crate::nets::{tiny_cnn, NetConfig};
+    use crate::sparsity::prune_graph;
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hpipe_artifact_{tag}_{}", std::process::id()))
+    }
+
+    fn spec() -> CacheSpec {
+        CacheSpec {
+            opts: PlanOptions::default(),
+            batch: 4,
+            family: vec![2],
+            threads: 2,
+            team: 1,
+            autotune: false,
+            tune_cores: 0,
+        }
+    }
+
+    fn build_artifact() -> (Graph, ModelArtifact) {
+        let mut g = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g, 0.6);
+        let mut store = WeightStore::new();
+        let plan =
+            ExecutionPlan::build_with_store(&g, &PlanOptions::batched(2), &mut store).unwrap();
+        let costs = plan.step_costs();
+        let art = ModelArtifact {
+            key: cache_key(&g, &spec()),
+            isa: crate::exec::isa::active().name().to_string(),
+            batch: 4,
+            threads: 2,
+            team: 1,
+            primary: PipelineSpec { batch: 2, stages: 2, team: 1, costs_ns: costs },
+            variants: vec![],
+            has_latency: true,
+            tune: None,
+            store,
+        };
+        (g, art)
+    }
+
+    #[test]
+    fn key_is_sensitive_to_graph_options_and_family_order_insensitive() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let base = cache_key(&g, &spec());
+        // same request hashes the same
+        assert_eq!(base, cache_key(&g, &spec()));
+        // family order must not matter
+        let mut s = spec();
+        s.family = vec![2, 3];
+        let mut s2 = spec();
+        s2.family = vec![3, 2];
+        assert_eq!(cache_key(&g, &s), cache_key(&g, &s2));
+        // but the set does
+        assert_ne!(cache_key(&g, &s), base);
+        // options matter
+        let mut s3 = spec();
+        s3.opts.sparse_threshold = 0.9;
+        assert_ne!(cache_key(&g, &s3), base);
+        // the graph matters
+        let mut g2 = tiny_cnn(NetConfig::test_scale());
+        prune_graph(&mut g2, 0.5);
+        assert_ne!(cache_key(&g2, &spec()), base);
+    }
+
+    #[test]
+    fn save_load_roundtrips_store_and_specs() {
+        let (_, art) = build_artifact();
+        let dir = temp_dir("rt");
+        save(&dir, &art).unwrap();
+        let back = load(&dir, art.key).unwrap();
+        assert_eq!(back.key, art.key);
+        assert_eq!(back.primary, art.primary);
+        assert_eq!(back.has_latency, art.has_latency);
+        assert_eq!(back.store.len(), art.store.len());
+        assert_eq!(back.store.total_bytes(), art.store.total_bytes());
+        for ((ka, ta), (kb, tb)) in art.store.tensors().zip(back.store.tensors()) {
+            assert_eq!(ka, kb);
+            assert_eq!(ta.shape, tb.shape);
+            assert_eq!(ta.data, tb.data);
+        }
+        for ((ka, pa), (kb, pb)) in art.store.packed_bs().zip(back.store.packed_bs()) {
+            assert_eq!(ka, kb);
+            assert_eq!(pa.data(), pb.data());
+        }
+        for ((ka, pa), (kb, pb)) in art.store.packed_rles().zip(back.store.packed_rles()) {
+            assert_eq!(ka, kb);
+            assert_eq!(pa.vals(), pb.vals());
+            assert_eq!(pa.ks(), pb.ks());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wrong_key_truncation_and_bitflip_all_reject_typed() {
+        let (_, art) = build_artifact();
+        let dir = temp_dir("corrupt");
+        save(&dir, &art).unwrap();
+
+        // stale key
+        let err = load(&dir, art.key ^ 1).unwrap_err();
+        assert!(matches!(err, GraphError::Artifact(_)), "stale key: {err:?}");
+
+        // truncation
+        let bin = std::fs::read(dir.join("plan.bin")).unwrap();
+        std::fs::write(dir.join("plan.bin"), &bin[..bin.len() / 2]).unwrap();
+        let err = load(&dir, art.key).unwrap_err();
+        assert!(matches!(err, GraphError::Artifact(_)), "truncation: {err:?}");
+
+        // single bit flip
+        let mut flipped = bin.clone();
+        flipped[bin.len() / 3] ^= 0x10;
+        std::fs::write(dir.join("plan.bin"), &flipped).unwrap();
+        let err = load(&dir, art.key).unwrap_err();
+        assert!(matches!(err, GraphError::Artifact(_)), "bit flip: {err:?}");
+
+        // garbage JSON
+        std::fs::write(dir.join("plan.bin"), &bin).unwrap();
+        std::fs::write(dir.join("plan.json"), "{ not json").unwrap();
+        let err = load(&dir, art.key).unwrap_err();
+        assert!(matches!(err, GraphError::Artifact(_)), "bad json: {err:?}");
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

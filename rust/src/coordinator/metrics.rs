@@ -84,6 +84,18 @@ pub struct ModelHealth {
     pub time_degraded_ns: u64,
     /// True when `faults` exceeded the per-model `--fault-budget`.
     pub over_budget: bool,
+    /// Bytes of weight state held in the model's shared store (const
+    /// tensors, packed panels, RLE streams) — one copy no matter how
+    /// many plans (primary, latency, family variants) reference it.
+    pub shared_weight_bytes: usize,
+    /// Bytes of per-plan private state (activation arenas plus any
+    /// weight state a plan does not draw from the shared store) summed
+    /// across the model's plans. Family variants should move this by
+    /// O(arena), not O(weights).
+    pub private_weight_bytes: usize,
+    /// Faults carried over from previous runs of this model, restored
+    /// from the plan cache's `faults.json` (0 without `--plan-cache`).
+    pub restored_faults: u64,
 }
 
 impl ModelHealth {
@@ -97,6 +109,15 @@ impl ModelHealth {
             ("degraded_now", Json::from(self.degraded_now)),
             ("time_degraded_ns", Json::from(self.time_degraded_ns as f64)),
             ("over_budget", Json::from(self.over_budget)),
+            (
+                "shared_weight_bytes",
+                Json::from(self.shared_weight_bytes as f64),
+            ),
+            (
+                "private_weight_bytes",
+                Json::from(self.private_weight_bytes as f64),
+            ),
+            ("restored_faults", Json::from(self.restored_faults as f64)),
         ])
     }
 }
@@ -151,6 +172,17 @@ pub struct ServeReport {
     pub recoveries: u64,
     /// Per-model fault/recovery health, in model-name order.
     pub models: Vec<ModelHealth>,
+    /// Wall time from runtime construction to all models loaded and
+    /// ready to serve, in nanoseconds — the number the plan-artifact
+    /// cache exists to shrink (compiled-fresh vs restored-from-disk).
+    pub cold_start_ns: u64,
+    /// True when every served model was restored from the plan cache
+    /// (no model compiled fresh this run). Always false without
+    /// `--plan-cache`.
+    pub plan_cache_hit: bool,
+    /// Fault history carried over from previous runs, summed across
+    /// models (see `models[].restored_faults`).
+    pub restored_faults: u64,
     /// Active SIMD kernel dispatch tier (`exec::isa`), e.g. "fma" —
     /// recorded so perf numbers are comparable across runners.
     pub isa: String,
@@ -203,6 +235,9 @@ impl ServeReport {
                 "models",
                 Json::Arr(self.models.iter().map(ModelHealth::to_json).collect()),
             )
+            .set("cold_start_ns", Json::from(self.cold_start_ns as f64))
+            .set("plan_cache_hit", Json::from(self.plan_cache_hit))
+            .set("restored_faults", Json::from(self.restored_faults as f64))
             .set("isa", Json::from(self.isa.clone()));
         if let Some((ok, total)) = self.interp_agreement {
             root.set(
@@ -260,7 +295,29 @@ impl ServeReport {
                 self.degraded
             );
         }
+        if self.cold_start_ns > 0 {
+            println!(
+                "cold start: {:?} ({}){}",
+                Duration::from_nanos(self.cold_start_ns),
+                if self.plan_cache_hit {
+                    "plan cache hit"
+                } else {
+                    "compiled fresh"
+                },
+                if self.restored_faults > 0 {
+                    format!(", {} faults restored from history", self.restored_faults)
+                } else {
+                    String::new()
+                }
+            );
+        }
         for h in &self.models {
+            if h.shared_weight_bytes + h.private_weight_bytes > 0 {
+                println!(
+                    "  model {}: resident weights {} B shared + {} B private",
+                    h.name, h.shared_weight_bytes, h.private_weight_bytes
+                );
+            }
             if h.faults + h.trips + h.recoveries == 0 && !h.degraded_now {
                 continue;
             }
@@ -377,8 +434,14 @@ mod tests {
             degraded_now: false,
             time_degraded_ns: 5_000,
             over_budget: true,
+            shared_weight_bytes: 4_096,
+            private_weight_bytes: 512,
+            restored_faults: 7,
         }];
         r.isa = "avx2".into();
+        r.cold_start_ns = 42_000;
+        r.plan_cache_hit = true;
+        r.restored_faults = 7;
         r.pipeline_idle_ns = 1_234_567;
         r.tail_batches = 4;
         r.padded_images = 9;
@@ -402,6 +465,12 @@ mod tests {
         assert_eq!(models[0].get("degraded_now").as_bool(), Some(false));
         assert_eq!(models[0].get("time_degraded_ns").as_f64(), Some(5_000.0));
         assert_eq!(models[0].get("over_budget").as_bool(), Some(true));
+        assert_eq!(models[0].get("shared_weight_bytes").as_f64(), Some(4_096.0));
+        assert_eq!(models[0].get("private_weight_bytes").as_f64(), Some(512.0));
+        assert_eq!(models[0].get("restored_faults").as_f64(), Some(7.0));
+        assert_eq!(parsed.get("cold_start_ns").as_f64(), Some(42_000.0));
+        assert_eq!(parsed.get("plan_cache_hit").as_bool(), Some(true));
+        assert_eq!(parsed.get("restored_faults").as_f64(), Some(7.0));
         assert_eq!(parsed.get("latency").get("p50_us").as_f64(), Some(30.0));
         let stages = parsed.get("stages").as_arr().unwrap();
         assert_eq!(stages.len(), 2);

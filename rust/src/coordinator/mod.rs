@@ -39,7 +39,7 @@ use crate::util::Rng;
 use batcher::{drain_batch, feed_batches, malformed, BatchPolicy, PreparedBatch, FEED_DEPTH};
 use metrics::{LatencyStats, ModelHealth, ServeReport};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
 
@@ -218,6 +218,7 @@ impl Coordinator {
         let mut recoveries = 0u64;
         let mut tail_batches = 0u64;
         let mut padded_images = 0u64;
+        let mut restored_faults = 0u64;
         let mut models = Vec::new();
         for m in self.runtime.models() {
             let fs = m.fault_stats();
@@ -226,6 +227,9 @@ impl Coordinator {
                 degraded += 1;
             }
             recoveries += fs.recoveries;
+            let (shared_weight_bytes, private_weight_bytes) = m.weight_bytes();
+            let restored = m.restored_faults();
+            restored_faults += restored.faults;
             let health = ModelHealth {
                 name: m.name.clone(),
                 faults: fs.faults,
@@ -235,6 +239,9 @@ impl Coordinator {
                 degraded_now: fs.degraded,
                 time_degraded_ns: fs.time_degraded_ns,
                 over_budget: self.fault_budget.is_some_and(|b| fs.faults > b),
+                shared_weight_bytes,
+                private_weight_bytes,
+                restored_faults: restored.faults,
             };
             if health.over_budget {
                 // loud and structured: greppable in logs, parseable by
@@ -274,6 +281,11 @@ impl Coordinator {
             degraded,
             recoveries,
             models,
+            // serve_demo overwrites this with the measured load span;
+            // a directly-driven coordinator reports 0 (unknown)
+            cold_start_ns: 0,
+            plan_cache_hit: self.runtime.cache_hits > 0 && self.runtime.cache_misses == 0,
+            restored_faults,
             isa: crate::exec::isa::active().name().to_string(),
         })
     }
@@ -495,6 +507,11 @@ pub struct ServeConfig {
     /// structured warning + `over_budget` in the report. `None` =
     /// unlimited.
     pub fault_budget: Option<u64>,
+    /// Plan-artifact cache directory (`--plan-cache DIR`): load
+    /// compiled plans from versioned on-disk artifacts when the cache
+    /// key matches, compile-and-save on miss, and persist per-model
+    /// fault history across restarts. `None` disables the cache.
+    pub plan_cache: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -513,6 +530,7 @@ impl Default for ServeConfig {
             recover_after_ms: None,
             no_recover: false,
             fault_budget: None,
+            plan_cache: None,
         }
     }
 }
@@ -530,6 +548,9 @@ impl Default for ServeConfig {
 /// 4. cross-check classifications against the Rust reference
 ///    interpreter running the same graphdef.
 pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
+    // cold start = runtime construction through "every model is loaded
+    // and ready to serve" — the span the plan-artifact cache shrinks
+    let cold_start = Instant::now();
     let mut runtime = Runtime::cpu(artifacts_dir)?
         .with_threads(cfg.threads)
         .with_team(cfg.team);
@@ -539,6 +560,9 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
     if let Some(sizes) = &cfg.plan_family {
         runtime = runtime.with_plan_family(sizes);
     }
+    if let Some(dir) = &cfg.plan_cache {
+        runtime = runtime.with_plan_cache(dir);
+    }
     let mut breaker_cfg = match cfg.recover_after_ms {
         Some(ms) => BreakerConfig::with_cooldown_ms(ms),
         None => BreakerConfig::default(),
@@ -546,6 +570,15 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
     breaker_cfg.recover = !cfg.no_recover;
     runtime = runtime.with_recovery(breaker_cfg);
     let loaded = runtime.load_manifest()?;
+    let cold_start_ns = cold_start.elapsed().as_nanos() as u64;
+    if cfg.plan_cache.is_some() {
+        println!(
+            "plan cache: {} hit(s), {} miss(es), cold start {:?}",
+            runtime.cache_hits,
+            runtime.cache_misses,
+            Duration::from_nanos(cold_start_ns)
+        );
+    }
     println!(
         "runtime: platform={} threads={} team={} autotune={} overlap={} loaded {:?}",
         runtime.platform(),
@@ -627,6 +660,12 @@ pub fn serve_demo(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport
 
     let mut report = coordinator.run(rx)?;
     report.shed = client.join().unwrap_or(0);
+    report.cold_start_ns = cold_start_ns;
+    if cfg.plan_cache.is_some() {
+        // write fault/breaker history next to the plan artifacts so the
+        // next cold start reports what this run endured
+        coordinator.runtime.persist_faults();
+    }
 
     // collect the replies — every submitted request must have exactly
     // one, a classification or a typed refusal — and cross-check the

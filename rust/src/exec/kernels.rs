@@ -300,6 +300,27 @@ impl PackedB {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+
+    /// The raw panel data (artifact serialization).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Reassemble a `PackedB` from stored parts (artifact load). The
+    /// only structural invariant is the data length — panel layout is
+    /// positional — so that is what gets validated; a mismatch means a
+    /// corrupt or mislabeled artifact entry.
+    pub fn from_parts(k: usize, n: usize, data: Vec<f32>) -> Result<PackedB, String> {
+        let panels = n.div_ceil(NR);
+        let expect = panels * NR * k;
+        if data.len() != expect {
+            return Err(format!(
+                "PackedB[{k}x{n}]: stored {} f32s, layout needs {expect}",
+                data.len()
+            ));
+        }
+        Ok(PackedB { k, n, panels, data })
+    }
 }
 
 /// Repack a row-major [k, n] matrix (e.g. HWIO conv weights flattened to

@@ -112,16 +112,19 @@ pub mod kernels;
 pub mod pipeline;
 pub mod profile;
 pub mod sparse;
+pub mod store;
 pub mod tune;
 
 pub use kernels::{Act, ConvGeom};
 pub use pipeline::{PipelinePlan, StageFault, StageMetrics};
 pub use profile::{profile_plan, ProfileOptions, StepProfile};
+pub use store::WeightStore;
 pub use tune::{choose_cuts, TuneEntry, TuneOptions, TuneReport, TunedCuts};
 
 use crate::graph::{Graph, GraphError, Op, Tensor};
 use crate::sparsity::rle::{encode_conv, encode_matmul, ConvRle};
 use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Arc;
 
 /// Knobs for plan construction.
 #[derive(Clone, Copy, Debug)]
@@ -225,18 +228,19 @@ enum StepKind {
     DenseConv {
         geom: ConvGeom,
         w: usize,
-        /// Plan-time packed weight panels; `None` only for the PR 3
-        /// baseline ([`PlanOptions::unpacked`]).
-        packed: Option<kernels::PackedB>,
+        /// Plan-time packed weight panels, shared through the model's
+        /// [`WeightStore`]; `None` only for the PR 3 baseline
+        /// ([`PlanOptions::unpacked`]).
+        packed: Option<Arc<kernels::PackedB>>,
         bias: Option<usize>,
         act: Act,
     },
     SparseConv {
         geom: ConvGeom,
         /// Encoded streams (kept for the cycle-cost model / baseline).
-        rle: ConvRle,
+        rle: Arc<ConvRle>,
         /// Plan-time pre-decoded nonzeros; `None` only for the baseline.
-        packed: Option<sparse::PackedRle>,
+        packed: Option<Arc<sparse::PackedRle>>,
         bias: Option<usize>,
         act: Act,
     },
@@ -252,7 +256,7 @@ enum StepKind {
         k: usize,
         co: usize,
         w: usize,
-        packed: Option<kernels::PackedB>,
+        packed: Option<Arc<kernels::PackedB>>,
         bias: Option<usize>,
         act: Act,
     },
@@ -260,8 +264,8 @@ enum StepKind {
         n: usize,
         k: usize,
         co: usize,
-        rle: ConvRle,
-        packed: Option<sparse::PackedRle>,
+        rle: Arc<ConvRle>,
+        packed: Option<Arc<sparse::PackedRle>>,
         bias: Option<usize>,
         act: Act,
     },
@@ -316,7 +320,12 @@ pub struct PlanStats {
 /// A compiled, reusable execution plan for one graph at one batch size.
 pub struct ExecutionPlan {
     steps: Vec<Step>,
-    consts: Vec<Tensor>,
+    /// Const tensors, `Arc`-shared through the model's [`WeightStore`].
+    /// Entries `< shared_consts` are store-backed (graph consts and
+    /// build-time folds); entries `>= shared_consts` are plan-private
+    /// batch-tiled copies.
+    consts: Vec<Arc<Tensor>>,
+    shared_consts: usize,
     slot_lens: Vec<usize>,
     scratch_len: usize,
     acc_len: usize,
@@ -359,6 +368,22 @@ impl ExecutionPlan {
     /// kernel processes the whole batch (shared weight tiles / one RLE
     /// stream walk — see [`kernels`] and [`sparse`]).
     pub fn build_with(graph: &Graph, opts: &PlanOptions) -> Result<ExecutionPlan, GraphError> {
+        let mut store = WeightStore::new();
+        ExecutionPlan::build_with_store(graph, opts, &mut store)
+    }
+
+    /// [`Self::build_with`], sharing compiled weight state through
+    /// `store`: const tensors, folded constants, packed panels and RLE
+    /// streams are fetched get-or-insert, so every plan built against
+    /// the same store (batch variants, the latency plan, calibration
+    /// plans) references one copy of each — and a store prepopulated
+    /// from an on-disk artifact skips the fold/encode/pack work
+    /// entirely. Batch-tiled constants stay plan-private.
+    pub fn build_with_store(
+        graph: &Graph,
+        opts: &PlanOptions,
+        store: &mut WeightStore,
+    ) -> Result<ExecutionPlan, GraphError> {
         let order = graph.topo_order()?;
         let shapes = graph.infer_shapes()?;
         let mut stats = PlanStats::default();
@@ -391,34 +416,45 @@ impl ExecutionPlan {
         };
 
         // ---- constants + constant folding ----
-        let mut consts: Vec<Tensor> = Vec::new();
+        // Both raw consts and fold results go through the store keyed
+        // by node name: the fold decision (all inputs const) is
+        // graph-deterministic and `fold_node` covers every compute op,
+        // so a store hit is always the same value a fresh fold would
+        // produce — and skips the interp-kernel evaluation.
+        let mut consts: Vec<Arc<Tensor>> = Vec::new();
         let mut const_idx: HashMap<String, usize> = HashMap::new();
         for &i in &order {
             let n = &graph.nodes[i];
             match &n.op {
                 Op::Const => {
-                    let v = n.value.clone().ok_or_else(|| {
-                        GraphError::Invalid(n.name.clone(), "Const without value".into())
+                    let t = store.tensor_with(&n.name, || {
+                        n.value.clone().ok_or_else(|| {
+                            GraphError::Invalid(n.name.clone(), "Const without value".into())
+                        })
                     })?;
                     const_idx.insert(n.name.clone(), consts.len());
-                    consts.push(v);
+                    consts.push(t);
                 }
                 Op::Placeholder { .. } => {}
                 op => {
                     if !n.inputs.is_empty()
                         && n.inputs.iter().all(|s| const_idx.contains_key(s))
                     {
-                        let ins: Vec<&Tensor> =
-                            n.inputs.iter().map(|s| &consts[const_idx[s]]).collect();
-                        if let Some(v) = fold_node(op, &ins) {
-                            const_idx.insert(n.name.clone(), consts.len());
-                            consts.push(v);
-                            stats.folded_consts += 1;
-                        }
+                        let t = store.tensor_with(&n.name, || {
+                            let ins: Vec<&Tensor> =
+                                n.inputs.iter().map(|s| &*consts[const_idx[s]]).collect();
+                            Ok(fold_node(op, &ins).expect("every compute op folds"))
+                        })?;
+                        const_idx.insert(n.name.clone(), consts.len());
+                        consts.push(t);
+                        stats.folded_consts += 1;
                     }
                 }
             }
         }
+        // Everything below this index is store-shared; batch-tiled
+        // copies appended later are plan-private.
+        let shared_consts = consts.len();
 
         // ---- fusion scan ----
         let consumers = graph.consumers();
@@ -543,11 +579,19 @@ impl ExecutionPlan {
                     );
                     if w.sparsity() >= opts.sparse_threshold {
                         stats.sparse_convs += 1;
-                        let rle = encode_conv(w, opts.splits);
+                        let rle = store.rle_with(
+                            &format!("{}@rle{}", n.inputs[1], opts.splits),
+                            || encode_conv(w, opts.splits),
+                        );
                         // Pre-decode at plan build: the hot path never
                         // runs the runlength decoder (HPIPE bakes weight
                         // words into per-layer M20Ks the same way).
-                        let packed = opts.packed.then(|| sparse::pack_rle(&rle));
+                        let packed = opts.packed.then(|| {
+                            store.packed_rle_with(
+                                &format!("{}@prle{}", n.inputs[1], opts.splits),
+                                || sparse::pack_rle(&rle),
+                            )
+                        });
                         StepKind::SparseConv {
                             geom,
                             rle,
@@ -557,9 +601,12 @@ impl ExecutionPlan {
                         }
                     } else {
                         stats.dense_convs += 1;
-                        let packed = opts
-                            .packed
-                            .then(|| kernels::pack_b(w.as_slice(), geom.patch_len(), geom.co));
+                        let packed = opts.packed.then(|| {
+                            store.packed_b_with(
+                                &format!("{}@pb{}x{}", n.inputs[1], geom.patch_len(), geom.co),
+                                || kernels::pack_b(w.as_slice(), geom.patch_len(), geom.co),
+                            )
+                        });
                         StepKind::DenseConv {
                             geom,
                             w: widx,
@@ -591,8 +638,16 @@ impl ExecutionPlan {
                     let (nrows, k, co) = (xs[0] * batch, w.shape[0], w.shape[1]);
                     if w.sparsity() >= opts.sparse_threshold {
                         stats.sparse_matmuls += 1;
-                        let rle = encode_matmul(w, opts.splits);
-                        let packed = opts.packed.then(|| sparse::pack_rle(&rle));
+                        let rle = store.rle_with(
+                            &format!("{}@rleM{}", n.inputs[1], opts.splits),
+                            || encode_matmul(w, opts.splits),
+                        );
+                        let packed = opts.packed.then(|| {
+                            store.packed_rle_with(
+                                &format!("{}@prleM{}", n.inputs[1], opts.splits),
+                                || sparse::pack_rle(&rle),
+                            )
+                        });
                         StepKind::SparseMatMul {
                             n: nrows,
                             k,
@@ -604,7 +659,11 @@ impl ExecutionPlan {
                         }
                     } else {
                         stats.dense_matmuls += 1;
-                        let packed = opts.packed.then(|| kernels::pack_b(w.as_slice(), k, co));
+                        let packed = opts.packed.then(|| {
+                            store.packed_b_with(&format!("{}@pb{}x{}", n.inputs[1], k, co), || {
+                                kernels::pack_b(w.as_slice(), k, co)
+                            })
+                        });
                         StepKind::DenseMatMul {
                             n: nrows,
                             k,
@@ -746,9 +805,9 @@ impl ExecutionPlan {
         // across the batch; memoized so a const shared by several Adds
         // (or an output) is tiled once.
         let mut tiled: HashMap<usize, usize> = HashMap::new();
-        let mut tile = |c: usize, consts: &mut Vec<Tensor>| -> usize {
+        let mut tile = |c: usize, consts: &mut Vec<Arc<Tensor>>| -> usize {
             *tiled.entry(c).or_insert_with(|| {
-                consts.push(tile_batch(&consts[c], batch));
+                consts.push(Arc::new(tile_batch(&consts[c], batch)));
                 consts.len() - 1
             })
         };
@@ -843,6 +902,7 @@ impl ExecutionPlan {
         Ok(ExecutionPlan {
             steps,
             consts,
+            shared_consts,
             slot_lens,
             scratch_len,
             acc_len,
@@ -860,6 +920,22 @@ impl ExecutionPlan {
 
     pub fn stats(&self) -> PlanStats {
         self.stats
+    }
+
+    /// Bytes held in plan-*private* constants — the batch-tiled copies
+    /// appended past the store-shared prefix. Together with
+    /// [`Self::arena_bytes`] this is what an extra plan-family variant
+    /// actually costs: O(arena), not O(weights).
+    pub fn private_weight_bytes(&self) -> usize {
+        self.consts[self.shared_consts..]
+            .iter()
+            .map(|t| t.data.len() * 4)
+            .sum()
+    }
+
+    /// Bytes of per-context activation arena + kernel scratch.
+    pub fn arena_bytes(&self) -> usize {
+        (self.stats.arena_f32 + self.stats.scratch_f32) * 4
     }
 
     /// Allocate the per-run buffers once; reuse across runs for
@@ -1219,7 +1295,7 @@ fn team_sparse_rows(
     });
 }
 
-fn resolve_src<'a>(consts: &'a [Tensor], slots: &'a [Vec<f32>], s: Src) -> &'a [f32] {
+fn resolve_src<'a>(consts: &'a [Arc<Tensor>], slots: &'a [Vec<f32>], s: Src) -> &'a [f32] {
     match s {
         Src::Const(i) => consts[i].as_slice(),
         Src::Slot(i) => &slots[i],

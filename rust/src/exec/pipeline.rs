@@ -467,6 +467,29 @@ impl PipelinePlan {
         PipelinePlan::from_costs(plan, &profile.costs_ns, stages, team)
     }
 
+    /// Rebuild a pipeline from a stored per-step cost vector — the
+    /// artifact-cache restore path: a saved artifact records the costs
+    /// that produced its cuts (model-driven or measured), and reloading
+    /// replays them through the same partition DP, reproducing the
+    /// exact stage ranges and team placement without re-profiling.
+    /// Panics if `costs` was captured on a plan with a different step
+    /// count (the artifact layer validates before calling).
+    pub fn from_static_costs(
+        plan: ExecutionPlan,
+        costs: &[u64],
+        stages: usize,
+        team: usize,
+    ) -> PipelinePlan {
+        assert_eq!(
+            costs.len(),
+            plan.steps.len(),
+            "stored cost vector has {} entries but the plan has {} steps",
+            costs.len(),
+            plan.steps.len()
+        );
+        PipelinePlan::from_costs(plan, costs, stages, team)
+    }
+
     /// Shared core of the model-driven and profile-guided constructors:
     /// cut the plan by an arbitrary per-step `u64` cost vector. The cost
     /// source only moves the cuts and the team's target stage — per-item

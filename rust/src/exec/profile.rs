@@ -91,6 +91,25 @@ impl StepProfile {
             ("steps", steps),
         ])
     }
+
+    /// Inverse of [`Self::to_json`] — the artifact cache restores a
+    /// saved calibration profile with this instead of re-measuring.
+    pub fn from_json(j: &Json) -> Result<StepProfile, String> {
+        let batch = j.get("batch").as_usize().ok_or("profile: missing batch")?;
+        let runs = j.get("runs").as_usize().ok_or("profile: missing runs")?;
+        let steps = j.get("steps").as_arr().ok_or("profile: missing steps")?;
+        let mut names = Vec::with_capacity(steps.len());
+        let mut costs_ns = Vec::with_capacity(steps.len());
+        for s in steps {
+            names.push(s.get("name").as_str().ok_or("profile: step name")?.to_string());
+            let ns = s.get("ns").as_f64().ok_or("profile: step ns")?;
+            if !(ns.is_finite() && ns >= 0.0) {
+                return Err("profile: step ns out of range".into());
+            }
+            costs_ns.push(ns as u64);
+        }
+        Ok(StepProfile { batch, runs, names, costs_ns })
+    }
 }
 
 /// Run deterministic warmup images through `plan` sequentially and

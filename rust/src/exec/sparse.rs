@@ -90,6 +90,71 @@ impl PackedRle {
     pub fn nonzeros(&self) -> usize {
         self.ks.len()
     }
+
+    // Raw stream access (artifact serialization).
+
+    pub fn starts(&self) -> &[usize] {
+        &self.starts
+    }
+
+    pub fn ks(&self) -> &[u32] {
+        &self.ks
+    }
+
+    pub fn lanes(&self) -> &[u8] {
+        &self.lanes
+    }
+
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    /// Reassemble a `PackedRle` from stored parts (artifact load),
+    /// validating every structural invariant the kernels rely on:
+    /// equal-length entry arrays, a monotone `starts` covering all
+    /// entries with one range per OCB-channel bundle, lanes inside the
+    /// bundle width, and patch-row indices inside `k`. A violation
+    /// means a corrupt artifact and is reported, never executed.
+    pub fn from_parts(
+        co: usize,
+        k: usize,
+        starts: Vec<usize>,
+        ks: Vec<u32>,
+        lanes: Vec<u8>,
+        vals: Vec<f32>,
+    ) -> Result<PackedRle, String> {
+        let nnz = ks.len();
+        if lanes.len() != nnz || vals.len() != nnz {
+            return Err(format!(
+                "PackedRle[{co}x{k}]: entry arrays disagree ({nnz} ks, {} lanes, {} vals)",
+                lanes.len(),
+                vals.len()
+            ));
+        }
+        if starts.len() != co.div_ceil(OCB) + 1 {
+            return Err(format!(
+                "PackedRle[{co}x{k}]: {} bundle starts, expected {}",
+                starts.len(),
+                co.div_ceil(OCB) + 1
+            ));
+        }
+        if starts.first() != Some(&0) || starts.last() != Some(&nnz) {
+            return Err(format!("PackedRle[{co}x{k}]: starts do not span 0..{nnz}"));
+        }
+        if starts.windows(2).any(|w| w[0] > w[1]) {
+            return Err(format!("PackedRle[{co}x{k}]: starts not monotone"));
+        }
+        if ks.iter().any(|&e| e as usize >= k) {
+            return Err(format!("PackedRle[{co}x{k}]: patch-row index out of range"));
+        }
+        for b in 0..starts.len() - 1 {
+            let ocs = (co - (b * OCB).min(co)).min(OCB);
+            if lanes[starts[b]..starts[b + 1]].iter().any(|&l| (l as usize) >= ocs) {
+                return Err(format!("PackedRle[{co}x{k}]: lane out of bundle {b} width"));
+            }
+        }
+        Ok(PackedRle { co, k, starts, ks, lanes, vals })
+    }
 }
 
 /// Pre-decode an RLE weight stream at plan build time. This is the only

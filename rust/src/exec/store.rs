@@ -1,0 +1,193 @@
+//! Refcounted shared weight store.
+//!
+//! HPIPE compiles each layer's weights into that layer's own M20K banks
+//! exactly once; every consumer of the layer reads the same banks. The
+//! software reproduction historically did the opposite: each
+//! [`super::ExecutionPlan`] — the primary batched plan, the batch-1
+//! latency plan, every plan-family variant, and each of the autotuner's
+//! calibration plans — recomputed and privately owned its weight
+//! constants, RLE streams and packed panels. A model with plan-family
+//! variants therefore paid O(weights) per variant.
+//!
+//! [`WeightStore`] fixes that: it is a get-or-insert cache of
+//! `Arc`-backed compiled weight state, keyed by graph const name (plus
+//! encoding parameters for derived forms). Threaded through
+//! [`super::ExecutionPlan::build_with_store`], every plan built against
+//! the same store shares one copy of:
+//!
+//! * each const tensor (including build-time folded constants — the
+//!   fold decision is graph-deterministic, so a prepopulated store also
+//!   skips the fold computation);
+//! * each dense packed-panel matrix ([`kernels::PackedB`]);
+//! * each RLE encoding ([`ConvRle`]) and its pre-decoded flat form
+//!   ([`sparse::PackedRle`]).
+//!
+//! Batch-*tiled* constants stay plan-private (they depend on the plan's
+//! batch dimension); they are the O(arena) part a variant legitimately
+//! adds. The store is also the unit of artifact persistence: the
+//! `artifact` module serializes a store to `plan.bin` and prepopulates
+//! one at load so no `pack_b` / `pack_rle` / fold work runs on a cache
+//! hit. Sharing across batch variants is valid because every stored
+//! form is batch-independent: panels depend on (weights, k, n), RLE on
+//! (weights, splits), and sparse-vs-dense selection on the sparsity
+//! threshold alone.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::graph::{GraphError, Tensor};
+use crate::sparsity::rle::ConvRle;
+
+use super::{kernels, sparse};
+
+/// Shared, refcounted compiled-weight state (see module docs). Cloning
+/// a store clones the `Arc` handles, not the weights.
+#[derive(Clone, Default)]
+pub struct WeightStore {
+    tensors: BTreeMap<String, Arc<Tensor>>,
+    packed_b: BTreeMap<String, Arc<kernels::PackedB>>,
+    rle: BTreeMap<String, Arc<ConvRle>>,
+    packed_rle: BTreeMap<String, Arc<sparse::PackedRle>>,
+}
+
+impl WeightStore {
+    pub fn new() -> WeightStore {
+        WeightStore::default()
+    }
+
+    /// Get-or-insert a const tensor. `make` runs only on a miss (a
+    /// prepopulated store never re-clones or re-folds).
+    pub fn tensor_with(
+        &mut self,
+        key: &str,
+        make: impl FnOnce() -> Result<Tensor, GraphError>,
+    ) -> Result<Arc<Tensor>, GraphError> {
+        if let Some(t) = self.tensors.get(key) {
+            return Ok(t.clone());
+        }
+        let t = Arc::new(make()?);
+        self.tensors.insert(key.to_string(), t.clone());
+        Ok(t)
+    }
+
+    /// Get-or-insert a dense packed-panel matrix.
+    pub fn packed_b_with(
+        &mut self,
+        key: &str,
+        make: impl FnOnce() -> kernels::PackedB,
+    ) -> Arc<kernels::PackedB> {
+        self.packed_b
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(make()))
+            .clone()
+    }
+
+    /// Get-or-insert an RLE weight encoding.
+    pub fn rle_with(&mut self, key: &str, make: impl FnOnce() -> ConvRle) -> Arc<ConvRle> {
+        self.rle
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(make()))
+            .clone()
+    }
+
+    /// Get-or-insert a pre-decoded RLE stream.
+    pub fn packed_rle_with(
+        &mut self,
+        key: &str,
+        make: impl FnOnce() -> sparse::PackedRle,
+    ) -> Arc<sparse::PackedRle> {
+        self.packed_rle
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(make()))
+            .clone()
+    }
+
+    // -- direct inserts (artifact deserialization) --
+
+    pub fn insert_tensor(&mut self, key: &str, t: Tensor) {
+        self.tensors.insert(key.to_string(), Arc::new(t));
+    }
+
+    pub fn insert_packed_b(&mut self, key: &str, p: kernels::PackedB) {
+        self.packed_b.insert(key.to_string(), Arc::new(p));
+    }
+
+    pub fn insert_rle(&mut self, key: &str, r: ConvRle) {
+        self.rle.insert(key.to_string(), Arc::new(r));
+    }
+
+    pub fn insert_packed_rle(&mut self, key: &str, p: sparse::PackedRle) {
+        self.packed_rle.insert(key.to_string(), Arc::new(p));
+    }
+
+    // -- read access (artifact serialization / introspection) --
+
+    pub fn tensors(&self) -> impl Iterator<Item = (&str, &Arc<Tensor>)> {
+        self.tensors.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn packed_bs(&self) -> impl Iterator<Item = (&str, &Arc<kernels::PackedB>)> {
+        self.packed_b.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn rles(&self) -> impl Iterator<Item = (&str, &Arc<ConvRle>)> {
+        self.rle.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn packed_rles(&self) -> impl Iterator<Item = (&str, &Arc<sparse::PackedRle>)> {
+        self.packed_rle.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Total entries across all four kinds.
+    pub fn len(&self) -> usize {
+        self.tensors.len() + self.packed_b.len() + self.rle.len() + self.packed_rle.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes held by the store — the *shared* side of a
+    /// model's `resident_weight_bytes` (plan-private tiled consts and
+    /// arenas are accounted per plan).
+    pub fn total_bytes(&self) -> usize {
+        let tensors: usize = self.tensors.values().map(|t| t.data.len() * 4).sum();
+        let panels: usize = self.packed_b.values().map(|p| p.len() * 4).sum();
+        // One RLE entry is (u32 runlength, u8 lane, f32 value).
+        let rle: usize = self
+            .rle
+            .values()
+            .map(|r| {
+                r.streams
+                    .iter()
+                    .flat_map(|oc| oc.iter())
+                    .map(|s| s.entries.len() * 9)
+                    .sum::<usize>()
+            })
+            .sum();
+        let prle: usize = self
+            .packed_rle
+            .values()
+            .map(|p| (p.n_bundles() + 1) * 8 + p.nonzeros() * 9)
+            .sum();
+        tensors + panels + rle + prle
+    }
+
+    /// `(key, Arc strong count)` for every entry — lets tests assert
+    /// that N plans sharing the store hold exactly one copy of each
+    /// weight (every count == N users + 1 for the store itself).
+    pub fn refcounts(&self) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> = Vec::with_capacity(self.len());
+        out.extend(self.tensors.iter().map(|(k, v)| (format!("tensor:{k}"), Arc::strong_count(v))));
+        out.extend(
+            self.packed_b.iter().map(|(k, v)| (format!("packed_b:{k}"), Arc::strong_count(v))),
+        );
+        out.extend(self.rle.iter().map(|(k, v)| (format!("rle:{k}"), Arc::strong_count(v))));
+        out.extend(
+            self.packed_rle
+                .iter()
+                .map(|(k, v)| (format!("packed_rle:{k}"), Arc::strong_count(v))),
+        );
+        out
+    }
+}

@@ -243,6 +243,53 @@ impl TuneEntry {
             ("profile", self.profile.to_json()),
         ])
     }
+
+    /// Inverse of [`Self::to_json`] — restores a calibration entry from
+    /// a saved artifact so loading never re-profiles.
+    pub fn from_json(j: &Json) -> Result<TuneEntry, String> {
+        let ranges_from = |j: &Json, what: &str| -> Result<Vec<(usize, usize)>, String> {
+            j.as_arr()
+                .ok_or_else(|| format!("tune entry: missing {what}"))?
+                .iter()
+                .map(|r| {
+                    let v = r.usize_vec().filter(|v| v.len() == 2);
+                    v.map(|v| (v[0], v[1])).ok_or_else(|| format!("tune entry: bad {what}"))
+                })
+                .collect()
+        };
+        let group = j.get("group").as_usize().ok_or("tune entry: missing group")?;
+        let stages = j.get("stages").as_usize().ok_or("tune entry: missing stages")?;
+        let team = j.get("team").as_usize().ok_or("tune entry: missing team")?;
+        let bottleneck_ns = j
+            .get("bottleneck_ns")
+            .as_f64()
+            .filter(|v| v.is_finite() && *v >= 0.0)
+            .ok_or("tune entry: missing bottleneck_ns")? as u64;
+        let stage_costs_ns = j
+            .get("stage_ns")
+            .as_arr()
+            .ok_or("tune entry: missing stage_ns")?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|v| v.is_finite() && *v >= 0.0)
+                    .map(|v| v as u64)
+                    .ok_or_else(|| "tune entry: bad stage_ns".to_string())
+            })
+            .collect::<Result<Vec<u64>, String>>()?;
+        let ranges = ranges_from(j.get("ranges"), "ranges")?;
+        let model_ranges = ranges_from(j.get("model_ranges"), "model_ranges")?;
+        if ranges.len() != stages || stage_costs_ns.len() != stages {
+            return Err("tune entry: stage count disagrees with ranges".into());
+        }
+        let profile = StepProfile::from_json(j.get("profile"))?;
+        Ok(TuneEntry {
+            group,
+            profile,
+            cuts: TunedCuts { ranges, stages, team, stage_costs_ns, bottleneck_ns },
+            model_ranges,
+        })
+    }
 }
 
 /// Whole-model calibration report: every group-batch size profiled while
@@ -285,6 +332,28 @@ impl TuneReport {
                 Json::Arr(self.entries.iter().map(|e| e.to_json()).collect()),
             ),
         ])
+    }
+
+    /// Inverse of [`Self::to_json`] — restores the whole calibration
+    /// cache from a saved artifact (an autotuned model's cold start
+    /// then skips profiling entirely).
+    pub fn from_json(j: &Json) -> Result<TuneReport, String> {
+        Ok(TuneReport {
+            model: j.get("model").as_str().ok_or("tune report: missing model")?.to_string(),
+            cores: j.get("cores").as_usize().ok_or("tune report: missing cores")?,
+            batch: j.get("batch").as_usize().ok_or("tune report: missing batch")?,
+            chosen_group: j
+                .get("chosen_group")
+                .as_usize()
+                .ok_or("tune report: missing chosen_group")?,
+            entries: j
+                .get("entries")
+                .as_arr()
+                .ok_or("tune report: missing entries")?
+                .iter()
+                .map(TuneEntry::from_json)
+                .collect::<Result<Vec<_>, String>>()?,
+        })
     }
 
     /// Human-readable calibration summary.
@@ -484,5 +553,40 @@ mod tests {
         assert_eq!(entries[0].get("group").as_usize(), Some(1));
         assert!(entries[0].get("profile").get("steps").as_arr().is_some());
         assert!(entries[0].get("ranges").as_arr().is_some());
+    }
+
+    /// The artifact cache restores calibration through `from_json`; the
+    /// decision-bearing fields must survive a serialize/parse cycle
+    /// exactly, or a cached cold start would serve different cuts.
+    #[test]
+    fn tune_report_json_roundtrips() {
+        let g = tiny_cnn(NetConfig::test_scale());
+        let plan = ExecutionPlan::build(&g).unwrap();
+        let opts = TuneOptions {
+            cores: 2,
+            profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+        };
+        let report = TuneReport {
+            model: "tinycnn".into(),
+            cores: 2,
+            batch: 4,
+            chosen_group: 1,
+            entries: vec![TuneEntry::calibrate(&plan, &opts)],
+        };
+        let parsed = Json::parse(&report.to_json().pretty()).unwrap();
+        let restored = TuneReport::from_json(&parsed).unwrap();
+        assert_eq!(restored.model, report.model);
+        assert_eq!(restored.cores, report.cores);
+        assert_eq!(restored.batch, report.batch);
+        assert_eq!(restored.chosen_group, report.chosen_group);
+        assert_eq!(restored.entries.len(), 1);
+        assert_eq!(restored.entries[0].cuts, report.entries[0].cuts);
+        assert_eq!(restored.entries[0].group, report.entries[0].group);
+        assert_eq!(restored.entries[0].model_ranges, report.entries[0].model_ranges);
+        assert_eq!(
+            restored.entries[0].profile.costs_ns,
+            report.entries[0].profile.costs_ns
+        );
+        assert_eq!(restored.entries[0].profile.names, report.entries[0].profile.names);
     }
 }

@@ -21,6 +21,19 @@ pub const INLINE_LIMIT: usize = 16;
 /// Const tensor exceeds the inline limit).
 pub fn save(graph: &Graph, dir: &Path) -> Result<()> {
     fs::create_dir_all(dir)?;
+    let (json, blob) = to_parts(graph);
+    fs::write(dir.join("graph.json"), json)?;
+    if !blob.is_empty() {
+        fs::write(dir.join("weights.bin"), &blob)?;
+    }
+    Ok(())
+}
+
+/// Serialize a graph to its in-memory `(graph.json text, weights.bin
+/// blob)` pair — the exact bytes [`save`] writes. Separated from the
+/// filesystem so the artifact cache can content-hash a graph without
+/// touching disk.
+pub fn to_parts(graph: &Graph) -> (String, Vec<u8>) {
     let mut blob: Vec<u8> = Vec::new();
     let mut nodes = Json::Arr(vec![]);
     for n in &graph.nodes {
@@ -58,11 +71,7 @@ pub fn save(graph: &Graph, dir: &Path) -> Result<()> {
             "outputs",
             Json::Arr(graph.outputs.iter().map(|s| Json::from(s.as_str())).collect()),
         );
-    fs::write(dir.join("graph.json"), root.pretty())?;
-    if !blob.is_empty() {
-        fs::write(dir.join("weights.bin"), &blob)?;
-    }
-    Ok(())
+    (root.pretty(), blob)
 }
 
 /// Load a graph from a directory written by [`save`] (or by the Python
@@ -70,16 +79,22 @@ pub fn save(graph: &Graph, dir: &Path) -> Result<()> {
 pub fn load(dir: &Path) -> Result<Graph> {
     let text = fs::read_to_string(dir.join("graph.json"))
         .with_context(|| format!("reading {}", dir.join("graph.json").display()))?;
-    let root = Json::parse(&text)?;
-    if root.get("format").as_str() != Some("hpipe-graphdef-v1") {
-        bail!("unrecognized graphdef format");
-    }
     let blob_path = dir.join("weights.bin");
     let blob: Vec<u8> = if blob_path.exists() {
         fs::read(&blob_path)?
     } else {
         Vec::new()
     };
+    from_parts(&text, &blob)
+}
+
+/// Parse a graph from its in-memory `(graph.json text, weights.bin
+/// blob)` pair — the inverse of [`to_parts`].
+pub fn from_parts(text: &str, blob: &[u8]) -> Result<Graph> {
+    let root = Json::parse(text)?;
+    if root.get("format").as_str() != Some("hpipe-graphdef-v1") {
+        bail!("unrecognized graphdef format");
+    }
 
     let mut graph = Graph::new();
     for jn in root.get("nodes").as_arr().context("nodes array")? {
@@ -178,6 +193,56 @@ mod tests {
         assert!(json.contains("\"offset\""));
         assert!(json.contains("\"data\""));
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn inline_limit_boundary_is_exact() {
+        // len == INLINE_LIMIT must stay inline; one element more must
+        // hit the blob. The artifact cache content-hashes `to_parts`
+        // output, so this boundary is load-bearing beyond readability.
+        for len in [INLINE_LIMIT - 1, INLINE_LIMIT, INLINE_LIMIT + 1] {
+            let mut g = Graph::new();
+            let mut rng = Rng::new(len as u64);
+            g.op("input", Op::Placeholder { shape: vec![1, 2, 2, 1] }, &[]);
+            g.constant("c", Tensor::randn(&[len], &mut rng, 1.0));
+            g.op("relu", Op::Relu, &["input"]);
+            g.outputs = vec!["relu".into()];
+            let (json, blob) = to_parts(&g);
+            if len <= INLINE_LIMIT {
+                assert!(blob.is_empty(), "len {len} must serialize inline");
+                assert!(json.contains("\"data\""));
+            } else {
+                assert_eq!(blob.len(), len * 4, "len {len} must go to the blob");
+                assert!(json.contains("\"offset\""));
+            }
+            let g2 = from_parts(&json, &blob).unwrap();
+            assert_eq!(g.get("c").unwrap().value, g2.get("c").unwrap().value);
+        }
+    }
+
+    #[test]
+    fn multi_output_and_zero_element_consts_roundtrip() {
+        let mut g = Graph::new();
+        let mut rng = Rng::new(11);
+        g.op("input", Op::Placeholder { shape: vec![1, 4, 4, 2] }, &[]);
+        g.constant("empty", Tensor::from_vec(&[0], vec![]));
+        g.constant("w", Tensor::randn(&[1, 1, 2, 2], &mut rng, 0.5));
+        g.op(
+            "conv",
+            Op::Conv2D { stride: (1, 1), padding: Padding::Same },
+            &["input", "w"],
+        );
+        g.op("relu", Op::Relu, &["conv"]);
+        g.outputs = vec!["conv".into(), "relu".into()];
+        let (json, blob) = to_parts(&g);
+        let g2 = from_parts(&json, &blob).unwrap();
+        assert_eq!(g2.outputs, vec!["conv".to_string(), "relu".to_string()]);
+        let e = g2.get("empty").unwrap().value.clone().unwrap();
+        assert_eq!(e.shape, vec![0]);
+        assert!(e.data.is_empty());
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            assert_eq!(a.value, b.value, "node '{}' tensor drifted", a.name);
+        }
     }
 
     #[test]

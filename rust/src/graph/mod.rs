@@ -50,6 +50,10 @@ pub enum GraphError {
         item: usize,
         msg: String,
     },
+    /// A plan artifact failed validation (missing, corrupt, truncated,
+    /// or stale cache key). Always recoverable: the caller falls back
+    /// to a fresh compile — a bad artifact is never executed.
+    Artifact(String),
 }
 
 impl std::fmt::Display for GraphError {
@@ -65,6 +69,7 @@ impl std::fmt::Display for GraphError {
             GraphError::StageFault { stage, item, msg } => {
                 write!(f, "pipeline stage {stage} faulted on item {item}: {msg}")
             }
+            GraphError::Artifact(msg) => write!(f, "plan artifact rejected: {msg}"),
         }
     }
 }

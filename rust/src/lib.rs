@@ -12,6 +12,7 @@
 //! reproductions of every table and figure.
 
 pub mod arch;
+pub mod artifact;
 pub mod baselines;
 pub mod compile;
 pub mod coordinator;

@@ -2,13 +2,15 @@
 //!
 //! Subcommands:
 //!   compile   --net <name> [--sparsity F] [--dsp-target N] [--device D]
-//!             [--out DIR] [--full-scale] [--per-layer]    compile a plan
+//!             [--out DIR] [--full-scale] [--per-layer]
+//!             [--plan-cache DIR [--model DIR] [--threads N]
+//!             [--team N] [--autotune]]                  compile a plan
 //!   simulate  --net <name> [...same...] [--images N]   cycle simulation
 //!   serve     --model DIR [--requests N] [--batch N] [--threads N]
 //!             [--team N] [--autotune] [--deadline-ms N] [--queue-cap N]
 //!             [--shed] [--no-overlap] [--plan-family none|CSV]
 //!             [--recover-after-ms N] [--no-recover] [--fault-budget N]
-//!             [--json FILE]                          exec serving demo
+//!             [--plan-cache DIR] [--json FILE]       exec serving demo
 //!                            (--batch N serves through *natively
 //!                            batched* plans — one weight-stream walk
 //!                            feeds the whole batch; threads > 1
@@ -79,6 +81,37 @@
 //! overlap path exists to collapse; the sustained gate in
 //! `benches/e2e_serving.rs` holds overlap ≥ drain-then-run and
 //! family-routed tails ≥ padded tails under `BENCH_SMOKE=1`.
+//!
+//! ## Artifacts & the plan cache
+//!
+//! HPIPE compiles a network once into a bitstream and then serves it
+//! forever; the software analog is the **plan artifact**: the fully
+//! compiled serving state — packed dense panels, pre-decoded RLE
+//! streams, pipeline cuts, team sizes, autotune calibration — written
+//! to `DIR/<model>/plan.json` + `plan.bin` so the next process start
+//! skips the fold/encode/pack/profile pipeline entirely.
+//!
+//! `hpipe compile --plan-cache DIR --model artifacts [--threads N]
+//! [--team N] [--autotune]` pre-compiles every manifest model (each at
+//! its manifest batch size) into `DIR`; `hpipe serve --plan-cache DIR`
+//! restores them (serve anywhere) — the serve flags must match the
+//! compile flags, because the artifact is keyed by a content hash of
+//! the graphdef bytes, the plan options, the batch / plan-family set,
+//! the threads / team / autotune configuration and the crate version.
+//! Any mismatch, truncation or corruption is a *typed* rejection
+//! (`GraphError::Artifact`) that falls back to a fresh compile — a
+//! stale cache can cost time, never correctness. The SIMD tier is
+//! recorded for diagnostics but re-dispatched at load, so artifacts
+//! move freely between machines with different vector units.
+//!
+//! With a plan cache, per-model fault/breaker history persists across
+//! restarts (`faults.json` next to the artifact): breakers always
+//! start closed, but the report's `restored_faults` shows what
+//! previous runs endured. `serve --json` reports `cold_start_ns`,
+//! `plan_cache_hit`, and per-model `shared_weight_bytes` /
+//! `private_weight_bytes` — the latter split proves plan-family
+//! variants share one refcounted copy of every weight (variants cost
+//! O(arena), not O(weights)).
 //!
 //! ## Environment variables
 //!
@@ -271,6 +304,37 @@ fn cmd_compile(args: &Args) -> Result<()> {
         }
         tab.print();
     }
+    // --plan-cache DIR: additionally pre-compile the *serving* plans
+    // for every manifest model into on-disk artifacts, so a later
+    // `hpipe serve --plan-cache DIR` (same flags) cold-starts from
+    // disk instead of re-running fold/encode/pack/profile
+    if let Some(cache) = args.opt("plan-cache") {
+        let cache = PathBuf::from(cache);
+        let model_dir = PathBuf::from(args.str("model", "artifacts"));
+        let mut rt = hpipe::runtime::Runtime::cpu(&model_dir)?
+            .with_threads(args.usize("threads", 1))
+            .with_team(args.usize("team", 1))
+            .with_plan_cache(&cache);
+        if args.bool("autotune") {
+            rt = rt.with_autotune(hpipe::exec::TuneOptions::default());
+        }
+        let t1 = std::time::Instant::now();
+        let loaded = rt.load_manifest()?;
+        println!(
+            "plan cache: {} model(s) ready in {} after {:?} ({} restored, {} compiled+saved)",
+            loaded.len(),
+            cache.display(),
+            t1.elapsed(),
+            rt.cache_hits,
+            rt.cache_misses
+        );
+        for name in &loaded {
+            if let Some(m) = rt.model(name) {
+                let (shared, private) = m.weight_bytes();
+                println!("  {name}: resident weights {shared} B shared + {private} B private");
+            }
+        }
+    }
     Ok(())
 }
 
@@ -333,6 +397,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         recover_after_ms: args.opt("recover-after-ms").and_then(|s| s.parse().ok()),
         no_recover: args.bool("no-recover"),
         fault_budget: args.opt("fault-budget").and_then(|s| s.parse().ok()),
+        plan_cache: args.opt("plan-cache").map(PathBuf::from),
     };
     let mut report = hpipe::coordinator::serve_demo(&dir, &cfg)?;
     report.print();

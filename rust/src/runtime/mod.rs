@@ -32,7 +32,11 @@
 //! to B — bitwise-identical outputs, strictly less compute, which
 //! matters most exactly where sparsity makes per-image work cheap.
 
-use crate::exec::{ExecContext, ExecutionPlan, PipelinePlan, TuneEntry, TuneOptions, TuneReport};
+use crate::artifact::{self, CacheSpec, ModelArtifact, PipelineSpec};
+use crate::exec::{
+    ExecContext, ExecutionPlan, PipelinePlan, PlanOptions, TuneEntry, TuneOptions, TuneReport,
+    WeightStore,
+};
 use crate::graph::{graphdef, Graph, GraphError, Op, Tensor};
 use crate::sparsity::prune_tensor;
 use crate::util::breaker::{Breaker, BreakerConfig};
@@ -109,6 +113,17 @@ pub struct LoadedModel {
     /// Zero images padded onto those tail executions — the wasted
     /// compute the plan family exists to shrink.
     padded_images: AtomicU64,
+    /// Refcounted shared weight store: the primary plan, the latency
+    /// plan, and every tail variant hold `Arc`s into this one copy of
+    /// each const tensor, RLE stream, and packed panel. Also the unit
+    /// of artifact persistence ([`Self::to_artifact`]).
+    store: WeightStore,
+    /// Fault history restored from a previous serve's `faults.json`
+    /// (plan cache only); all-zero when none was found.
+    restored: FaultStats,
+    /// Largest live breaker cool-down persisted by the previous serve —
+    /// how backed-off this model was when that process exited.
+    restored_cooldown_ns: u64,
 }
 
 /// Ragged-tail accounting for one model (see [`LoadedModel::run_tail`]).
@@ -221,9 +236,15 @@ fn single_placeholder(graph: &Graph) -> Result<(String, Vec<usize>)> {
     Ok((input_name, per_image_shape))
 }
 
-/// Build a batch-`group` plan and run the serving-path sanity checks.
-fn checked_batched_plan(graph: &Graph, group: usize, input_name: &str) -> Result<ExecutionPlan> {
-    let plan = ExecutionPlan::build_batched(graph, group)?;
+/// Build a batch-`group` plan against the model's shared weight store
+/// and run the serving-path sanity checks.
+fn checked_batched_plan(
+    graph: &Graph,
+    group: usize,
+    input_name: &str,
+    store: &mut WeightStore,
+) -> Result<ExecutionPlan> {
+    let plan = ExecutionPlan::build_with_store(graph, &PlanOptions::batched(group), store)?;
     crate::ensure!(plan.num_outputs() >= 1, "graph has no outputs");
     crate::ensure!(
         plan.num_feeds() == 1 && plan.feed_name(0) == input_name,
@@ -261,14 +282,15 @@ impl LoadedModel {
         crate::ensure!(threads >= 1, "threads must be >= 1");
         crate::ensure!(team >= 1, "team must be >= 1");
         let group = group_size(batch, threads);
-        let plan = checked_batched_plan(graph, group, &input_name)?;
+        let mut store = WeightStore::new();
+        let plan = checked_batched_plan(graph, group, &input_name, &mut store)?;
         // Deliberately eager: the latency plan must be ready the moment
         // a single-image request arrives, not pay a full compile on the
-        // first one. It does duplicate weight consts + RLE streams with
-        // the batched plan — deduplicating those across a model's plan
-        // family is the "shared-weight plan families" ROADMAP follow-on.
+        // first one. It shares the batched plan's weight store, so the
+        // eagerness costs O(arena), not a second copy of every weight
+        // const, RLE stream, and packed panel.
         let latency = if group > 1 {
-            Some(ExecutionPlan::build(graph)?)
+            Some(ExecutionPlan::build_with_store(graph, &PlanOptions::default(), &mut store)?)
         } else {
             None
         };
@@ -298,6 +320,9 @@ impl LoadedModel {
             variant_breakers: Vec::new(),
             tail_runs: AtomicU64::new(0),
             padded_images: AtomicU64::new(0),
+            store,
+            restored: FaultStats::default(),
+            restored_cooldown_ns: 0,
         })
     }
 
@@ -323,13 +348,16 @@ impl LoadedModel {
         let cores = opts.budget();
         // Calibration cache: one (plan, entry) per distinct group-batch
         // size. Pass 2 reuses pass 1's work whenever the group size
-        // doesn't change.
+        // doesn't change — and every calibration plan shares the one
+        // weight store, so profiling extra group sizes costs O(arena).
+        let mut store = WeightStore::new();
         let mut cache: BTreeMap<usize, (ExecutionPlan, TuneEntry)> = BTreeMap::new();
         let calibrate = |group: usize,
-                         cache: &mut BTreeMap<usize, (ExecutionPlan, TuneEntry)>|
+                         cache: &mut BTreeMap<usize, (ExecutionPlan, TuneEntry)>,
+                         store: &mut WeightStore|
          -> Result<()> {
             if let std::collections::btree_map::Entry::Vacant(slot) = cache.entry(group) {
-                let plan = checked_batched_plan(graph, group, &input_name)?;
+                let plan = checked_batched_plan(graph, group, &input_name, store)?;
                 let entry = TuneEntry::calibrate(&plan, opts);
                 slot.insert((plan, entry));
             }
@@ -339,11 +367,11 @@ impl LoadedModel {
         // the stage count, which in turn decides the serving group size
         // (stages-in-flight vs weight amortization, as on the static
         // path, but from a measured stage count).
-        calibrate(batch, &mut cache)?;
+        calibrate(batch, &mut cache, &mut store)?;
         let stages_pass1 = cache[&batch].1.cuts.stages;
         let group = group_size(batch, stages_pass1);
         // Pass 2: the serving group's plan gets its own profile + cuts.
-        calibrate(group, &mut cache)?;
+        calibrate(group, &mut cache, &mut store)?;
         let chosen = cache[&group].1.clone();
         // A serving call streams batch/group groups; a pipeline deeper
         // than that never fills (pass 2's flatter per-group profile can
@@ -374,7 +402,7 @@ impl LoadedModel {
             }
         }
         let latency = if group > 1 {
-            Some(ExecutionPlan::build(graph)?)
+            Some(ExecutionPlan::build_with_store(graph, &PlanOptions::default(), &mut store)?)
         } else {
             None
         };
@@ -411,6 +439,9 @@ impl LoadedModel {
             variant_breakers: Vec::new(),
             tail_runs: AtomicU64::new(0),
             padded_images: AtomicU64::new(0),
+            store,
+            restored: FaultStats::default(),
+            restored_cooldown_ns: 0,
         })
     }
 
@@ -430,7 +461,7 @@ impl LoadedModel {
             .filter(|&s| s > 1 && s < self.batch)
             .collect();
         for v in kept {
-            let plan = checked_batched_plan(graph, v, &input_name)
+            let plan = checked_batched_plan(graph, v, &input_name, &mut self.store)
                 .with_context(|| format!("building batch-{v} tail variant"))?;
             let team = match &self.tune {
                 Some(report) => {
@@ -466,6 +497,196 @@ impl LoadedModel {
     /// [`Self::autotuned`].
     pub fn tune_report(&self) -> Option<&TuneReport> {
         self.tune.as_ref()
+    }
+
+    /// The refcounted shared weight store backing every plan of this
+    /// model (primary, latency, and tail variants).
+    pub fn store(&self) -> &WeightStore {
+        &self.store
+    }
+
+    /// Resident weight memory as `(shared, private)` bytes. Shared is
+    /// the store's one copy of each const tensor, RLE stream, and
+    /// packed panel; private is what each plan legitimately adds on top
+    /// — batch-tiled per-channel constants plus arena/scratch capacity
+    /// — summed over the primary, latency, and variant plans. Plan
+    /// variants growing `private` by O(arena) while `shared` stays flat
+    /// is the observable proof of weight sharing.
+    pub fn weight_bytes(&self) -> (usize, usize) {
+        let shared = self.store.total_bytes();
+        let per_plan = |p: &ExecutionPlan| p.private_weight_bytes() + p.arena_bytes();
+        let mut private = per_plan(self.pipeline.plan());
+        if let Some(l) = &self.latency {
+            private += per_plan(l);
+        }
+        for v in &self.variants {
+            private += per_plan(v.plan());
+        }
+        (shared, private)
+    }
+
+    /// Fault history restored from a previous serve's persisted
+    /// `faults.json` (all-zero when none was found).
+    pub fn restored_faults(&self) -> FaultStats {
+        self.restored
+    }
+
+    /// Largest breaker cool-down the previous serve persisted.
+    pub fn restored_cooldown_ns(&self) -> u64 {
+        self.restored_cooldown_ns
+    }
+
+    /// Seed restored fault history (the plan cache's `faults.json`).
+    /// Kept separate from the live atomics: breakers start closed —
+    /// history informs reporting and fault budgets, it must not
+    /// re-trip a site that a restart just reset.
+    pub fn set_restored_faults(&mut self, stats: FaultStats, cooldown_ns: u64) {
+        self.restored = stats;
+        self.restored_cooldown_ns = cooldown_ns;
+    }
+
+    /// Largest live cool-down across every breaker site — persisted to
+    /// `faults.json` so the next serve can see how backed-off this
+    /// model was when the process exited.
+    pub fn max_cooldown_ns(&self) -> u64 {
+        self.all_breakers().map(|b| b.current_cooldown_ns()).max().unwrap_or(0)
+    }
+
+    /// Snapshot this model as a persistable artifact under invalidation
+    /// key `key`: the shared weight store (cheap `Arc` clones), the
+    /// pipeline shapes of the primary plan and every variant with the
+    /// exact per-step costs their cuts were partitioned from, and the
+    /// calibration report. [`Self::from_artifact`] is the inverse.
+    pub fn to_artifact(&self, key: u64) -> ModelArtifact {
+        // The costs the primary pipeline's cuts actually consumed:
+        // measured medians for an autotuned model, modeled step costs
+        // for a static one. Replaying them through the same DP at the
+        // same stage count reproduces the cuts exactly.
+        let primary_costs = match &self.tune {
+            Some(report) => report
+                .chosen()
+                .expect("autotuned model has a chosen entry")
+                .profile
+                .costs_ns
+                .clone(),
+            None => self.pipeline.plan().step_costs(),
+        };
+        ModelArtifact {
+            key,
+            isa: crate::exec::isa::active().name().to_string(),
+            batch: self.batch,
+            threads: self.threads,
+            team: self.team,
+            primary: PipelineSpec {
+                batch: self.group(),
+                stages: self.threads,
+                team: self.team,
+                costs_ns: primary_costs,
+            },
+            variants: self
+                .variants
+                .iter()
+                .map(|v| PipelineSpec {
+                    batch: v.plan().batch(),
+                    stages: 1,
+                    team: v.team(),
+                    costs_ns: v.plan().step_costs(),
+                })
+                .collect(),
+            has_latency: self.latency.is_some(),
+            tune: self.tune.clone(),
+            store: self.store.clone(),
+        }
+    }
+
+    /// Rebuild a runnable model from a loaded artifact: plans are
+    /// re-bound against the artifact's prepopulated weight store (topo
+    /// order, shapes, and buffer liveness re-derive from the graph —
+    /// cheap and graph-validated — while every fold, RLE encode, pack,
+    /// and profiling pass is skipped), and each pipeline's cuts are
+    /// replayed from the stored per-step costs. Any inconsistency
+    /// errors out; the caller falls back to a fresh compile.
+    pub fn from_artifact(name: &str, graph: &Graph, art: ModelArtifact) -> Result<LoadedModel> {
+        let (input_name, per_image_shape) = single_placeholder(graph)?;
+        let ModelArtifact {
+            batch,
+            threads,
+            team,
+            primary,
+            variants,
+            has_latency,
+            tune,
+            mut store,
+            ..
+        } = art;
+        crate::ensure!(batch >= 1 && threads >= 1 && team >= 1, "artifact config must be >= 1");
+        crate::ensure!(
+            has_latency == (primary.batch > 1),
+            "artifact latency flag disagrees with its group size"
+        );
+        let plan = checked_batched_plan(graph, primary.batch, &input_name, &mut store)?;
+        crate::ensure!(
+            primary.costs_ns.len() == plan.step_names().len(),
+            "artifact stores {} step costs for a {}-step plan",
+            primary.costs_ns.len(),
+            plan.step_names().len()
+        );
+        let latency = if has_latency {
+            Some(ExecutionPlan::build_with_store(graph, &PlanOptions::default(), &mut store)?)
+        } else {
+            None
+        };
+        let pipeline =
+            PipelinePlan::from_static_costs(plan, &primary.costs_ns, primary.stages, primary.team);
+        let breaker_cfg = BreakerConfig::default();
+        let breakers = breaker_bank(breaker_cfg, pipeline.num_stages());
+        let mut model_variants = Vec::with_capacity(variants.len());
+        let mut variant_breakers = Vec::with_capacity(variants.len());
+        for spec in &variants {
+            crate::ensure!(
+                spec.batch > 1 && spec.batch < batch,
+                "artifact variant batch {} outside 2..{batch}",
+                spec.batch
+            );
+            let vplan = checked_batched_plan(graph, spec.batch, &input_name, &mut store)
+                .with_context(|| format!("restoring batch-{} tail variant", spec.batch))?;
+            crate::ensure!(
+                spec.costs_ns.len() == vplan.step_names().len(),
+                "artifact variant step costs disagree with its plan"
+            );
+            let mut variant =
+                PipelinePlan::from_static_costs(vplan, &spec.costs_ns, spec.stages, spec.team);
+            variant.share_idle_tracker(&pipeline);
+            variant_breakers.push(breaker_bank(breaker_cfg, variant.num_stages()));
+            model_variants.push(variant);
+        }
+        let mut input_shape = per_image_shape;
+        input_shape[0] = batch;
+        Ok(LoadedModel {
+            name: name.to_string(),
+            batch,
+            threads,
+            team,
+            input_shape,
+            pipeline,
+            latency,
+            ctx: RefCell::new(None),
+            latency_ctx: RefCell::new(None),
+            tune,
+            faults: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            breakers,
+            breaker_cfg,
+            degraded_since_ns: AtomicU64::new(0),
+            time_degraded_ns: AtomicU64::new(0),
+            variants: model_variants,
+            variant_breakers,
+            tail_runs: AtomicU64::new(0),
+            padded_images: AtomicU64::new(0),
+            store,
+            restored: FaultStats::default(),
+            restored_cooldown_ns: 0,
+        })
     }
 
     /// Plan composition counters (sparse vs dense kernels, fusions...).
@@ -909,6 +1130,16 @@ pub struct Runtime {
     /// and whether recovery is enabled at all (`--no-recover`). See
     /// [`Runtime::with_recovery`].
     pub breaker_cfg: BreakerConfig,
+    /// Plan-artifact cache directory ([`Runtime::with_plan_cache`]).
+    /// When set, [`Runtime::load_graph`] tries
+    /// `<dir>/<model>/plan.json` before compiling and persists a fresh
+    /// artifact (plus `faults.json` fault history) on a miss.
+    pub plan_cache: Option<PathBuf>,
+    /// Models restored from a plan artifact by this runtime.
+    pub cache_hits: usize,
+    /// Models compiled fresh despite a configured plan cache (no
+    /// artifact, stale key, or a corrupt/rejected file).
+    pub cache_misses: usize,
     models: BTreeMap<String, LoadedModel>,
 }
 
@@ -935,8 +1166,19 @@ impl Runtime {
             autotune: None,
             plan_family: None,
             breaker_cfg: BreakerConfig::default(),
+            plan_cache: None,
+            cache_hits: 0,
+            cache_misses: 0,
             models: BTreeMap::new(),
         })
+    }
+
+    /// Enable the plan-artifact cache rooted at `dir` for subsequently
+    /// loaded models: load-or-compile-and-save (see
+    /// [`crate::artifact`] for the format and invalidation key).
+    pub fn with_plan_cache(mut self, dir: &Path) -> Runtime {
+        self.plan_cache = Some(dir.to_path_buf());
+        self
     }
 
     /// Configure the pipeline stage count for subsequently loaded
@@ -984,25 +1226,140 @@ impl Runtime {
         format!("exec-cpu/{}", crate::exec::isa::active().name())
     }
 
+    /// The invalidation spec for loading `batch`-image models through
+    /// this runtime's current configuration (see
+    /// [`crate::artifact::cache_key`]).
+    fn cache_spec(&self, batch: usize, family: &[usize]) -> CacheSpec {
+        CacheSpec {
+            opts: PlanOptions::default(),
+            batch,
+            family: family.to_vec(),
+            threads: self.threads,
+            team: self.team,
+            autotune: self.autotune.is_some(),
+            tune_cores: self.autotune.as_ref().map(|o| o.budget()).unwrap_or(0),
+        }
+    }
+
+    /// Try to restore `name` from the plan cache. `None` means "compile
+    /// fresh" — the artifact was absent, stale, or rejected (every
+    /// rejection is reported, none is fatal).
+    fn try_cached(&self, name: &str, graph: &Graph, batch: usize, family: &[usize]) -> Option<LoadedModel> {
+        let dir = self.plan_cache.as_ref()?;
+        let key = artifact::cache_key(graph, &self.cache_spec(batch, family));
+        let restored = artifact::load(&dir.join(name), key)
+            .map_err(crate::util::error::Error::from)
+            .and_then(|art| {
+                crate::ensure!(
+                    art.batch == batch,
+                    "artifact batch {} != requested {batch}",
+                    art.batch
+                );
+                LoadedModel::from_artifact(name, graph, art)
+            });
+        match restored {
+            Ok(model) => Some(model),
+            Err(e) => {
+                eprintln!("model '{name}': plan cache: {e}; compiling fresh");
+                None
+            }
+        }
+    }
+
+    /// Restore persisted fault history (`faults.json` next to the plan
+    /// artifact) into a freshly loaded model. Absent or unreadable
+    /// history is simply skipped — it can delay reporting, never serving.
+    fn restore_faults(&self, name: &str, model: &mut LoadedModel) {
+        let Some(dir) = &self.plan_cache else { return };
+        let path = dir.join(name).join("faults.json");
+        let Ok(text) = std::fs::read_to_string(&path) else { return };
+        match Json::parse(&text) {
+            Ok(j) => {
+                let field = |k: &str| j.get(k).as_f64().map(|v| v.max(0.0) as u64).unwrap_or(0);
+                let stats = FaultStats {
+                    faults: field("faults"),
+                    retries: field("retries"),
+                    trips: field("trips"),
+                    recoveries: field("recoveries"),
+                    degraded: false,
+                    time_degraded_ns: field("time_degraded_ns"),
+                };
+                model.set_restored_faults(stats, field("last_cooldown_ns"));
+            }
+            Err(e) => eprintln!("model '{name}': ignoring {}: {e}", path.display()),
+        }
+    }
+
+    /// Persist every model's cumulative fault history (restored history
+    /// + this process's counters) next to its plan artifact. A no-op
+    /// without a plan cache; returns how many models were written.
+    pub fn persist_faults(&self) -> usize {
+        let Some(dir) = &self.plan_cache else { return 0 };
+        let mut written = 0;
+        for m in self.models.values() {
+            let (prev, cur) = (m.restored_faults(), m.fault_stats());
+            let cooldown = m.max_cooldown_ns().max(m.restored_cooldown_ns());
+            let mut j = Json::obj();
+            j.set("faults", Json::from((prev.faults + cur.faults) as f64))
+                .set("retries", Json::from((prev.retries + cur.retries) as f64))
+                .set("trips", Json::from((prev.trips + cur.trips) as f64))
+                .set("recoveries", Json::from((prev.recoveries + cur.recoveries) as f64))
+                .set(
+                    "time_degraded_ns",
+                    Json::from((prev.time_degraded_ns + cur.time_degraded_ns) as f64),
+                )
+                .set("last_cooldown_ns", Json::from(cooldown as f64));
+            let model_dir = dir.join(&m.name);
+            if std::fs::create_dir_all(&model_dir).is_ok()
+                && std::fs::write(model_dir.join("faults.json"), j.pretty()).is_ok()
+            {
+                written += 1;
+            }
+        }
+        written
+    }
+
     /// Compile a graph into a named executable (calibrating it first
-    /// when the runtime was configured with [`Runtime::with_autotune`]).
+    /// when the runtime was configured with [`Runtime::with_autotune`])
+    /// — or, with a plan cache configured, restore it from its on-disk
+    /// artifact and skip the fold/encode/pack/profile work entirely,
+    /// persisting a fresh artifact whenever the cache misses.
     pub fn load_graph(&mut self, name: &str, graph: &Graph, batch: usize) -> Result<()> {
-        let mut model = match &self.autotune {
-            Some(opts) => LoadedModel::autotuned(name, graph, batch, opts)
-                .with_context(|| format!("calibrating model '{name}'"))?,
-            None => LoadedModel::from_graph_with(name, graph, batch, self.threads, self.team)
-                .with_context(|| format!("compiling model '{name}'"))?,
-        };
-        // Breaker config must land before the plan family so the
-        // variants' banks inherit it too.
-        model.set_breaker_config(self.breaker_cfg);
         let sizes = match &self.plan_family {
             Some(sizes) => sizes.clone(),
             None => default_family(batch),
         };
-        model
-            .add_plan_family(graph, &sizes)
-            .with_context(|| format!("building plan family for '{name}'"))?;
+        let mut model = match self.try_cached(name, graph, batch, &sizes) {
+            Some(model) => {
+                self.cache_hits += 1;
+                model
+            }
+            None => {
+                let mut model = match &self.autotune {
+                    Some(opts) => LoadedModel::autotuned(name, graph, batch, opts)
+                        .with_context(|| format!("calibrating model '{name}'"))?,
+                    None => {
+                        LoadedModel::from_graph_with(name, graph, batch, self.threads, self.team)
+                            .with_context(|| format!("compiling model '{name}'"))?
+                    }
+                };
+                model
+                    .add_plan_family(graph, &sizes)
+                    .with_context(|| format!("building plan family for '{name}'"))?;
+                if let Some(dir) = &self.plan_cache {
+                    self.cache_misses += 1;
+                    let key = artifact::cache_key(graph, &self.cache_spec(batch, &sizes));
+                    if let Err(e) = artifact::save(&dir.join(name), &model.to_artifact(key)) {
+                        eprintln!("model '{name}': failed to persist plan artifact: {e}");
+                    }
+                }
+                model
+            }
+        };
+        // One pass re-keys every bank (primary + variants) whether the
+        // model was compiled or restored — banks always start closed.
+        model.set_breaker_config(self.breaker_cfg);
+        self.restore_faults(name, &mut model);
         // Serving models keep their stage workers parked between runs:
         // warm per-stage contexts, no per-batch spawn cost (a no-op for
         // single-stage pipelines).

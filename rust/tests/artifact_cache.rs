@@ -1,0 +1,291 @@
+//! Integration tests for the plan-artifact cache (compile-once,
+//! serve-anywhere) and the refcounted shared weight store.
+//!
+//! The bars, in order:
+//!
+//! * **bitwise restore**: a model restored from its on-disk artifact
+//!   must produce bit-identical outputs to the freshly compiled model —
+//!   across batch sizes, sparsity levels, and every ragged-tail route
+//!   (family variant, latency plan, padded fallback);
+//! * **typed rejection**: stale keys, truncation and bit flips are all
+//!   `GraphError::Artifact`, and `Runtime::load_graph` falls back to a
+//!   fresh compile that still serves — a bad cache costs time, never
+//!   correctness or availability;
+//! * **one copy of each weight**: every store entry's Arc strong count
+//!   is exactly (number of plans sharing the store) + 1, compiled or
+//!   restored — plan-family variants add O(arena), not O(weights);
+//! * **fault history**: `faults.json` survives restarts, surfaces as
+//!   `restored_faults`, and never re-trips a breaker.
+
+use hpipe::artifact::{self, CacheSpec};
+use hpipe::exec::{PlanOptions, ProfileOptions, TuneOptions};
+use hpipe::graph::GraphError;
+use hpipe::nets::{tiny_cnn, NetConfig};
+use hpipe::runtime::{LoadedModel, Runtime};
+use hpipe::sparsity::prune_graph;
+use hpipe::transform::optimize;
+use hpipe::util::{Json, Rng};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hpipe_plancache_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// TinyCNN at test scale, optionally pruned, after the transform passes
+/// — the same shape `Runtime::load_manifest` serves.
+fn graph(sparsity: f64) -> hpipe::graph::Graph {
+    let mut g = tiny_cnn(NetConfig::test_scale());
+    if sparsity > 0.0 {
+        prune_graph(&mut g, sparsity);
+    }
+    let (g, _) = optimize(&g);
+    g
+}
+
+/// f32 outputs as raw bit patterns: `assert_eq!` on these is a strict
+/// bitwise comparison (no -0.0 / NaN equality holes).
+fn bits(outs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    outs.iter()
+        .map(|o| o.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn block_for(m: &LoadedModel, batch: usize, seed: u64) -> (Vec<f32>, usize) {
+    let per: usize = m.input_shape.iter().product::<usize>() / batch;
+    let mut rng = Rng::new(seed);
+    let block = (0..batch * per).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    (block, per)
+}
+
+#[test]
+fn artifact_restore_is_bitwise_identical_across_batch_sparsity_and_tails() {
+    for &batch in &[1usize, 3, 8] {
+        for &sparsity in &[0.0f64, 0.5, 0.9] {
+            let g = graph(sparsity);
+            let tag = format!("bitwise_{batch}_{}", (sparsity * 10.0) as u32);
+            let dir = temp_dir(&tag);
+            let mut fresh_rt = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+            fresh_rt.load_graph("m", &g, batch).unwrap();
+            assert_eq!((fresh_rt.cache_hits, fresh_rt.cache_misses), (0, 1));
+            let mut cached_rt = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+            cached_rt.load_graph("m", &g, batch).unwrap();
+            assert_eq!(
+                (cached_rt.cache_hits, cached_rt.cache_misses),
+                (1, 0),
+                "expected a cache hit for batch={batch} sparsity={sparsity}"
+            );
+            let fresh = fresh_rt.model("m").unwrap();
+            let cached = cached_rt.model("m").unwrap();
+            assert_eq!(fresh.variant_batches(), cached.variant_batches());
+            let (block, per) = block_for(fresh, batch, 0xA1 + batch as u64);
+            assert_eq!(
+                bits(&fresh.run_all(&block).unwrap()),
+                bits(&cached.run_all(&block).unwrap()),
+                "full batch, batch={batch} sparsity={sparsity}"
+            );
+            // every ragged tail routes identically: a family variant,
+            // the latency plan (k=1), or the padded fallback
+            for k in 1..batch {
+                let a = fresh.run_tail(&block[..k * per], k).unwrap();
+                let b = cached.run_tail(&block[..k * per], k).unwrap();
+                assert_eq!(bits(&a), bits(&b), "tail k={k}, batch={batch} sparsity={sparsity}");
+            }
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn corrupted_truncated_and_stale_artifacts_reject_typed_and_fall_back() {
+    let g = graph(0.5);
+    let dir = temp_dir("corrupt");
+    let mut rt = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+    rt.load_graph("m", &g, 8).unwrap();
+    assert_eq!(rt.cache_misses, 1);
+    // the key `load_graph` used: default plan options, the default
+    // family {B/4, B/2} = {2, 4}, the runtime's default threads/team
+    let spec = CacheSpec {
+        opts: PlanOptions::default(),
+        batch: 8,
+        family: vec![2, 4],
+        threads: 1,
+        team: 1,
+        autotune: false,
+        tune_cores: 0,
+    };
+    let key = artifact::cache_key(&g, &spec);
+    let model_dir = dir.join("m");
+    artifact::load(&model_dir, key).expect("pristine artifact must load with its own key");
+    // stale key (config or graph changed) -> typed rejection
+    let err = artifact::load(&model_dir, key ^ 1).unwrap_err();
+    assert!(matches!(err, GraphError::Artifact(_)), "stale key: {err:?}");
+    // truncation -> typed rejection
+    let bin_path = model_dir.join("plan.bin");
+    let pristine = fs::read(&bin_path).unwrap();
+    fs::write(&bin_path, &pristine[..pristine.len() / 2]).unwrap();
+    let err = artifact::load(&model_dir, key).unwrap_err();
+    assert!(matches!(err, GraphError::Artifact(_)), "truncation: {err:?}");
+    // ...and load_graph falls back to a fresh compile that still
+    // serves (re-persisting a pristine artifact as it goes)
+    let mut rt2 = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+    rt2.load_graph("m", &g, 8).unwrap();
+    assert_eq!((rt2.cache_hits, rt2.cache_misses), (0, 1));
+    let m = rt2.model("m").unwrap();
+    let (block, _) = block_for(m, 8, 7);
+    m.run_all(&block).unwrap();
+    // bit flip (in the artifact rt2 just re-saved) -> typed rejection
+    let mut flipped = fs::read(&bin_path).unwrap();
+    let i = flipped.len() / 3;
+    flipped[i] ^= 0x10;
+    fs::write(&bin_path, &flipped).unwrap();
+    let err = artifact::load(&model_dir, key).unwrap_err();
+    assert!(matches!(err, GraphError::Artifact(_)), "bit flip: {err:?}");
+    let mut rt3 = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+    rt3.load_graph("m", &g, 8).unwrap();
+    assert_eq!((rt3.cache_hits, rt3.cache_misses), (0, 1));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn config_or_graph_change_invalidates_the_cache_key() {
+    let g = graph(0.0);
+    let dir = temp_dir("config");
+    let mut rt = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+    rt.load_graph("m", &g, 4).unwrap();
+    assert_eq!(rt.cache_misses, 1);
+    // same config -> hit
+    let mut same = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+    same.load_graph("m", &g, 4).unwrap();
+    assert_eq!((same.cache_hits, same.cache_misses), (1, 0));
+    // different team -> stale key -> recompiled (and re-persisted)
+    let mut other = Runtime::cpu(Path::new(".")).unwrap().with_team(2).with_plan_cache(&dir);
+    other.load_graph("m", &g, 4).unwrap();
+    assert_eq!((other.cache_hits, other.cache_misses), (0, 1));
+    // different graph bytes (pruned weights) -> stale key
+    let mut pruned = Runtime::cpu(Path::new(".")).unwrap().with_team(2).with_plan_cache(&dir);
+    pruned.load_graph("m", &graph(0.5), 4).unwrap();
+    assert_eq!((pruned.cache_hits, pruned.cache_misses), (0, 1));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_family_variants_share_one_copy_of_each_weight() {
+    let g = graph(0.5);
+    // without variants: primary + latency share the store
+    let base = LoadedModel::from_graph("m", &g, 8).unwrap();
+    // with variants {2, 4}: two more plans join the same store
+    let mut m = LoadedModel::from_graph("m", &g, 8).unwrap();
+    m.add_plan_family(&g, &[2, 4]).unwrap();
+    assert_eq!(m.variant_batches(), vec![2, 4]);
+    let n_plans = 2 + m.variant_batches().len();
+    let refs = m.store().refcounts();
+    assert!(!refs.is_empty(), "store must hold the model's weights");
+    for (key, count) in &refs {
+        assert_eq!(
+            *count,
+            n_plans + 1,
+            "store entry {key}: expected {n_plans} plans + the store itself, got {count}"
+        );
+    }
+    // the variants added zero weight entries and zero weight bytes —
+    // their cost is plan-private (arenas), not shared weights
+    assert_eq!(m.store().len(), base.store().len());
+    assert_eq!(m.store().total_bytes(), base.store().total_bytes());
+    let (shared, _) = m.weight_bytes();
+    assert_eq!(shared, m.store().total_bytes());
+
+    // the same invariant must hold for a model restored from disk
+    let dir = temp_dir("refcounts");
+    let family = [2usize, 4];
+    let mk = || {
+        Runtime::cpu(Path::new("."))
+            .unwrap()
+            .with_plan_family(&family)
+            .with_plan_cache(&dir)
+    };
+    let mut rt = mk();
+    rt.load_graph("m", &g, 8).unwrap();
+    let mut rt2 = mk();
+    rt2.load_graph("m", &g, 8).unwrap();
+    assert_eq!((rt2.cache_hits, rt2.cache_misses), (1, 0));
+    let restored = rt2.model("m").unwrap();
+    for (key, count) in &restored.store().refcounts() {
+        assert_eq!(*count, n_plans + 1, "restored store entry {key}: got {count}");
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn autotuned_artifact_restores_measured_cuts_without_reprofiling() {
+    let g = graph(0.5);
+    let dir = temp_dir("tuned");
+    let opts = TuneOptions {
+        cores: 2,
+        profile: ProfileOptions { warmup: 0, runs: 1, ..Default::default() },
+    };
+    let mk = || {
+        Runtime::cpu(Path::new("."))
+            .unwrap()
+            .with_autotune(opts)
+            .with_plan_cache(&dir)
+    };
+    let mut rt = mk();
+    rt.load_graph("m", &g, 8).unwrap();
+    assert_eq!(rt.cache_misses, 1);
+    let mut rt2 = mk();
+    rt2.load_graph("m", &g, 8).unwrap();
+    assert_eq!((rt2.cache_hits, rt2.cache_misses), (1, 0));
+    let (a, b) = (rt.model("m").unwrap(), rt2.model("m").unwrap());
+    // the calibration report came back from disk, and the restored
+    // cuts reproduce the tuned pipeline exactly
+    assert!(b.tune_report().is_some(), "restored model keeps its TuneReport");
+    assert_eq!(a.pipeline().num_stages(), b.pipeline().num_stages());
+    let (block, _) = block_for(a, 8, 0xB2);
+    assert_eq!(bits(&a.run_all(&block).unwrap()), bits(&b.run_all(&block).unwrap()));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_history_persists_across_restarts_without_retripping() {
+    let g = graph(0.0);
+    let dir = temp_dir("faults");
+    {
+        let mut rt = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+        rt.load_graph("m", &g, 4).unwrap();
+        assert_eq!(rt.persist_faults(), 1);
+    }
+    // splice in a history as if a previous run faulted and tripped
+    let path = dir.join("m").join("faults.json");
+    fs::write(
+        &path,
+        r#"{"faults": 9, "retries": 3, "trips": 2, "recoveries": 1,
+            "time_degraded_ns": 5000, "last_cooldown_ns": 100000}"#,
+    )
+    .unwrap();
+    let mut rt = Runtime::cpu(Path::new(".")).unwrap().with_plan_cache(&dir);
+    rt.load_graph("m", &g, 4).unwrap();
+    assert_eq!(rt.cache_hits, 1);
+    let m = rt.model("m").unwrap();
+    let restored = m.restored_faults();
+    assert_eq!(restored.faults, 9);
+    assert_eq!(restored.retries, 3);
+    assert_eq!(restored.trips, 2);
+    assert_eq!(restored.recoveries, 1);
+    assert_eq!(restored.time_degraded_ns, 5_000);
+    assert_eq!(m.restored_cooldown_ns(), 100_000);
+    // history informs reporting only — breakers start closed
+    assert!(!m.is_degraded(), "restored history must not re-trip breakers");
+    let (block, _) = block_for(m, 4, 11);
+    m.run_all(&block).unwrap();
+    // persisting merges the restored history with this run's counters
+    assert_eq!(rt.persist_faults(), 1);
+    let j = Json::parse(&fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(j.get("faults").as_f64(), Some(9.0));
+    assert_eq!(j.get("trips").as_f64(), Some(2.0));
+    assert_eq!(j.get("last_cooldown_ns").as_f64(), Some(100_000.0));
+    let _ = fs::remove_dir_all(&dir);
+}
